@@ -1,0 +1,78 @@
+//! Figure 2 — digit-image barycenter: the paper's pairing of digit 2 on
+//! complete, 3 on Erdős–Rényi, 5 on cycle, 7 on star; dual objective and
+//! consensus distance for all three algorithms.
+//!
+//! Default scale: m = 30 nodes on a 20×20 grid (CI); `A2DWB_FULL=1`
+//! for m = 500 on 28×28. `A2DWB_IDX=<path>` uses real MNIST IDX files
+//! instead of the synthetic glyphs (DESIGN.md §4 substitution).
+
+use a2dwb::graph::TopologySpec;
+use a2dwb::measures::MeasureSpec;
+use a2dwb::metrics::{write_csv, Series};
+use a2dwb::prelude::*;
+
+fn main() {
+    let full = std::env::var("A2DWB_FULL").is_ok();
+    let idx_path = std::env::var("A2DWB_IDX").ok();
+    let (nodes, duration, side) = if full { (500, 200.0, 28) } else { (30, 25.0, 20) };
+    let seed = 42;
+
+    println!("== Fig. 2: digit barycenters (m={nodes}, {side}x{side}, T={duration}s) ==");
+    let cells: [(u8, &str, TopologySpec); 4] = [
+        (2, "complete", TopologySpec::Complete),
+        (3, "erdos-renyi", TopologySpec::ErdosRenyi { p: if full { 0.02 } else { 0.15 }, seed }),
+        (5, "cycle", TopologySpec::Cycle),
+        (7, "star", TopologySpec::Star),
+    ];
+
+    for (digit, label, topo) in cells {
+        let mut series: Vec<Series> = Vec::new();
+        let mut finals = Vec::new();
+        for alg in AlgorithmKind::all() {
+            let cfg = ExperimentConfig {
+                nodes,
+                topology: topo,
+                algorithm: alg,
+                duration,
+                seed,
+                beta: 0.004,
+                measure: MeasureSpec::Digits {
+                    digit,
+                    side,
+                    idx_path: idx_path.clone(),
+                },
+                ..ExperimentConfig::gaussian_default()
+            };
+            let r = run_experiment(&cfg).expect("run");
+            println!("{}", r.summary());
+            let mut dual = r.dual_objective.clone();
+            dual.name = format!("dual_{}", alg.name());
+            let mut cons = r.consensus.clone();
+            cons.name = format!("consensus_{}", alg.name());
+            series.push(dual);
+            series.push(cons);
+            finals.push((alg.name(), r.final_dual_objective()));
+        }
+        let refs: Vec<&Series> = series.iter().collect();
+        let path = format!("results/fig2_digit{digit}_{label}.csv");
+        write_csv(&path, &refs).expect("csv");
+        println!("wrote {path}");
+        let a = finals.iter().find(|f| f.0 == "a2dwb").unwrap().1;
+        let best_other = finals
+            .iter()
+            .filter(|f| f.0 != "a2dwb")
+            .map(|f| f.1)
+            .fold(f64::INFINITY, f64::min);
+        let progress = series[0].first_value().unwrap() - a;
+        let verdict = if a <= best_other + 1e-9 {
+            "WIN"
+        } else if a <= best_other + 1e-3 * progress.abs() {
+            "TIE"
+        } else {
+            "LOSS"
+        };
+        println!(
+            "FIG2 digit{digit}/{label}: a2dwb={a:.6} best-other={best_other:.6} -> {verdict}\n"
+        );
+    }
+}

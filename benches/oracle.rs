@@ -1,0 +1,86 @@
+//! Oracle micro-benchmark: the per-activation hot path across backends
+//! and shapes (the L1/L2/L3 seam).
+//!
+//! * native Rust f64 oracle (production hot path)
+//! * PJRT execution of the AOT JAX/Pallas artifact (three-layer proof;
+//!   skipped with a message if `make artifacts` has not run)
+//!
+//! Reports ns/call and the implied activations/second, plus the
+//! DESIGN.md §Perf roofline estimate (bytes touched per call).
+
+use a2dwb::bench_util::{bench, black_box, fmt_ns};
+use a2dwb::measures::CostRows;
+use a2dwb::ot::{dual_oracle_into, DualOracle, NativeOracle, OracleScratch};
+use a2dwb::rng::Rng64;
+use a2dwb::runtime::{read_manifest, PjrtOracle};
+
+fn case(seed: u64, m: usize, n: usize) -> (Vec<f64>, CostRows) {
+    let mut rng = Rng64::new(seed);
+    let eta: Vec<f64> = (0..n).map(|_| 0.2 * rng.normal()).collect();
+    let mut cost = CostRows::new(m, n);
+    for v in cost.data.iter_mut() {
+        *v = rng.uniform();
+    }
+    (eta, cost)
+}
+
+fn main() {
+    let shapes = [(8usize, 100usize), (32, 100), (128, 100), (32, 784), (128, 784)];
+    println!("== dual-oracle hot path: native backend ==");
+    for (m, n) in shapes {
+        let (eta, cost) = case(1, m, n);
+        let mut grad = vec![0.0; n];
+        let mut scratch = OracleScratch::default();
+        let stats = bench(&format!("native_m{m}_n{n}"), 10, 200, 7, |_| {
+            black_box(dual_oracle_into(&eta, &cost, 0.02, &mut grad, &mut scratch))
+        });
+        let bytes = (m * n + 2 * n) * 8;
+        println!(
+            "{}  ({:.1} Mcell/s, ~{} KiB/call)",
+            stats.report(),
+            (m * n) as f64 / stats.median_ns * 1e3,
+            bytes / 1024
+        );
+    }
+
+    println!("\n== dual-oracle hot path: PJRT artifact backend ==");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if read_manifest(&dir).is_err() {
+        println!("SKIP: no artifacts — run `make artifacts`");
+        return;
+    }
+    for (m, n) in shapes {
+        match PjrtOracle::load(&dir, m, n) {
+            Ok(mut pjrt) => {
+                let (eta, cost) = case(2, m, n);
+                let mut grad = vec![0.0; n];
+                let stats = bench(&format!("pjrt_m{m}_n{n}"), 5, 50, 5, |_| {
+                    black_box(pjrt.eval(&eta, &cost, 0.02, &mut grad))
+                });
+                println!("{}", stats.report());
+            }
+            Err(e) => println!("pjrt_m{m}_n{n}: unavailable ({e})"),
+        }
+    }
+
+    println!("\n== native vs pjrt summary ==");
+    let (m, n) = (32usize, 100usize);
+    let (eta, cost) = case(3, m, n);
+    let mut grad = vec![0.0; n];
+    let mut native = NativeOracle::default();
+    let sn = bench("native_32x100", 10, 200, 7, |_| {
+        black_box(native.eval(&eta, &cost, 0.02, &mut grad))
+    });
+    if let Ok(mut pjrt) = PjrtOracle::load(&dir, m, n) {
+        let sp = bench("pjrt_32x100", 5, 50, 5, |_| {
+            black_box(pjrt.eval(&eta, &cost, 0.02, &mut grad))
+        });
+        println!(
+            "native {} vs pjrt {} per call → FFI+copy overhead {:.1}x",
+            fmt_ns(sn.median_ns),
+            fmt_ns(sp.median_ns),
+            sp.median_ns / sn.median_ns
+        );
+        println!("(production sweeps default to native; PJRT proves the AOT path)");
+    }
+}

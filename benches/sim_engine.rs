@@ -1,0 +1,93 @@
+//! Simulator micro-benchmark: event-queue throughput, delay-model
+//! draws, activation scheduling, and the end-to-end events/second of a
+//! full A²DWB run (the L3 coordinator's own overhead budget).
+
+use a2dwb::bench_util::{bench, black_box, time_once};
+use a2dwb::prelude::*;
+use a2dwb::sim::{ActivationSchedule, EventQueue, LinkDelayModel};
+
+fn main() {
+    println!("== sim substrate micro-benches ==");
+
+    // event queue: schedule+pop churn at three live sizes
+    for live in [64usize, 1024, 16384] {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut t = 0.0f64;
+        for i in 0..live {
+            q.schedule(t + (i as f64 % 97.0) * 1e-3, i as u64);
+        }
+        let stats = bench(&format!("queue_churn_live{live}"), 100, 2000, 5, |i| {
+            let ev = q.pop().unwrap();
+            t = q.now();
+            q.schedule(t + ((i * 31) % 89) as f64 * 1e-3 + 1e-6, ev.payload);
+        });
+        println!(
+            "{}  ({:.1} Mevents/s)",
+            stats.report(),
+            1e3 / stats.median_ns
+        );
+    }
+
+    // delay model draws
+    let mut delays = LinkDelayModel::paper_default(500, 1);
+    let stats = bench("delay_draw", 100, 5000, 5, |i| {
+        black_box(delays.draw(i % 500, (i * 7) % 500))
+    });
+    println!("{}", stats.report());
+
+    // activation schedule
+    let mut sched = ActivationSchedule::new(500, 0.2, 1);
+    let stats = bench("activation_next", 100, 5000, 5, |_| {
+        black_box(sched.next_activation())
+    });
+    println!("{}", stats.report());
+
+    // node update step at low and high degree (the Laplacian combine)
+    {
+        use a2dwb::algo::wbp::{DiagCoef, WbpNode};
+        use a2dwb::algo::ThetaSeq;
+        for deg in [2usize, 49, 199] {
+            let n = 100;
+            let mut theta = ThetaSeq::new(200);
+            let mut node = WbpNode::new(n, deg);
+            let mut rng = Rng64::new(1);
+            for l in 0..n {
+                node.own_grad[l] = rng.uniform();
+            }
+            for s in 0..deg {
+                let g: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+                node.deliver(s, 1, &g);
+            }
+            let mut k = 0usize;
+            let stats = bench(&format!("apply_update_deg{deg}_n{n}"), 50, 2000, 5, |_| {
+                node.apply_update(&mut theta, k, 200, 1e-6, deg, DiagCoef::Laplacian);
+                k += 1;
+            });
+            println!("{}", stats.report());
+        }
+    }
+
+    // end-to-end: events/second of a real run
+    println!("\n== end-to-end coordinator throughput ==");
+    for (nodes, topo) in [
+        (50usize, TopologySpec::Cycle),
+        (50, TopologySpec::Complete),
+        (200, TopologySpec::Cycle),
+    ] {
+        let cfg = ExperimentConfig {
+            nodes,
+            topology: topo,
+            duration: 10.0,
+            metric_interval: 2.0,
+            ..ExperimentConfig::gaussian_default()
+        };
+        let (report, secs) = time_once(|| run_experiment(&cfg).expect("run"));
+        println!(
+            "m={nodes:<4} {:<9} events={:<8} wall={secs:.2}s -> {:.0} events/s, {:.0} activations/s",
+            topo.name(),
+            report.events,
+            report.events as f64 / secs,
+            report.activations as f64 / secs
+        );
+    }
+}

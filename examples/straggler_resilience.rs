@@ -1,0 +1,66 @@
+//! Straggler & packet-loss resilience — the paper's motivation, amplified.
+//!
+//! The introduction argues synchronous decentralized methods "must wait
+//! for the slowest communication edge". This driver quantifies that:
+//! we slow down 10% of the nodes by a growing factor (and optionally
+//! drop messages) and compare A²DWB vs DCWB at a fixed virtual budget.
+//! The async algorithm only sees staler gradients; the sync baseline's
+//! every round inherits the straggler's delay.
+//!
+//! ```bash
+//! cargo run --release --example straggler_resilience -- --nodes 40
+//! ```
+
+use a2dwb::cli::Args;
+use a2dwb::graph::TopologySpec;
+use a2dwb::prelude::*;
+
+fn run(alg: AlgorithmKind, slowdown: f64, drop: f64, nodes: usize) -> (f64, u64) {
+    let cfg = ExperimentConfig {
+        nodes,
+        topology: TopologySpec::ErdosRenyi { p: 0.15, seed: 42 },
+        algorithm: alg,
+        duration: 25.0,
+        faults: FaultModel {
+            straggler_fraction: 0.1,
+            straggler_slowdown: slowdown,
+            drop_prob: drop,
+        },
+        ..ExperimentConfig::gaussian_default()
+    };
+    let r = run_experiment(&cfg).expect("run");
+    let work = if alg == AlgorithmKind::Dcwb { r.rounds } else { r.activations };
+    (r.final_dual_objective(), work)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let nodes: usize = args.get("nodes", 40).unwrap();
+
+    println!("== stragglers: 10% of nodes slowed by k× (T=25s, ER p=0.15) ==");
+    println!(
+        "{:<10} {:>14} {:>12} {:>14} {:>10}",
+        "slowdown", "a2dwb dual", "activations", "dcwb dual", "rounds"
+    );
+    for slowdown in [1.0, 2.0, 5.0, 10.0] {
+        let (a, act) = run(AlgorithmKind::A2dwb, slowdown, 0.0, nodes);
+        let (s, rounds) = run(AlgorithmKind::Dcwb, slowdown, 0.0, nodes);
+        println!("{slowdown:<10} {a:>14.6} {act:>12} {s:>14.6} {rounds:>10}");
+    }
+
+    println!("\n== packet loss: iid message drop probability ==");
+    println!(
+        "{:<10} {:>14} {:>14}",
+        "drop", "a2dwb dual", "dcwb dual"
+    );
+    for drop in [0.0, 0.1, 0.3, 0.5] {
+        let (a, _) = run(AlgorithmKind::A2dwb, 1.0, drop, nodes);
+        let (s, _) = run(AlgorithmKind::Dcwb, 1.0, drop, nodes);
+        println!("{drop:<10} {a:>14.6} {s:>14.6}");
+    }
+
+    println!(
+        "\nreading: DCWB's round time inherits every straggler/retransmission;\n\
+         A²DWB keeps its activation cadence and only pays in gradient staleness."
+    );
+}

@@ -1,0 +1,65 @@
+//! Topology sweep: quantifies how network connectivity controls
+//! convergence (the cross-row comparison of Figs. 1–2) plus the
+//! spectral quantities that explain it.
+//!
+//! ```bash
+//! cargo run --release --example topology_sweep -- --nodes 36 --duration 20
+//! ```
+
+use a2dwb::cli::Args;
+use a2dwb::graph::{Graph, TopologySpec};
+use a2dwb::prelude::*;
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let nodes: usize = args.get("nodes", 36).unwrap();
+    let duration: f64 = args.get("duration", 20.0).unwrap();
+    let seed: u64 = args.get("seed", 42).unwrap();
+
+    let topologies = [
+        TopologySpec::Complete,
+        TopologySpec::ErdosRenyi { p: 0.2, seed },
+        TopologySpec::Grid,
+        TopologySpec::Cycle,
+        TopologySpec::Star,
+        TopologySpec::Path,
+    ];
+
+    println!(
+        "{:<14} {:>7} {:>9} {:>9} {:>12} {:>12} {:>10}",
+        "topology", "edges", "λ₂", "λmax", "dual(final)", "consensus", "activ."
+    );
+    for topo in topologies {
+        if matches!(topo, TopologySpec::Grid) {
+            let side = (nodes as f64).sqrt().round() as usize;
+            if side * side != nodes {
+                println!("{:<14} skipped (m={nodes} not a perfect square)", "grid");
+                continue;
+            }
+        }
+        let g = Graph::build(nodes, topo);
+        let cfg = ExperimentConfig {
+            nodes,
+            topology: topo,
+            algorithm: AlgorithmKind::A2dwb,
+            duration,
+            seed,
+            ..ExperimentConfig::gaussian_default()
+        };
+        let r = run_experiment(&cfg).expect("run failed");
+        println!(
+            "{:<14} {:>7} {:>9.4} {:>9.3} {:>12.6} {:>12.3e} {:>10}",
+            topo.name(),
+            g.num_edges(),
+            g.algebraic_connectivity(),
+            g.lambda_max(),
+            r.final_dual_objective(),
+            r.final_consensus(),
+            r.activations
+        );
+    }
+    println!(
+        "\nreading: higher λ₂ (connectivity) → faster consensus → lower dual \
+         objective at equal budget — the mechanism behind the paper's Fig. 1 ordering."
+    );
+}

@@ -1,0 +1,107 @@
+"""AOT: lower the L2 oracle to HLO *text* artifacts for the Rust runtime.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 (what the `xla`
+0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (M, n) shape variant plus a manifest file the
+Rust runtime reads:
+
+    artifacts/oracle_m{M}_n{n}.hlo.txt
+    artifacts/multi_m{nodes}_s{M}_n{n}.hlo.txt   (metrics batch oracle)
+    artifacts/manifest.txt     lines: kind M n filename
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (M, n) variants compiled by default. n=100: the Gaussian experiment
+# support; n=784: the 28x28 digit grid. M: per-activation sample batch.
+DEFAULT_SHAPES = [
+    (8, 100),
+    (32, 100),
+    (128, 100),
+    (32, 784),
+    (128, 784),
+]
+
+# (nodes_chunk, M, n) for the batched metrics oracle.
+DEFAULT_MULTI = [
+    (16, 32, 100),
+    (16, 32, 784),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_oracle(m, n):
+    eta = jax.ShapeDtypeStruct((n,), jnp.float32)
+    cost = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    beta = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return jax.jit(model.node_oracle).lower(eta, cost, beta)
+
+
+def lower_multi(nodes, m, n):
+    etas = jax.ShapeDtypeStruct((nodes, n), jnp.float32)
+    costs = jax.ShapeDtypeStruct((nodes, m, n), jnp.float32)
+    beta = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return jax.jit(model.multi_node_oracle).lower(etas, costs, beta)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default=None,
+        help="comma list like 8x100,32x100 overriding the default set",
+    )
+    args = ap.parse_args()
+
+    shapes = DEFAULT_SHAPES
+    if args.shapes:
+        shapes = [tuple(map(int, s.split("x"))) for s in args.shapes.split(",")]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+
+    for m, n in shapes:
+        name = f"oracle_m{m}_n{n}.hlo.txt"
+        text = to_hlo_text(lower_oracle(m, n))
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"oracle {m} {n} {name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for nodes, m, n in DEFAULT_MULTI:
+        name = f"multi_b{nodes}_m{m}_n{n}.hlo.txt"
+        text = to_hlo_text(lower_multi(nodes, m, n))
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"multi {nodes}x{m} {n} {name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

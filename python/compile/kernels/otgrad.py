@@ -1,0 +1,123 @@
+"""Pallas kernel for the stochastic entropic-dual oracle (L1).
+
+The per-activation hot-spot of A²DWB (paper Alg. 3 line 6 / Lemma 1):
+row-softmax of ``(eta - C)/beta`` averaged over the sample batch, plus
+the batch-mean logsumexp (the node's dual objective contribution).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid over row-blocks of the ``[M, n]`` cost matrix — each program
+    instance streams one ``[block_m, n]`` tile HBM→VMEM via BlockSpec;
+  * ``eta`` ([n]) and the two accumulators ([n] and [1]) live in VMEM for
+    the whole grid (index_map pins them to block 0), which is the Pallas
+    idiom for cross-step reduction — grid steps execute sequentially on a
+    TPU core, so ``grad_ref[...] += ...`` is race-free;
+  * the kernel is VPU-bound (exp + row reductions, no MXU); the relevant
+    roofline is VMEM bandwidth. VMEM footprint per step is
+    ``(block_m + 2) * n * 4`` bytes + O(block_m) — see
+    ``vmem_footprint_bytes`` below, used by DESIGN.md §Perf estimates.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO which both the Python
+tests and the Rust runtime (via the AOT artifact) can run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _oracle_kernel(eta_ref, cost_ref, beta_ref, gsum_ref, lsum_ref):
+    """One grid step: fold a [block_m, n] tile into the running sums.
+
+    Outputs are *sums* over rows (softmax rows and logsumexp values);
+    the caller divides by M and applies the beta scaling. Keeping the
+    kernel scale-free makes the accumulation exact w.r.t. block size.
+    """
+    step = pl.program_id(0)
+    beta = beta_ref[0]
+    eta = eta_ref[...]  # [n]
+    c = cost_ref[...]  # [block_m, n]
+
+    s = (eta[None, :] - c) / beta  # [block_m, n]
+    smax = jnp.max(s, axis=1, keepdims=True)  # [block_m, 1]
+    e = jnp.exp(s - smax)  # [block_m, n]
+    z = jnp.sum(e, axis=1, keepdims=True)  # [block_m, 1]
+    gsum = jnp.sum(e / z, axis=0)  # [n]  sum of softmax rows
+    lsum = jnp.sum(smax[:, 0] + jnp.log(z[:, 0]))  # []   sum of row LSEs
+
+    @pl.when(step == 0)
+    def _init():
+        gsum_ref[...] = jnp.zeros_like(gsum_ref)
+        lsum_ref[...] = jnp.zeros_like(lsum_ref)
+
+    gsum_ref[...] += gsum
+    lsum_ref[...] += jnp.full((1,), lsum, lsum_ref.dtype)
+
+
+def pick_block_m(m, target=128):
+    """Largest divisor of ``m`` that is <= target (>= 1).
+
+    The grid must tile M exactly (no masking logic in the kernel keeps
+    the accumulators exact), so we pick a divisor. For power-of-two M
+    this is min(m, target).
+    """
+    best = 1
+    for d in range(1, min(m, target) + 1):
+        if m % d == 0:
+            best = d
+    return best
+
+
+def vmem_footprint_bytes(block_m, n):
+    """Estimated per-step VMEM residency of the kernel (f32).
+
+    tile [block_m, n] + eta [n] + grad accumulator [n] + the ~3
+    block_m-sized row temporaries (s/e reuse the tile slot in practice;
+    we count conservatively: tile, s, e each [block_m, n]).
+    """
+    return 4 * (3 * block_m * n + 2 * n + 4 * block_m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def dual_oracle_sums(eta, cost, beta, *, block_m=None):
+    """Pallas-backed oracle returning (sum of softmax rows, sum of LSEs).
+
+    eta: f32[n]; cost: f32[M, n]; beta: f32[1]. Returns (f32[n], f32[1]).
+    """
+    m, n = cost.shape
+    bm = block_m or pick_block_m(m)
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _oracle_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),  # eta: whole vector, pinned
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),  # cost: row tiles
+            pl.BlockSpec((1,), lambda i: (0,)),  # beta: pinned scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),  # grad-sum accumulator
+            pl.BlockSpec((1,), lambda i: (0,)),  # lse-sum accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(eta, cost, beta)
+
+
+def dual_oracle_pallas(eta, cost, beta_arr):
+    """Full oracle matching ``ref.dual_oracle_ref`` semantics.
+
+    beta_arr: f32[1] runtime input (one AOT artifact serves all betas).
+    Returns (grad f32[n], val f32[1]).
+    """
+    m = cost.shape[0]
+    gsum, lsum = dual_oracle_sums(eta, cost, beta_arr)
+    grad = gsum / jnp.float32(m)
+    val = beta_arr * lsum / jnp.float32(m)
+    return grad, val

@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracle for the entropic semi-discrete dual.
+
+This is the correctness ground truth for the Pallas kernel in
+``otgrad.py`` and (transitively, through the AOT artifacts) for the
+native Rust oracle in ``rust/src/ot/``.
+
+Math (paper Lemma 1, Eq. 6). For one node holding measure ``mu`` with a
+batch of ``M`` samples ``Y_1..Y_M`` drawn from it, support points
+``z_1..z_n`` and local dual potential ``eta ∈ R^n``:
+
+  cost row      C[r, l] = c(z_l, Y_r)
+  logits        S[r, l] = (eta[l] - C[r, l]) / beta
+  sample grad   p_r     = softmax(S[r, :])          (Eq. 6)
+  grad estimate g       = mean_r p_r                 (∇̃ W*_{β,μ}(eta))
+  dual value    f       = mean_r beta * logsumexp(S[r, :])
+                          (W*_{β,μ}(eta) up to the additive
+                           -beta*E[log mu(Y)] constant, which is
+                           potential-independent and drops from all
+                           comparisons between algorithms)
+
+Everything is computed in a numerically stable (max-subtracted) form.
+"""
+
+import jax.numpy as jnp
+
+
+def dual_oracle_ref(eta, cost, beta):
+    """Reference stochastic dual oracle.
+
+    Args:
+      eta:  f32[n]    local dual potential (already in sqrt(W)-transformed
+                      coordinates, i.e. the ``eta_bar`` of the paper).
+      cost: f32[M, n] per-sample transport cost rows ``c(z_l, Y_r)``.
+      beta: scalar    entropic regularization strength (> 0).
+
+    Returns:
+      grad: f32[n]  mean softmax over the batch — unbiased estimate of
+                    ``∇ W*_{β,μ}(eta)``.
+      val:  f32[]   mean ``beta * logsumexp((eta - C_r)/beta)`` — unbiased
+                    estimate of the dual objective contribution.
+    """
+    s = (eta[None, :] - cost) / beta  # [M, n]
+    smax = jnp.max(s, axis=1, keepdims=True)  # [M, 1]
+    e = jnp.exp(s - smax)  # [M, n]
+    z = jnp.sum(e, axis=1, keepdims=True)  # [M, 1]
+    p = e / z  # [M, n] softmax rows
+    grad = jnp.mean(p, axis=0)  # [n]
+    lse = smax[:, 0] + jnp.log(z[:, 0])  # [M]
+    val = beta * jnp.mean(lse)  # []
+    return grad, val
+
+
+def softmax_rows_ref(s):
+    """Row-wise softmax, stable. s: f32[M, n] -> f32[M, n]."""
+    smax = jnp.max(s, axis=1, keepdims=True)
+    e = jnp.exp(s - smax)
+    return e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def logsumexp_rows_ref(s):
+    """Row-wise logsumexp, stable. s: f32[M, n] -> f32[M]."""
+    smax = jnp.max(s, axis=1)
+    return smax + jnp.log(jnp.sum(jnp.exp(s - smax[:, None]), axis=1))

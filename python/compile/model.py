@@ -1,0 +1,69 @@
+"""L2: JAX model of the per-node dual computation (build-time only).
+
+The "model" of this paper is not a neural net — it is the node-local
+piece of the entropic-dual objective W*_{β,μ_i} and its stochastic
+gradient (paper Lemma 1). This module assembles the L1 Pallas kernel
+into the exact function signature that the Rust coordinator invokes
+through the AOT artifact:
+
+    node_oracle(eta f32[n], cost f32[M, n], beta f32[1])
+        -> (grad f32[n], val f32[1])
+
+plus a vmapped multi-node variant used for batched metric evaluation
+(the dual objective is a sum over nodes of the same computation; one
+PJRT call evaluates all nodes of a metrics snapshot at once).
+
+Python never runs at request time: Rust loads the lowered HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.otgrad import dual_oracle_pallas
+from compile.kernels.ref import dual_oracle_ref
+
+
+def node_oracle(eta, cost, beta):
+    """Single-node stochastic dual oracle (Pallas-backed).
+
+    Args:
+      eta:  f32[n]    local transformed potential eta_bar_i.
+      cost: f32[M, n] cost rows for the M drawn samples.
+      beta: f32[1]    entropic regularization.
+
+    Returns:
+      (grad f32[n], val f32[1]) — see kernels/ref.py for the math.
+    """
+    return dual_oracle_pallas(eta, cost, beta)
+
+
+def node_oracle_ref(eta, cost, beta):
+    """Pure-jnp twin of ``node_oracle`` (same signature, f32[1] val)."""
+    grad, val = dual_oracle_ref(eta, cost, beta[0])
+    return grad, val.reshape((1,))
+
+
+def multi_node_oracle(etas, costs, beta):
+    """Batched oracle over a whole network snapshot.
+
+    Args:
+      etas:  f32[m, n]    transformed potentials of all m nodes.
+      costs: f32[m, M, n] per-node evaluation cost rows.
+      beta:  f32[1]
+
+    Returns:
+      grads f32[m, n], vals f32[m, 1]. ``sum(vals)`` is the global dual
+      objective (up to the measure-entropy constant — see ref.py).
+    """
+    return jax.vmap(lambda e, c: node_oracle_ref(e, c, beta))(etas, costs)
+
+
+def barycenter_weights(eta, cost, beta):
+    """Primal readback: the barycenter weight estimate at a node.
+
+    With x = x*(sqrt(W) eta), the node's primal block is exactly the
+    oracle gradient (softmax mean). Exposed separately so the artifact
+    set documents the primal-extraction path of Theorem 1.
+    """
+    grad, _ = dual_oracle_pallas(eta, cost, beta)
+    return grad

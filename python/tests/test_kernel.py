@@ -1,0 +1,145 @@
+"""Pallas oracle kernel vs pure-jnp reference — the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes/regularization; assert_allclose against
+ref.py per the project testing contract.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.otgrad import (
+    dual_oracle_pallas,
+    dual_oracle_sums,
+    pick_block_m,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import (
+    dual_oracle_ref,
+    logsumexp_rows_ref,
+    softmax_rows_ref,
+)
+
+
+def _case(seed, m, n, beta, scale=5.0):
+    rng = np.random.default_rng(seed)
+    eta = jnp.array(rng.normal(0, scale, size=n), jnp.float32)
+    cost = jnp.array(rng.uniform(0, scale**2, size=(m, n)), jnp.float32)
+    return eta, cost, jnp.array([beta], jnp.float32)
+
+
+# ---------------------------------------------------------------- basic
+
+
+def test_matches_ref_small():
+    eta, cost, beta = _case(0, 8, 16, 0.5)
+    g, v = dual_oracle_pallas(eta, cost, beta)
+    gr, vr = dual_oracle_ref(eta, cost, float(beta[0]))
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v[0], vr, rtol=1e-5, atol=1e-6)
+
+
+def test_grad_is_distribution():
+    """Each softmax row is a distribution, so the mean must be too."""
+    eta, cost, beta = _case(1, 32, 100, 0.1)
+    g, _ = dual_oracle_pallas(eta, cost, beta)
+    assert float(jnp.min(g)) >= 0.0
+    np.testing.assert_allclose(float(jnp.sum(g)), 1.0, rtol=1e-5)
+
+
+def test_multiblock_accumulation_exact():
+    """Grid accumulation (block_m < M) must equal the single-block result."""
+    eta, cost, beta = _case(2, 64, 50, 0.3)
+    g1, v1 = dual_oracle_sums(eta, cost, beta, block_m=64)
+    g2, v2 = dual_oracle_sums(eta, cost, beta, block_m=8)
+    np.testing.assert_allclose(g1, g2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6, atol=1e-6)
+
+
+def test_extreme_logits_stable():
+    """Max-subtraction must survive beta -> small (sharp softmax)."""
+    eta, cost, beta = _case(3, 16, 32, 1e-3, scale=10.0)
+    g, v = dual_oracle_pallas(eta, cost, beta)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.isfinite(float(v[0]))
+    np.testing.assert_allclose(float(jnp.sum(g)), 1.0, rtol=1e-4)
+
+
+def test_translation_invariance_of_grad():
+    """softmax((eta+c1) - C) == softmax(eta - C): gradient is shift-invariant."""
+    eta, cost, beta = _case(4, 16, 40, 0.2)
+    g1, v1 = dual_oracle_pallas(eta, cost, beta)
+    g2, v2 = dual_oracle_pallas(eta + 7.0, cost, beta)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+    # and the LSE shifts by exactly c1/beta * beta = c1
+    np.testing.assert_allclose(float(v2[0] - v1[0]), 7.0, rtol=1e-4)
+
+
+# ------------------------------------------------------------ hypothesis
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(2, 192),
+    beta=st.floats(0.05, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_sweep(m, n, beta, seed):
+    eta, cost, b = _case(seed, m, n, beta)
+    g, v = dual_oracle_pallas(eta, cost, b)
+    gr, vr = dual_oracle_ref(eta, cost, beta)
+    np.testing.assert_allclose(g, gr, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(float(v[0]), float(vr), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 512))
+def test_pick_block_m_divides(m):
+    bm = pick_block_m(m)
+    assert 1 <= bm <= min(m, 128)
+    assert m % bm == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 512), n=st.integers(1, 1024))
+def test_vmem_footprint_monotone(m, n):
+    bm = pick_block_m(m)
+    f = vmem_footprint_bytes(bm, n)
+    assert f > 0
+    # the AOT shape set must keep tiles comfortably inside 16 MiB VMEM
+    assert vmem_footprint_bytes(128, 784) < 4 * 2**20
+
+
+# ------------------------------------------------------- ref self-checks
+
+
+def test_ref_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(7)
+    s = jnp.array(rng.normal(size=(9, 33)), jnp.float32)
+    p = softmax_rows_ref(s)
+    np.testing.assert_allclose(np.asarray(p.sum(axis=1)), np.ones(9), rtol=1e-6)
+
+
+def test_ref_lse_vs_numpy():
+    rng = np.random.default_rng(8)
+    s = rng.normal(size=(5, 17)).astype(np.float32)
+    ours = logsumexp_rows_ref(jnp.array(s))
+    theirs = np.log(np.exp(s.astype(np.float64)).sum(axis=1))
+    np.testing.assert_allclose(np.asarray(ours), theirs, rtol=1e-5)
+
+
+def test_grad_is_derivative_of_value():
+    """Finite-difference check: grad ≈ d(val)/d(eta). Ties Eq.6 to W*."""
+    eta, cost, beta = _case(9, 24, 12, 0.7)
+    g, v0 = dual_oracle_ref(eta, cost, float(beta[0]))
+    eps = 1e-3
+    fd = []
+    for l in range(12):
+        e = eta.at[l].add(eps)
+        _, vp = dual_oracle_ref(e, cost, float(beta[0]))
+        e = eta.at[l].add(-eps)
+        _, vm = dual_oracle_ref(e, cost, float(beta[0]))
+        fd.append((float(vp) - float(vm)) / (2 * eps))
+    np.testing.assert_allclose(np.asarray(g), fd, rtol=5e-3, atol=5e-4)

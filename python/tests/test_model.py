@@ -1,0 +1,61 @@
+"""L2 model tests: signatures, batching, and primal readback."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+def _mk(seed, nodes, m, n):
+    rng = np.random.default_rng(seed)
+    etas = jnp.array(rng.normal(size=(nodes, n)), jnp.float32)
+    costs = jnp.array(rng.uniform(0, 9, size=(nodes, m, n)), jnp.float32)
+    return etas, costs, jnp.array([0.25], jnp.float32)
+
+
+def test_node_oracle_shapes():
+    etas, costs, beta = _mk(0, 1, 16, 48)
+    g, v = model.node_oracle(etas[0], costs[0], beta)
+    assert g.shape == (48,)
+    assert v.shape == (1,)
+
+
+def test_node_oracle_matches_ref_twin():
+    etas, costs, beta = _mk(1, 1, 16, 48)
+    g1, v1 = model.node_oracle(etas[0], costs[0], beta)
+    g2, v2 = model.node_oracle_ref(etas[0], costs[0], beta)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-6)
+
+
+def test_multi_node_oracle_equals_loop():
+    etas, costs, beta = _mk(2, 5, 8, 20)
+    gs, vs = model.multi_node_oracle(etas, costs, beta)
+    assert gs.shape == (5, 20) and vs.shape == (5, 1)
+    for i in range(5):
+        g, v = model.node_oracle_ref(etas[i], costs[i], beta)
+        np.testing.assert_allclose(gs[i], g, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(vs[i], v, rtol=1e-5, atol=1e-6)
+
+
+def test_barycenter_weights_simplex():
+    etas, costs, beta = _mk(3, 1, 32, 64)
+    w = model.barycenter_weights(etas[0], costs[0], beta)
+    assert float(jnp.min(w)) >= 0
+    np.testing.assert_allclose(float(jnp.sum(w)), 1.0, rtol=1e-5)
+
+
+def test_beta_sharpens_softmax():
+    """Smaller beta concentrates mass on the argmin-cost support point."""
+    rng = np.random.default_rng(4)
+    n = 30
+    eta = jnp.zeros((n,), jnp.float32)
+    cost = jnp.array(rng.uniform(1, 9, size=(1, n)), jnp.float32)
+    g_sharp, _ = model.node_oracle_ref(eta, cost, jnp.array([1e-3], jnp.float32))
+    g_soft, _ = model.node_oracle_ref(eta, cost, jnp.array([1000.0], jnp.float32))
+    assert float(jnp.max(g_sharp)) > 0.99  # near one-hot at argmin cost
+    assert int(jnp.argmax(g_sharp)) == int(jnp.argmin(cost[0]))
+    np.testing.assert_allclose(
+        np.asarray(g_soft), np.full(n, 1.0 / n), atol=1e-3
+    )  # near uniform

@@ -1,0 +1,222 @@
+//! ASBCDS — Algorithm 1: Accelerated Stochastic Block Coordinate
+//! Descent with Stale information.
+//!
+//! Literal three-sequence (λ, ζ, η) form. The compensated point
+//! `ω_{j(k+1)}` is computed per block by the appendix's auxiliary
+//! recursion (Algorithm 1-Auxiliary): starting from the *stale snapshot*
+//! `(η_{j_p}, ζ_{j_p})`, roll the momentum recursion forward to k+1 with
+//! the stale ζ frozen,
+//!
+//! ```text
+//! λ̂_{i+1} = θ_{i+1} ζ̂ + (1 − θ_{i+1}) η̂_i,   η̂_{i+1} = λ̂_{i+1},
+//! ```
+//!
+//! which is exactly the closed-form compensation
+//! `η_{j_p} + Σ ρ_i (λ_{j_p} − η_{j_p−1})` of Algorithm 1 line 3 but
+//! numerically robust (products of d_l are never materialized).
+//!
+//! This implementation keeps a ring buffer of the last τ+1 full (η, ζ)
+//! snapshots — O(τ·mn) memory. It exists for *validation* (Theorems 2–3
+//! tests and the conv_tau bench); the production path is PASBCDS /
+//! A²DWB, which needs O(mn).
+
+use super::schedule::DelaySchedule;
+use super::{BlockFn, ThetaSeq};
+
+/// Ring buffer of full-vector snapshots indexed by iteration.
+struct SnapshotRing {
+    cap: usize,
+    /// (iteration, eta, zeta)
+    slots: Vec<(usize, Vec<f64>, Vec<f64>)>,
+}
+
+impl SnapshotRing {
+    fn new(cap: usize) -> Self {
+        Self { cap, slots: Vec::with_capacity(cap) }
+    }
+
+    fn push(&mut self, iter: usize, eta: &[f64], zeta: &[f64]) {
+        if self.slots.len() == self.cap {
+            self.slots.remove(0);
+        }
+        self.slots.push((iter, eta.to_vec(), zeta.to_vec()));
+    }
+
+    fn get(&self, iter: usize) -> (&[f64], &[f64]) {
+        for (it, eta, zeta) in self.slots.iter().rev() {
+            if *it == iter {
+                return (eta, zeta);
+            }
+        }
+        panic!("snapshot {iter} evicted: delay exceeded ring capacity");
+    }
+}
+
+/// Driver state for Algorithm 1.
+pub struct Asbcds<'a, P: BlockFn, S: DelaySchedule> {
+    problem: &'a mut P,
+    schedule: S,
+    theta: ThetaSeq,
+    gamma: f64,
+    pub eta: Vec<f64>,
+    pub zeta: Vec<f64>,
+    ring: SnapshotRing,
+    /// Iteration counter k (0-based: `step` performs iteration k).
+    pub k: usize,
+    m: usize,
+    n: usize,
+    // scratch
+    omega: Vec<f64>,
+    grad: Vec<f64>,
+}
+
+impl<'a, P: BlockFn, S: DelaySchedule> Asbcds<'a, P, S> {
+    /// Start from η₀ = ζ₀ = λ₀ = `x0` (paper input line).
+    pub fn new(problem: &'a mut P, schedule: S, gamma: f64, x0: &[f64]) -> Self {
+        let m = problem.num_blocks();
+        let n = problem.block_dim();
+        assert_eq!(x0.len(), m * n);
+        let tau = schedule.tau();
+        let mut ring = SnapshotRing::new(tau + 2);
+        ring.push(0, x0, x0);
+        Self {
+            problem,
+            schedule,
+            theta: ThetaSeq::new(m),
+            gamma,
+            eta: x0.to_vec(),
+            zeta: x0.to_vec(),
+            ring,
+            k: 0,
+            m,
+            n,
+            omega: vec![0.0; m * n],
+            grad: vec![0.0; n],
+        }
+    }
+
+    /// Roll the auxiliary recursion for block p from snapshot j to k+1.
+    /// Returns nothing; writes ω^[p] into `self.omega`.
+    fn compensate_block(&mut self, p: usize, j: usize) {
+        let (eta_j, zeta_j) = self.ring.get(j);
+        let lo = p * self.n;
+        let hi = lo + self.n;
+        // η̂ starts at η_j^[p]; ζ̂ is frozen at ζ_j^[p]
+        self.omega[lo..hi].copy_from_slice(&eta_j[lo..hi]);
+        let zeta_p = zeta_j[lo..hi].to_vec();
+        for i in j..=self.k {
+            let th = self.theta.get(i + 1); // θ_{i+1}
+            for (w, z) in self.omega[lo..hi].iter_mut().zip(&zeta_p) {
+                *w = th * z + (1.0 - th) * *w;
+            }
+        }
+    }
+
+    /// One iteration of Algorithm 1, updating block `i_k`.
+    pub fn step(&mut self, i_k: usize) {
+        assert!(i_k < self.m);
+        let k = self.k;
+        let th = self.theta.get(k + 1); // θ_{k+1}
+
+        // line 2: λ_{k+1} = θ_{k+1} ζ_k + (1−θ_{k+1}) η_k
+        let lambda: Vec<f64> = self
+            .zeta
+            .iter()
+            .zip(&self.eta)
+            .map(|(z, e)| th * z + (1.0 - th) * e)
+            .collect();
+
+        // line 3: assemble the compensated stale point ω_{j(k+1)}
+        for p in 0..self.m {
+            let j = self.schedule.stale_iter(k, p);
+            self.compensate_block(p, j);
+        }
+
+        // line 4: stochastic partial gradient at ω, block i_k
+        let omega = std::mem::take(&mut self.omega);
+        self.problem.partial_grad(&omega, i_k, k, &mut self.grad);
+        self.omega = omega;
+
+        // ζ update on block i_k only
+        let scale = self.gamma / (self.m as f64 * th);
+        let lo = i_k * self.n;
+        for (z, g) in self.zeta[lo..lo + self.n].iter_mut().zip(&self.grad) {
+            *z -= scale * g;
+        }
+
+        // line 5: η_{k+1} = λ_{k+1} + mθ_{k+1}(ζ_{k+1} − ζ_k)
+        //   (ζ_{k+1} − ζ_k is supported on block i_k)
+        self.eta.copy_from_slice(&lambda);
+        for idx in lo..lo + self.n {
+            // −mθ·scale·g = −γ g on the updated block
+            self.eta[idx] -= self.gamma * self.grad[idx - lo];
+        }
+
+        self.k += 1;
+        self.ring.push(self.k, &self.eta, &self.zeta);
+    }
+
+    /// Run K iterations with uniformly random block choice from `rng`.
+    pub fn run(&mut self, iters: usize, rng: &mut crate::rng::Rng64) {
+        for _ in 0..iters {
+            let i_k = rng.below(self.m as u64) as usize;
+            self.step(i_k);
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        self.problem.value(&self.eta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::schedule::{FreshSchedule, UniformDelaySchedule};
+    use crate::problems::QuadraticBlockFn;
+    use crate::rng::Rng64;
+
+    #[test]
+    fn decreases_quadratic_fresh() {
+        let mut p = QuadraticBlockFn::random(4, 3, 0.0, 123);
+        let l = p.smoothness();
+        let x0 = vec![1.0; 12];
+        let v0 = p.value(&x0);
+        let opt = p.optimal_value();
+        let mut alg = Asbcds::new(&mut p, FreshSchedule, 1.0 / (3.0 * l), &x0);
+        let mut rng = Rng64::new(7);
+        alg.run(800, &mut rng);
+        let v = alg.value();
+        assert!(v < v0, "no progress: {v} !< {v0}");
+        assert!(v - opt < 0.05 * (v0 - opt), "v={v} v0={v0} opt={opt}");
+    }
+
+    #[test]
+    fn tolerates_staleness() {
+        let mut p = QuadraticBlockFn::random(5, 2, 0.0, 9);
+        let l = p.smoothness();
+        let x0 = vec![0.5; 10];
+        let v0 = p.value(&x0);
+        let opt = p.optimal_value();
+        let sched = UniformDelaySchedule::new(3, 11);
+        // Theorem 2 step-size scaling: shrink γ with τ
+        let mut alg = Asbcds::new(&mut p, sched, 1.0 / (12.0 * l), &x0);
+        let mut rng = Rng64::new(8);
+        alg.run(3000, &mut rng);
+        let v = alg.value();
+        assert!(
+            v - opt < 0.1 * (v0 - opt),
+            "stale run did not converge: {v} (start {v0}, opt {opt})"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "evicted")]
+    fn ring_eviction_guard() {
+        let mut ring = SnapshotRing::new(2);
+        ring.push(0, &[0.0], &[0.0]);
+        ring.push(1, &[0.0], &[0.0]);
+        ring.push(2, &[0.0], &[0.0]);
+        ring.get(0);
+    }
+}

@@ -1,0 +1,90 @@
+//! The paper's algorithms.
+//!
+//! * [`theta`] — the shared acceleration sequence θ_k (Lemma 2).
+//! * [`asbcds`] / [`pasbcds`] — the generic inducing methods
+//!   (Algorithms 1 and 2) over an abstract smooth stochastic objective
+//!   ([`BlockFn`]); Theorem 3 equivalence is tested on these.
+//! * [`wbp`] — the node-local state machine shared by A²DWB, A²DWBN and
+//!   DCWB (Algorithm 3 instantiated on the WBP dual); the event-driven
+//!   network execution lives in [`crate::coordinator`].
+//! * [`schedule`] — staleness schedules `j_p(k+1)` for the generic
+//!   methods.
+
+pub mod asbcds;
+pub mod pasbcds;
+pub mod schedule;
+pub mod theta;
+pub mod wbp;
+
+pub use schedule::{DelaySchedule, FreshSchedule, UniformDelaySchedule};
+pub use theta::ThetaSeq;
+
+/// Which algorithm a coordinator run executes (paper §4 compares three).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgorithmKind {
+    /// Algorithm 3: asynchronous, momentum-compensated (the paper's).
+    A2dwb,
+    /// Naive asynchronous: stale gradients without compensation.
+    A2dwbn,
+    /// Synchronous baseline (Dvurechenskii et al. 2018 Alg. 3): global
+    /// barrier each round, waits for the slowest edge.
+    Dcwb,
+}
+
+impl AlgorithmKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmKind::A2dwb => "a2dwb",
+            AlgorithmKind::A2dwbn => "a2dwbn",
+            AlgorithmKind::Dcwb => "dcwb",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "a2dwb" | "async" => Ok(AlgorithmKind::A2dwb),
+            "a2dwbn" | "naive" => Ok(AlgorithmKind::A2dwbn),
+            "dcwb" | "sync" => Ok(AlgorithmKind::Dcwb),
+            other => Err(format!("unknown algorithm '{other}'")),
+        }
+    }
+
+    pub fn all() -> [AlgorithmKind; 3] {
+        [AlgorithmKind::A2dwb, AlgorithmKind::A2dwbn, AlgorithmKind::Dcwb]
+    }
+}
+
+/// Abstract L-smooth stochastic objective over `m` blocks of dimension
+/// `n` — the φ(η) of the paper's §2.2 general primal-dual formulation.
+///
+/// `partial_grad` must be a *deterministic function of (x, block, k)*:
+/// the iteration index keys the noise stream. This is what makes the
+/// ASBCDS ↔ PASBCDS equivalence (Theorem 3) testable — both algorithms
+/// see identical ξ_{k+1} draws.
+pub trait BlockFn {
+    /// Number of blocks m.
+    fn num_blocks(&self) -> usize;
+    /// Block dimension n.
+    fn block_dim(&self) -> usize;
+    /// Deterministic objective value φ(x) (expectation, for metrics).
+    fn value(&self, x: &[f64]) -> f64;
+    /// Stochastic partial gradient ∇φ(x, ξ_k)^[block] into `out` (len n).
+    fn partial_grad(&mut self, x: &[f64], block: usize, k: usize, out: &mut [f64]);
+    /// Exact full gradient (tests / baselines).
+    fn full_grad(&self, x: &[f64], out: &mut [f64]);
+    /// Smoothness constant L (sets the admissible step size).
+    fn smoothness(&self) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in AlgorithmKind::all() {
+            assert_eq!(AlgorithmKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(AlgorithmKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! PASBCDS — Algorithm 2: the practical change-of-variables form.
+//!
+//! State is two vectors (u, v) with block-sparse updates; the
+//! compensated point is the O(n)-per-block
+//!
+//! ```text
+//! ω_{j(k+1)}^[p] = u_{j_p(k+1)}^[p] + θ_{k+1}² v_{j_p(k+1)}^[p],
+//! ```
+//!
+//! no full-vector ops, no ρ_i products. Theorem 3 proves trajectory
+//! equivalence with Algorithm 1 — verified bit-for-bit (same schedule,
+//! same noise keys) in `rust/tests/equivalence.rs`.
+//!
+//! Staleness is honest: reading `u_{j}^[p]` means *the value block p had
+//! at iteration j*, reconstructed from a per-block version history
+//! (blocks change only when updated, so the history is sparse).
+
+use super::schedule::DelaySchedule;
+use super::{BlockFn, ThetaSeq};
+
+/// Per-block version history: (iteration-after-update, u_p, v_p).
+struct BlockHistory {
+    versions: Vec<(usize, Vec<f64>, Vec<f64>)>,
+}
+
+impl BlockHistory {
+    fn new(u0: &[f64], v0: &[f64]) -> Self {
+        Self { versions: vec![(0, u0.to_vec(), v0.to_vec())] }
+    }
+
+    /// The (u, v) the block had at iteration `iter`.
+    fn at(&self, iter: usize) -> (&[f64], &[f64]) {
+        // last version with index <= iter
+        let pos = self
+            .versions
+            .partition_point(|(it, _, _)| *it <= iter);
+        assert!(pos > 0, "history pruned past iteration {iter}");
+        let (_, u, v) = &self.versions[pos - 1];
+        (u, v)
+    }
+
+    fn push(&mut self, iter: usize, u: &[f64], v: &[f64]) {
+        debug_assert!(self.versions.last().map(|(i, _, _)| *i < iter).unwrap_or(true));
+        self.versions.push((iter, u.to_vec(), v.to_vec()));
+    }
+
+    /// Drop versions that can never be read again (staleness bound).
+    fn prune_before(&mut self, min_iter: usize) {
+        while self.versions.len() >= 2 && self.versions[1].0 <= min_iter {
+            self.versions.remove(0);
+        }
+    }
+}
+
+/// Driver state for Algorithm 2.
+pub struct Pasbcds<'a, P: BlockFn, S: DelaySchedule> {
+    problem: &'a mut P,
+    schedule: S,
+    theta: ThetaSeq,
+    gamma: f64,
+    pub u: Vec<f64>,
+    pub v: Vec<f64>,
+    history: Vec<BlockHistory>,
+    pub k: usize,
+    m: usize,
+    n: usize,
+    omega: Vec<f64>,
+    grad: Vec<f64>,
+}
+
+impl<'a, P: BlockFn, S: DelaySchedule> Pasbcds<'a, P, S> {
+    pub fn new(problem: &'a mut P, schedule: S, gamma: f64, x0: &[f64]) -> Self {
+        let m = problem.num_blocks();
+        let n = problem.block_dim();
+        assert_eq!(x0.len(), m * n);
+        let v0 = vec![0.0; n];
+        let history = (0..m)
+            .map(|p| BlockHistory::new(&x0[p * n..(p + 1) * n], &v0))
+            .collect();
+        Self {
+            problem,
+            schedule,
+            theta: ThetaSeq::new(m),
+            gamma,
+            u: x0.to_vec(),
+            v: vec![0.0; m * n],
+            history,
+            k: 0,
+            m,
+            n,
+            omega: vec![0.0; m * n],
+            grad: vec![0.0; n],
+        }
+    }
+
+    /// One iteration of Algorithm 2, updating block `i_k`.
+    pub fn step(&mut self, i_k: usize) {
+        assert!(i_k < self.m);
+        let k = self.k;
+        let th = self.theta.get(k + 1);
+        let th_sq = th * th;
+
+        // line 2: ω^[p] = u_{j_p}^[p] + θ_{k+1}² v_{j_p}^[p]
+        for p in 0..self.m {
+            let j = self.schedule.stale_iter(k, p);
+            let (u_j, v_j) = self.history[p].at(j);
+            let lo = p * self.n;
+            for (idx, (uu, vv)) in u_j.iter().zip(v_j).enumerate() {
+                self.omega[lo + idx] = uu + th_sq * vv;
+            }
+        }
+
+        // line 3: gradient and δ
+        let omega = std::mem::take(&mut self.omega);
+        self.problem.partial_grad(&omega, i_k, k, &mut self.grad);
+        self.omega = omega;
+        let m_th = self.m as f64 * th;
+        let delta_scale = self.gamma / m_th;
+
+        // line 4: block update of u and v
+        let lo = i_k * self.n;
+        let vcoef = (1.0 - m_th) / th_sq;
+        for (idx, g) in self.grad.iter().enumerate() {
+            let delta = delta_scale * g;
+            self.u[lo + idx] -= delta;
+            self.v[lo + idx] += vcoef * delta;
+        }
+
+        self.k += 1;
+        self.history[i_k].push(self.k, &self.u[lo..lo + self.n], &self.v[lo..lo + self.n]);
+        // prune safely below the staleness horizon
+        let horizon = self.k.saturating_sub(self.schedule.tau() + 1);
+        self.history[i_k].prune_before(horizon);
+    }
+
+    /// Current iterate: after `k` completed steps this is
+    /// η_k = u_k + θ_k² v_k (Theorem 3 mapping). At k = 0, v = 0 so the
+    /// θ index is immaterial.
+    pub fn eta(&mut self) -> Vec<f64> {
+        let th_sq = self.theta.sq(self.k.max(1));
+        self.u
+            .iter()
+            .zip(&self.v)
+            .map(|(u, v)| u + th_sq * v)
+            .collect()
+    }
+
+    /// Algorithm 2 output line: η_{K+1} = u_{K+1} + θ_{K+1}² v_{K+1}.
+    pub fn output(&mut self) -> Vec<f64> {
+        let th_sq = self.theta.sq(self.k.max(1));
+        self.u
+            .iter()
+            .zip(&self.v)
+            .map(|(u, v)| u + th_sq * v)
+            .collect()
+    }
+
+    pub fn run(&mut self, iters: usize, rng: &mut crate::rng::Rng64) {
+        for _ in 0..iters {
+            let i_k = rng.below(self.m as u64) as usize;
+            self.step(i_k);
+        }
+    }
+
+    pub fn value_at_eta(&mut self) -> f64 {
+        let eta = self.eta();
+        self.problem.value(&eta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::schedule::{FreshSchedule, UniformDelaySchedule};
+    use crate::problems::QuadraticBlockFn;
+    use crate::rng::Rng64;
+
+    #[test]
+    fn decreases_quadratic() {
+        let mut p = QuadraticBlockFn::random(4, 3, 0.0, 21);
+        let l = p.smoothness();
+        let x0 = vec![1.0; 12];
+        let v0 = p.value(&x0);
+        let opt = p.optimal_value();
+        let mut alg = Pasbcds::new(&mut p, FreshSchedule, 1.0 / (3.0 * l), &x0);
+        let mut rng = Rng64::new(7);
+        alg.run(800, &mut rng);
+        let v = alg.value_at_eta();
+        assert!(v - opt < 0.05 * (v0 - opt), "v={v} v0={v0} opt={opt}");
+    }
+
+    #[test]
+    fn stale_run_converges_and_uses_history() {
+        let mut p = QuadraticBlockFn::random(6, 2, 0.0, 5);
+        let l = p.smoothness();
+        let x0 = vec![1.0; 12];
+        let opt = p.optimal_value();
+        let v0 = p.value(&x0);
+        let mut alg =
+            Pasbcds::new(&mut p, UniformDelaySchedule::new(4, 3), 1.0 / (15.0 * l), &x0);
+        let mut rng = Rng64::new(17);
+        alg.run(4000, &mut rng);
+        let v = alg.value_at_eta();
+        assert!(v - opt < 0.1 * (v0 - opt), "v={v} opt={opt}");
+    }
+
+    #[test]
+    fn history_reconstruction() {
+        let mut h = BlockHistory::new(&[1.0], &[0.0]);
+        h.push(3, &[2.0], &[5.0]);
+        h.push(7, &[3.0], &[6.0]);
+        assert_eq!(h.at(0).0, &[1.0]);
+        assert_eq!(h.at(2).0, &[1.0]);
+        assert_eq!(h.at(3).0, &[2.0]);
+        assert_eq!(h.at(6).1, &[5.0]);
+        assert_eq!(h.at(100).0, &[3.0]);
+        h.prune_before(4);
+        assert_eq!(h.at(5).0, &[2.0]); // version at iter 3 survives
+    }
+}

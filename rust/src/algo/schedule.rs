@@ -1,0 +1,115 @@
+//! Staleness schedules `j_p(k+1)` for the generic inducing methods.
+//!
+//! At iteration k+1, block p's information is a snapshot taken at
+//! iteration `j_p(k+1) ∈ [max(0, k+1−τ), k]` (delay bounded by τ,
+//! Theorem 2's assumption). `j_p(k+1) = k` means fresh information.
+//!
+//! Schedules are deterministic in their seed and in (k, p) — queried
+//! identically by ASBCDS and PASBCDS, which is half of what makes the
+//! Theorem-3 equivalence test meaningful.
+
+use crate::rng::Rng64;
+
+/// A staleness schedule: maps (iteration k, block p) → snapshot index.
+pub trait DelaySchedule {
+    /// Returns `j_p(k+1)` for the update at iteration k (0-based k):
+    /// a value in `[max(0, k+1−τ), k]`.
+    fn stale_iter(&mut self, k: usize, block: usize) -> usize;
+
+    /// The bound τ (≥ 1).
+    fn tau(&self) -> usize;
+}
+
+/// No staleness: every block always reads the freshest state
+/// (`j_p(k+1) = k`). ASBCDS degenerates to plain accelerated SBCD.
+#[derive(Clone, Debug, Default)]
+pub struct FreshSchedule;
+
+impl DelaySchedule for FreshSchedule {
+    fn stale_iter(&mut self, k: usize, _block: usize) -> usize {
+        k
+    }
+
+    fn tau(&self) -> usize {
+        1
+    }
+}
+
+/// Independent uniform delays: `j_p(k+1) = max(0, k − d)` with
+/// `d ~ U{0..τ−1}`, drawn from a stream keyed by (k, p) so the value is
+/// reproducible regardless of query order.
+#[derive(Clone, Debug)]
+pub struct UniformDelaySchedule {
+    tau: usize,
+    seed: u64,
+}
+
+impl UniformDelaySchedule {
+    pub fn new(tau: usize, seed: u64) -> Self {
+        assert!(tau >= 1);
+        Self { tau, seed }
+    }
+}
+
+impl DelaySchedule for UniformDelaySchedule {
+    fn stale_iter(&mut self, k: usize, block: usize) -> usize {
+        // hash (k, block) into a one-shot stream: query-order independent
+        let key = (k as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((block as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+            ^ self.seed;
+        let mut rng = Rng64::new(key);
+        let d = rng.below(self.tau as u64) as usize;
+        k.saturating_sub(d)
+    }
+
+    fn tau(&self) -> usize {
+        self.tau
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_is_identity() {
+        let mut s = FreshSchedule;
+        for k in 0..10 {
+            assert_eq!(s.stale_iter(k, 3), k);
+        }
+    }
+
+    #[test]
+    fn uniform_within_bounds_and_deterministic() {
+        let mut s1 = UniformDelaySchedule::new(5, 42);
+        let mut s2 = UniformDelaySchedule::new(5, 42);
+        for k in 0..200 {
+            for p in 0..4 {
+                let j = s1.stale_iter(k, p);
+                assert!(j <= k);
+                assert!(j + 5 > k, "delay exceeded tau: j={j} k={k}");
+                assert_eq!(j, s2.stale_iter(k, p));
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_query_order_independent() {
+        let mut s = UniformDelaySchedule::new(4, 7);
+        let a = s.stale_iter(50, 2);
+        let mut s2 = UniformDelaySchedule::new(4, 7);
+        for k in 0..10 {
+            s2.stale_iter(k, 0); // interleave other queries
+        }
+        assert_eq!(a, s2.stale_iter(50, 2));
+    }
+
+    #[test]
+    fn delays_actually_vary() {
+        let mut s = UniformDelaySchedule::new(6, 3);
+        let vals: std::collections::HashSet<usize> =
+            (0..100).map(|k| k - s.stale_iter(k, 0).min(k)).collect();
+        assert!(vals.len() > 2, "degenerate schedule: {vals:?}");
+    }
+}

@@ -1,0 +1,112 @@
+//! The acceleration sequence θ_k (paper Lemma 2, Fercoq–Richtárik style).
+//!
+//! θ₁ = 1/m and θ_{k+1} = (√(θ_k⁴ + 4θ_k²) − θ_k²)/2, which satisfies
+//! (1 − θ_{k+1})/θ_{k+1}² = 1/θ_k² and the sandwich
+//! 1/(k−1+2m) ≤ θ_k ≤ 2/(k−1+2m). All three algorithms share it; the
+//! A²DWB runtime precomputes a prefix for O(1) lookups.
+
+/// Iterator/table over θ_k, 1-indexed to match the paper.
+#[derive(Clone, Debug)]
+pub struct ThetaSeq {
+    m: usize,
+    /// table[k-1] = θ_k
+    table: Vec<f64>,
+}
+
+impl ThetaSeq {
+    /// `m` = number of blocks (network nodes). θ₁ = 1/m.
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        Self { m, table: vec![1.0 / m as f64] }
+    }
+
+    /// Preallocate θ₁..θ_k.
+    pub fn with_capacity(m: usize, k: usize) -> Self {
+        let mut s = Self::new(m);
+        s.ensure(k);
+        s
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    fn ensure(&mut self, k: usize) {
+        while self.table.len() < k {
+            let t = *self.table.last().unwrap();
+            // θ' = (√(θ⁴+4θ²) − θ²)/2, stable form: θ² appears twice —
+            // factor θ: θ' = θ(√(θ²+4) − θ)/2
+            let next = t * ((t * t + 4.0).sqrt() - t) / 2.0;
+            self.table.push(next);
+        }
+    }
+
+    /// θ_k (k ≥ 1). Extends the table on demand.
+    pub fn get(&mut self, k: usize) -> f64 {
+        assert!(k >= 1, "theta is 1-indexed");
+        self.ensure(k);
+        self.table[k - 1]
+    }
+
+    /// θ_k², the compensation coefficient of PASBCDS/A²DWB.
+    pub fn sq(&mut self, k: usize) -> f64 {
+        let t = self.get(k);
+        t * t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recurrence_identity() {
+        // (1 − θ_{k+1})/θ_{k+1}² == 1/θ_k²  (Lemma 2)
+        for m in [1usize, 2, 5, 50, 500] {
+            let mut s = ThetaSeq::new(m);
+            for k in 1..200 {
+                let tk = s.get(k);
+                let tk1 = s.get(k + 1);
+                let lhs = (1.0 - tk1) / (tk1 * tk1);
+                let rhs = 1.0 / (tk * tk);
+                assert!(
+                    (lhs - rhs).abs() <= 1e-9 * rhs.abs(),
+                    "m={m} k={k}: {lhs} vs {rhs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sandwich_bounds() {
+        // 1/(k−1+2m) ≤ θ_k ≤ 2/(k−1+2m)  (Lemma 2)
+        for m in [1usize, 3, 10, 100] {
+            let mut s = ThetaSeq::new(m);
+            for k in 1..1000 {
+                let t = s.get(k);
+                let denom = (k - 1 + 2 * m) as f64;
+                assert!(t >= 1.0 / denom - 1e-15, "m={m} k={k} θ={t}");
+                assert!(t <= 2.0 / denom + 1e-15, "m={m} k={k} θ={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_to_zero() {
+        let mut s = ThetaSeq::new(4);
+        let mut prev = f64::INFINITY;
+        for k in 1..2000 {
+            let t = s.get(k);
+            assert!(t < prev && t > 0.0);
+            prev = t;
+        }
+        assert!(prev < 1e-3);
+    }
+
+    #[test]
+    fn theta1_is_one_over_m() {
+        let mut s = ThetaSeq::new(500);
+        assert!((s.get(1) - 0.002).abs() < 1e-15);
+        assert!((s.sq(1) - 4e-6).abs() < 1e-18);
+    }
+}

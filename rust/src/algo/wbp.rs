@@ -1,0 +1,230 @@
+//! Node-local state machine of Algorithm 3 — shared by A²DWB, A²DWBN
+//! and DCWB.
+//!
+//! All three algorithms keep the same per-node transformed state
+//! `(ū_i, v̄_i)` (the `√W`-change-of-variables of §3.3: `ū = √W u`,
+//! `v̄ = √W v`) and differ only in
+//!
+//! * *where* the local gradient is evaluated — A²DWB at the
+//!   momentum-compensated point `ū + θ_{k+1}² v̄` (current θ!), A²DWBN at
+//!   the node's stale iterate `ū + θ_{j+1}² v̄` (θ frozen at its last
+//!   activation j) — that θ index *is* the compensation (§3.3); and
+//! * *how fresh* the neighbor gradients in the Laplacian combine are —
+//!   stale mailbox contents for the async pair, barrier-fresh for DCWB.
+//!
+//! The network/event semantics live in [`crate::coordinator`]; this
+//! module is pure state arithmetic, unit-testable without a simulator.
+
+use super::ThetaSeq;
+
+/// Weight of the node's *own* gradient in the combine step.
+///
+/// Algorithm 3 line 7 reads `δ ∝ (g_i + Σ_{j∈N(i)} W_ij g_j)`. With the
+/// paper's Laplacian convention, the coefficient of `g_i` should be
+/// `W_ii = deg(i)` for the update to equal the true transformed gradient
+/// `[W̄ ∇W*]_i`; the printed formula uses 1. We implement both —
+/// `Laplacian` is the default (and what makes the consensus tests pass);
+/// `PaperLiteral` is kept for the ablation bench.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiagCoef {
+    Laplacian,
+    PaperLiteral,
+}
+
+/// Per-node state for the WBP dual updates.
+#[derive(Clone, Debug)]
+pub struct WbpNode {
+    /// ū_i — transformed `u` block.
+    pub u: Vec<f64>,
+    /// v̄_i — transformed `v` block.
+    pub v: Vec<f64>,
+    /// Last gradient this node computed (kept for its own combine).
+    pub own_grad: Vec<f64>,
+    /// Freshest received gradient per neighbor (slot index = position in
+    /// the graph's neighbor list), plus the iteration it was computed at
+    /// (for staleness accounting and out-of-order delivery).
+    pub mailbox: Vec<(u64, Vec<f64>)>,
+    /// Iteration (global activation counter) of this node's last update.
+    pub last_update_iter: usize,
+    /// Count of this node's activations.
+    pub activations: u64,
+    /// Reused buffer for the Laplacian combine (no hot-path allocation).
+    combine_scratch: Vec<f64>,
+}
+
+impl WbpNode {
+    pub fn new(n: usize, degree: usize) -> Self {
+        Self {
+            u: vec![0.0; n],
+            v: vec![0.0; n],
+            own_grad: vec![0.0; n],
+            mailbox: vec![(0, vec![0.0; n]); degree],
+            last_update_iter: 0,
+            activations: 0,
+            combine_scratch: Vec::new(),
+        }
+    }
+
+    /// The point the local oracle is evaluated at.
+    ///
+    /// `compensated == true` → A²DWB: `ū + θ_{k+1}² v̄` with the *current*
+    /// iteration k. `false` → A²DWBN: θ frozen at the node's own last
+    /// update (the "directly use the stale η" variant of §4).
+    pub fn eval_point(
+        &self,
+        theta: &mut ThetaSeq,
+        k: usize,
+        compensated: bool,
+        out: &mut [f64],
+    ) {
+        let idx = if compensated { k + 1 } else { self.last_update_iter + 1 };
+        let th_sq = theta.sq(idx);
+        for ((o, u), v) in out.iter_mut().zip(&self.u).zip(&self.v) {
+            *o = u + th_sq * v;
+        }
+    }
+
+    /// The node's current dual iterate η̄_i = ū + θ_{k}² v̄ (metrics).
+    pub fn eta(&self, theta: &mut ThetaSeq, k: usize, out: &mut [f64]) {
+        let th_sq = theta.sq(k.max(1));
+        for ((o, u), v) in out.iter_mut().zip(&self.u).zip(&self.v) {
+            *o = u + th_sq * v;
+        }
+    }
+
+    /// Deliver a neighbor gradient (keeps only the freshest by
+    /// computed-at iteration — messages can arrive out of order).
+    pub fn deliver(&mut self, slot: usize, computed_at: u64, grad: &[f64]) {
+        let (have, buf) = &mut self.mailbox[slot];
+        if computed_at >= *have {
+            *have = computed_at;
+            buf.copy_from_slice(grad);
+        }
+    }
+
+    /// Laplacian combine + (u, v) update — Algorithm 3 lines 7–8.
+    ///
+    /// `degree` = deg(i); `m_nodes` = m; `k` = global iteration counter;
+    /// `gamma` = γ. `self.own_grad` must hold g_i already.
+    pub fn apply_update(
+        &mut self,
+        theta: &mut ThetaSeq,
+        k: usize,
+        m_nodes: usize,
+        gamma: f64,
+        degree: usize,
+        diag: DiagCoef,
+    ) {
+        let th = theta.get(k + 1);
+        let m_th = m_nodes as f64 * th;
+        let scale = gamma / m_th;
+        let vcoef = (1.0 - m_th) / (th * th);
+        let own_coef = match diag {
+            DiagCoef::Laplacian => degree as f64,
+            DiagCoef::PaperLiteral => 1.0,
+        };
+        // neighbor-outer accumulation: each mailbox vector is streamed
+        // once (sequential reads) instead of strided column access —
+        // §Perf item 6; measurably faster at high degree.
+        let n = self.u.len();
+        let mut combine = std::mem::take(&mut self.combine_scratch);
+        combine.resize(n, 0.0);
+        for (c, g) in combine.iter_mut().zip(&self.own_grad) {
+            *c = own_coef * g;
+        }
+        for (_, g) in &self.mailbox {
+            for (c, gl) in combine.iter_mut().zip(g) {
+                *c -= gl; // W_ij = −1 for neighbors
+            }
+        }
+        for l in 0..n {
+            let delta = scale * combine[l];
+            self.u[l] -= delta;
+            self.v[l] += vcoef * delta;
+        }
+        self.combine_scratch = combine;
+        self.last_update_iter = k + 1;
+        self.activations += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_point_theta_index_difference() {
+        let mut theta = ThetaSeq::new(4);
+        let mut node = WbpNode::new(2, 1);
+        node.u = vec![1.0, 2.0];
+        node.v = vec![10.0, 10.0];
+        node.last_update_iter = 1;
+        let mut comp = vec![0.0; 2];
+        let mut naive = vec![0.0; 2];
+        // at global k = 50, compensated uses θ_51², naive uses θ_2²
+        node.eval_point(&mut theta, 50, true, &mut comp);
+        node.eval_point(&mut theta, 50, false, &mut naive);
+        let t51 = theta.sq(51);
+        let t2 = theta.sq(2);
+        assert!((comp[0] - (1.0 + t51 * 10.0)).abs() < 1e-15);
+        assert!((naive[0] - (1.0 + t2 * 10.0)).abs() < 1e-15);
+        assert!(naive[0] > comp[0], "naive point lags (θ decreasing)");
+    }
+
+    #[test]
+    fn mailbox_keeps_freshest() {
+        let mut node = WbpNode::new(2, 2);
+        node.deliver(0, 5, &[1.0, 1.0]);
+        node.deliver(0, 3, &[9.0, 9.0]); // older: ignored
+        assert_eq!(node.mailbox[0].1, vec![1.0, 1.0]);
+        node.deliver(0, 6, &[2.0, 2.0]);
+        assert_eq!(node.mailbox[0].1, vec![2.0, 2.0]);
+        assert_eq!(node.mailbox[1].1, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn update_moves_u_against_combined_gradient() {
+        let mut theta = ThetaSeq::new(2);
+        let mut node = WbpNode::new(1, 1);
+        node.own_grad = vec![1.0];
+        node.deliver(0, 1, &[0.25]);
+        node.apply_update(&mut theta, 0, 2, 0.1, 1, DiagCoef::Laplacian);
+        // combine = 1*1.0 − 0.25 = 0.75; δ = 0.1/(2·θ₁)·0.75, θ₁ = ½
+        let delta = 0.1 / (2.0 * 0.5) * 0.75;
+        assert!((node.u[0] + delta).abs() < 1e-15);
+        // v += (1 − mθ)/θ² δ = (1−1)/θ² δ = 0 here
+        assert_eq!(node.v[0], 0.0);
+        assert_eq!(node.last_update_iter, 1);
+        assert_eq!(node.activations, 1);
+    }
+
+    #[test]
+    fn paper_literal_vs_laplacian_coef() {
+        let mut theta = ThetaSeq::new(2);
+        let mk = || {
+            let mut n = WbpNode::new(1, 3);
+            n.own_grad = vec![1.0];
+            n
+        };
+        let mut a = mk();
+        let mut b = mk();
+        a.apply_update(&mut theta, 0, 2, 0.1, 3, DiagCoef::Laplacian);
+        b.apply_update(&mut theta, 0, 2, 0.1, 3, DiagCoef::PaperLiteral);
+        // deg=3 ⇒ Laplacian combine 3× the literal one
+        assert!((a.u[0] - 3.0 * b.u[0]).abs() < 1e-15);
+    }
+
+    #[test]
+    fn consensus_fixed_point_is_stationary() {
+        // if all nodes have identical gradients, the Laplacian combine
+        // vanishes and the state does not move: consensus is stationary.
+        let mut theta = ThetaSeq::new(3);
+        let mut node = WbpNode::new(2, 2);
+        node.own_grad = vec![0.4, 0.6];
+        node.deliver(0, 1, &[0.4, 0.6]);
+        node.deliver(1, 1, &[0.4, 0.6]);
+        node.apply_update(&mut theta, 0, 3, 0.5, 2, DiagCoef::Laplacian);
+        assert_eq!(node.u, vec![0.0, 0.0]);
+        assert_eq!(node.v, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Micro-benchmark harness (replaces criterion).
+//!
+//! Warmup + fixed-iteration timing with median/p10/p90 over repeats, and
+//! a uniform one-line report format shared by all `benches/*.rs` so
+//! `cargo bench` output is grep-friendly:
+//!
+//! ```text
+//! BENCH <name> median=… p10=… p90=… iters=… [extra…]
+//! ```
+
+use std::time::Instant;
+
+/// Timing stats over repeats, in nanoseconds per iteration.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+    pub repeats: usize,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "BENCH {name} median={m} p10={p10} p90={p90} iters={it} repeats={r}",
+            name = self.name,
+            m = fmt_ns(self.median_ns),
+            p10 = fmt_ns(self.p10_ns),
+            p90 = fmt_ns(self.p90_ns),
+            it = self.iters,
+            r = self.repeats,
+        )
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median_ns * 1e-9
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Run `f` for `iters` iterations × `repeats` repeats after `warmup`
+/// iterations; returns per-iteration stats. `f` gets the iteration index
+/// and its return value is black-boxed.
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    repeats: usize,
+    mut f: impl FnMut(usize) -> T,
+) -> BenchStats {
+    assert!(iters > 0 && repeats > 0);
+    for i in 0..warmup {
+        black_box(f(i));
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        for i in 0..iters {
+            black_box(f(i));
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |frac: f64| {
+        let idx = ((per_iter.len() - 1) as f64 * frac).round() as usize;
+        per_iter[idx]
+    };
+    BenchStats {
+        name: name.to_string(),
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        iters,
+        repeats,
+    }
+}
+
+/// Time a single long-running closure (end-to-end benches).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Optimization-barrier identity (std::hint::black_box wrapper kept in
+/// one place in case the toolchain changes).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_quantiles() {
+        let s = bench("noop", 2, 100, 7, |i| i * 2);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert!(s.median_ns >= 0.0);
+        assert!(s.report().starts_with("BENCH noop "));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(12.0), "12.0ns");
+        assert!(fmt_ns(1.2e4).ends_with("us"));
+        assert!(fmt_ns(3.4e7).ends_with("ms"));
+        assert!(fmt_ns(2.5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn time_once_measures() {
+        let (val, secs) = time_once(|| {
+            let mut acc = 0u64;
+            for i in 0..10000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(val, (0..10000u64).sum::<u64>());
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny CLI argument parser (replaces clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and a
+//! leading positional subcommand. Typed getters with defaults and an
+//! auto-generated usage line per registered option.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// (name, default, help) for usage text.
+    registered: Vec<(String, String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of OS args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(stripped) = arg.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument '{arg}'"));
+            };
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.values.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                let v = it.next().unwrap();
+                out.values.insert(stripped.to_string(), v);
+            } else {
+                out.flags.push(stripped.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Register an option for the usage text (fluent).
+    pub fn describe(
+        &mut self,
+        name: &str,
+        default: impl std::fmt::Display,
+        help: &str,
+    ) -> &mut Self {
+        self.registered
+            .push((name.to_string(), default.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self, bin: &str, subcommands: &[&str]) -> String {
+        let mut s = format!("usage: {bin} <{}> [--opt value ...]\n", subcommands.join("|"));
+        for (name, default, help) in &self.registered {
+            s.push_str(&format!("  --{name:<24} {help} (default: {default})\n"));
+        }
+        s
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| format!("--{name} {v}: {e}")),
+        }
+    }
+
+    /// Error on unknown keys (catches typos) given the known set.
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.values.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_values() {
+        let a = parse(&["gaussian", "--nodes", "50", "--beta=0.1", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("gaussian"));
+        assert_eq!(a.get::<usize>("nodes", 0).unwrap(), 50);
+        assert_eq!(a.get::<f64>("beta", 0.0).unwrap(), 0.1);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]);
+        assert_eq!(a.get::<usize>("nodes", 7).unwrap(), 7);
+        assert_eq!(a.get_str("topology", "cycle"), "cycle");
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["run", "--nodes", "abc"]);
+        assert!(a.get::<usize>("nodes", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_rejection() {
+        let a = parse(&["run", "--nodse", "5"]);
+        assert!(a.reject_unknown(&["nodes"]).is_err());
+        assert!(a.reject_unknown(&["nodse"]).is_ok());
+    }
+
+    #[test]
+    fn positional_after_flags_is_error() {
+        assert!(Args::parse(vec!["--a".into(), "--b".into(), "oops".into()]).is_ok());
+        // 'oops' consumed as value of --b
+        let a = parse(&["--a", "--b", "oops"]);
+        assert_eq!(a.get_str("b", ""), "oops");
+        assert!(a.has_flag("a"));
+    }
+}

@@ -1,0 +1,227 @@
+//! Experiment checkpointing — warm restart for long runs.
+//!
+//! Serializes the coordinator-visible state (per-node `(ū, v̄)`, the
+//! global iteration counter, virtual clock, and the config fingerprint)
+//! to a compact self-describing binary format. A paper-scale m = 500 run
+//! is ~25 s wall here, but on a real deployment the same state is hours
+//! of work — a runtime without restart is not deployable.
+//!
+//! Format (little-endian):
+//! `MAGIC "A2DWBCKP" | version u32 | fingerprint u64 | time f64 |
+//!  k u64 | m u64 | n u64 | m×(u[n] f64, v[n] f64)`
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::algo::wbp::WbpNode;
+
+const MAGIC: &[u8; 8] = b"A2DWBCKP";
+const VERSION: u32 = 1;
+
+/// Snapshot of resumable state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Config fingerprint — refuses to resume into a different setup.
+    pub fingerprint: u64,
+    /// Virtual time at capture.
+    pub time: f64,
+    /// Global iteration counter k.
+    pub k: u64,
+    /// Per-node (u, v) blocks.
+    pub u: Vec<Vec<f64>>,
+    pub v: Vec<Vec<f64>>,
+}
+
+impl Checkpoint {
+    /// Capture from live nodes.
+    pub fn capture(nodes: &[WbpNode], time: f64, k: u64, fingerprint: u64) -> Self {
+        Self {
+            fingerprint,
+            time,
+            k,
+            u: nodes.iter().map(|nd| nd.u.clone()).collect(),
+            v: nodes.iter().map(|nd| nd.v.clone()).collect(),
+        }
+    }
+
+    /// Restore into live nodes (shapes must match).
+    pub fn restore(&self, nodes: &mut [WbpNode]) -> Result<(), String> {
+        if nodes.len() != self.u.len() {
+            return Err(format!(
+                "node count mismatch: checkpoint {} vs runtime {}",
+                self.u.len(),
+                nodes.len()
+            ));
+        }
+        for (nd, (u, v)) in nodes.iter_mut().zip(self.u.iter().zip(&self.v)) {
+            if nd.u.len() != u.len() {
+                return Err("support size mismatch".into());
+            }
+            nd.u.copy_from_slice(u);
+            nd.v.copy_from_slice(v);
+        }
+        Ok(())
+    }
+
+    pub fn write_to(&self, mut w: impl Write) -> std::io::Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.fingerprint.to_le_bytes())?;
+        w.write_all(&self.time.to_le_bytes())?;
+        w.write_all(&self.k.to_le_bytes())?;
+        let m = self.u.len() as u64;
+        let n = self.u.first().map(|x| x.len()).unwrap_or(0) as u64;
+        w.write_all(&m.to_le_bytes())?;
+        w.write_all(&n.to_le_bytes())?;
+        for (u, v) in self.u.iter().zip(&self.v) {
+            for x in u {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from(mut r: impl Read) -> Result<Self, String> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).map_err(|e| e.to_string())?;
+        if &magic != MAGIC {
+            return Err("not an A2DWB checkpoint".into());
+        }
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b4).map_err(|e| e.to_string())?;
+        let version = u32::from_le_bytes(b4);
+        if version != VERSION {
+            return Err(format!("unsupported checkpoint version {version}"));
+        }
+        let mut next_u64 = |r: &mut dyn Read| -> Result<u64, String> {
+            r.read_exact(&mut b8).map_err(|e| e.to_string())?;
+            Ok(u64::from_le_bytes(b8))
+        };
+        let fingerprint = next_u64(&mut r)?;
+        let time = f64::from_bits(next_u64(&mut r)?);
+        let k = next_u64(&mut r)?;
+        let m = next_u64(&mut r)? as usize;
+        let n = next_u64(&mut r)? as usize;
+        if m.checked_mul(n).map(|x| x > 1 << 30).unwrap_or(true) {
+            return Err("implausible checkpoint dimensions".into());
+        }
+        let mut read_vec = |r: &mut dyn Read| -> Result<Vec<f64>, String> {
+            let mut out = Vec::with_capacity(n);
+            let mut b = [0u8; 8];
+            for _ in 0..n {
+                r.read_exact(&mut b).map_err(|e| e.to_string())?;
+                out.push(f64::from_le_bytes(b));
+            }
+            Ok(out)
+        };
+        let mut u = Vec::with_capacity(m);
+        let mut v = Vec::with_capacity(m);
+        for _ in 0..m {
+            u.push(read_vec(&mut r)?);
+            v.push(read_vec(&mut r)?);
+        }
+        Ok(Self { fingerprint, time, k, u, v })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        self.write_to(std::io::BufWriter::new(f))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        let f = std::fs::File::open(path).map_err(|e| e.to_string())?;
+        Self::read_from(std::io::BufReader::new(f))
+    }
+}
+
+/// Stable fingerprint of the resumable-relevant config fields.
+pub fn config_fingerprint(cfg: &super::ExperimentConfig) -> u64 {
+    let mut acc: u64 = 0xF17E_0001;
+    let mut mix = |acc: &mut u64, x: u64| {
+        *acc = crate::rng::SplitMix64::new(*acc ^ x).next_u64();
+    };
+    mix(&mut acc, cfg.nodes as u64);
+    mix(&mut acc, cfg.seed);
+    mix(&mut acc, cfg.support_size() as u64);
+    mix(&mut acc, cfg.beta.to_bits());
+    mix(&mut acc, cfg.gamma_scale.to_bits());
+    mix(&mut acc, cfg.samples_per_activation as u64);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::wbp::WbpNode;
+
+    fn nodes(m: usize, n: usize) -> Vec<WbpNode> {
+        let mut out: Vec<WbpNode> = (0..m).map(|_| WbpNode::new(n, 2)).collect();
+        let mut rng = crate::rng::Rng64::new(3);
+        for nd in &mut out {
+            for l in 0..n {
+                nd.u[l] = rng.normal();
+                nd.v[l] = rng.normal();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let ns = nodes(4, 7);
+        let ck = Checkpoint::capture(&ns, 12.5, 99, 0xABCD);
+        let mut buf = Vec::new();
+        ck.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(&buf[..]).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn roundtrip_on_disk_and_restore() {
+        let ns = nodes(3, 5);
+        let ck = Checkpoint::capture(&ns, 1.0, 7, 1);
+        let path = std::env::temp_dir().join("a2dwb_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let mut fresh = nodes(3, 5);
+        for nd in &mut fresh {
+            nd.u.fill(0.0);
+            nd.v.fill(0.0);
+        }
+        back.restore(&mut fresh).unwrap();
+        for (a, b) in fresh.iter().zip(&ns) {
+            assert_eq!(a.u, b.u);
+            assert_eq!(a.v, b.v);
+        }
+    }
+
+    #[test]
+    fn rejects_corruption_and_mismatch() {
+        let ns = nodes(2, 3);
+        let ck = Checkpoint::capture(&ns, 0.0, 0, 5);
+        let mut buf = Vec::new();
+        ck.write_to(&mut buf).unwrap();
+        // corrupt magic
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(Checkpoint::read_from(&bad[..]).is_err());
+        // truncation
+        assert!(Checkpoint::read_from(&buf[..buf.len() - 4]).is_err());
+        // node-count mismatch on restore
+        let mut wrong = nodes(3, 3);
+        assert!(ck.restore(&mut wrong).is_err());
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_config() {
+        let a = super::super::ExperimentConfig::gaussian_default();
+        let mut b = a.clone();
+        b.beta *= 2.0;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&a.clone()));
+    }
+}

@@ -1,0 +1,186 @@
+//! Metric evaluation with common random numbers.
+//!
+//! The paper plots (a) the dual objective value and (b) the consensus
+//! distance over time (§4). Both are functions of the current dual
+//! iterates η̄_i. To make curves comparable *between algorithms* we
+//! evaluate every snapshot on the same fixed per-node sample batch
+//! (drawn once from the master seed), so the metric is a deterministic
+//! function of the state — exactly the common-random-numbers practice
+//! the shared-seed activation scheme of §3.3 enables.
+
+use crate::graph::Graph;
+use crate::linalg::CsrMatrix;
+use crate::measures::{CostRows, NodeMeasure, Samples};
+use crate::ot::{dual_oracle_into, OracleScratch};
+use crate::rng::Rng64;
+
+pub struct MetricsEvaluator {
+    n: usize,
+    beta: f64,
+    /// Per-node frozen evaluation samples.
+    samples: Vec<Samples>,
+    laplacian: CsrMatrix,
+    // scratch
+    cost: CostRows,
+    scratch: OracleScratch,
+    grad: Vec<f64>,
+    /// Stacked primal blocks (m·n), reused.
+    primal: Vec<f64>,
+}
+
+impl MetricsEvaluator {
+    pub fn new(
+        graph: &Graph,
+        measures: &[Box<dyn NodeMeasure>],
+        beta: f64,
+        eval_samples: usize,
+        seed: u64,
+    ) -> Self {
+        let m = graph.num_nodes();
+        assert_eq!(measures.len(), m);
+        let n = measures[0].support_size();
+        let mut rng = Rng64::new(seed ^ 0x4556_414C);
+        let samples: Vec<Samples> = measures
+            .iter()
+            .map(|msr| msr.draw_samples(&mut rng, eval_samples))
+            .collect();
+        Self {
+            n,
+            beta,
+            samples,
+            laplacian: graph.laplacian_csr(),
+            cost: CostRows::new(eval_samples, n),
+            scratch: OracleScratch::default(),
+            grad: vec![0.0; n],
+            primal: vec![0.0; m * n],
+        }
+    }
+
+    /// Evaluate (dual objective, consensus distance, primal spread) at
+    /// the stacked dual snapshot `etas` (m rows of n, row-major).
+    ///
+    /// * dual objective = Σ_i Ŵ*_{β,μ_i}(η̄_i) on the frozen batches;
+    /// * consensus = xᵀ(W̄⊗I)x with x_i = primal softmax block;
+    /// * spread = mean_i ‖x_i − x̄‖₁ (interpretable companion).
+    pub fn evaluate(
+        &mut self,
+        etas: &[f64],
+        measures: &[Box<dyn NodeMeasure>],
+    ) -> (f64, f64, f64) {
+        let m = measures.len();
+        assert_eq!(etas.len(), m * self.n);
+        let mut dual = 0.0;
+        for i in 0..m {
+            measures[i].cost_rows_for(&self.samples[i], &mut self.cost);
+            let val = dual_oracle_into(
+                &etas[i * self.n..(i + 1) * self.n],
+                &self.cost,
+                self.beta,
+                &mut self.grad,
+                &mut self.scratch,
+            );
+            dual += val;
+            self.primal[i * self.n..(i + 1) * self.n].copy_from_slice(&self.grad);
+        }
+        let consensus = self.laplacian.block_quad_form(&self.primal, self.n);
+        // primal spread: mean L1 distance to the network mean
+        let mut mean = vec![0.0; self.n];
+        for i in 0..m {
+            for l in 0..self.n {
+                mean[l] += self.primal[i * self.n + l];
+            }
+        }
+        for v in &mut mean {
+            *v /= m as f64;
+        }
+        let mut spread = 0.0;
+        for i in 0..m {
+            for l in 0..self.n {
+                spread += (self.primal[i * self.n + l] - mean[l]).abs();
+            }
+        }
+        spread /= m as f64;
+        (dual, consensus.max(0.0), spread)
+    }
+
+    /// The network-mean primal block from the last `evaluate` call —
+    /// the barycenter estimate ν̂ the system outputs.
+    pub fn barycenter(&self) -> Vec<f64> {
+        let m = self.primal.len() / self.n;
+        let mut mean = vec![0.0; self.n];
+        for i in 0..m {
+            for l in 0..self.n {
+                mean[l] += self.primal[i * self.n + l];
+            }
+        }
+        for v in &mut mean {
+            *v /= m as f64;
+        }
+        mean
+    }
+
+    pub fn support_size(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TopologySpec;
+    use crate::measures::MeasureSpec;
+
+    fn setup() -> (Graph, Vec<Box<dyn NodeMeasure>>, MetricsEvaluator) {
+        let g = Graph::build(5, TopologySpec::Cycle);
+        let ms = MeasureSpec::Gaussian { n: 12 }.build_network(5, 3);
+        let ev = MetricsEvaluator::new(&g, &ms, 0.1, 16, 9);
+        (g, ms, ev)
+    }
+
+    #[test]
+    fn consensus_zero_at_equal_potentials() {
+        let (_, ms, mut ev) = setup();
+        // identical η̄ across nodes does NOT give zero consensus (the
+        // measures differ), but identical *primal* blocks would. Check
+        // instead: evaluation is deterministic and non-negative.
+        let etas = vec![0.0; 5 * 12];
+        let (d1, c1, s1) = ev.evaluate(&etas, &ms);
+        let (d2, c2, s2) = ev.evaluate(&etas, &ms);
+        assert_eq!((d1, c1, s1), (d2, c2, s2));
+        assert!(c1 >= 0.0 && s1 >= 0.0);
+    }
+
+    #[test]
+    fn identical_measures_consensus_vanishes() {
+        // degenerate measures (all mass on one pixel) make every node's
+        // eval samples identical, so equal η̄ ⇒ equal primal blocks ⇒
+        // the consensus distance is exactly 0.
+        use crate::measures::digits::{DigitMeasure, GridGeometry};
+        let g = Graph::build(4, TopologySpec::Complete);
+        let geom = std::sync::Arc::new(GridGeometry::new(3));
+        let mut img = vec![0.0; 9];
+        img[4] = 1.0;
+        let ms: Vec<Box<dyn NodeMeasure>> = (0..4)
+            .map(|_| {
+                Box::new(DigitMeasure::new(img.clone(), geom.clone()))
+                    as Box<dyn NodeMeasure>
+            })
+            .collect();
+        let mut ev = MetricsEvaluator::new(&g, &ms, 0.1, 8, 11);
+        let etas = vec![0.25; 4 * 9];
+        let (_, consensus, spread) = ev.evaluate(&etas, &ms);
+        assert!(consensus < 1e-12, "consensus {consensus}");
+        assert!(spread < 1e-12);
+    }
+
+    #[test]
+    fn barycenter_is_distribution() {
+        let (_, ms, mut ev) = setup();
+        let etas = vec![0.1; 5 * 12];
+        ev.evaluate(&etas, &ms);
+        let b = ev.barycenter();
+        assert_eq!(b.len(), 12);
+        assert!((b.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(b.iter().all(|&x| x >= 0.0));
+    }
+}

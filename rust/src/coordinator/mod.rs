@@ -1,0 +1,348 @@
+//! The L3 coordinator: event-driven decentralized WBP runtime.
+//!
+//! This is the paper's system contribution made executable: an m-node
+//! network where each node holds a private measure, exchanges gradient
+//! messages over delayed links, and runs one of
+//!
+//! * **A²DWB** (Algorithm 3) — asynchronous, momentum-compensated;
+//! * **A²DWBN** — asynchronous, naive (no compensation) — ablation;
+//! * **DCWB** — the synchronous baseline (global barrier per round).
+//!
+//! Execution is over *virtual time* in the discrete-event simulator
+//! (`crate::sim`), reproducing the paper's §4 methodology exactly:
+//! categorical link delays on {0.2..1.0} s, a `perm(m)` activation sweep
+//! every 0.2 s, metrics = dual objective + consensus distance sampled on
+//! a fixed grid with common random numbers across algorithms.
+
+mod async_runtime;
+pub mod checkpoint;
+mod evaluator;
+mod sync_runtime;
+
+pub use checkpoint::Checkpoint;
+pub use evaluator::MetricsEvaluator;
+
+use crate::algo::wbp::DiagCoef;
+use crate::algo::AlgorithmKind;
+use crate::graph::{Graph, TopologySpec};
+use crate::measures::MeasureSpec;
+use crate::metrics::Series;
+use crate::ot::OracleBackendSpec;
+
+/// What to run: the full experiment description (one Fig-1/Fig-2 cell).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Network size m (paper: 500).
+    pub nodes: usize,
+    pub topology: TopologySpec,
+    pub algorithm: AlgorithmKind,
+    pub measure: MeasureSpec,
+    pub backend: OracleBackendSpec,
+    /// Entropic regularization β.
+    pub beta: f64,
+    /// Step size as a fraction of 1/L, L = λ_max(W̄)/β.
+    pub gamma_scale: f64,
+    /// Per-activation sample batch M_k.
+    pub samples_per_activation: usize,
+    /// Fixed evaluation batch per node for metrics (common random
+    /// numbers across algorithms).
+    pub eval_samples: usize,
+    /// Virtual duration in seconds (paper: 200).
+    pub duration: f64,
+    /// Activation sweep interval (paper: 0.2 s).
+    pub activation_interval: f64,
+    /// Metric sampling grid.
+    pub metric_interval: f64,
+    /// Master seed: everything (graph, measures, delays, schedules,
+    /// sampling) derives from it.
+    pub seed: u64,
+    /// Own-gradient coefficient in the combine (DESIGN.md §7).
+    pub diag: DiagCoef,
+    /// Virtual compute time charged per activation (0 = free compute,
+    /// the paper's implicit assumption).
+    pub compute_time: f64,
+    /// Fault model (extension beyond the paper's §4 setup): stragglers
+    /// and lossy links. The async/sync contrast sharpens under both —
+    /// see `examples/straggler_resilience.rs`.
+    pub faults: FaultModel,
+}
+
+/// Network fault model: heterogeneous slow nodes + iid message loss.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultModel {
+    /// Fraction of nodes that are stragglers (chosen by seed).
+    pub straggler_fraction: f64,
+    /// Multiplier on all link delays touching a straggler node.
+    pub straggler_slowdown: f64,
+    /// Per-message drop probability. Async: the message is lost (the
+    /// mailbox keeps the previous gradient). Sync: the barrier
+    /// retransmits — each drop adds one mean delay to the round.
+    pub drop_prob: f64,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        Self { straggler_fraction: 0.0, straggler_slowdown: 1.0, drop_prob: 0.0 }
+    }
+}
+
+impl FaultModel {
+    pub fn is_trivial(&self) -> bool {
+        self.straggler_fraction == 0.0 && self.drop_prob == 0.0
+    }
+
+    /// Per-node delay multipliers, deterministic in `seed`.
+    pub fn node_factors(&self, m: usize, seed: u64) -> Vec<f64> {
+        let mut factors = vec![1.0; m];
+        if self.straggler_fraction > 0.0 && self.straggler_slowdown != 1.0 {
+            let count = ((self.straggler_fraction * m as f64).round() as usize).min(m);
+            let mut rng = crate::rng::Rng64::new(seed ^ 0x5452_4147);
+            let perm = rng.permutation(m);
+            for &i in perm.iter().take(count) {
+                factors[i] = self.straggler_slowdown;
+            }
+        }
+        factors
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.straggler_fraction) {
+            return Err("straggler_fraction must be in [0,1]".into());
+        }
+        if self.straggler_slowdown < 1.0 {
+            return Err("straggler_slowdown must be >= 1".into());
+        }
+        if !(0.0..1.0).contains(&self.drop_prob) {
+            return Err("drop_prob must be in [0,1)".into());
+        }
+        Ok(())
+    }
+}
+
+impl ExperimentConfig {
+    /// §4.1 defaults scaled to CI size (use `--nodes 500 --duration 200`
+    /// for the paper's full scale).
+    pub fn gaussian_default() -> Self {
+        Self {
+            nodes: 50,
+            topology: TopologySpec::Complete,
+            algorithm: AlgorithmKind::A2dwb,
+            measure: MeasureSpec::Gaussian { n: 100 },
+            backend: OracleBackendSpec::Native,
+            beta: 0.02,
+            gamma_scale: 0.5,
+            samples_per_activation: 32,
+            eval_samples: 64,
+            duration: 30.0,
+            activation_interval: 0.2,
+            metric_interval: 1.0,
+            seed: 42,
+            diag: DiagCoef::Laplacian,
+            compute_time: 0.0,
+            faults: FaultModel::default(),
+        }
+    }
+
+    /// §4.2 defaults (digit experiment), CI-scaled.
+    pub fn mnist_default(digit: u8) -> Self {
+        Self {
+            measure: MeasureSpec::Digits { digit, side: 28, idx_path: None },
+            nodes: 50,
+            duration: 30.0,
+            ..Self::gaussian_default()
+        }
+    }
+
+    /// A short human-readable tag for file names.
+    pub fn tag(&self) -> String {
+        format!(
+            "{}_{}_{}_m{}",
+            self.algorithm.name(),
+            self.topology.name(),
+            self.measure.name(),
+            self.nodes
+        )
+    }
+
+    pub fn support_size(&self) -> usize {
+        self.measure.support_size()
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.nodes < 2 {
+            return Err("need at least 2 nodes".into());
+        }
+        if !(self.beta > 0.0) {
+            return Err("beta must be positive".into());
+        }
+        if !(self.gamma_scale > 0.0) {
+            return Err("gamma_scale must be positive".into());
+        }
+        if self.samples_per_activation == 0 || self.eval_samples == 0 {
+            return Err("sample counts must be positive".into());
+        }
+        if !(self.duration > 0.0 && self.activation_interval > 0.0) {
+            return Err("durations must be positive".into());
+        }
+        self.faults.validate()?;
+        Ok(())
+    }
+}
+
+/// Named sub-experiment for sweep drivers.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub label: String,
+    pub config: ExperimentConfig,
+}
+
+/// Everything a run produces.
+#[derive(Clone, Debug)]
+pub struct ExperimentReport {
+    pub tag: String,
+    pub algorithm: AlgorithmKind,
+    /// Dual objective Σ_i W*_{β,μ_i}(η̄_i) over virtual time.
+    pub dual_objective: Series,
+    /// Consensus distance ‖√W x‖² = xᵀ(W̄⊗I)x over virtual time.
+    pub consensus: Series,
+    /// Mean entry-wise distance of the primal barycenter estimates to
+    /// their network average (an interpretable companion metric).
+    pub primal_spread: Series,
+    pub activations: u64,
+    pub rounds: u64,
+    pub messages: u64,
+    pub events: u64,
+    /// λ_max(W̄) of the topology actually built.
+    pub lambda_max: f64,
+    /// Wall-clock seconds the simulation took (perf accounting).
+    pub wall_seconds: f64,
+    /// The final barycenter estimate (network average of primal blocks).
+    pub barycenter: Vec<f64>,
+}
+
+impl ExperimentReport {
+    pub fn final_dual_objective(&self) -> f64 {
+        self.dual_objective.last_value().unwrap_or(f64::NAN)
+    }
+
+    pub fn final_consensus(&self) -> f64 {
+        self.consensus.last_value().unwrap_or(f64::NAN)
+    }
+
+    /// One-line summary for bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "REPORT {tag} dual={dual:.6} consensus={cons:.3e} activations={act} \
+             rounds={rounds} messages={msg} events={ev} wall={wall:.2}s",
+            tag = self.tag,
+            dual = self.final_dual_objective(),
+            cons = self.final_consensus(),
+            act = self.activations,
+            rounds = self.rounds,
+            msg = self.messages,
+            ev = self.events,
+            wall = self.wall_seconds,
+        )
+    }
+}
+
+/// Run one experiment cell. Dispatches on the algorithm kind.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport, String> {
+    cfg.validate()?;
+    let graph = Graph::build(cfg.nodes, cfg.topology);
+    assert!(graph.is_connected(), "topology must be connected");
+    let t0 = std::time::Instant::now();
+    let mut report = match cfg.algorithm {
+        AlgorithmKind::A2dwb => async_runtime::run(cfg, &graph, true),
+        AlgorithmKind::A2dwbn => async_runtime::run(cfg, &graph, false),
+        AlgorithmKind::Dcwb => sync_runtime::run(cfg, &graph),
+    }?;
+    report.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(alg: AlgorithmKind) -> ExperimentConfig {
+        ExperimentConfig {
+            nodes: 8,
+            topology: TopologySpec::Cycle,
+            algorithm: alg,
+            measure: MeasureSpec::Gaussian { n: 20 },
+            samples_per_activation: 8,
+            eval_samples: 16,
+            duration: 6.0,
+            metric_interval: 0.5,
+            ..ExperimentConfig::gaussian_default()
+        }
+    }
+
+    #[test]
+    fn all_algorithms_produce_reports() {
+        for alg in AlgorithmKind::all() {
+            let r = run_experiment(&tiny(alg)).unwrap();
+            assert!(r.dual_objective.len() >= 5, "{alg:?}: too few metric points");
+            assert!(r.final_dual_objective().is_finite());
+            assert!(r.final_consensus().is_finite());
+            assert!(r.final_consensus() >= -1e-9);
+            assert_eq!(r.barycenter.len(), 20);
+            // barycenter is a distribution
+            let s: f64 = r.barycenter.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "{alg:?}: barycenter sum {s}");
+            assert!(r.barycenter.iter().all(|&x| x >= -1e-12));
+        }
+    }
+
+    #[test]
+    fn async_makes_progress_on_dual() {
+        let r = run_experiment(&tiny(AlgorithmKind::A2dwb)).unwrap();
+        let first = r.dual_objective.first_value().unwrap();
+        let last = r.final_dual_objective();
+        assert!(last < first, "dual objective should decrease: {first} → {last}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_experiment(&tiny(AlgorithmKind::A2dwb)).unwrap();
+        let b = run_experiment(&tiny(AlgorithmKind::A2dwb)).unwrap();
+        assert_eq!(a.dual_objective.points, b.dual_objective.points);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.barycenter, b.barycenter);
+    }
+
+    #[test]
+    fn seed_changes_trajectory() {
+        let mut cfg = tiny(AlgorithmKind::A2dwb);
+        let a = run_experiment(&cfg).unwrap();
+        cfg.seed = 777;
+        let b = run_experiment(&cfg).unwrap();
+        assert_ne!(a.dual_objective.points, b.dual_objective.points);
+    }
+
+    #[test]
+    fn config_validation_catches_nonsense() {
+        let mut cfg = tiny(AlgorithmKind::A2dwb);
+        cfg.nodes = 1;
+        assert!(run_experiment(&cfg).is_err());
+        let mut cfg = tiny(AlgorithmKind::A2dwb);
+        cfg.beta = 0.0;
+        assert!(run_experiment(&cfg).is_err());
+    }
+
+    #[test]
+    fn async_beats_sync_in_virtual_time() {
+        // the paper's headline: same budget, async reaches a lower dual
+        let a = run_experiment(&tiny(AlgorithmKind::A2dwb)).unwrap();
+        let s = run_experiment(&tiny(AlgorithmKind::Dcwb)).unwrap();
+        assert!(
+            a.final_dual_objective() <= s.final_dual_objective() + 1e-9,
+            "a2dwb {} vs dcwb {}",
+            a.final_dual_objective(),
+            s.final_dual_objective()
+        );
+        // and does far more updates in the same virtual time
+        assert!(a.activations > s.rounds * 2);
+    }
+}

@@ -1,0 +1,173 @@
+//! DCWB — the synchronous baseline (Dvurechenskii et al. 2018, Alg. 3).
+//!
+//! Accelerated primal-dual stochastic gradient with a **global barrier**
+//! per iteration: every node computes its gradient, exchanges with all
+//! neighbors, and the round completes only when the *slowest edge* has
+//! delivered — which is exactly the waiting overhead the paper's
+//! asynchronous scheme removes. In the transformed coordinates this is
+//! the same (u, v) update as Algorithm 3 but with the whole stacked
+//! vector treated as a single block (m = 1 in the θ-sequence: classic
+//! Nesterov indices) and fresh neighbor information every round.
+//!
+//! Virtual time per round = max over edges of a fresh delay draw
+//! (+ compute_time). Metric sampling shares the grid of the async runs.
+
+use super::{evaluator::MetricsEvaluator, ExperimentConfig, ExperimentReport};
+use crate::algo::wbp::WbpNode;
+use crate::algo::ThetaSeq;
+use crate::graph::Graph;
+use crate::measures::CostRows;
+use crate::metrics::Series;
+use crate::sim::LinkDelayModel;
+
+pub(super) fn run(
+    cfg: &ExperimentConfig,
+    graph: &Graph,
+) -> Result<ExperimentReport, String> {
+    let m = cfg.nodes;
+    let n = cfg.support_size();
+    let measures = cfg.measure.build_network(m, cfg.seed);
+    let mut oracle = cfg
+        .backend
+        .build(cfg.samples_per_activation, n)
+        .map_err(|e| e.to_string())?;
+    let lambda_max = graph.lambda_max();
+    let smoothness = lambda_max / cfg.beta;
+    let gamma = cfg.gamma_scale / smoothness;
+
+    // single-block acceleration: θ_r ~ 2/(r+1)
+    let mut theta = ThetaSeq::new(1);
+    let mut nodes: Vec<WbpNode> =
+        (0..m).map(|i| WbpNode::new(n, graph.degree(i))).collect();
+    let slot_of = |dst: usize, src: usize| -> usize {
+        graph.neighbors(dst).binary_search(&src).expect("not a neighbor")
+    };
+
+    let mut delays = LinkDelayModel::paper_default(m, cfg.seed);
+    // fault model: the barrier waits for the slowest *effective* edge —
+    // stragglers multiply delays; a dropped message is retransmitted,
+    // adding a full fresh delay draw per retry.
+    let node_factors = cfg.faults.node_factors(m, cfg.seed);
+    let drop_prob = cfg.faults.drop_prob;
+    let mut drop_rng = crate::rng::Rng64::new(cfg.seed ^ 0x4452_4F50);
+    let mut evaluator =
+        MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
+    let mut root = crate::rng::Rng64::new(cfg.seed ^ 0x5254_4E44);
+    let mut node_rngs: Vec<crate::rng::Rng64> =
+        (0..m).map(|i| root.split(i as u64)).collect();
+
+    let mut dual_series = Series::new("dual_objective");
+    let mut consensus_series = Series::new("consensus");
+    let mut spread_series = Series::new("primal_spread");
+
+    let mut cost = CostRows::new(cfg.samples_per_activation, n);
+    let mut point = vec![0.0; n];
+    let mut etas = vec![0.0; m * n];
+    let mut grads: Vec<Vec<f64>> = vec![vec![0.0; n]; m];
+    let mut messages: u64 = 0;
+    let mut rounds: u64 = 0;
+    let mut now = 0.0f64;
+    let mut next_metric = 0.0f64;
+
+    let record = |t: f64,
+                      nodes: &[WbpNode],
+                      theta: &mut ThetaSeq,
+                      k: usize,
+                      evaluator: &mut MetricsEvaluator,
+                      dual_series: &mut Series,
+                      consensus_series: &mut Series,
+                      spread_series: &mut Series,
+                      etas: &mut [f64],
+                      point: &mut [f64]| {
+        for (i, node) in nodes.iter().enumerate() {
+            node.eta(theta, k.max(1), point);
+            etas[i * n..(i + 1) * n].copy_from_slice(point);
+        }
+        let (dual, consensus, spread) = evaluator.evaluate(etas, &measures);
+        dual_series.push(t, dual);
+        consensus_series.push(t, consensus);
+        spread_series.push(t, spread);
+    };
+
+    record(
+        0.0, &nodes, &mut theta, 0, &mut evaluator, &mut dual_series,
+        &mut consensus_series, &mut spread_series, &mut etas, &mut point,
+    );
+    next_metric += cfg.metric_interval;
+
+    let mut r: usize = 0; // round counter
+    loop {
+        // ---- compute phase: every node evaluates at ū + θ_{r+1}² v̄
+        for i in 0..m {
+            nodes[i].eval_point(&mut theta, r, true, &mut point);
+            measures[i].sample_cost_rows(&mut node_rngs[i], &mut cost);
+            oracle.eval(&point, &cost, cfg.beta, &mut grads[i]);
+        }
+        // ---- exchange phase: barrier = slowest effective edge this round
+        let mut round_time: f64 = 0.0;
+        for &(a, b) in graph.edges() {
+            let factor = node_factors[a].max(node_factors[b]);
+            for (src, dst) in [(a, b), (b, a)] {
+                let mut t = delays.draw(src, dst) * factor;
+                messages += 1;
+                // retransmit until delivered (geometric retries)
+                while drop_prob > 0.0 && drop_rng.uniform() < drop_prob {
+                    t += delays.draw(src, dst) * factor;
+                    messages += 1;
+                }
+                round_time = round_time.max(t);
+            }
+        }
+        round_time += cfg.compute_time;
+        // deliver everything (fresh info: the whole point of the barrier)
+        for i in 0..m {
+            nodes[i].own_grad.copy_from_slice(&grads[i]);
+            for &j in graph.neighbors(i) {
+                let slot = slot_of(j, i);
+                nodes[j].deliver(slot, r as u64 + 1, &grads[i]);
+            }
+        }
+        // ---- update phase: single-block accelerated step
+        for i in 0..m {
+            let deg = graph.degree(i);
+            nodes[i].apply_update(&mut theta, r, 1, gamma, deg, cfg.diag);
+        }
+        r += 1;
+        rounds += 1;
+
+        let t_new = now + round_time;
+        // metric grid points crossed by this round
+        while next_metric <= t_new.min(cfg.duration) {
+            record(
+                next_metric, &nodes, &mut theta, r, &mut evaluator,
+                &mut dual_series, &mut consensus_series, &mut spread_series,
+                &mut etas, &mut point,
+            );
+            next_metric += cfg.metric_interval;
+        }
+        now = t_new;
+        if now >= cfg.duration {
+            break;
+        }
+    }
+
+    record(
+        cfg.duration, &nodes, &mut theta, r, &mut evaluator, &mut dual_series,
+        &mut consensus_series, &mut spread_series, &mut etas, &mut point,
+    );
+
+    Ok(ExperimentReport {
+        tag: cfg.tag(),
+        algorithm: cfg.algorithm,
+        dual_objective: dual_series,
+        consensus: consensus_series,
+        primal_spread: spread_series,
+        activations: rounds * m as u64,
+        rounds,
+        messages,
+        events: rounds,
+        lambda_max,
+        wall_seconds: 0.0,
+        barycenter: evaluator.barycenter(),
+    })
+}

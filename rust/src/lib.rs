@@ -1,0 +1,64 @@
+//! # A²DWB — Asynchronous Decentralized Wasserstein Barycenter
+//!
+//! Production-grade reproduction of *“An Asynchronous Decentralized
+//! Algorithm for Wasserstein Barycenter Problem”* (Zhang, Qian, Xie, 2023).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — a Pallas kernel (`python/compile/kernels/otgrad.py`) computing
+//!   the stochastic entropic-dual oracle (row-softmax mean + batch LSE).
+//! * **L2** — a JAX model (`python/compile/model.py`) wrapping the kernel,
+//!   AOT-lowered to HLO text artifacts by `python/compile/aot.py`.
+//! * **L3** — this crate: the asynchronous decentralized runtime (the
+//!   paper's contribution), a discrete-event network simulator, the three
+//!   algorithms (A²DWB / A²DWBN / DCWB), the generic inducing methods
+//!   (ASBCDS / PASBCDS), and every substrate they need (PRNG, linear
+//!   algebra incl. a Jacobi eigensolver, graph topologies, semi-discrete
+//!   measures, metrics, CLI, bench harness) built from scratch.
+//!
+//! Python never runs on the request path: the Rust runtime executes the
+//! AOT artifacts through PJRT (`runtime`), or uses a bit-faithful native
+//! oracle (`ot`) cross-validated against them.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use a2dwb::prelude::*;
+//!
+//! let cfg = ExperimentConfig {
+//!     nodes: 20,
+//!     topology: TopologySpec::Cycle,
+//!     algorithm: AlgorithmKind::A2dwb,
+//!     ..ExperimentConfig::gaussian_default()
+//! };
+//! let report = run_experiment(&cfg).unwrap();
+//! println!("final dual objective: {}", report.final_dual_objective());
+//! ```
+
+pub mod algo;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod graph;
+pub mod linalg;
+pub mod measures;
+pub mod metrics;
+pub mod ot;
+pub mod problems;
+pub mod proptest_util;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+
+/// One-stop imports for examples and binaries.
+pub mod prelude {
+    pub use crate::algo::{AlgorithmKind, ThetaSeq};
+    pub use crate::coordinator::{
+        run_experiment, ExperimentConfig, ExperimentReport, FaultModel, TaskSpec,
+    };
+    pub use crate::graph::{Graph, TopologySpec};
+    pub use crate::measures::MeasureSpec;
+    pub use crate::metrics::Series;
+    pub use crate::ot::OracleBackendSpec;
+    pub use crate::rng::Rng64;
+}

@@ -1,0 +1,202 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices + PSD matrix sqrt.
+//!
+//! Used to compute `√W̄` of graph Laplacians: the paper's dual problem is
+//! posed in `√W`-coordinates (Eq. 4). The runtime itself never needs the
+//! dense `√W` (Algorithm 3 works in transformed variables — DESIGN.md §7),
+//! but the validation suite does: Theorem-1 duality-bound tests and the
+//! ASBCDS↔A²DWB consistency tests reconstruct the untransformed dual on
+//! small graphs.
+//!
+//! Cyclic-by-row Jacobi: unconditionally convergent for symmetric input,
+//! O(n³) per sweep, typically < 12 sweeps to 1e-12 off-diagonal mass for
+//! the (≤ a few hundred)-node matrices in tests.
+
+use super::Mat;
+
+/// Result of a symmetric eigendecomposition: `a = V diag(λ) Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct EigenDecomposition {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Column `j` of `vectors` is the eigenvector for `values[j]`.
+    pub vectors: Mat,
+}
+
+impl EigenDecomposition {
+    /// Reconstruct `V diag(f(λ)) Vᵀ` for an arbitrary spectral map `f`.
+    pub fn spectral_map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let n = self.values.len();
+        let v = &self.vectors;
+        let mut out = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for (k, &lam) in self.values.iter().enumerate() {
+                    acc += v[(i, k)] * f(lam) * v[(j, k)];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+}
+
+/// Cyclic Jacobi. Panics if `a` is not square/symmetric (1e-9 tol).
+pub fn jacobi_eigen(a: &Mat, max_sweeps: usize, tol: f64) -> EigenDecomposition {
+    assert_eq!(a.rows(), a.cols(), "jacobi: non-square");
+    assert!(a.is_symmetric(1e-9), "jacobi: non-symmetric");
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut v = Mat::identity(n);
+
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += 2.0 * m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                // tan of the rotation, the numerically stable branch
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // apply the rotation G(p,q,θ): M ← GᵀMG, V ← VG
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // sort ascending by eigenvalue, permuting columns of V accordingly
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_col, &old_col) in idx.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, new_col)] = v[(r, old_col)];
+        }
+    }
+    EigenDecomposition { values, vectors }
+}
+
+/// Principal square root of a symmetric PSD matrix.
+///
+/// Small negative eigenvalues (round-off from the Jacobi sweep) are
+/// clamped to zero; genuinely negative spectra panic.
+pub fn sqrtm_psd(a: &Mat) -> Mat {
+    let eig = jacobi_eigen(a, 64, 1e-12);
+    let min = eig.values.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        min > -1e-8 * (1.0 + eig.values.last().unwrap().abs()),
+        "sqrtm_psd: negative eigenvalue {min}"
+    );
+    eig.spectral_map(|l| l.max(0.0).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    fn random_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng64::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.normal();
+                a[(i, j)] = x;
+                a[(j, i)] = x;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_eigen() {
+        let mut d = Mat::zeros(3, 3);
+        d[(0, 0)] = 2.0;
+        d[(1, 1)] = -1.0;
+        d[(2, 2)] = 5.0;
+        let e = jacobi_eigen(&d, 32, 1e-14);
+        assert!((e.values[0] + 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let a = random_symmetric(12, 3);
+        let e = jacobi_eigen(&a, 64, 1e-13);
+        // A == V diag(λ) Vᵀ
+        let rebuilt = e.spectral_map(|l| l);
+        assert!(a.max_abs_diff(&rebuilt) < 1e-9, "{}", a.max_abs_diff(&rebuilt));
+        // VᵀV == I
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vtv.max_abs_diff(&Mat::identity(12)) < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = jacobi_eigen(&a, 32, 1e-14);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        // build PSD: B = AᵀA
+        let a = random_symmetric(8, 7);
+        let b = a.matmul(&a); // symmetric PSD
+        let s = sqrtm_psd(&b);
+        let s2 = s.matmul(&s);
+        assert!(b.max_abs_diff(&s2) < 1e-8, "{}", b.max_abs_diff(&s2));
+        assert!(s.is_symmetric(1e-9));
+    }
+
+    #[test]
+    fn lambda_max_agrees_with_power_iteration() {
+        let a = random_symmetric(10, 11);
+        let b = a.matmul(&a); // PSD so power iteration is clean
+        let e = jacobi_eigen(&b, 64, 1e-13);
+        let lp = b.lambda_max_power(500);
+        assert!(
+            (e.values.last().unwrap() - lp).abs() < 1e-6 * (1.0 + lp.abs()),
+            "jacobi {} vs power {lp}",
+            e.values.last().unwrap()
+        );
+    }
+}

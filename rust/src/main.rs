@@ -1,0 +1,225 @@
+//! `a2dwb` — leader binary: run decentralized Wasserstein-barycenter
+//! experiments from the command line.
+//!
+//! ```text
+//! a2dwb gaussian --algorithm a2dwb --topology cycle --nodes 50 --duration 30
+//! a2dwb mnist    --digit 3 --topology er:0.1 --nodes 50
+//! a2dwb sweep    --nodes 30 --duration 20          # all algos × topologies
+//! a2dwb oracle   --backend pjrt --m 32 --n 100     # oracle micro-check
+//! a2dwb inspect  --topology star --nodes 100       # graph spectral info
+//! ```
+
+use a2dwb::algo::wbp::DiagCoef;
+use a2dwb::cli::Args;
+use a2dwb::coordinator::{run_experiment, ExperimentConfig};
+use a2dwb::graph::{Graph, TopologySpec};
+use a2dwb::measures::MeasureSpec;
+use a2dwb::metrics::{ascii_summary, write_csv};
+use a2dwb::ot::OracleBackendSpec;
+use a2dwb::prelude::AlgorithmKind;
+
+const SUBCOMMANDS: &[&str] = &["gaussian", "mnist", "sweep", "oracle", "inspect"];
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("gaussian") => cmd_experiment(&args, false),
+        Some("mnist") => cmd_experiment(&args, true),
+        Some("sweep") => cmd_sweep(&args),
+        Some("oracle") => cmd_oracle(&args),
+        Some("inspect") => cmd_inspect(&args),
+        _ => {
+            eprintln!("usage: a2dwb <{}> [--opt value ...]", SUBCOMMANDS.join("|"));
+            eprintln!("common options:");
+            eprintln!("  --nodes N --topology T --algorithm A --duration S --seed K");
+            eprintln!("  --beta B --gamma-scale G --samples M --backend native|pjrt");
+            eprintln!("  --out results/run.csv  (CSV of the metric series)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Build an ExperimentConfig from shared CLI options.
+fn config_from_args(args: &Args, mnist: bool) -> Result<ExperimentConfig, String> {
+    let mut cfg = if mnist {
+        ExperimentConfig::mnist_default(args.get::<u8>("digit", 2)?)
+    } else {
+        ExperimentConfig::gaussian_default()
+    };
+    cfg.nodes = args.get("nodes", cfg.nodes)?;
+    cfg.seed = args.get("seed", cfg.seed)?;
+    cfg.topology = TopologySpec::parse(&args.get_str("topology", "complete"), cfg.seed)?;
+    cfg.algorithm = AlgorithmKind::parse(&args.get_str("algorithm", "a2dwb"))?;
+    cfg.beta = args.get("beta", cfg.beta)?;
+    cfg.gamma_scale = args.get("gamma-scale", cfg.gamma_scale)?;
+    cfg.samples_per_activation = args.get("samples", cfg.samples_per_activation)?;
+    cfg.eval_samples = args.get("eval-samples", cfg.eval_samples)?;
+    cfg.duration = args.get("duration", cfg.duration)?;
+    cfg.activation_interval = args.get("activation-interval", cfg.activation_interval)?;
+    cfg.metric_interval = args.get("metric-interval", cfg.metric_interval)?;
+    cfg.compute_time = args.get("compute-time", cfg.compute_time)?;
+    if mnist {
+        let side = args.get("side", 28usize)?;
+        cfg.measure = MeasureSpec::Digits {
+            digit: args.get::<u8>("digit", 2)?,
+            side,
+            idx_path: args.get_opt("idx-path").map(str::to_string),
+        };
+    } else {
+        cfg.measure = MeasureSpec::Gaussian { n: args.get("support", 100usize)? };
+    }
+    cfg.backend = match args.get_str("backend", "native").as_str() {
+        "native" => OracleBackendSpec::Native,
+        "pjrt" => OracleBackendSpec::Pjrt {
+            artifacts_dir: args.get_str("artifacts", "artifacts"),
+        },
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    if args.has_flag("paper-literal-diag") {
+        cfg.diag = DiagCoef::PaperLiteral;
+    }
+    Ok(cfg)
+}
+
+fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
+    let cfg = match config_from_args(args, mnist) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "running {} on {} ({} nodes, {:.0}s virtual, backend {:?})",
+        cfg.algorithm.name(),
+        cfg.topology.name(),
+        cfg.nodes,
+        cfg.duration,
+        cfg.backend
+    );
+    match run_experiment(&cfg) {
+        Ok(report) => {
+            println!("{}", report.summary());
+            println!(
+                "{}",
+                ascii_summary(
+                    &[&report.dual_objective, &report.consensus, &report.primal_spread],
+                    48
+                )
+            );
+            if let Some(out) = args.get_opt("out") {
+                if let Err(e) = write_csv(
+                    out,
+                    &[&report.dual_objective, &report.consensus, &report.primal_spread],
+                ) {
+                    eprintln!("error writing {out}: {e}");
+                    return 1;
+                }
+                println!("wrote {out}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let topologies = ["complete", "er:0.1", "cycle", "star"];
+    for topo in topologies {
+        for alg in AlgorithmKind::all() {
+            let mut cfg = match config_from_args(args, false) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            cfg.topology = TopologySpec::parse(topo, cfg.seed).unwrap();
+            cfg.algorithm = alg;
+            match run_experiment(&cfg) {
+                Ok(r) => println!("{}", r.summary()),
+                Err(e) => {
+                    eprintln!("error [{topo}/{}]: {e}", alg.name());
+                    return 1;
+                }
+            }
+        }
+    }
+    0
+}
+
+fn cmd_oracle(args: &Args) -> i32 {
+    use a2dwb::measures::CostRows;
+    use a2dwb::ot::DualOracle;
+    let m: usize = args.get("m", 32usize).unwrap_or(32);
+    let n: usize = args.get("n", 100usize).unwrap_or(100);
+    let beta: f64 = args.get("beta", 0.02).unwrap_or(0.02);
+    let mut rng = a2dwb::rng::Rng64::new(args.get("seed", 1u64).unwrap_or(1));
+    let eta: Vec<f64> = (0..n).map(|_| rng.normal() * 0.1).collect();
+    let mut cost = CostRows::new(m, n);
+    for v in cost.data.iter_mut() {
+        *v = rng.uniform();
+    }
+    let mut grad_native = vec![0.0; n];
+    let mut native = a2dwb::ot::NativeOracle::default();
+    let val_native = native.eval(&eta, &cost, beta, &mut grad_native);
+    println!("native : val={val_native:.6}");
+    if args.get_str("backend", "native") == "pjrt" {
+        let dir = args.get_str("artifacts", "artifacts");
+        match a2dwb::runtime::PjrtOracle::load(&dir, m, n) {
+            Ok(mut pjrt) => {
+                let mut grad_pjrt = vec![0.0; n];
+                let val_pjrt = pjrt.eval(&eta, &cost, beta, &mut grad_pjrt);
+                let max_diff = grad_native
+                    .iter()
+                    .zip(&grad_pjrt)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                println!("pjrt   : val={val_pjrt:.6} max|Δgrad|={max_diff:.3e}");
+                if max_diff > 1e-4 || (val_native - val_pjrt).abs() > 1e-4 {
+                    eprintln!("BACKEND MISMATCH");
+                    return 1;
+                }
+                println!("backends agree");
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_inspect(args: &Args) -> i32 {
+    let seed = args.get("seed", 42u64).unwrap_or(42);
+    let nodes = args.get("nodes", 50usize).unwrap_or(50);
+    let topo = match TopologySpec::parse(&args.get_str("topology", "complete"), seed) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let g = Graph::build(nodes, topo);
+    println!("topology   : {}", topo.name());
+    println!("nodes      : {}", g.num_nodes());
+    println!("edges      : {}", g.num_edges());
+    println!("max degree : {}", g.max_degree());
+    println!("connected  : {}", g.is_connected());
+    println!("λ_max(W̄)  : {:.4}", g.lambda_max());
+    if nodes <= 200 {
+        println!("λ₂(W̄)     : {:.6} (algebraic connectivity)", g.algebraic_connectivity());
+    }
+    0
+}

@@ -1,0 +1,143 @@
+//! §4.1 substrate: univariate Gaussian node measures.
+//!
+//! `μ_i = N(θ_i, σ_i²)` sampled exactly (Box–Muller); support is `n`
+//! equispaced points on `[−5, 5]`; transport cost is squared distance,
+//! normalized by the squared support radius so that costs live in O(1)
+//! regardless of n — this keeps one `β` meaningful across experiments.
+
+use std::sync::Arc;
+
+use super::{CostRows, NodeMeasure};
+use crate::rng::Rng64;
+
+/// `n` equispaced points on [lo, hi] (inclusive endpoints).
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2, "linspace needs n >= 2");
+    let step = (hi - lo) / (n - 1) as f64;
+    (0..n).map(|i| lo + step * i as f64).collect()
+}
+
+/// One node's continuous measure for the Gaussian experiment.
+#[derive(Clone, Debug)]
+pub struct Gaussian1d {
+    pub theta: f64,
+    pub sigma: f64,
+    support: Arc<Vec<f64>>,
+    /// 1 / (radius²) cost normalizer, radius = max |z|.
+    inv_scale: f64,
+}
+
+impl Gaussian1d {
+    pub fn new(theta: f64, sigma: f64, support: Arc<Vec<f64>>) -> Self {
+        assert!(sigma > 0.0);
+        let radius = support
+            .iter()
+            .map(|z| z.abs())
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        Self { theta, sigma, support, inv_scale: 1.0 / (radius * radius) }
+    }
+
+    pub fn support(&self) -> &[f64] {
+        &self.support
+    }
+}
+
+impl Gaussian1d {
+    #[inline]
+    fn fill_row(&self, y: f64, row: &mut [f64]) {
+        for (c, z) in row.iter_mut().zip(self.support.iter()) {
+            let d = z - y;
+            *c = d * d * self.inv_scale;
+        }
+    }
+}
+
+impl NodeMeasure for Gaussian1d {
+    fn support_size(&self) -> usize {
+        self.support.len()
+    }
+
+    fn sample_cost_rows(&self, rng: &mut Rng64, out: &mut CostRows) {
+        assert_eq!(out.n, self.support.len());
+        for r in 0..out.m {
+            let y = rng.normal_with(self.theta, self.sigma);
+            self.fill_row(y, out.row_mut(r));
+        }
+    }
+
+    fn draw_samples(&self, rng: &mut Rng64, count: usize) -> super::Samples {
+        super::Samples::Points1d(
+            (0..count)
+                .map(|_| rng.normal_with(self.theta, self.sigma))
+                .collect(),
+        )
+    }
+
+    fn cost_rows_for(&self, samples: &super::Samples, out: &mut CostRows) {
+        let super::Samples::Points1d(ys) = samples else {
+            panic!("Gaussian1d expects Points1d samples");
+        };
+        assert_eq!(out.m, ys.len());
+        for (r, &y) in ys.iter().enumerate() {
+            self.fill_row(y, out.row_mut(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linspace_endpoints_and_spacing() {
+        let xs = linspace(-5.0, 5.0, 101);
+        assert_eq!(xs.len(), 101);
+        assert!((xs[0] + 5.0).abs() < 1e-12);
+        assert!((xs[100] - 5.0).abs() < 1e-12);
+        assert!((xs[1] - xs[0] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_rows_are_parabolas_in_support() {
+        let sup = Arc::new(linspace(-5.0, 5.0, 11));
+        let g = Gaussian1d::new(0.0, 0.1, sup.clone());
+        let mut rng = Rng64::new(3);
+        let mut cr = CostRows::new(1, 11);
+        g.sample_cost_rows(&mut rng, &mut cr);
+        // the sampled y is near 0 (σ=0.1) ⇒ min cost near the middle
+        let row = cr.row(0);
+        let argmin = row
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((4..=6).contains(&argmin), "argmin {argmin}");
+        // normalized: cost at |z|=5 when y≈0 is ≈ 25/25 = 1
+        assert!(row[0] <= 1.5 && row[10] <= 1.5);
+    }
+
+    #[test]
+    fn sample_mean_tracks_theta() {
+        let sup = Arc::new(linspace(-5.0, 5.0, 3));
+        let g = Gaussian1d::new(2.0, 0.5, sup);
+        let mut rng = Rng64::new(5);
+        let mut cr = CostRows::new(1, 3);
+        // recover y from the cost row: y = z0 ± sqrt(c*scale)... easier:
+        // estimate E[y] by sampling many rows and inverting the parabola
+        // vertex via finite differences on the 3 support points.
+        let z = [-5.0, 0.0, 5.0];
+        let mut mean = 0.0;
+        let trials = 4000;
+        for _ in 0..trials {
+            g.sample_cost_rows(&mut rng, &mut cr);
+            let c: Vec<f64> = cr.row(0).iter().map(|v| v * 25.0).collect();
+            // c_l = (z_l - y)^2 ⇒ y = (c_0 - c_2) / (2(z_2 - z_0)) ... solve:
+            let y = (c[0] - c[2]) / (2.0 * (z[2] - z[0]));
+            mean += y;
+        }
+        mean /= trials as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+    }
+}

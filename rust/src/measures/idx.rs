@@ -1,0 +1,197 @@
+//! MNIST IDX file loader (idx3-ubyte images + idx1-ubyte labels).
+//!
+//! If the user drops `train-images-idx3-ubyte` / `train-labels-idx1-ubyte`
+//! (optionally `.gz`-less raw files) next to each other, the digit
+//! experiment uses real MNIST; otherwise the synthetic glyphs of
+//! `digits.rs` stand in (DESIGN.md §4). `path` points at the *images*
+//! file; the labels file is found by name convention.
+
+use std::fs;
+use std::io::Read;
+
+/// Parse the big-endian u32 at `buf[off..off+4]`.
+fn be_u32(buf: &[u8], off: usize) -> Result<u32, String> {
+    buf.get(off..off + 4)
+        .map(|b| u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
+        .ok_or_else(|| "truncated header".to_string())
+}
+
+/// Raw IDX images: returns (rows, cols, images-as-bytes).
+pub fn parse_idx3(buf: &[u8]) -> Result<(usize, usize, Vec<&[u8]>), String> {
+    if be_u32(buf, 0)? != 0x0000_0803 {
+        return Err("bad idx3 magic".into());
+    }
+    let count = be_u32(buf, 4)? as usize;
+    let rows = be_u32(buf, 8)? as usize;
+    let cols = be_u32(buf, 12)? as usize;
+    let px = rows * cols;
+    if buf.len() < 16 + count * px {
+        return Err("idx3 truncated".into());
+    }
+    let images = (0..count)
+        .map(|i| &buf[16 + i * px..16 + (i + 1) * px])
+        .collect();
+    Ok((rows, cols, images))
+}
+
+/// Raw IDX labels.
+pub fn parse_idx1(buf: &[u8]) -> Result<&[u8], String> {
+    if be_u32(buf, 0)? != 0x0000_0801 {
+        return Err("bad idx1 magic".into());
+    }
+    let count = be_u32(buf, 4)? as usize;
+    if buf.len() < 8 + count {
+        return Err("idx1 truncated".into());
+    }
+    Ok(&buf[8..8 + count])
+}
+
+/// Load up to `count` images of `digit`, downsampled to `side × side`,
+/// normalized to the simplex. `images_path` is the idx3 file; labels are
+/// looked for by replacing `images-idx3` with `labels-idx1` in the name.
+pub fn load_digit_images(
+    images_path: &str,
+    digit: u8,
+    count: usize,
+    side: usize,
+) -> Result<Vec<Vec<f64>>, String> {
+    let mut img_buf = Vec::new();
+    fs::File::open(images_path)
+        .map_err(|e| format!("{images_path}: {e}"))?
+        .read_to_end(&mut img_buf)
+        .map_err(|e| e.to_string())?;
+    let labels_path = images_path.replace("images-idx3", "labels-idx1");
+    let mut lbl_buf = Vec::new();
+    fs::File::open(&labels_path)
+        .map_err(|e| format!("{labels_path}: {e}"))?
+        .read_to_end(&mut lbl_buf)
+        .map_err(|e| e.to_string())?;
+
+    let (rows, cols, images) = parse_idx3(&img_buf)?;
+    let labels = parse_idx1(&lbl_buf)?;
+    if labels.len() != images.len() {
+        return Err("label/image count mismatch".into());
+    }
+
+    let mut out = Vec::with_capacity(count);
+    for (img, &lbl) in images.iter().zip(labels) {
+        if lbl != digit {
+            continue;
+        }
+        out.push(downsample_normalize(img, rows, cols, side)?);
+        if out.len() == count {
+            break;
+        }
+    }
+    if out.len() < count {
+        return Err(format!(
+            "only {} images of digit {digit} available, need {count}",
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Box-average `rows×cols` u8 image to `side×side`, normalize to sum 1.
+fn downsample_normalize(
+    img: &[u8],
+    rows: usize,
+    cols: usize,
+    side: usize,
+) -> Result<Vec<f64>, String> {
+    if side == 0 || side > rows || side > cols {
+        return Err(format!("bad target side {side} for {rows}x{cols}"));
+    }
+    let mut out = vec![0.0f64; side * side];
+    for r in 0..rows {
+        for c in 0..cols {
+            let tr = r * side / rows;
+            let tc = c * side / cols;
+            out[tr * side + tc] += img[r * cols + c] as f64;
+        }
+    }
+    let total: f64 = out.iter().sum();
+    if total <= 0.0 {
+        return Err("blank image".into());
+    }
+    for v in &mut out {
+        *v /= total;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_idx3(images: &[Vec<u8>], rows: usize, cols: usize) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        buf.extend_from_slice(&(images.len() as u32).to_be_bytes());
+        buf.extend_from_slice(&(rows as u32).to_be_bytes());
+        buf.extend_from_slice(&(cols as u32).to_be_bytes());
+        for img in images {
+            assert_eq!(img.len(), rows * cols);
+            buf.extend_from_slice(img);
+        }
+        buf
+    }
+
+    fn fake_idx1(labels: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        buf.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        buf.extend_from_slice(labels);
+        buf
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let imgs = vec![vec![0u8, 10, 20, 30], vec![5u8, 5, 5, 5]];
+        let buf = fake_idx3(&imgs, 2, 2);
+        let (r, c, parsed) = parse_idx3(&buf).unwrap();
+        assert_eq!((r, c), (2, 2));
+        assert_eq!(parsed[1], &[5, 5, 5, 5]);
+        let lbl = fake_idx1(&[7, 3]);
+        assert_eq!(parse_idx1(&lbl).unwrap(), &[7, 3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_idx3(&[0, 0, 8, 1, 0, 0, 0, 0]).is_err());
+        assert!(parse_idx1(&[0, 0, 8, 3, 0, 0, 0, 0]).is_err());
+        assert!(parse_idx3(&[1]).is_err());
+    }
+
+    #[test]
+    fn load_digit_images_end_to_end() {
+        let dir = std::env::temp_dir().join("a2dwb_idx_test");
+        fs::create_dir_all(&dir).unwrap();
+        let imgs: Vec<Vec<u8>> = (0..4)
+            .map(|i| (0..16).map(|p| ((i * 16 + p) % 255) as u8 + 1).collect())
+            .collect();
+        let ipath = dir.join("t10k-images-idx3-ubyte");
+        let lpath = dir.join("t10k-labels-idx1-ubyte");
+        fs::write(&ipath, fake_idx3(&imgs, 4, 4)).unwrap();
+        fs::write(&lpath, fake_idx1(&[3, 5, 3, 3])).unwrap();
+        let got = load_digit_images(ipath.to_str().unwrap(), 3, 2, 4).unwrap();
+        assert_eq!(got.len(), 2);
+        for img in &got {
+            assert_eq!(img.len(), 16);
+            assert!((img.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        // asking for more than exist fails loudly (only one '5' present)
+        assert!(load_digit_images(ipath.to_str().unwrap(), 5, 2, 4).is_err());
+        // absent digit fails too
+        assert!(load_digit_images(ipath.to_str().unwrap(), 9, 1, 4).is_err());
+    }
+
+    #[test]
+    fn downsample_conserves_mass_location() {
+        let mut img = vec![0u8; 16];
+        img[0] = 100; // top-left corner
+        let out = downsample_normalize(&img, 4, 4, 2).unwrap();
+        assert!((out[0] - 1.0).abs() < 1e-12);
+        assert_eq!(out[3], 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Semi-discrete measures — the data substrate of both experiments.
+//!
+//! Each node holds a private measure `μ_i`; the barycenter lives on a
+//! fixed discrete support `{z_1..z_n}`. The only thing the algorithms
+//! ever need from a measure is: *draw M samples `Y_r ~ μ_i` and give me
+//! the cost rows `C[r, l] = c(z_l, Y_r)`* (Lemma 1). That contract is
+//! [`NodeMeasure::sample_cost_rows`].
+//!
+//! Two families, matching the paper's two experiments:
+//! * [`gaussian::Gaussian1d`] — continuous `N(θ_i, σ_i²)` on ℝ, support
+//!   = n equispaced points on [−5, 5], squared-distance cost (§4.1);
+//! * [`digits::DigitMeasure`] — discrete 28×28 image histograms, support
+//!   = the same grid, squared Euclidean pixel-distance cost (§4.2).
+//!   Synthetic glyphs by default; real MNIST IDX files if provided
+//!   (see [`idx`] and DESIGN.md §4 for the substitution argument).
+
+pub mod digits;
+pub mod gaussian;
+pub mod idx;
+
+use crate::rng::Rng64;
+
+/// Row-major M×n cost matrix buffer, reused across activations.
+#[derive(Clone, Debug)]
+pub struct CostRows {
+    pub m: usize,
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl CostRows {
+    pub fn new(m: usize, n: usize) -> Self {
+        Self { m, n, data: vec![0.0; m * n] }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.n..(r + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.n..(r + 1) * self.n]
+    }
+}
+
+/// A compact record of drawn samples, reusable to regenerate cost rows
+/// (common-random-number metric evaluation without storing m×E×n costs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Samples {
+    /// Real-valued sample locations (Gaussian experiment).
+    Points1d(Vec<f64>),
+    /// Grid pixel indices (digit experiment).
+    Pixels(Vec<usize>),
+}
+
+impl Samples {
+    pub fn len(&self) -> usize {
+        match self {
+            Samples::Points1d(v) => v.len(),
+            Samples::Pixels(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A node's private measure: the sampling oracle of the paper.
+pub trait NodeMeasure: Send + Sync {
+    /// Support size n (shared across the network).
+    fn support_size(&self) -> usize;
+
+    /// Draw `out.m` samples from μ and fill the cost rows
+    /// `out[r, l] = c(z_l, Y_r)`. Must not allocate on the hot path.
+    fn sample_cost_rows(&self, rng: &mut Rng64, out: &mut CostRows);
+
+    /// Draw `count` samples and return them in compact form.
+    fn draw_samples(&self, rng: &mut Rng64, count: usize) -> Samples;
+
+    /// Regenerate the cost rows of previously drawn samples.
+    fn cost_rows_for(&self, samples: &Samples, out: &mut CostRows);
+}
+
+/// Config-level description of the per-node measure family.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MeasureSpec {
+    /// §4.1: `μ_i = N(θ_i, σ_i²)`, θ_i ~ U[−4,4], σ_i ~ U[0.1,0.6],
+    /// support = n points equispaced on [−5, 5].
+    Gaussian { n: usize },
+    /// §4.2: one image of `digit` per node on a `side × side` grid
+    /// (n = side²). Synthetic glyphs, or real MNIST via `idx_path`.
+    Digits {
+        digit: u8,
+        side: usize,
+        idx_path: Option<String>,
+    },
+}
+
+impl MeasureSpec {
+    pub fn support_size(&self) -> usize {
+        match self {
+            MeasureSpec::Gaussian { n } => *n,
+            MeasureSpec::Digits { side, .. } => side * side,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            MeasureSpec::Gaussian { n } => format!("gaussian-n{n}"),
+            MeasureSpec::Digits { digit, side, .. } => {
+                format!("digits{digit}-{side}x{side}")
+            }
+        }
+    }
+
+    /// Instantiate the per-node measures for a network of `m` nodes.
+    /// Deterministic in `seed`.
+    pub fn build_network(
+        &self,
+        m: usize,
+        seed: u64,
+    ) -> Vec<Box<dyn NodeMeasure>> {
+        let mut rng = Rng64::new(seed ^ 0x4D45_4153);
+        match self {
+            MeasureSpec::Gaussian { n } => {
+                let support = std::sync::Arc::new(gaussian::linspace(-5.0, 5.0, *n));
+                (0..m)
+                    .map(|_| {
+                        // θ_i ~ U[-4, 4], σ_i ~ U[0.1, 0.6]  (paper §4.1)
+                        let theta = rng.uniform_in(-4.0, 4.0);
+                        let sigma = rng.uniform_in(0.1, 0.6);
+                        Box::new(gaussian::Gaussian1d::new(theta, sigma, support.clone()))
+                            as Box<dyn NodeMeasure>
+                    })
+                    .collect()
+            }
+            MeasureSpec::Digits { digit, side, idx_path } => {
+                let images = match idx_path {
+                    Some(p) => idx::load_digit_images(p, *digit, m, *side)
+                        .unwrap_or_else(|e| {
+                            eprintln!(
+                                "warn: IDX load failed ({e}); using synthetic glyphs"
+                            );
+                            digits::synthetic_images(*digit, m, *side, &mut rng)
+                        }),
+                    None => digits::synthetic_images(*digit, m, *side, &mut rng),
+                };
+                let geom = std::sync::Arc::new(digits::GridGeometry::new(*side));
+                images
+                    .into_iter()
+                    .map(|img| {
+                        Box::new(digits::DigitMeasure::new(img, geom.clone()))
+                            as Box<dyn NodeMeasure>
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_rows_layout() {
+        let mut c = CostRows::new(2, 3);
+        c.row_mut(1)[2] = 5.0;
+        assert_eq!(c.data[5], 5.0);
+        assert_eq!(c.row(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gaussian_network_deterministic() {
+        let spec = MeasureSpec::Gaussian { n: 10 };
+        let a = spec.build_network(4, 1);
+        let b = spec.build_network(4, 1);
+        let mut r1 = Rng64::new(9);
+        let mut r2 = Rng64::new(9);
+        let mut ca = CostRows::new(3, 10);
+        let mut cb = CostRows::new(3, 10);
+        a[2].sample_cost_rows(&mut r1, &mut ca);
+        b[2].sample_cost_rows(&mut r2, &mut cb);
+        assert_eq!(ca.data, cb.data);
+    }
+
+    #[test]
+    fn digits_network_builds() {
+        let spec = MeasureSpec::Digits { digit: 3, side: 14, idx_path: None };
+        let ms = spec.build_network(3, 2);
+        assert_eq!(ms.len(), 3);
+        assert_eq!(ms[0].support_size(), 196);
+        let mut rng = Rng64::new(0);
+        let mut c = CostRows::new(4, 196);
+        ms[0].sample_cost_rows(&mut rng, &mut c);
+        // costs are normalized squared grid distances in [0, 2]
+        assert!(c.data.iter().all(|&x| (0.0..=2.0 + 1e-12).contains(&x)));
+    }
+}

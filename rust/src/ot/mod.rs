@@ -1,0 +1,239 @@
+//! Entropic semi-discrete OT dual oracle — native Rust implementation.
+//!
+//! Mirrors the L1 Pallas kernel / L2 model exactly (see
+//! `python/compile/kernels/ref.py` for the math): given the local
+//! potential `η̄`, a batch of cost rows `C[r,·]`, and `β`,
+//!
+//!   grad = mean_r softmax((η̄ − C_r)/β)          (paper Lemma 1 Eq. 6)
+//!   val  = mean_r β·logsumexp((η̄ − C_r)/β)      (dual objective part)
+//!
+//! Two interchangeable backends implement [`DualOracle`]:
+//! * [`NativeOracle`] — this module; f64; zero FFI overhead.
+//! * [`crate::runtime::PjrtOracle`] — executes the AOT JAX/Pallas
+//!   artifact through PJRT, proving the three-layer path.
+//! Integration tests pin them together (`rust/tests/pjrt_parity.rs`).
+
+pub mod sinkhorn;
+
+use crate::measures::CostRows;
+
+/// Scratch space reused across activations (no hot-path allocation).
+#[derive(Clone, Debug, Default)]
+pub struct OracleScratch {
+    logits: Vec<f64>,
+}
+
+/// Stable single-row pass: returns (softmax written into `probs`, lse).
+#[inline]
+fn softmax_lse_row(eta: &[f64], cost: &[f64], inv_beta: f64, probs: &mut [f64]) -> f64 {
+    // logits s_l = (eta_l - c_l) * inv_beta, max-subtracted
+    let mut smax = f64::NEG_INFINITY;
+    for ((p, &e), &c) in probs.iter_mut().zip(eta).zip(cost) {
+        let s = (e - c) * inv_beta;
+        *p = s;
+        if s > smax {
+            smax = s;
+        }
+    }
+    let mut z = 0.0;
+    for p in probs.iter_mut() {
+        *p = (*p - smax).exp();
+        z += *p;
+    }
+    let inv_z = 1.0 / z;
+    for p in probs.iter_mut() {
+        *p *= inv_z;
+    }
+    smax + z.ln()
+}
+
+/// Compute the oracle into preallocated output buffers.
+///
+/// `grad` (len n) receives the mean softmax; returns the mean
+/// `β·logsumexp` value.
+pub fn dual_oracle_into(
+    eta: &[f64],
+    cost: &CostRows,
+    beta: f64,
+    grad: &mut [f64],
+    scratch: &mut OracleScratch,
+) -> f64 {
+    let n = cost.n;
+    let m = cost.m;
+    assert_eq!(eta.len(), n);
+    assert_eq!(grad.len(), n);
+    assert!(beta > 0.0 && m > 0);
+    scratch.logits.resize(n, 0.0);
+    let inv_beta = 1.0 / beta;
+    grad.fill(0.0);
+    let mut lse_sum = 0.0;
+    for r in 0..m {
+        let lse = softmax_lse_row(eta, cost.row(r), inv_beta, &mut scratch.logits);
+        lse_sum += lse;
+        for (g, p) in grad.iter_mut().zip(&scratch.logits) {
+            *g += p;
+        }
+    }
+    let inv_m = 1.0 / m as f64;
+    for g in grad.iter_mut() {
+        *g *= inv_m;
+    }
+    beta * lse_sum * inv_m
+}
+
+/// Allocating convenience wrapper.
+pub fn dual_oracle(eta: &[f64], cost: &CostRows, beta: f64) -> (Vec<f64>, f64) {
+    let mut grad = vec![0.0; cost.n];
+    let mut scratch = OracleScratch::default();
+    let val = dual_oracle_into(eta, cost, beta, &mut grad, &mut scratch);
+    (grad, val)
+}
+
+/// The oracle contract used by every algorithm and the coordinator.
+///
+/// Not `Send`: the PJRT backend wraps thread-affine FFI handles and the
+/// coordinator's event loop is single-threaded by design (determinism).
+pub trait DualOracle {
+    /// Fill `grad` with `∇̃W*_{β,μ}(η̄)` and return the dual value part.
+    fn eval(&mut self, eta: &[f64], cost: &CostRows, beta: f64, grad: &mut [f64])
+        -> f64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// f64 native backend.
+#[derive(Default)]
+pub struct NativeOracle {
+    scratch: OracleScratch,
+}
+
+impl DualOracle for NativeOracle {
+    fn eval(
+        &mut self,
+        eta: &[f64],
+        cost: &CostRows,
+        beta: f64,
+        grad: &mut [f64],
+    ) -> f64 {
+        dual_oracle_into(eta, cost, beta, grad, &mut self.scratch)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Config-level backend selector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OracleBackendSpec {
+    Native,
+    /// PJRT execution of `artifacts/oracle_m{M}_n{n}.hlo.txt`.
+    Pjrt { artifacts_dir: String },
+}
+
+impl OracleBackendSpec {
+    pub fn build(&self, m: usize, n: usize) -> anyhow::Result<Box<dyn DualOracle>> {
+        match self {
+            OracleBackendSpec::Native => Ok(Box::new(NativeOracle::default())),
+            OracleBackendSpec::Pjrt { artifacts_dir } => Ok(Box::new(
+                crate::runtime::PjrtOracle::load(artifacts_dir, m, n)?,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    fn random_case(seed: u64, m: usize, n: usize) -> (Vec<f64>, CostRows) {
+        let mut rng = Rng64::new(seed);
+        let eta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut cost = CostRows::new(m, n);
+        for v in cost.data.iter_mut() {
+            *v = rng.uniform_in(0.0, 4.0);
+        }
+        (eta, cost)
+    }
+
+    #[test]
+    fn grad_is_probability_distribution() {
+        let (eta, cost) = random_case(1, 16, 50);
+        let (g, _) = dual_oracle(&eta, &cost, 0.1);
+        assert!(g.iter().all(|&x| x >= 0.0));
+        assert!((g.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample_sharp_beta_is_argmax() {
+        let (eta, cost) = random_case(2, 1, 20);
+        let (g, _) = dual_oracle(&eta, &cost, 1e-9);
+        let best = (0..20)
+            .max_by(|&a, &b| {
+                (eta[a] - cost.row(0)[a])
+                    .partial_cmp(&(eta[b] - cost.row(0)[b]))
+                    .unwrap()
+            })
+            .unwrap();
+        assert!((g[best] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn value_matches_naive_f64() {
+        let (eta, cost) = random_case(3, 8, 12);
+        let beta = 0.37;
+        let (_, val) = dual_oracle(&eta, &cost, beta);
+        // naive unstable computation in f64 is fine at this scale
+        let mut want = 0.0;
+        for r in 0..8 {
+            let z: f64 = (0..12)
+                .map(|l| ((eta[l] - cost.row(r)[l]) / beta).exp())
+                .sum();
+            want += beta * z.ln();
+        }
+        want /= 8.0;
+        assert!((val - want).abs() < 1e-9, "{val} vs {want}");
+    }
+
+    #[test]
+    fn grad_is_derivative_of_value() {
+        let (eta, cost) = random_case(4, 6, 9);
+        let beta = 0.5;
+        let (g, _) = dual_oracle(&eta, &cost, beta);
+        let eps = 1e-6;
+        for l in 0..9 {
+            let mut ep = eta.clone();
+            ep[l] += eps;
+            let (_, vp) = dual_oracle(&ep, &cost, beta);
+            ep[l] -= 2.0 * eps;
+            let (_, vm) = dual_oracle(&ep, &cost, beta);
+            let fd = (vp - vm) / (2.0 * eps);
+            assert!((g[l] - fd).abs() < 1e-5, "block {l}: {} vs {fd}", g[l]);
+        }
+    }
+
+    #[test]
+    fn no_overflow_at_extreme_logits() {
+        let n = 10;
+        let mut eta = vec![0.0; n];
+        eta[3] = 1e4;
+        let mut cost = CostRows::new(2, n);
+        cost.data.iter_mut().for_each(|v| *v = 1.0);
+        let (g, val) = dual_oracle(&eta, &cost, 1e-3);
+        assert!(g.iter().all(|x| x.is_finite()));
+        assert!(val.is_finite());
+        assert!((g[3] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn into_variant_reuses_buffers() {
+        let (eta, cost) = random_case(5, 4, 7);
+        let mut grad = vec![0.0; 7];
+        let mut scratch = OracleScratch::default();
+        let v1 = dual_oracle_into(&eta, &cost, 0.2, &mut grad, &mut scratch);
+        let (g2, v2) = dual_oracle(&eta, &cost, 0.2);
+        assert_eq!(grad, g2);
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,238 @@
+//! Discrete entropic OT solver (Sinkhorn–Knopp) — primal quality metric.
+//!
+//! The paper reports dual objective + consensus because "the distance to
+//! the primal optimum is hard to directly calculate" (§4). With a
+//! discrete OT solver we *can* evaluate barycenter quality directly:
+//! approximate each node's `μ_i` by an empirical histogram on the
+//! support, then compute `Σ_i W_β(μ̂_i, ν̂)` for the barycenter estimate
+//! `ν̂` the network agreed on. Used by `examples/` and the quality tests;
+//! also a standalone substrate (log-domain, numerically robust at small
+//! β).
+
+use crate::linalg::Mat;
+
+/// Result of a Sinkhorn solve.
+#[derive(Clone, Debug)]
+pub struct SinkhornResult {
+    /// Regularized OT cost ⟨T, C⟩ (transport part, no entropy term).
+    pub transport_cost: f64,
+    /// Dual potentials (f over rows/a, g over cols/b).
+    pub f: Vec<f64>,
+    pub g: Vec<f64>,
+    /// Iterations used.
+    pub iterations: usize,
+    /// Final L1 marginal violation (row marginal vs a).
+    pub marginal_error: f64,
+}
+
+/// Log-domain Sinkhorn between histograms `a` (len r) and `b` (len c)
+/// with cost matrix `cost` (r × c) and regularization `beta`.
+///
+/// Zero-mass bins are handled by restriction (their potentials stay at
+/// −∞ conceptually; we mask them out).
+pub fn sinkhorn(
+    a: &[f64],
+    b: &[f64],
+    cost: &Mat,
+    beta: f64,
+    max_iter: usize,
+    tol: f64,
+) -> SinkhornResult {
+    let r = a.len();
+    let c = b.len();
+    assert_eq!(cost.rows(), r);
+    assert_eq!(cost.cols(), c);
+    assert!(beta > 0.0);
+    assert!((a.iter().sum::<f64>() - 1.0).abs() < 1e-6, "a not normalized");
+    assert!((b.iter().sum::<f64>() - 1.0).abs() < 1e-6, "b not normalized");
+
+    let log_a: Vec<f64> =
+        a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let log_b: Vec<f64> =
+        b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let mut f = vec![0.0; r];
+    let mut g = vec![0.0; c];
+
+    // stable logsumexp over a masked iterator
+    let lse = |it: &mut dyn Iterator<Item = f64>| -> f64 {
+        let vals: Vec<f64> = it.filter(|v| v.is_finite()).collect();
+        if vals.is_empty() {
+            return f64::NEG_INFINITY;
+        }
+        let m = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        m + vals.iter().map(|v| (v - m).exp()).sum::<f64>().ln()
+    };
+
+    let mut iterations = 0;
+    let mut marginal_error = f64::INFINITY;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // f_i = −β·LSE_j[(g_j − C_ij)/β + log b_j]
+        for i in 0..r {
+            if log_a[i].is_infinite() {
+                continue;
+            }
+            let row = cost.row(i);
+            let v = lse(&mut (0..c).map(|j| (g[j] - row[j]) / beta + log_b[j]));
+            f[i] = -beta * v;
+        }
+        // g_j = −β·LSE_i[(f_i − C_ij)/β + log a_i]
+        for j in 0..c {
+            if log_b[j].is_infinite() {
+                continue;
+            }
+            let v = lse(&mut (0..r).map(|i| (f[i] - cost[(i, j)]) / beta + log_a[i]));
+            g[j] = -beta * v;
+        }
+        // row-marginal check every few iterations
+        if it % 5 == 4 || it + 1 == max_iter {
+            marginal_error = 0.0;
+            for i in 0..r {
+                if log_a[i].is_infinite() {
+                    continue;
+                }
+                let row = cost.row(i);
+                let mut mass = 0.0;
+                for j in 0..c {
+                    if log_b[j].is_infinite() {
+                        continue;
+                    }
+                    mass += ((f[i] + g[j] - row[j]) / beta + log_a[i] + log_b[j]).exp();
+                }
+                marginal_error += (mass - a[i]).abs();
+            }
+            if marginal_error < tol {
+                break;
+            }
+        }
+    }
+
+    // transport cost ⟨T, C⟩ with T_ij = exp((f+g−C)/β) a_i b_j
+    let mut transport_cost = 0.0;
+    for i in 0..r {
+        if log_a[i].is_infinite() {
+            continue;
+        }
+        let row = cost.row(i);
+        for j in 0..c {
+            if log_b[j].is_infinite() {
+                continue;
+            }
+            let t = ((f[i] + g[j] - row[j]) / beta + log_a[i] + log_b[j]).exp();
+            transport_cost += t * row[j];
+        }
+    }
+    SinkhornResult { transport_cost, f, g, iterations, marginal_error }
+}
+
+/// Squared-distance cost matrix between two 1-D supports.
+pub fn cost_matrix_1d(xs: &[f64], ys: &[f64], inv_scale: f64) -> Mat {
+    let mut c = Mat::zeros(xs.len(), ys.len());
+    for (i, &x) in xs.iter().enumerate() {
+        for (j, &y) in ys.iter().enumerate() {
+            let d = x - y;
+            c[(i, j)] = d * d * inv_scale;
+        }
+    }
+    c
+}
+
+/// Barycenter quality: `Σ_i W_β(hist_i, bary)` for histograms on a
+/// shared support with cost `cost` (n × n).
+pub fn barycenter_quality(
+    histograms: &[Vec<f64>],
+    barycenter: &[f64],
+    cost: &Mat,
+    beta: f64,
+) -> f64 {
+    histograms
+        .iter()
+        .map(|h| sinkhorn(h, barycenter, cost, beta, 300, 1e-7).transport_cost)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+
+    #[test]
+    fn identical_histograms_near_zero_cost() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let c = cost_matrix_1d(&xs, &xs, 1.0);
+        let a = uniform(10);
+        let res = sinkhorn(&a, &a, &c, 0.01, 500, 1e-9);
+        // small beta ⇒ near-identity plan ⇒ near-zero transport cost
+        assert!(res.transport_cost < 0.05, "{}", res.transport_cost);
+        assert!(res.marginal_error < 1e-6);
+    }
+
+    #[test]
+    fn point_masses_pay_squared_distance() {
+        let xs = [0.0, 3.0];
+        let c = cost_matrix_1d(&xs, &xs, 1.0);
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        let res = sinkhorn(&a, &b, &c, 0.05, 500, 1e-10);
+        // all mass moves 0 → 3: cost = 9
+        assert!((res.transport_cost - 9.0).abs() < 1e-6, "{}", res.transport_cost);
+    }
+
+    #[test]
+    fn symmetry_in_arguments() {
+        let xs: Vec<f64> = (0..6).map(|i| i as f64 * 0.5).collect();
+        let c = cost_matrix_1d(&xs, &xs, 1.0);
+        let a = [0.4, 0.1, 0.1, 0.1, 0.1, 0.2];
+        let b = [0.1, 0.1, 0.3, 0.3, 0.1, 0.1];
+        let ab = sinkhorn(&a, &b, &c, 0.1, 500, 1e-9).transport_cost;
+        let ba = sinkhorn(&b, &a, &c, 0.1, 500, 1e-9).transport_cost;
+        assert!((ab - ba).abs() < 1e-7, "{ab} vs {ba}");
+    }
+
+    #[test]
+    fn cost_monotone_in_separation() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 * 0.1).collect();
+        let c = cost_matrix_1d(&xs, &xs, 1.0);
+        // two spiky histograms at growing separation
+        let spike = |center: usize| -> Vec<f64> {
+            let mut h = vec![1e-9; 20];
+            h[center] = 1.0;
+            let s: f64 = h.iter().sum();
+            h.iter().map(|v| v / s).collect()
+        };
+        let a = spike(2);
+        let mut prev = -1.0;
+        for sep in [3usize, 7, 12, 17] {
+            let cost = sinkhorn(&a, &spike(sep), &c, 0.02, 500, 1e-9).transport_cost;
+            assert!(cost > prev, "sep {sep}: {cost} !> {prev}");
+            prev = cost;
+        }
+    }
+
+    #[test]
+    fn barycenter_quality_prefers_the_mean() {
+        // three Gaussian-ish histograms; the uniform mixture of them
+        // should score better than any single endpoint histogram
+        let n = 30;
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64 * 10.0 - 5.0).collect();
+        let c = cost_matrix_1d(&xs, &xs, 1.0 / 25.0);
+        let gauss = |mu: f64| -> Vec<f64> {
+            let mut h: Vec<f64> = xs
+                .iter()
+                .map(|&x| (-(x - mu) * (x - mu) / 0.5).exp() + 1e-12)
+                .collect();
+            let s: f64 = h.iter().sum();
+            h.iter_mut().for_each(|v| *v /= s);
+            h
+        };
+        let hists = vec![gauss(-2.0), gauss(0.0), gauss(2.0)];
+        let center = gauss(0.0);
+        let edge = gauss(-2.0);
+        let q_center = barycenter_quality(&hists, &center, &c, 0.05);
+        let q_edge = barycenter_quality(&hists, &edge, &c, 0.05);
+        assert!(q_center < q_edge, "{q_center} !< {q_edge}");
+    }
+}

@@ -1,0 +1,222 @@
+//! The §2.2 primal-dual pair in closed form, for Theorem-1 validation.
+//!
+//! Primal:  min F(x) = Σ_i (μ/2)‖x_i − a_i‖²  s.t.  √W x = 0
+//! Dual:    φ(η) = ⟨√Wη, x*(√Wη)⟩ − F(x*(√Wη)) with
+//!          x*(g)_i = a_i + g_i/μ  (the Fenchel argmax), so
+//!          φ(η) = Σ_i ( ⟨g_i, a_i⟩ + ‖g_i‖²/(2μ) ),  g = √W η.
+//!
+//! Everything (dual value, gradient ∇φ = √W x*(√Wη), primal optimum
+//! x* = consensus mean of a_i, dual smoothness λmax(W)/μ) is exact, so
+//! the Theorem 1 inequalities can be checked numerically without an
+//! inner solver.
+
+use crate::algo::BlockFn;
+use crate::graph::Graph;
+use crate::linalg::{sqrtm_psd, Mat};
+use crate::rng::Rng64;
+
+pub struct ConsensusDual {
+    m: usize,
+    n: usize,
+    mu: f64,
+    /// Node targets a_i, stacked (m·n).
+    pub a: Vec<f64>,
+    /// Dense √W̄ (small-m validation only).
+    sqrt_w: Mat,
+    lambda_max: f64,
+    sigma: f64,
+    noise_seed: u64,
+}
+
+impl ConsensusDual {
+    pub fn new(graph: &Graph, n: usize, mu: f64, sigma: f64, seed: u64) -> Self {
+        let m = graph.num_nodes();
+        let w = graph.laplacian_dense();
+        let sqrt_w = sqrtm_psd(&w);
+        let lambda_max = w.lambda_max_power(500);
+        let mut rng = Rng64::new(seed);
+        let a: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+        Self { m, n, mu, a, sqrt_w, lambda_max, sigma, noise_seed: seed ^ 0xC05E_5EED }
+    }
+
+    /// Apply the block operator (√W̄ ⊗ I) to a stacked vector.
+    pub fn apply_sqrt_w(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.m * self.n];
+        for i in 0..self.m {
+            for j in 0..self.m {
+                let c = self.sqrt_w[(i, j)];
+                if c == 0.0 {
+                    continue;
+                }
+                for l in 0..self.n {
+                    out[i * self.n + l] += c * x[j * self.n + l];
+                }
+            }
+        }
+        out
+    }
+
+    /// Fenchel argmax: x*(g)_i = a_i + g_i/μ.
+    pub fn primal_of_g(&self, g: &[f64]) -> Vec<f64> {
+        g.iter().zip(&self.a).map(|(gi, ai)| ai + gi / self.mu).collect()
+    }
+
+    /// The primal point associated with a dual iterate η (Theorem 1's x).
+    pub fn primal_of_eta(&self, eta: &[f64]) -> Vec<f64> {
+        self.primal_of_g(&self.apply_sqrt_w(eta))
+    }
+
+    /// Exact primal optimum: consensus at the mean of the a_i.
+    pub fn primal_optimum(&self) -> Vec<f64> {
+        let mut mean = vec![0.0; self.n];
+        for i in 0..self.m {
+            for l in 0..self.n {
+                mean[l] += self.a[i * self.n + l];
+            }
+        }
+        for v in &mut mean {
+            *v /= self.m as f64;
+        }
+        let mut x = vec![0.0; self.m * self.n];
+        for i in 0..self.m {
+            x[i * self.n..(i + 1) * self.n].copy_from_slice(&mean);
+        }
+        x
+    }
+
+    /// Optimal dual value: φ(η*) = −F(x*) (strong duality, Appendix (2)).
+    pub fn dual_optimal_value(&self) -> f64 {
+        let xs = self.primal_optimum();
+        let f: f64 = xs
+            .iter()
+            .zip(&self.a)
+            .map(|(x, a)| 0.5 * self.mu * (x - a) * (x - a))
+            .sum();
+        -f
+    }
+
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    pub fn lambda_max(&self) -> f64 {
+        self.lambda_max
+    }
+}
+
+impl BlockFn for ConsensusDual {
+    fn num_blocks(&self) -> usize {
+        self.m
+    }
+
+    fn block_dim(&self) -> usize {
+        self.n
+    }
+
+    /// φ(η) = Σ_i ⟨g_i, a_i⟩ + ‖g_i‖²/(2μ), g = √W η.
+    fn value(&self, eta: &[f64]) -> f64 {
+        let g = self.apply_sqrt_w(eta);
+        g.iter()
+            .zip(&self.a)
+            .map(|(gi, ai)| gi * ai)
+            .sum::<f64>()
+            + crate::linalg::norm2_sq(&g) / (2.0 * self.mu)
+    }
+
+    fn partial_grad(&mut self, eta: &[f64], block: usize, k: usize, out: &mut [f64]) {
+        // ∇φ(η) = √W x*(√W η); block row + seeded noise
+        let g = self.apply_sqrt_w(eta);
+        let xstar = self.primal_of_g(&g);
+        let gx = self.apply_sqrt_w(&xstar);
+        out.copy_from_slice(&gx[block * self.n..(block + 1) * self.n]);
+        if self.sigma > 0.0 {
+            let key = self
+                .noise_seed
+                .wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_add(block as u64);
+            let mut rng = Rng64::new(key);
+            for o in out.iter_mut() {
+                *o += self.sigma * rng.normal();
+            }
+        }
+    }
+
+    fn full_grad(&self, eta: &[f64], out: &mut [f64]) {
+        let g = self.apply_sqrt_w(eta);
+        let xstar = self.primal_of_g(&g);
+        out.copy_from_slice(&self.apply_sqrt_w(&xstar));
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.lambda_max / self.mu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TopologySpec;
+
+    fn problem() -> ConsensusDual {
+        let g = Graph::build(6, TopologySpec::Cycle);
+        ConsensusDual::new(&g, 3, 0.7, 0.0, 5)
+    }
+
+    #[test]
+    fn gradient_is_finite_difference_of_value() {
+        let p = problem();
+        let d = 18;
+        let mut rng = Rng64::new(3);
+        let eta: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut g = vec![0.0; d];
+        p.full_grad(&eta, &mut g);
+        let eps = 1e-6;
+        for i in (0..d).step_by(5) {
+            let mut ep = eta.clone();
+            ep[i] += eps;
+            let vp = p.value(&ep);
+            ep[i] -= 2.0 * eps;
+            let vm = p.value(&ep);
+            let fd = (vp - vm) / (2.0 * eps);
+            assert!((g[i] - fd).abs() < 1e-5, "i={i}: {} vs {fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn dual_value_at_zero_ge_optimum() {
+        let p = problem();
+        // φ(0) = 0 and φ(η*) = −F(x*) ≤ 0
+        assert!(p.value(&vec![0.0; 18]).abs() < 1e-12);
+        assert!(p.dual_optimal_value() <= 1e-12);
+    }
+
+    #[test]
+    fn primal_optimum_is_consensus_and_feasible() {
+        let p = problem();
+        let xs = p.primal_optimum();
+        let wx = p.apply_sqrt_w(&xs);
+        assert!(crate::linalg::norm2(&wx) < 1e-8, "√W x* must vanish");
+    }
+
+    #[test]
+    fn gradient_descent_on_dual_solves_primal() {
+        let p = problem();
+        let l = p.smoothness();
+        let d = 18;
+        let mut eta = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        for _ in 0..4000 {
+            p.full_grad(&eta, &mut g);
+            for (e, gi) in eta.iter_mut().zip(&g) {
+                *e -= gi / l;
+            }
+        }
+        // dual value approaches −F(x*)
+        let gap = p.value(&eta) - p.dual_optimal_value();
+        assert!(gap.abs() < 1e-6, "gap {gap}");
+        // and the primal map lands near the consensus optimum
+        let x = p.primal_of_eta(&eta);
+        let xs = p.primal_optimum();
+        assert!(crate::linalg::dist2_sq(&x, &xs) < 1e-5);
+    }
+}

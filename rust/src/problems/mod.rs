@@ -1,0 +1,16 @@
+//! Synthetic optimization problems for validating the theory claims.
+//!
+//! * [`QuadraticBlockFn`] — a generic L-smooth strongly-convex quadratic
+//!   over m blocks with seeded stochastic-gradient noise. Used by the
+//!   ASBCDS/PASBCDS unit tests, the Theorem-3 equivalence suite, and the
+//!   `conv_tau` bench (Theorem 2's τ-dependence).
+//! * [`ConsensusDual`] — the §2.2 primal-dual pair for
+//!   F(x) = Σ_i (μ/2)‖x_i − a_i‖² under `√W x = 0`: closed-form dual,
+//!   gradient, primal map and optima. Used by the Theorem-1
+//!   duality-bound tests and Corollary-1 checks.
+
+mod consensus;
+mod quadratic;
+
+pub use consensus::ConsensusDual;
+pub use quadratic::QuadraticBlockFn;

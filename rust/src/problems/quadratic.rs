@@ -1,0 +1,193 @@
+//! Random strongly-convex quadratic with seeded stochastic gradients.
+//!
+//! φ(x) = ½ xᵀ A x − bᵀ x with A = QᵀQ + εI symmetric PD. The
+//! stochastic gradient adds N(0, σ²) noise keyed by the iteration index
+//! so that two algorithms replaying the same iteration sequence see the
+//! *same* ξ_k draws (the precondition of the Theorem-3 equivalence).
+
+use crate::algo::BlockFn;
+use crate::linalg::Mat;
+use crate::rng::Rng64;
+
+pub struct QuadraticBlockFn {
+    m: usize,
+    n: usize,
+    a: Mat,
+    b: Vec<f64>,
+    sigma: f64,
+    noise_seed: u64,
+    smoothness: f64,
+    /// x* = A⁻¹ b, computed once by conjugate gradients.
+    xstar: Vec<f64>,
+}
+
+impl QuadraticBlockFn {
+    /// Random instance: m blocks of dim n, noise level `sigma`.
+    pub fn random(m: usize, n: usize, sigma: f64, seed: u64) -> Self {
+        let d = m * n;
+        let mut rng = Rng64::new(seed);
+        let mut q = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                q[(i, j)] = rng.normal() / (d as f64).sqrt();
+            }
+        }
+        let mut a = q.transpose().matmul(&q);
+        for i in 0..d {
+            a[(i, i)] += 0.1; // strong convexity floor
+        }
+        let b: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let smoothness = a.lambda_max_power(300);
+        let xstar = cg_solve(&a, &b, 10_000, 1e-12);
+        Self { m, n, a, b, sigma, noise_seed: seed ^ 0x4E4F_4953, smoothness, xstar }
+    }
+
+    pub fn optimal_value(&self) -> f64 {
+        self.value(&self.xstar)
+    }
+
+    pub fn optimum(&self) -> &[f64] {
+        &self.xstar
+    }
+
+    /// Seeded noise vector for iteration k, block `p` (zero if σ = 0).
+    fn noise(&self, k: usize, p: usize, out: &mut [f64]) {
+        if self.sigma == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        let key = self
+            .noise_seed
+            .wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((p as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        let mut rng = Rng64::new(key);
+        for o in out.iter_mut() {
+            *o = self.sigma * rng.normal();
+        }
+    }
+}
+
+impl BlockFn for QuadraticBlockFn {
+    fn num_blocks(&self) -> usize {
+        self.m
+    }
+
+    fn block_dim(&self) -> usize {
+        self.n
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let ax = self.a.matvec(x);
+        0.5 * crate::linalg::dot(x, &ax) - crate::linalg::dot(&self.b, x)
+    }
+
+    fn partial_grad(&mut self, x: &[f64], block: usize, k: usize, out: &mut [f64]) {
+        let lo = block * self.n;
+        // rows [lo, lo+n) of (Ax − b)
+        for (r, o) in out.iter_mut().enumerate() {
+            let row = self.a.row(lo + r);
+            *o = crate::linalg::dot(row, x) - self.b[lo + r];
+        }
+        let mut noise = vec![0.0; self.n];
+        self.noise(k, block, &mut noise);
+        for (o, nz) in out.iter_mut().zip(&noise) {
+            *o += nz;
+        }
+    }
+
+    fn full_grad(&self, x: &[f64], out: &mut [f64]) {
+        let ax = self.a.matvec(x);
+        for ((o, a), b) in out.iter_mut().zip(&ax).zip(&self.b) {
+            *o = a - b;
+        }
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.smoothness
+    }
+}
+
+/// Conjugate gradients for SPD systems (substrate: no external solver).
+fn cg_solve(a: &Mat, b: &[f64], max_iter: usize, tol: f64) -> Vec<f64> {
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs = crate::linalg::dot(&r, &r);
+    for _ in 0..max_iter {
+        if rs.sqrt() < tol {
+            break;
+        }
+        let ap = a.matvec(&p);
+        let alpha = rs / crate::linalg::dot(&p, &ap);
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new = crate::linalg::dot(&r, &r);
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_has_zero_gradient() {
+        let p = QuadraticBlockFn::random(3, 4, 0.0, 1);
+        let mut g = vec![0.0; 12];
+        p.full_grad(p.optimum(), &mut g);
+        assert!(crate::linalg::norm2(&g) < 1e-8);
+    }
+
+    #[test]
+    fn partial_grad_matches_full_when_noiseless() {
+        let mut p = QuadraticBlockFn::random(3, 2, 0.0, 2);
+        let x: Vec<f64> = (0..6).map(|i| i as f64 * 0.3 - 1.0).collect();
+        let mut full = vec![0.0; 6];
+        p.full_grad(&x, &mut full);
+        for blk in 0..3 {
+            let mut part = vec![0.0; 2];
+            p.partial_grad(&x, blk, 0, &mut part);
+            assert_eq!(&full[blk * 2..blk * 2 + 2], &part[..]);
+        }
+    }
+
+    #[test]
+    fn noise_is_keyed_by_iteration() {
+        let mut p = QuadraticBlockFn::random(2, 2, 0.5, 3);
+        let x = vec![0.0; 4];
+        let mut g1 = vec![0.0; 2];
+        let mut g2 = vec![0.0; 2];
+        let mut g3 = vec![0.0; 2];
+        p.partial_grad(&x, 0, 7, &mut g1);
+        p.partial_grad(&x, 0, 7, &mut g2);
+        p.partial_grad(&x, 0, 8, &mut g3);
+        assert_eq!(g1, g2, "same k must give same noise");
+        assert_ne!(g1, g3, "different k must give different noise");
+    }
+
+    #[test]
+    fn value_decreases_along_negative_gradient() {
+        let p = QuadraticBlockFn::random(2, 3, 0.0, 4);
+        let x = vec![1.0; 6];
+        let mut g = vec![0.0; 6];
+        p.full_grad(&x, &mut g);
+        let step = 0.5 / p.smoothness();
+        let x2: Vec<f64> = x.iter().zip(&g).map(|(a, b)| a - step * b).collect();
+        assert!(p.value(&x2) < p.value(&x));
+    }
+
+    #[test]
+    fn cg_solves_identity() {
+        let a = Mat::identity(4);
+        let x = cg_solve(&a, &[1.0, 2.0, 3.0, 4.0], 100, 1e-14);
+        assert!(crate::linalg::dist2_sq(&x, &[1.0, 2.0, 3.0, 4.0]) < 1e-20);
+    }
+}

@@ -1,0 +1,187 @@
+//! Discrete distributions: linear-scan categorical and Walker alias method.
+//!
+//! The paper samples (a) link delays from a 5-point categorical
+//! distribution and (b) pixels from 784-point image histograms (the MNIST
+//! task's `Y ~ mu_i`). (a) uses the linear scan; (b) uses the alias
+//! method — O(1) per draw, which keeps the per-activation oracle cost
+//! dominated by the softmax, not the sampler.
+
+use super::Rng64;
+
+/// Small categorical distribution via CDF linear scan.
+#[derive(Clone, Debug)]
+pub struct Categorical {
+    cdf: Vec<f64>,
+}
+
+impl Categorical {
+    /// Build from non-negative weights (need not be normalized).
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "empty categorical");
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            assert!(w >= 0.0 && w.is_finite(), "bad weight {w}");
+            acc += w;
+            cdf.push(acc);
+        }
+        assert!(acc > 0.0, "all-zero categorical");
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        *cdf.last_mut().unwrap() = 1.0;
+        Self { cdf }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng64) -> usize {
+        let u = rng.uniform();
+        // binary search on the CDF
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i,
+        }
+    }
+}
+
+/// Walker alias method: O(n) build, O(1) sample.
+#[derive(Clone, Debug)]
+pub struct Alias {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl Alias {
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty alias table");
+        assert!(n < u32::MAX as usize);
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "bad alias weights");
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s as usize] = l;
+            prob[l as usize] = (prob[l as usize] + prob[s as usize]) - 1.0;
+            if prob[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // leftovers are exactly-1 buckets up to fp error
+        for i in small.into_iter().chain(large) {
+            prob[i as usize] = 1.0;
+        }
+        Self { prob, alias }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng64) -> usize {
+        let i = rng.below(self.prob.len() as u64) as usize;
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chi2_ok(counts: &[usize], probs: &[f64], total: usize) -> bool {
+        // loose chi-square-ish check: every relative freq within 15%+const
+        counts.iter().zip(probs).all(|(&c, &p)| {
+            let expect = p * total as f64;
+            (c as f64 - expect).abs() < 0.15 * expect + 30.0
+        })
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let w = [0.2, 0.4, 0.1, 0.3];
+        let d = Categorical::new(&w);
+        let mut rng = Rng64::new(5);
+        let mut counts = [0usize; 4];
+        let total = 40000;
+        for _ in 0..total {
+            counts[d.sample(&mut rng)] += 1;
+        }
+        assert!(chi2_ok(&counts, &w, total), "{counts:?}");
+    }
+
+    #[test]
+    fn alias_frequencies_match_categorical() {
+        let w = [5.0, 1.0, 0.0, 3.0, 1.0];
+        let a = Alias::new(&w);
+        let mut rng = Rng64::new(6);
+        let mut counts = [0usize; 5];
+        let total = 60000;
+        for _ in 0..total {
+            counts[a.sample(&mut rng)] += 1;
+        }
+        let probs: Vec<f64> = w.iter().map(|x| x / 10.0).collect();
+        assert!(chi2_ok(&counts, &probs, total), "{counts:?}");
+        assert_eq!(counts[2], 0, "zero-weight bucket must never fire");
+    }
+
+    #[test]
+    fn alias_single_bucket() {
+        let a = Alias::new(&[3.0]);
+        let mut rng = Rng64::new(1);
+        for _ in 0..10 {
+            assert_eq!(a.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn categorical_rejects_all_zero() {
+        Categorical::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn paper_delay_distribution() {
+        // the paper's link-delay law: uniform categorical on {0.2..1.0}
+        let d = Categorical::new(&[1.0; 5]);
+        let support = [0.2, 0.4, 0.6, 0.8, 1.0];
+        let mut rng = Rng64::new(99);
+        let mut mean = 0.0;
+        let total = 50000;
+        for _ in 0..total {
+            mean += support[d.sample(&mut rng)];
+        }
+        mean /= total as f64;
+        assert!((mean - 0.6).abs() < 0.01, "mean delay {mean}");
+    }
+}

@@ -1,0 +1,239 @@
+//! Deterministic PRNG substrate (replaces the `rand` crate).
+//!
+//! * [`SplitMix64`] — seed expander / stream splitter (Steele et al. 2014).
+//! * [`Xoshiro256pp`] — the workhorse generator (Blackman & Vigna 2019),
+//!   long period (2^256 − 1), passes BigCrush, trivially seedable from
+//!   SplitMix64 as its authors recommend.
+//! * Distributions: uniform, normal (Box–Muller), categorical (linear and
+//!   alias-method), Fisher–Yates permutation — everything the paper's
+//!   experiment setup needs (§4: delays from a categorical distribution,
+//!   `perm(m)` activation sweeps, Gaussian node measures).
+//!
+//! Determinism contract: one master seed drives the whole experiment; all
+//! per-node / per-link / per-schedule streams are split off with
+//! [`Rng64::split`], so runs are bit-reproducible regardless of
+//! event-processing order.
+
+mod distributions;
+
+pub use distributions::{Alias, Categorical};
+
+/// SplitMix64: tiny, fast, and the canonical way to seed xoshiro.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256++ — main generator used everywhere in the crate.
+#[derive(Clone, Debug)]
+pub struct Rng64 {
+    s: [u64; 4],
+}
+
+impl Rng64 {
+    /// Seed via SplitMix64 (avoids correlated low-entropy states).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = sm.next_u64();
+        }
+        // all-zero state is invalid for xoshiro; SplitMix64 cannot emit
+        // four zeros in a row, but keep the guard for clarity.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
+    /// Derive an independent child stream (used for per-node seeding).
+    pub fn split(&mut self, tag: u64) -> Rng64 {
+        let a = self.next_u64();
+        Rng64::new(a ^ tag.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased integer in [0, n) (Lemire rejection).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (no cached spare: keeps the stream
+    /// position a pure function of draw count, which matters for
+    /// cross-algorithm common-random-number comparisons).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-300 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (std::f64::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    /// N(mean, sd^2).
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Fisher–Yates permutation of 0..n — the paper's `perm(m)`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            p.swap(i, j);
+        }
+        p
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference vector from the SplitMix64 public-domain C code.
+        let mut sm = SplitMix64::new(1234567);
+        let v: Vec<u64> = (0..3).map(|_| sm.next_u64()).collect();
+        assert_eq!(v[0], 6457827717110365317);
+        assert_eq!(v[1], 3203168211198807973);
+        assert_eq!(v[2], 9817491932198370423);
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a: Vec<u64> = {
+            let mut r = Rng64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = Rng64::new(43);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng64::new(7);
+        let mut sum = 0.0;
+        for _ in 0..20000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 20000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng64::new(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..50000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10000.0).abs() < 450.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng64::new(11);
+        let n = 50000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng64::new(13);
+        for n in [1usize, 2, 17, 100] {
+            let p = r.permutation(n);
+            let mut seen = vec![false; n];
+            for &x in &p {
+                assert!(!seen[x]);
+                seen[x] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut root = Rng64::new(1);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let va: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

@@ -1,0 +1,257 @@
+//! PJRT runtime — load and execute the AOT JAX/Pallas artifacts.
+//!
+//! The L2/L1 layers are lowered once by `python/compile/aot.py` into
+//! `artifacts/oracle_m{M}_n{n}.hlo.txt` (HLO **text** — the interchange
+//! format xla_extension 0.5.1 accepts; serialized jax≥0.5 protos are
+//! rejected, see DESIGN.md). This module:
+//!
+//! * parses `artifacts/manifest.txt`,
+//! * compiles the requested shape variant on the PJRT CPU client
+//!   (`xla` crate 0.1.6),
+//! * exposes it behind the same [`DualOracle`] trait as the native
+//!   backend, so the coordinator is backend-agnostic.
+//!
+//! One `PjRtClient` per process (cheap, but compile is not): compiled
+//! executables are cached per (M, n) in [`ArtifactCache`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::measures::CostRows;
+use crate::ot::DualOracle;
+
+/// Parsed `manifest.txt` entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub shape: String,
+    pub n: usize,
+    pub file: String,
+}
+
+/// Read `artifacts/manifest.txt` (lines: `kind M n filename`).
+pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 4 {
+            bail!("malformed manifest line: {line:?}");
+        }
+        out.push(ManifestEntry {
+            kind: parts[0].to_string(),
+            shape: parts[1].to_string(),
+            n: parts[2].parse().context("manifest n")?,
+            file: parts[3].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+thread_local! {
+    /// Per-thread PJRT CPU client (the xla handles are thread-affine).
+    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
+}
+
+/// The thread's PJRT CPU client (constructed on first use).
+fn thread_client() -> Result<Rc<xla::PjRtClient>> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+            *slot = Some(Rc::new(client));
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+/// Cache of compiled executables keyed by artifact file name.
+pub struct ArtifactCache {
+    dir: PathBuf,
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactCache {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), compiled: RefCell::new(HashMap::new()) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch cached) the artifact at `file`.
+    pub fn get(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let client = thread_client()?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {file}: {e}"))?,
+        );
+        self.compiled
+            .borrow_mut()
+            .insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// PJRT-backed [`DualOracle`] for one fixed (M, n) shape.
+pub struct PjrtOracle {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    m: usize,
+    n: usize,
+    // staging buffers: f64 state → f32 literals
+    eta_f32: Vec<f32>,
+    cost_f32: Vec<f32>,
+}
+
+impl PjrtOracle {
+    /// Load the `oracle_m{M}_n{n}` artifact from `dir`.
+    pub fn load(dir: impl AsRef<Path>, m: usize, n: usize) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = read_manifest(dir)?;
+        let want_shape = m.to_string();
+        let entry = manifest
+            .iter()
+            .find(|e| e.kind == "oracle" && e.shape == want_shape && e.n == n)
+            .ok_or_else(|| {
+                let have: Vec<String> = manifest
+                    .iter()
+                    .filter(|e| e.kind == "oracle")
+                    .map(|e| format!("(M={}, n={})", e.shape, e.n))
+                    .collect();
+                anyhow!(
+                    "no oracle artifact for (M={m}, n={n}); available: {have:?}. \
+                     Re-run `python -m compile.aot --shapes {m}x{n}`"
+                )
+            })?;
+        let cache = ArtifactCache::new(dir);
+        let exe = cache.get(&entry.file)?;
+        Ok(Self {
+            exe,
+            m,
+            n,
+            eta_f32: vec![0.0; n],
+            cost_f32: vec![0.0; m * n],
+        })
+    }
+
+    /// Execute the artifact once. Exposed for benches/tests.
+    pub fn eval_raw(
+        &mut self,
+        eta: &[f64],
+        cost: &[f64],
+        beta: f64,
+    ) -> Result<(Vec<f32>, f32)> {
+        assert_eq!(eta.len(), self.n);
+        assert_eq!(cost.len(), self.m * self.n);
+        for (dst, src) in self.eta_f32.iter_mut().zip(eta) {
+            *dst = *src as f32;
+        }
+        for (dst, src) in self.cost_f32.iter_mut().zip(cost) {
+            *dst = *src as f32;
+        }
+        let eta_lit = xla::Literal::vec1(&self.eta_f32);
+        let cost_lit = xla::Literal::vec1(&self.cost_f32)
+            .reshape(&[self.m as i64, self.n as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        let beta_lit = xla::Literal::vec1(&[beta as f32]);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[eta_lit, cost_lit, beta_lit])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        let (grad_lit, val_lit) =
+            result.to_tuple2().map_err(|e| anyhow!("tuple2: {e}"))?;
+        let grad = grad_lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let val = val_lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0];
+        Ok((grad, val))
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+}
+
+impl DualOracle for PjrtOracle {
+    fn eval(
+        &mut self,
+        eta: &[f64],
+        cost: &CostRows,
+        beta: f64,
+        grad: &mut [f64],
+    ) -> f64 {
+        assert_eq!(cost.m, self.m, "PJRT artifact is fixed-shape: M mismatch");
+        assert_eq!(cost.n, self.n, "PJRT artifact is fixed-shape: n mismatch");
+        let (g, v) = self
+            .eval_raw(eta, &cost.data, beta)
+            .expect("PJRT oracle execution failed");
+        for (dst, src) in grad.iter_mut().zip(&g) {
+            *dst = *src as f64;
+        }
+        v as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("a2dwb_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "oracle 8 100 oracle_m8_n100.hlo.txt\nmulti 16x32 100 multi.hlo.txt\n\n",
+        )
+        .unwrap();
+        let m = read_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].kind, "oracle");
+        assert_eq!(m[0].n, 100);
+        assert_eq!(m[1].shape, "16x32");
+    }
+
+    #[test]
+    fn manifest_missing_is_helpful() {
+        let dir = std::env::temp_dir().join("a2dwb_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.txt"));
+        let err = read_manifest(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_malformed_rejected() {
+        let dir = std::env::temp_dir().join("a2dwb_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "oracle 8\n").unwrap();
+        assert!(read_manifest(&dir).is_err());
+    }
+
+    // Execution tests live in rust/tests/pjrt_parity.rs (need artifacts).
+}

@@ -1,0 +1,326 @@
+//! Discrete-event simulation engine — the network substrate.
+//!
+//! The paper evaluates wall-clock behavior of async vs sync algorithms on
+//! a *simulated* m-node network: per-link delays drawn from a categorical
+//! law on {0.2, 0.4, 0.6, 0.8, 1.0} s and an activation sweep `perm(m)`
+//! every 0.2 s (§4). This module provides the deterministic virtual-time
+//! machinery:
+//!
+//! * [`EventQueue`] — a monotone priority queue over (time, seq) so ties
+//!   break in insertion order and runs are bit-reproducible;
+//! * [`LinkDelayModel`] — per-(edge, transmission) delay draws from the
+//!   paper's law, seeded per link;
+//! * [`ActivationSchedule`] — the common-seed activation sequence of
+//!   §3.3: every `interval`, all nodes in a fresh `perm(m)` order.
+//!
+//! The coordinator (`crate::coordinator`) owns the event semantics; this
+//! module knows nothing about the algorithms.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::rng::{Categorical, Rng64};
+
+/// Virtual time in seconds.
+pub type SimTime = f64;
+
+/// A scheduled occurrence. `E` is the coordinator's payload type.
+#[derive(Clone, Debug)]
+pub struct ScheduledEvent<E> {
+    pub time: SimTime,
+    pub seq: u64,
+    pub payload: E,
+}
+
+impl<E> PartialEq for ScheduledEvent<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for ScheduledEvent<E> {}
+impl<E> PartialOrd for ScheduledEvent<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for ScheduledEvent<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first. NaN times
+        // are rejected at push.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic earliest-first event queue.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<ScheduledEvent<E>>,
+    next_seq: u64,
+    now: SimTime,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), next_seq: 0, now: 0.0, processed: 0 }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `payload` at absolute virtual time `time`.
+    ///
+    /// Panics on NaN or on scheduling into the past (a logic bug in the
+    /// caller — virtual time only moves forward).
+    pub fn schedule(&mut self, time: SimTime, payload: E) {
+        assert!(time.is_finite(), "non-finite event time");
+        assert!(
+            time >= self.now - 1e-12,
+            "scheduling into the past: {time} < {}",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(ScheduledEvent { time, seq, payload });
+    }
+
+    /// Schedule at `now + delay`.
+    pub fn schedule_in(&mut self, delay: SimTime, payload: E) {
+        self.schedule(self.now + delay, payload);
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<ScheduledEvent<E>> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now - 1e-12);
+        self.now = ev.time;
+        self.processed += 1;
+        Some(ev)
+    }
+
+    /// Pop only if the earliest event is at or before `horizon`.
+    pub fn pop_until(&mut self, horizon: SimTime) -> Option<ScheduledEvent<E>> {
+        match self.heap.peek() {
+            Some(ev) if ev.time <= horizon => self.pop(),
+            _ => None,
+        }
+    }
+
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+/// The paper's link-delay law: uniform categorical on
+/// {0.2, 0.4, 0.6, 0.8, 1.0} seconds, independent per transmission,
+/// with an independent stream per directed link (deterministic in the
+/// master seed regardless of event interleaving).
+#[derive(Debug)]
+pub struct LinkDelayModel {
+    support: Vec<f64>,
+    law: Categorical,
+    streams: Vec<Rng64>,
+    m: usize,
+}
+
+impl LinkDelayModel {
+    /// `m` nodes; delays iid per (src, dst) transmission.
+    pub fn paper_default(m: usize, seed: u64) -> Self {
+        Self::new(m, seed, vec![0.2, 0.4, 0.6, 0.8, 1.0], vec![1.0; 5])
+    }
+
+    pub fn new(m: usize, seed: u64, support: Vec<f64>, weights: Vec<f64>) -> Self {
+        assert_eq!(support.len(), weights.len());
+        assert!(support.iter().all(|&d| d > 0.0));
+        let mut root = Rng64::new(seed ^ 0x4C49_4E4B);
+        let streams = (0..m * m).map(|i| root.split(i as u64)).collect();
+        Self { support, law: Categorical::new(&weights), streams, m }
+    }
+
+    /// Draw the delay for one transmission src → dst.
+    pub fn draw(&mut self, src: usize, dst: usize) -> SimTime {
+        let idx = src * self.m + dst;
+        let k = self.law.sample(&mut self.streams[idx]);
+        self.support[k]
+    }
+
+    /// Largest possible delay (the sync baseline's per-round worst case).
+    pub fn max_delay(&self) -> SimTime {
+        self.support.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn mean_delay(&self) -> SimTime {
+        // uniform weights in the paper's law; general weights handled too
+        self.support.iter().sum::<f64>() / self.support.len() as f64
+    }
+}
+
+/// §3.3 activation scheme: a common seed generates the sequence
+/// (t_k, i_k); every `interval` seconds all m nodes are activated one by
+/// one in a fresh random permutation. Nodes consult the shared sequence
+/// — no coordination messages needed.
+#[derive(Debug)]
+pub struct ActivationSchedule {
+    m: usize,
+    interval: SimTime,
+    rng: Rng64,
+    /// Current sweep's permutation and position.
+    perm: Vec<usize>,
+    pos: usize,
+    sweep_start: SimTime,
+    sweeps_done: u64,
+}
+
+impl ActivationSchedule {
+    pub fn new(m: usize, interval: SimTime, seed: u64) -> Self {
+        assert!(m > 0 && interval > 0.0);
+        let mut rng = Rng64::new(seed ^ 0x5045_524D);
+        let perm = rng.permutation(m);
+        Self { m, interval, rng, perm, pos: 0, sweep_start: 0.0, sweeps_done: 0 }
+    }
+
+    /// Next (time, node) activation. Within a sweep the m activations are
+    /// spread uniformly across the interval (one-by-one, as in §4).
+    pub fn next_activation(&mut self) -> (SimTime, usize) {
+        if self.pos == self.m {
+            self.sweeps_done += 1;
+            self.sweep_start = self.sweeps_done as f64 * self.interval;
+            self.perm = self.rng.permutation(self.m);
+            self.pos = 0;
+        }
+        let t = self.sweep_start + self.interval * (self.pos as f64 / self.m as f64);
+        let node = self.perm[self.pos];
+        self.pos += 1;
+        (t, node)
+    }
+
+    pub fn interval(&self) -> SimTime {
+        self.interval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_orders_by_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "b");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "c"); // same time as "b", inserted later
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "into the past")]
+    fn queue_rejects_past() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, ());
+        q.pop();
+        q.schedule(1.0, ());
+    }
+
+    #[test]
+    fn pop_until_respects_horizon() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(3.0, 3);
+        assert_eq!(q.pop_until(2.0).unwrap().payload, 1);
+        assert!(q.pop_until(2.0).is_none());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn delay_model_support_and_determinism() {
+        let mut d1 = LinkDelayModel::paper_default(4, 9);
+        let mut d2 = LinkDelayModel::paper_default(4, 9);
+        for _ in 0..100 {
+            let a = d1.draw(1, 2);
+            assert!([0.2, 0.4, 0.6, 0.8, 1.0].contains(&a));
+            assert_eq!(a, d2.draw(1, 2));
+        }
+        assert_eq!(d1.max_delay(), 1.0);
+        assert!((d1.mean_delay() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delay_streams_independent_of_interleaving() {
+        // drawing on link (0,1) must not disturb link (2,3)'s stream
+        let mut a = LinkDelayModel::paper_default(4, 11);
+        let mut b = LinkDelayModel::paper_default(4, 11);
+        let seq_a: Vec<f64> = (0..10).map(|_| a.draw(2, 3)).collect();
+        for _ in 0..57 {
+            b.draw(0, 1);
+        }
+        let seq_b: Vec<f64> = (0..10).map(|_| b.draw(2, 3)).collect();
+        assert_eq!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn activation_schedule_sweeps() {
+        let mut s = ActivationSchedule::new(3, 0.2, 1);
+        let mut seen = vec![];
+        let mut times = vec![];
+        for _ in 0..6 {
+            let (t, i) = s.next_activation();
+            times.push(t);
+            seen.push(i);
+        }
+        // first sweep covers {0,1,2} within [0, 0.2)
+        let mut first: Vec<usize> = seen[0..3].to_vec();
+        first.sort();
+        assert_eq!(first, vec![0, 1, 2]);
+        assert!(times[0..3].iter().all(|&t| t < 0.2));
+        // second sweep covers {0,1,2} within [0.2, 0.4)
+        let mut second: Vec<usize> = seen[3..6].to_vec();
+        second.sort();
+        assert_eq!(second, vec![0, 1, 2]);
+        assert!(times[3..6].iter().all(|&t| (0.2..0.4).contains(&t)));
+        // times nondecreasing
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn activation_all_nodes_equally_often() {
+        let mut s = ActivationSchedule::new(5, 0.2, 2);
+        let mut count = [0usize; 5];
+        for _ in 0..500 {
+            let (_, i) = s.next_activation();
+            count[i] += 1;
+        }
+        assert!(count.iter().all(|&c| c == 100), "{count:?}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Theorem 3 — ASBCDS and PASBCDS produce identical trajectories when
+//! fed the same staleness schedule j_p(k+1) and the same noise ξ_{k+1}.
+//!
+//! We check the mapping λ/ζ/η ↔ u/v numerically on random quadratics,
+//! random delay schedules, and random block sequences — far stronger
+//! than a single fixed case.
+
+use a2dwb::algo::asbcds::Asbcds;
+use a2dwb::algo::pasbcds::Pasbcds;
+use a2dwb::algo::schedule::{FreshSchedule, UniformDelaySchedule};
+use a2dwb::algo::BlockFn;
+use a2dwb::problems::QuadraticBlockFn;
+use a2dwb::proptest_util::{gen_usize, PropCheck};
+use a2dwb::rng::Rng64;
+
+/// Max |a−b| across a vector pair.
+fn max_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+fn run_pair(
+    m: usize,
+    n: usize,
+    sigma: f64,
+    tau: usize,
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    let x0: Vec<f64> = {
+        let mut rng = Rng64::new(seed ^ 1);
+        (0..m * n).map(|_| rng.normal()).collect()
+    };
+    let blocks: Vec<usize> = {
+        let mut rng = Rng64::new(seed ^ 2);
+        (0..iters).map(|_| rng.below(m as u64) as usize).collect()
+    };
+
+    // Two *independent* problem instances with the same seed: identical
+    // A, b, and iteration-keyed noise — the Theorem 3 precondition.
+    let mut p1 = QuadraticBlockFn::random(m, n, sigma, seed);
+    let mut p2 = QuadraticBlockFn::random(m, n, sigma, seed);
+    let gamma = 0.05 / p1.smoothness();
+
+    let mut worst: f64 = 0.0;
+    if tau <= 1 {
+        let mut a = Asbcds::new(&mut p1, FreshSchedule, gamma, &x0);
+        let mut b = Pasbcds::new(&mut p2, FreshSchedule, gamma, &x0);
+        for &blk in &blocks {
+            a.step(blk);
+            b.step(blk);
+            worst = worst.max(max_diff(&a.eta, &b.eta()));
+            worst = worst.max(max_diff(&a.zeta, &b.u));
+        }
+    } else {
+        let s1 = UniformDelaySchedule::new(tau, seed ^ 3);
+        let s2 = UniformDelaySchedule::new(tau, seed ^ 3);
+        let mut a = Asbcds::new(&mut p1, s1, gamma, &x0);
+        let mut b = Pasbcds::new(&mut p2, s2, gamma, &x0);
+        for &blk in &blocks {
+            a.step(blk);
+            b.step(blk);
+            worst = worst.max(max_diff(&a.eta, &b.eta()));
+            worst = worst.max(max_diff(&a.zeta, &b.u));
+        }
+    }
+    worst
+}
+
+#[test]
+fn equivalence_fresh_schedule() {
+    let d = run_pair(4, 3, 0.0, 1, 120, 11);
+    assert!(d < 1e-9, "fresh-schedule divergence {d}");
+}
+
+#[test]
+fn equivalence_with_staleness() {
+    let d = run_pair(5, 2, 0.0, 4, 200, 13);
+    assert!(d < 1e-8, "stale-schedule divergence {d}");
+}
+
+#[test]
+fn equivalence_with_noise() {
+    // stochastic gradients: the keyed noise must match between the two
+    let d = run_pair(3, 4, 0.3, 3, 150, 17);
+    assert!(d < 1e-8, "noisy divergence {d}");
+}
+
+#[test]
+fn equivalence_property_sweep() {
+    PropCheck::new("theorem-3 equivalence", 0xA2D3, 12).run(|rng| {
+        let m = gen_usize(rng, 2, 6);
+        let n = gen_usize(rng, 1, 4);
+        let tau = gen_usize(rng, 1, 5);
+        let iters = gen_usize(rng, 30, 120);
+        let sigma = if rng.uniform() < 0.5 { 0.0 } else { 0.2 };
+        let seed = rng.next_u64();
+        let d = run_pair(m, n, sigma, tau, iters, seed);
+        if d > 1e-7 {
+            return Err(format!(
+                "divergence {d} at m={m} n={n} tau={tau} iters={iters}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn both_reach_same_final_value() {
+    let mut p1 = QuadraticBlockFn::random(4, 3, 0.0, 23);
+    let mut p2 = QuadraticBlockFn::random(4, 3, 0.0, 23);
+    let x0 = vec![1.0; 12];
+    let gamma = 0.2 / p1.smoothness();
+    let blocks: Vec<usize> = {
+        let mut rng = Rng64::new(99);
+        (0..600).map(|_| rng.below(4) as usize).collect()
+    };
+    let mut a = Asbcds::new(&mut p1, FreshSchedule, gamma, &x0);
+    let mut b = Pasbcds::new(&mut p2, FreshSchedule, gamma, &x0);
+    for &blk in &blocks {
+        a.step(blk);
+        b.step(blk);
+    }
+    let va = a.value();
+    let vb = b.value_at_eta();
+    assert!((va - vb).abs() < 1e-9, "{va} vs {vb}");
+}

@@ -1,0 +1,139 @@
+//! Cross-layer parity: the PJRT-executed AOT artifact (L1 Pallas kernel
+//! lowered through the L2 JAX model) must agree with the native Rust
+//! oracle to f32 precision. This is the end-to-end proof that the
+//! three-layer stack computes the same mathematics.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message)
+//! when the artifacts directory is absent so `cargo test` stays green in
+//! a fresh checkout.
+
+use a2dwb::measures::CostRows;
+use a2dwb::ot::{dual_oracle, DualOracle};
+use a2dwb::rng::Rng64;
+use a2dwb::runtime::{read_manifest, PjrtOracle};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if read_manifest(&dir).is_ok() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+fn random_case(seed: u64, m: usize, n: usize, spread: f64) -> (Vec<f64>, CostRows) {
+    let mut rng = Rng64::new(seed);
+    let eta: Vec<f64> = (0..n).map(|_| spread * rng.normal()).collect();
+    let mut cost = CostRows::new(m, n);
+    for v in cost.data.iter_mut() {
+        *v = rng.uniform(); // normalized costs in [0,1] as in production
+    }
+    (eta, cost)
+}
+
+#[test]
+fn pjrt_matches_native_m8_n100() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtOracle::load(&dir, 8, 100).expect("load artifact");
+    for seed in 0..5u64 {
+        let (eta, cost) = random_case(seed, 8, 100, 0.3);
+        for beta in [0.02, 0.1, 1.0] {
+            let (g_native, v_native) = dual_oracle(&eta, &cost, beta);
+            let mut g_pjrt = vec![0.0; 100];
+            let v_pjrt = pjrt.eval(&eta, &cost, beta, &mut g_pjrt);
+            let gd = g_native
+                .iter()
+                .zip(&g_pjrt)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(gd < 5e-6, "seed={seed} beta={beta}: grad diff {gd}");
+            assert!(
+                (v_native - v_pjrt).abs() < 5e-5 * (1.0 + v_native.abs()),
+                "seed={seed} beta={beta}: val {v_native} vs {v_pjrt}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_all_manifest_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = read_manifest(&dir).unwrap();
+    for entry in manifest.iter().filter(|e| e.kind == "oracle") {
+        let m: usize = entry.shape.parse().unwrap();
+        let n = entry.n;
+        let mut pjrt = PjrtOracle::load(&dir, m, n).expect("load");
+        let (eta, cost) = random_case(42 + m as u64, m, n, 0.2);
+        let (g_native, v_native) = dual_oracle(&eta, &cost, 0.05);
+        let mut g_pjrt = vec![0.0; n];
+        let v_pjrt = pjrt.eval(&eta, &cost, 0.05, &mut g_pjrt);
+        let gd = g_native
+            .iter()
+            .zip(&g_pjrt)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(gd < 1e-5, "shape ({m},{n}): grad diff {gd}");
+        assert!((v_native - v_pjrt).abs() < 1e-4 * (1.0 + v_native.abs()));
+        // the PJRT gradient is also a probability distribution
+        let s: f64 = g_pjrt.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "shape ({m},{n}): sum {s}");
+    }
+}
+
+#[test]
+fn pjrt_oracle_reuse_is_stable() {
+    // repeated execution of the cached executable gives identical output
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtOracle::load(&dir, 8, 100).expect("load");
+    let (eta, cost) = random_case(7, 8, 100, 0.5);
+    let mut g1 = vec![0.0; 100];
+    let mut g2 = vec![0.0; 100];
+    let v1 = pjrt.eval(&eta, &cost, 0.1, &mut g1);
+    let v2 = pjrt.eval(&eta, &cost, 0.1, &mut g2);
+    assert_eq!(v1, v2);
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn missing_shape_error_is_actionable() {
+    let Some(dir) = artifacts_dir() else { return };
+    let err = match PjrtOracle::load(&dir, 7, 13) {
+        Ok(_) => panic!("shape (7,13) should not exist"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("compile.aot"), "unhelpful error: {err}");
+}
+
+#[test]
+fn end_to_end_experiment_on_pjrt_backend() {
+    // a tiny full experiment where every activation goes through PJRT
+    let Some(dir) = artifacts_dir() else { return };
+    use a2dwb::prelude::*;
+    let cfg = ExperimentConfig {
+        nodes: 6,
+        topology: TopologySpec::Complete,
+        algorithm: AlgorithmKind::A2dwb,
+        measure: MeasureSpec::Gaussian { n: 100 },
+        backend: OracleBackendSpec::Pjrt {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+        },
+        samples_per_activation: 8, // matches oracle_m8_n100 artifact
+        eval_samples: 16,
+        duration: 3.0,
+        metric_interval: 0.5,
+        ..ExperimentConfig::gaussian_default()
+    };
+    let report = run_experiment(&cfg).expect("pjrt experiment");
+    assert!(report.final_dual_objective().is_finite());
+    assert!(report.activations > 0);
+    // and it should agree closely with the native backend run
+    let mut cfg_native = cfg.clone();
+    cfg_native.backend = OracleBackendSpec::Native;
+    let native = run_experiment(&cfg_native).expect("native experiment");
+    let d = (report.final_dual_objective() - native.final_dual_objective()).abs();
+    assert!(
+        d < 1e-3 * (1.0 + native.final_dual_objective().abs()),
+        "backend drift {d}"
+    );
+}
