@@ -1,0 +1,111 @@
+//! Threaded-executor bench: async (A²DWB) vs sync (DCWB) wall-clock at
+//! an equal iteration budget on 1/2/4/8 workers, plus the simulator
+//! reference run. Emits `BENCH_exec.json` at the repository root to
+//! anchor the perf trajectory across PRs.
+//!
+//! Per-activation compute is simulated (1 ms ± 50% jitter, one straggler
+//! node at 4x), so the measured async/sync gap is the barrier's waiting
+//! overhead, not oracle arithmetic.
+
+use std::io::Write;
+
+use a2dwb::graph::TopologySpec;
+use a2dwb::prelude::*;
+
+struct Cell {
+    workers: usize,
+    async_wall: f64,
+    sync_wall: f64,
+    async_dual: f64,
+    sync_dual: f64,
+}
+
+fn main() {
+    let nodes = 16;
+    let base = ExperimentConfig {
+        nodes,
+        topology: TopologySpec::Cycle,
+        duration: 3.0,
+        compute_time: 0.001,
+        faults: FaultModel {
+            straggler_fraction: 1.0 / nodes as f64,
+            straggler_slowdown: 4.0,
+            drop_prob: 0.0,
+        },
+        ..ExperimentConfig::gaussian_default()
+    };
+    let budget =
+        (base.duration / base.activation_interval).round() as u64 * nodes as u64;
+
+    println!("== exec_threads: async vs sync wall-clock, budget {budget} ==");
+    let mut cells = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let (a, s) =
+            a2dwb::exec::run_speedup_pair(&base, workers).expect("threaded run");
+        println!(
+            "BENCH exec_threads workers={workers} async_wall={:.3}s sync_wall={:.3}s \
+             speedup={:.2}x async_dual={:.6} sync_dual={:.6}",
+            a.wall_seconds,
+            s.wall_seconds,
+            s.wall_seconds / a.wall_seconds.max(1e-12),
+            a.final_dual_objective(),
+            s.final_dual_objective()
+        );
+        cells.push(Cell {
+            workers,
+            async_wall: a.wall_seconds,
+            sync_wall: s.wall_seconds,
+            async_dual: a.final_dual_objective(),
+            sync_dual: s.final_dual_objective(),
+        });
+    }
+
+    // simulator reference (virtual time, no compute injection)
+    let sim_cfg = ExperimentConfig {
+        compute_time: 0.0,
+        faults: FaultModel::default(),
+        ..base.clone()
+    };
+    let sim = run_experiment(&sim_cfg).expect("sim run");
+    println!("sim reference: {}", sim.summary());
+
+    // hand-rolled JSON (the crate is dependency-free by design)
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"exec_threads\",\n");
+    json.push_str(&format!("  \"nodes\": {nodes},\n"));
+    json.push_str(&format!("  \"budget_activations\": {budget},\n"));
+    json.push_str(&format!(
+        "  \"compute_time_s\": {},\n  \"straggler_slowdown\": {},\n",
+        base.compute_time, base.faults.straggler_slowdown
+    ));
+    json.push_str(&format!(
+        "  \"sim_reference\": {{\"wall_s\": {:.6}, \"final_dual\": {:.9}}},\n",
+        sim.wall_seconds,
+        sim.final_dual_objective()
+    ));
+    json.push_str("  \"cells\": [\n");
+    for (idx, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workers\": {}, \"async_wall_s\": {:.6}, \"sync_wall_s\": {:.6}, \
+             \"speedup\": {:.4}, \"async_final_dual\": {:.9}, \
+             \"sync_final_dual\": {:.9}}}{}\n",
+            c.workers,
+            c.async_wall,
+            c.sync_wall,
+            c.sync_wall / c.async_wall.max(1e-12),
+            c.async_dual,
+            c.sync_dual,
+            if idx + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+
+    // repo root = parent of the package dir, independent of cwd
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package has a parent dir")
+        .join("BENCH_exec.json");
+    let mut f = std::fs::File::create(&out).expect("create BENCH_exec.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_exec.json");
+    println!("wrote {}", out.display());
+}

@@ -1,0 +1,74 @@
+//! Wall-clock speedup of barrier-free A²DWB over barrier-paced DCWB on
+//! real threads, at an **equal iteration budget**.
+//!
+//! Every activation pays a simulated compute cost (`--compute-time`,
+//! jittered ±50% per activation, stragglers via the fault model), so
+//! the synchronous baseline's per-round barrier waits for the slowest
+//! worker while the asynchronous executor never waits — the paper's
+//! waiting-overhead claim measured with `Instant`, not simulated.
+//!
+//! ```bash
+//! cargo run --release --example threaded_speedup -- --workers 4 --nodes 16
+//! ```
+
+use a2dwb::cli::Args;
+use a2dwb::graph::TopologySpec;
+use a2dwb::prelude::*;
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let nodes: usize = args.get("nodes", 16).unwrap();
+    let duration: f64 = args.get("duration", 4.0).unwrap();
+    let compute_time: f64 = args.get("compute-time", 0.001).unwrap();
+    let straggler: f64 = args.get("straggler-slowdown", 4.0).unwrap();
+    let workers_list: Vec<usize> = match args.get_opt("workers") {
+        Some(w) => vec![w.parse().expect("--workers N")],
+        None => vec![1, 2, 4, 8],
+    };
+
+    let base = ExperimentConfig {
+        nodes,
+        topology: TopologySpec::Cycle,
+        duration,
+        compute_time,
+        faults: FaultModel {
+            straggler_fraction: 0.125,
+            straggler_slowdown: straggler,
+            drop_prob: 0.0,
+        },
+        ..ExperimentConfig::gaussian_default()
+    };
+    let sweeps = (duration / base.activation_interval).round() as usize;
+    println!(
+        "== equal budget: {} activations/node ({} nodes, compute {:.1} ms ± 50%, \
+         {:.0}% stragglers x{straggler}) ==",
+        sweeps,
+        nodes,
+        compute_time * 1e3,
+        base.faults.straggler_fraction * 100.0
+    );
+    println!(
+        "{:<9} {:>12} {:>12} {:>9} {:>14} {:>14}",
+        "workers", "a2dwb wall", "dcwb wall", "speedup", "a2dwb dual", "dcwb dual"
+    );
+
+    for &workers in &workers_list {
+        let (a, s) =
+            a2dwb::exec::run_speedup_pair(&base, workers).expect("threaded run");
+        println!(
+            "{:<9} {:>11.3}s {:>11.3}s {:>8.2}x {:>14.6} {:>14.6}",
+            workers,
+            a.wall_seconds,
+            s.wall_seconds,
+            s.wall_seconds / a.wall_seconds.max(1e-12),
+            a.final_dual_objective(),
+            s.final_dual_objective()
+        );
+    }
+
+    println!(
+        "\nreading: DCWB's wall time is sum-of-round-maxima across workers; \
+         A²DWB pays only the slowest worker's own total. The gap is the \
+         barrier's waiting overhead — the quantity the paper eliminates."
+    );
+}

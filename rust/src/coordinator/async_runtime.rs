@@ -2,34 +2,78 @@
 //!
 //! Event kinds:
 //! * `Activate(i)` — node i wakes (shared `perm(m)` schedule, §3.3):
-//!   evaluates its local point, calls the dual oracle on a fresh sample
-//!   batch, broadcasts the gradient to neighbors (delayed messages) and
-//!   applies the Laplacian combine with whatever stale neighbor
-//!   gradients its mailbox holds — no barrier, the paper's key point.
+//!   runs [`crate::exec::activate_node`] — evaluate the local point,
+//!   call the dual oracle on a fresh sample batch, broadcast the
+//!   gradient to neighbors (delayed messages) and apply the Laplacian
+//!   combine with whatever stale neighbor gradients the mailbox holds —
+//!   no barrier, the paper's key point.
 //! * `Deliver{dst, slot, k, grad}` — a gradient message lands; the
 //!   mailbox keeps the freshest per neighbor (out-of-order safe).
 //! * `Metric` — sample the metric series on the fixed grid.
 //!
+//! This runtime is the *push-based* implementation of the shared
+//! [`Transport`] seam: `broadcast` schedules `Deliver` events with the
+//! [`NetModel`] message fates (delay draws, straggler factors, drops),
+//! and the event loop pushes arrivals into node mailboxes, so
+//! `collect` is a no-op. The threaded executor (`crate::exec::threaded`)
+//! implements the same seam pull-based over mailbox slots; the
+//! algorithm body exists once, in `crate::exec`.
+//!
 //! The initial gradient exchange (Algorithm 3 line 1) is modeled as a
 //! round of messages sent at t = 0 with normal link delays.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::{evaluator::MetricsEvaluator, ExperimentConfig, ExperimentReport};
 use crate::algo::wbp::WbpNode;
 use crate::algo::ThetaSeq;
+use crate::exec::{activate_node, initial_exchange, NetModel, StepCtx, Transport};
 use crate::graph::Graph;
 use crate::measures::CostRows;
 use crate::metrics::Series;
-use crate::sim::{ActivationSchedule, EventQueue, LinkDelayModel};
+use crate::sim::{ActivationSchedule, EventQueue};
 
 enum Event {
     Activate(usize),
-    /// Gradient message in flight. The payload is `Rc`-shared across the
+    /// Gradient message in flight. The payload is shared across the
     /// sender's whole broadcast: one allocation per activation instead of
     /// deg(i) clones (§Perf item 3 — the top allocator on dense graphs).
-    Deliver { dst: usize, slot: usize, computed_at: u64, grad: Rc<Vec<f64>> },
+    Deliver { dst: usize, slot: usize, computed_at: u64, grad: Arc<Vec<f64>> },
     Metric,
+}
+
+/// Push-based [`Transport`] over the discrete-event queue: a broadcast
+/// becomes deg(i) scheduled `Deliver` events with per-link fates.
+struct SimTransport<'a> {
+    graph: &'a Graph,
+    net: NetModel,
+    queue: EventQueue<Event>,
+    compute_time: f64,
+    messages: u64,
+}
+
+impl Transport for SimTransport<'_> {
+    fn broadcast(&mut self, src: usize, stamp: u64, grad: Arc<Vec<f64>>) {
+        for &j in self.graph.neighbors(src) {
+            self.messages += 1;
+            let Some(delay) = self.net.async_fate(src, j) else {
+                continue; // lost on the wire; mailbox keeps the old grad
+            };
+            let slot = self
+                .graph
+                .neighbors(j)
+                .binary_search(&src)
+                .expect("not a neighbor");
+            self.queue.schedule_in(
+                delay + self.compute_time,
+                Event::Deliver { dst: j, slot, computed_at: stamp, grad: grad.clone() },
+            );
+        }
+    }
+
+    fn collect(&mut self, _dst: usize, _node: &mut WbpNode) {
+        // push-based: the event loop delivers into mailboxes directly
+    }
 }
 
 pub(super) fn run(
@@ -47,22 +91,20 @@ pub(super) fn run(
     let lambda_max = graph.lambda_max();
     let smoothness = lambda_max / cfg.beta;
     let gamma = cfg.gamma_scale / smoothness;
+    let ctx = StepCtx { beta: cfg.beta, gamma, m_theta: m, diag: cfg.diag };
 
     let mut theta = ThetaSeq::new(m);
     let mut nodes: Vec<WbpNode> =
         (0..m).map(|i| WbpNode::new(n, graph.degree(i))).collect();
-    // slot index of node `src` in `dst`'s sorted neighbor list
-    let slot_of = |dst: usize, src: usize| -> usize {
-        graph.neighbors(dst).binary_search(&src).expect("not a neighbor")
-    };
 
-    let mut delays = LinkDelayModel::paper_default(m, cfg.seed);
-    // fault model: straggler delay multipliers + message-loss stream
-    let node_factors = cfg.faults.node_factors(m, cfg.seed);
-    let drop_prob = cfg.faults.drop_prob;
-    let mut drop_rng = crate::rng::Rng64::new(cfg.seed ^ 0x4452_4F50);
+    let mut transport = SimTransport {
+        graph,
+        net: NetModel::paper_default(m, cfg.seed, &cfg.faults),
+        queue: EventQueue::new(),
+        compute_time: cfg.compute_time,
+        messages: 0,
+    };
     let mut schedule = ActivationSchedule::new(m, cfg.activation_interval, cfg.seed);
-    let mut queue: EventQueue<Event> = EventQueue::new();
     let mut evaluator =
         MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
 
@@ -74,99 +116,70 @@ pub(super) fn run(
     let mut dual_series = Series::new("dual_objective");
     let mut consensus_series = Series::new("consensus");
     let mut spread_series = Series::new("primal_spread");
+    let mut dual_wall = Series::new("dual_wall");
 
     let mut cost = CostRows::new(cfg.samples_per_activation, n);
     let mut point = vec![0.0; n];
     let mut etas = vec![0.0; m * n];
-    let mut messages: u64 = 0;
     let mut activations: u64 = 0;
     let mut k_global: usize = 0; // shared activation counter (common seed)
+    let wall_t0 = std::time::Instant::now();
 
     // ---- Algorithm 3 line 1: initial gradient computation + exchange
-    for i in 0..m {
-        nodes[i].eval_point(&mut theta, 0, true, &mut point);
-        measures[i].sample_cost_rows(&mut node_rngs[i], &mut cost);
-        let mut g = vec![0.0; n];
-        oracle.eval(&point, &cost, cfg.beta, &mut g);
-        nodes[i].own_grad.copy_from_slice(&g);
-        let g = Rc::new(g);
-        for &j in graph.neighbors(i) {
-            messages += 1;
-            if drop_prob > 0.0 && drop_rng.uniform() < drop_prob {
-                continue; // lost on the wire; mailbox keeps the default
-            }
-            let delay = delays.draw(i, j) * node_factors[i].max(node_factors[j]);
-            queue.schedule(
-                delay + cfg.compute_time,
-                Event::Deliver {
-                    dst: j,
-                    slot: slot_of(j, i),
-                    computed_at: 0,
-                    grad: g.clone(),
-                },
-            );
-        }
-    }
+    initial_exchange(
+        &mut nodes,
+        &mut theta,
+        &measures,
+        &mut node_rngs,
+        oracle.as_mut(),
+        &mut cost,
+        &mut point,
+        cfg.beta,
+        &mut transport,
+    );
 
     // first activation + metric events
     {
         let (t, node) = schedule.next_activation();
-        queue.schedule(t.max(f64::EPSILON), Event::Activate(node));
+        transport.queue.schedule(t.max(f64::EPSILON), Event::Activate(node));
     }
-    queue.schedule(0.0, Event::Metric);
+    transport.queue.schedule(0.0, Event::Metric);
 
     // ---- main event loop
-    while let Some(ev) = queue.pop_until(cfg.duration) {
+    while let Some(ev) = transport.queue.pop_until(cfg.duration) {
         match ev.payload {
             Event::Activate(i) => {
                 let k = k_global;
-                // line 5: evaluation point (compensated vs naive)
-                nodes[i].eval_point(&mut theta, k, compensated, &mut point);
-                // line 6: sample M_k, oracle gradient
-                measures[i].sample_cost_rows(&mut node_rngs[i], &mut cost);
-                oracle.eval(&point, &cost, cfg.beta, &mut nodes[i].own_grad);
-                // broadcast g_i to neighbors with per-link delays; one
-                // shared Rc payload for the whole broadcast
-                let g = Rc::new(nodes[i].own_grad.clone());
-                for &j in graph.neighbors(i) {
-                    messages += 1;
-                    if drop_prob > 0.0 && drop_rng.uniform() < drop_prob {
-                        continue; // lost message: neighbor keeps stale grad
-                    }
-                    let delay =
-                        delays.draw(i, j) * node_factors[i].max(node_factors[j]);
-                    queue.schedule_in(
-                        delay + cfg.compute_time,
-                        Event::Deliver {
-                            dst: j,
-                            slot: slot_of(j, i),
-                            computed_at: k as u64 + 1,
-                            grad: g.clone(),
-                        },
-                    );
-                }
-                // lines 7–8: combine with stale mailbox + update (u, v)
-                nodes[i].apply_update(
-                    &mut theta,
+                // Algorithm 3 lines 5–8 over the Transport seam
+                activate_node(
+                    &mut nodes[i],
+                    i,
                     k,
-                    m,
-                    gamma,
+                    compensated,
+                    &mut theta,
+                    &ctx,
                     graph.degree(i),
-                    cfg.diag,
+                    measures[i].as_ref(),
+                    &mut node_rngs[i],
+                    &mut cost,
+                    &mut point,
+                    oracle.as_mut(),
+                    &mut transport,
                 );
                 k_global += 1;
                 activations += 1;
                 // schedule the next activation from the shared sequence
                 let (t, node) = schedule.next_activation();
                 if t <= cfg.duration {
-                    queue.schedule(t.max(queue.now()), Event::Activate(node));
+                    let at = t.max(transport.queue.now());
+                    transport.queue.schedule(at, Event::Activate(node));
                 }
             }
             Event::Deliver { dst, slot, computed_at, grad } => {
                 nodes[dst].deliver(slot, computed_at, &grad);
             }
             Event::Metric => {
-                let t = queue.now();
+                let t = transport.queue.now();
                 for (i, node) in nodes.iter().enumerate() {
                     node.eta(&mut theta, k_global.max(1), &mut point);
                     etas[i * n..(i + 1) * n].copy_from_slice(&point);
@@ -175,8 +188,9 @@ pub(super) fn run(
                 dual_series.push(t, dual);
                 consensus_series.push(t, consensus);
                 spread_series.push(t, spread);
+                dual_wall.push(wall_t0.elapsed().as_secs_f64(), dual);
                 if t + cfg.metric_interval <= cfg.duration {
-                    queue.schedule_in(cfg.metric_interval, Event::Metric);
+                    transport.queue.schedule_in(cfg.metric_interval, Event::Metric);
                 }
             }
         }
@@ -191,6 +205,7 @@ pub(super) fn run(
     dual_series.push(cfg.duration, dual);
     consensus_series.push(cfg.duration, consensus);
     spread_series.push(cfg.duration, spread);
+    dual_wall.push(wall_t0.elapsed().as_secs_f64(), dual);
 
     Ok(ExperimentReport {
         tag: cfg.tag(),
@@ -198,10 +213,11 @@ pub(super) fn run(
         dual_objective: dual_series,
         consensus: consensus_series,
         primal_spread: spread_series,
+        dual_wall,
         activations,
         rounds: 0,
-        messages,
-        events: queue.processed(),
+        messages: transport.messages,
+        events: transport.queue.processed(),
         lambda_max,
         wall_seconds: 0.0,
         barycenter: evaluator.barycenter(),

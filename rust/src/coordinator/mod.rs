@@ -24,6 +24,7 @@ pub use evaluator::MetricsEvaluator;
 
 use crate::algo::wbp::DiagCoef;
 use crate::algo::AlgorithmKind;
+use crate::exec::ExecutorSpec;
 use crate::graph::{Graph, TopologySpec};
 use crate::measures::MeasureSpec;
 use crate::metrics::Series;
@@ -65,6 +66,10 @@ pub struct ExperimentConfig {
     /// and lossy links. The async/sync contrast sharpens under both —
     /// see `examples/straggler_resilience.rs`.
     pub faults: FaultModel,
+    /// Execution backend: the deterministic discrete-event simulator
+    /// (default; virtual time, bit-reproducible) or the real-thread
+    /// wall-clock executor (`crate::exec::threaded`).
+    pub executor: ExecutorSpec,
 }
 
 /// Network fault model: heterogeneous slow nodes + iid message loss.
@@ -140,6 +145,7 @@ impl ExperimentConfig {
             diag: DiagCoef::Laplacian,
             compute_time: 0.0,
             faults: FaultModel::default(),
+            executor: ExecutorSpec::Sim,
         }
     }
 
@@ -185,6 +191,7 @@ impl ExperimentConfig {
             return Err("durations must be positive".into());
         }
         self.faults.validate()?;
+        self.executor.validate()?;
         Ok(())
     }
 }
@@ -208,6 +215,11 @@ pub struct ExperimentReport {
     /// Mean entry-wise distance of the primal barycenter estimates to
     /// their network average (an interpretable companion metric).
     pub primal_spread: Series,
+    /// Dual objective over **wall-clock** seconds since run start — the
+    /// honest time axis for the threaded executor (the simulator also
+    /// fills it, with its own processing wall-time, so simulated-time
+    /// and real-time speedups can be plotted side by side).
+    pub dual_wall: Series,
     pub activations: u64,
     pub rounds: u64,
     pub messages: u64,
@@ -246,16 +258,22 @@ impl ExperimentReport {
     }
 }
 
-/// Run one experiment cell. Dispatches on the algorithm kind.
+/// Run one experiment cell. Dispatches on the executor backend, then on
+/// the algorithm kind.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport, String> {
     cfg.validate()?;
     let graph = Graph::build(cfg.nodes, cfg.topology);
     assert!(graph.is_connected(), "topology must be connected");
     let t0 = std::time::Instant::now();
-    let mut report = match cfg.algorithm {
-        AlgorithmKind::A2dwb => async_runtime::run(cfg, &graph, true),
-        AlgorithmKind::A2dwbn => async_runtime::run(cfg, &graph, false),
-        AlgorithmKind::Dcwb => sync_runtime::run(cfg, &graph),
+    let mut report = match cfg.executor {
+        ExecutorSpec::Sim => match cfg.algorithm {
+            AlgorithmKind::A2dwb => async_runtime::run(cfg, &graph, true),
+            AlgorithmKind::A2dwbn => async_runtime::run(cfg, &graph, false),
+            AlgorithmKind::Dcwb => sync_runtime::run(cfg, &graph),
+        },
+        ExecutorSpec::Threads { workers } => {
+            crate::exec::threaded::run(cfg, &graph, workers)
+        }
     }?;
     report.wall_seconds = t0.elapsed().as_secs_f64();
     Ok(report)

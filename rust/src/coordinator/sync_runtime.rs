@@ -9,16 +9,62 @@
 //! vector treated as a single block (m = 1 in the θ-sequence: classic
 //! Nesterov indices) and fresh neighbor information every round.
 //!
-//! Virtual time per round = max over edges of a fresh delay draw
-//! (+ compute_time). Metric sampling shares the grid of the async runs.
+//! Virtual time per round = max over edges of a fresh
+//! [`NetModel::barrier_transmission`] (+ compute_time); a dropped
+//! message is retransmitted, adding a full fresh delay draw per retry.
+//! Delivery goes through the shared [`Transport`] seam as a
+//! *barrier transport*: broadcasts buffer the round's gradients, and
+//! each node's `collect` then reads its neighbors' buffers — all-fresh
+//! by construction, the defining property of the baseline. Metric
+//! sampling shares the grid of the async runs.
+
+use std::sync::Arc;
 
 use super::{evaluator::MetricsEvaluator, ExperimentConfig, ExperimentReport};
 use crate::algo::wbp::WbpNode;
 use crate::algo::ThetaSeq;
+use crate::exec::{NetModel, Transport};
 use crate::graph::Graph;
 use crate::measures::CostRows;
 use crate::metrics::Series;
-use crate::sim::LinkDelayModel;
+
+/// Barrier-mode [`Transport`]: a broadcast parks the sender's gradient
+/// in its outbox; `collect` reads every neighbor's outbox — the
+/// all-fresh exchange the global barrier guarantees.
+struct BarrierTransport<'a> {
+    graph: &'a Graph,
+    outbox: Vec<(u64, Arc<Vec<f64>>)>,
+}
+
+impl<'a> BarrierTransport<'a> {
+    fn new(graph: &'a Graph, n: usize) -> Self {
+        let outbox =
+            (0..graph.num_nodes()).map(|_| (0, Arc::new(vec![0.0; n]))).collect();
+        Self { graph, outbox }
+    }
+
+    /// Allocation-free `broadcast` for the simulator's hot loop: nobody
+    /// retains outbox `Arc`s across rounds (deliveries copy out), so
+    /// `Arc::make_mut` rewrites each buffer in place after round one.
+    fn stage(&mut self, src: usize, stamp: u64, grad: &[f64]) {
+        let entry = &mut self.outbox[src];
+        entry.0 = stamp;
+        Arc::make_mut(&mut entry.1).copy_from_slice(grad);
+    }
+}
+
+impl Transport for BarrierTransport<'_> {
+    fn broadcast(&mut self, src: usize, stamp: u64, grad: Arc<Vec<f64>>) {
+        self.outbox[src] = (stamp, grad);
+    }
+
+    fn collect(&mut self, dst: usize, node: &mut WbpNode) {
+        for (slot, &j) in self.graph.neighbors(dst).iter().enumerate() {
+            let (stamp, grad) = &self.outbox[j];
+            node.deliver(slot, *stamp, grad);
+        }
+    }
+}
 
 pub(super) fn run(
     cfg: &ExperimentConfig,
@@ -39,17 +85,11 @@ pub(super) fn run(
     let mut theta = ThetaSeq::new(1);
     let mut nodes: Vec<WbpNode> =
         (0..m).map(|i| WbpNode::new(n, graph.degree(i))).collect();
-    let slot_of = |dst: usize, src: usize| -> usize {
-        graph.neighbors(dst).binary_search(&src).expect("not a neighbor")
-    };
 
-    let mut delays = LinkDelayModel::paper_default(m, cfg.seed);
     // fault model: the barrier waits for the slowest *effective* edge —
-    // stragglers multiply delays; a dropped message is retransmitted,
-    // adding a full fresh delay draw per retry.
-    let node_factors = cfg.faults.node_factors(m, cfg.seed);
-    let drop_prob = cfg.faults.drop_prob;
-    let mut drop_rng = crate::rng::Rng64::new(cfg.seed ^ 0x4452_4F50);
+    // stragglers multiply delays; drops retransmit (NetModel).
+    let mut net = NetModel::paper_default(m, cfg.seed, &cfg.faults);
+    let mut transport = BarrierTransport::new(graph, n);
     let mut evaluator =
         MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
     let mut root = crate::rng::Rng64::new(cfg.seed ^ 0x5254_4E44);
@@ -59,6 +99,7 @@ pub(super) fn run(
     let mut dual_series = Series::new("dual_objective");
     let mut consensus_series = Series::new("consensus");
     let mut spread_series = Series::new("primal_spread");
+    let mut dual_wall = Series::new("dual_wall");
 
     let mut cost = CostRows::new(cfg.samples_per_activation, n);
     let mut point = vec![0.0; n];
@@ -68,6 +109,7 @@ pub(super) fn run(
     let mut rounds: u64 = 0;
     let mut now = 0.0f64;
     let mut next_metric = 0.0f64;
+    let wall_t0 = std::time::Instant::now();
 
     let record = |t: f64,
                       nodes: &[WbpNode],
@@ -77,6 +119,8 @@ pub(super) fn run(
                       dual_series: &mut Series,
                       consensus_series: &mut Series,
                       spread_series: &mut Series,
+                      dual_wall: &mut Series,
+                      wall: f64,
                       etas: &mut [f64],
                       point: &mut [f64]| {
         for (i, node) in nodes.iter().enumerate() {
@@ -87,11 +131,13 @@ pub(super) fn run(
         dual_series.push(t, dual);
         consensus_series.push(t, consensus);
         spread_series.push(t, spread);
+        dual_wall.push(wall, dual);
     };
 
     record(
         0.0, &nodes, &mut theta, 0, &mut evaluator, &mut dual_series,
-        &mut consensus_series, &mut spread_series, &mut etas, &mut point,
+        &mut consensus_series, &mut spread_series, &mut dual_wall,
+        wall_t0.elapsed().as_secs_f64(), &mut etas, &mut point,
     );
     next_metric += cfg.metric_interval;
 
@@ -106,15 +152,9 @@ pub(super) fn run(
         // ---- exchange phase: barrier = slowest effective edge this round
         let mut round_time: f64 = 0.0;
         for &(a, b) in graph.edges() {
-            let factor = node_factors[a].max(node_factors[b]);
             for (src, dst) in [(a, b), (b, a)] {
-                let mut t = delays.draw(src, dst) * factor;
-                messages += 1;
-                // retransmit until delivered (geometric retries)
-                while drop_prob > 0.0 && drop_rng.uniform() < drop_prob {
-                    t += delays.draw(src, dst) * factor;
-                    messages += 1;
-                }
+                let (t, transmissions) = net.barrier_transmission(src, dst);
+                messages += transmissions;
                 round_time = round_time.max(t);
             }
         }
@@ -122,13 +162,11 @@ pub(super) fn run(
         // deliver everything (fresh info: the whole point of the barrier)
         for i in 0..m {
             nodes[i].own_grad.copy_from_slice(&grads[i]);
-            for &j in graph.neighbors(i) {
-                let slot = slot_of(j, i);
-                nodes[j].deliver(slot, r as u64 + 1, &grads[i]);
-            }
+            transport.stage(i, r as u64 + 1, &grads[i]);
         }
         // ---- update phase: single-block accelerated step
         for i in 0..m {
+            transport.collect(i, &mut nodes[i]);
             let deg = graph.degree(i);
             nodes[i].apply_update(&mut theta, r, 1, gamma, deg, cfg.diag);
         }
@@ -141,7 +179,8 @@ pub(super) fn run(
             record(
                 next_metric, &nodes, &mut theta, r, &mut evaluator,
                 &mut dual_series, &mut consensus_series, &mut spread_series,
-                &mut etas, &mut point,
+                &mut dual_wall, wall_t0.elapsed().as_secs_f64(), &mut etas,
+                &mut point,
             );
             next_metric += cfg.metric_interval;
         }
@@ -153,7 +192,8 @@ pub(super) fn run(
 
     record(
         cfg.duration, &nodes, &mut theta, r, &mut evaluator, &mut dual_series,
-        &mut consensus_series, &mut spread_series, &mut etas, &mut point,
+        &mut consensus_series, &mut spread_series, &mut dual_wall,
+        wall_t0.elapsed().as_secs_f64(), &mut etas, &mut point,
     );
 
     Ok(ExperimentReport {
@@ -162,6 +202,7 @@ pub(super) fn run(
         dual_objective: dual_series,
         consensus: consensus_series,
         primal_spread: spread_series,
+        dual_wall,
         activations: rounds * m as u64,
         rounds,
         messages,

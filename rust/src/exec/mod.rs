@@ -1,0 +1,340 @@
+//! Execution backends — *where* an experiment runs.
+//!
+//! The repo has two ways to execute the same algorithms over the same
+//! node-local state machine ([`crate::algo::wbp`]):
+//!
+//! * **`Sim`** — the discrete-event simulator (`crate::sim` +
+//!   `crate::coordinator`): virtual time, bit-reproducible, the §4
+//!   methodology of the paper. This is the *reproducibility* backend.
+//! * **`Threads`** — this module's [`threaded`] executor: every node is
+//!   a unit of work on a real thread pool, gradients travel through the
+//!   lock-sparing freshest-wins mailboxes of [`transport::MailboxGrid`],
+//!   and time is wall-clock time. This is the *validation* backend: it
+//!   demonstrates the paper's headline claim (asynchrony removes the
+//!   barrier's waiting overhead) on actual hardware with actual
+//!   contention, which the simulator can only approximate.
+//!
+//! Both backends drive Algorithm 3 through the same two seams so the
+//! algorithm logic exists exactly once:
+//!
+//! * [`Transport`] — broadcast/collect of neighbor gradients
+//!   (event-scheduled in the simulator, mailbox slots under threads);
+//! * [`activate_node`] / [`initial_exchange`] — the backend-agnostic
+//!   body of Algorithm 3 lines 5–8 and line 1.
+//!
+//! [`NetModel`] centralizes the simulator-side message-fate logic
+//! (per-link delay draws, straggler slow-down factors, iid drops) that
+//! the async and sync simulator runtimes previously duplicated; the
+//! threaded executor reuses the same straggler factors as real
+//! `thread::sleep` compute-time injection.
+
+pub mod threaded;
+pub mod transport;
+
+use std::sync::Arc;
+
+pub use transport::{FreshestSlot, MailboxGrid, ThreadedTransport, Transport};
+
+use crate::algo::wbp::{DiagCoef, WbpNode};
+use crate::algo::ThetaSeq;
+use crate::coordinator::FaultModel;
+use crate::measures::{CostRows, NodeMeasure};
+use crate::ot::DualOracle;
+use crate::rng::Rng64;
+use crate::sim::LinkDelayModel;
+
+/// Which execution backend runs the experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorSpec {
+    /// Deterministic discrete-event simulation over virtual time.
+    Sim,
+    /// Real-thread wall-clock execution on `workers` OS threads.
+    Threads { workers: usize },
+}
+
+impl ExecutorSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutorSpec::Sim => "sim",
+            ExecutorSpec::Threads { .. } => "threads",
+        }
+    }
+
+    /// Parse "sim" | "threads" | "threads:N". `default_workers` is used
+    /// for a bare "threads" (0 → available parallelism).
+    pub fn parse(s: &str, default_workers: usize) -> Result<Self, String> {
+        let lower = s.to_ascii_lowercase();
+        let (head, arg) = match lower.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        match head {
+            "sim" | "simulator" => Ok(ExecutorSpec::Sim),
+            "threads" | "threaded" => {
+                let workers = match arg {
+                    Some(a) => a.parse::<usize>().map_err(|e| format!("workers: {e}"))?,
+                    None => default_workers,
+                };
+                let workers = if workers == 0 {
+                    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+                } else {
+                    workers
+                };
+                Ok(ExecutorSpec::Threads { workers })
+            }
+            other => Err(format!("unknown executor '{other}' (sim|threads[:N])")),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            ExecutorSpec::Sim => Ok(()),
+            ExecutorSpec::Threads { workers } => {
+                if *workers == 0 {
+                    Err("threads executor needs workers >= 1".into())
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+/// Per-run scalar parameters of the (u, v) update, shared by every
+/// backend so they cannot drift apart.
+#[derive(Clone, Copy, Debug)]
+pub struct StepCtx {
+    /// Entropic regularization β.
+    pub beta: f64,
+    /// Step size γ.
+    pub gamma: f64,
+    /// Block count in the θ-sequence: m for the async pair, 1 for DCWB.
+    pub m_theta: usize,
+    /// Own-gradient coefficient variant.
+    pub diag: DiagCoef,
+}
+
+/// One activation of Algorithm 3 (lines 5–8) for node `i` at global
+/// iteration `k`, against an abstract [`Transport`].
+///
+/// Shared verbatim by the simulator (which calls it from its `Activate`
+/// event) and the threaded executor (which calls it from a worker
+/// thread): evaluate the local point (compensated for A²DWB, stale-θ
+/// for A²DWBN), sample a fresh batch, query the dual oracle, broadcast
+/// the gradient, fold any pending neighbor gradients, apply the
+/// Laplacian combine + (u, v) update.
+#[allow(clippy::too_many_arguments)]
+pub fn activate_node(
+    node: &mut WbpNode,
+    i: usize,
+    k: usize,
+    compensated: bool,
+    theta: &mut ThetaSeq,
+    ctx: &StepCtx,
+    degree: usize,
+    measure: &dyn NodeMeasure,
+    rng: &mut Rng64,
+    cost: &mut CostRows,
+    point: &mut [f64],
+    oracle: &mut dyn DualOracle,
+    transport: &mut dyn Transport,
+) {
+    // line 5: evaluation point (compensated vs naive)
+    node.eval_point(theta, k, compensated, point);
+    // line 6: sample M_k, oracle gradient
+    measure.sample_cost_rows(rng, cost);
+    oracle.eval(point, cost, ctx.beta, &mut node.own_grad);
+    // broadcast g_i to neighbors; one shared Arc payload per broadcast
+    transport.broadcast(i, k as u64 + 1, Arc::new(node.own_grad.clone()));
+    // lines 7–8: combine with whatever the mailbox holds + update (u, v)
+    transport.collect(i, node);
+    node.apply_update(theta, k, ctx.m_theta, ctx.gamma, degree, ctx.diag);
+}
+
+/// Algorithm 3 line 1: every node computes its initial gradient at the
+/// zero state and broadcasts it (with whatever fate the backend's
+/// transport assigns to the messages).
+#[allow(clippy::too_many_arguments)]
+pub fn initial_exchange(
+    nodes: &mut [WbpNode],
+    theta: &mut ThetaSeq,
+    measures: &[Box<dyn NodeMeasure>],
+    node_rngs: &mut [Rng64],
+    oracle: &mut dyn DualOracle,
+    cost: &mut CostRows,
+    point: &mut [f64],
+    beta: f64,
+    transport: &mut dyn Transport,
+) {
+    for (i, node) in nodes.iter_mut().enumerate() {
+        node.eval_point(theta, 0, true, point);
+        measures[i].sample_cost_rows(&mut node_rngs[i], cost);
+        oracle.eval(point, cost, beta, &mut node.own_grad);
+        transport.broadcast(i, 0, Arc::new(node.own_grad.clone()));
+    }
+}
+
+/// Run the canonical async-vs-sync comparison on the threaded executor:
+/// A²DWB then DCWB on `workers` threads, same config, same iteration
+/// budget. Returns `(a2dwb_report, dcwb_report)`; wall-clock speedup is
+/// `dcwb.wall_seconds / a2dwb.wall_seconds`.
+///
+/// This is the single definition of the comparison protocol — the
+/// `speedup` CLI subcommand, `examples/threaded_speedup.rs`, and
+/// `benches/exec_threads.rs` all call it, so their numbers can never
+/// drift apart.
+pub fn run_speedup_pair(
+    base: &crate::coordinator::ExperimentConfig,
+    workers: usize,
+) -> Result<
+    (crate::coordinator::ExperimentReport, crate::coordinator::ExperimentReport),
+    String,
+> {
+    let mut cfg = base.clone();
+    cfg.executor = ExecutorSpec::Threads { workers };
+    cfg.algorithm = crate::algo::AlgorithmKind::A2dwb;
+    let a = crate::coordinator::run_experiment(&cfg)?;
+    cfg.algorithm = crate::algo::AlgorithmKind::Dcwb;
+    let s = crate::coordinator::run_experiment(&cfg)?;
+    Ok((a, s))
+}
+
+/// Simulator-side message-fate model: per-link categorical delay draws,
+/// straggler slow-down factors, and iid message drops — the §4 network
+/// law plus the [`FaultModel`] extension, with one RNG stream layout so
+/// the async and sync runtimes see identical draws for identical seeds.
+#[derive(Debug)]
+pub struct NetModel {
+    delays: LinkDelayModel,
+    drop_rng: Rng64,
+    node_factors: Vec<f64>,
+    drop_prob: f64,
+}
+
+impl NetModel {
+    /// The paper-default delay law under `faults`, deterministic in
+    /// `seed` (same stream layout as the pre-refactor runtimes).
+    pub fn paper_default(m: usize, seed: u64, faults: &FaultModel) -> Self {
+        Self {
+            delays: LinkDelayModel::paper_default(m, seed),
+            drop_rng: Rng64::new(seed ^ 0x4452_4F50),
+            node_factors: faults.node_factors(m, seed),
+            drop_prob: faults.drop_prob,
+        }
+    }
+
+    /// Straggler delay multiplier of node `i`.
+    pub fn factor(&self, i: usize) -> f64 {
+        self.node_factors[i]
+    }
+
+    /// Fate of one asynchronous transmission src → dst: `None` if the
+    /// message is lost on the wire (the mailbox keeps the previous
+    /// gradient), otherwise the effective link delay.
+    pub fn async_fate(&mut self, src: usize, dst: usize) -> Option<f64> {
+        if self.drop_prob > 0.0 && self.drop_rng.uniform() < self.drop_prob {
+            return None;
+        }
+        let factor = self.node_factors[src].max(self.node_factors[dst]);
+        Some(self.delays.draw(src, dst) * factor)
+    }
+
+    /// One barrier-mode transmission src → dst: the synchronous
+    /// baseline retransmits until delivery, so a drop adds a fresh
+    /// delay draw. Returns (total time, transmissions used).
+    pub fn barrier_transmission(&mut self, src: usize, dst: usize) -> (f64, u64) {
+        let factor = self.node_factors[src].max(self.node_factors[dst]);
+        let mut t = self.delays.draw(src, dst) * factor;
+        let mut transmissions = 1u64;
+        while self.drop_prob > 0.0 && self.drop_rng.uniform() < self.drop_prob {
+            t += self.delays.draw(src, dst) * factor;
+            transmissions += 1;
+        }
+        (t, transmissions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executor_parse_roundtrip() {
+        assert_eq!(ExecutorSpec::parse("sim", 4).unwrap(), ExecutorSpec::Sim);
+        assert_eq!(
+            ExecutorSpec::parse("threads:8", 4).unwrap(),
+            ExecutorSpec::Threads { workers: 8 }
+        );
+        assert_eq!(
+            ExecutorSpec::parse("threads", 4).unwrap(),
+            ExecutorSpec::Threads { workers: 4 }
+        );
+        assert!(ExecutorSpec::parse("gpu", 4).is_err());
+        assert!(ExecutorSpec::parse("threads:x", 4).is_err());
+        // workers 0 resolves to available parallelism (>= 1)
+        match ExecutorSpec::parse("threads:0", 0).unwrap() {
+            ExecutorSpec::Threads { workers } => assert!(workers >= 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn executor_validate() {
+        assert!(ExecutorSpec::Sim.validate().is_ok());
+        assert!(ExecutorSpec::Threads { workers: 2 }.validate().is_ok());
+        assert!(ExecutorSpec::Threads { workers: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn net_model_async_fate_matches_legacy_stream_layout() {
+        // The refactor contract: NetModel must draw from the same
+        // streams in the same order as the pre-refactor inline code.
+        let m = 4;
+        let seed = 9;
+        let faults = FaultModel { straggler_fraction: 0.0, straggler_slowdown: 1.0, drop_prob: 0.0 };
+        let mut net = NetModel::paper_default(m, seed, &faults);
+        let mut legacy = LinkDelayModel::paper_default(m, seed);
+        for (src, dst) in [(0usize, 1usize), (1, 2), (0, 1), (3, 0)] {
+            let got = net.async_fate(src, dst).unwrap();
+            let want = legacy.draw(src, dst);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn net_model_drops_and_retransmits() {
+        let faults = FaultModel {
+            straggler_fraction: 0.0,
+            straggler_slowdown: 1.0,
+            drop_prob: 0.5,
+        };
+        let mut net = NetModel::paper_default(3, 7, &faults);
+        let mut dropped = 0;
+        for _ in 0..200 {
+            if net.async_fate(0, 1).is_none() {
+                dropped += 1;
+            }
+        }
+        assert!((50..150).contains(&dropped), "drop count {dropped}");
+        // barrier mode never loses the message, it pays time instead
+        let mut total_tx = 0u64;
+        for _ in 0..200 {
+            let (t, tx) = net.barrier_transmission(0, 1);
+            assert!(t >= 0.2);
+            total_tx += tx;
+        }
+        assert!(total_tx > 250, "retransmissions expected, got {total_tx}");
+    }
+
+    #[test]
+    fn straggler_factor_scales_delay() {
+        let faults = FaultModel {
+            straggler_fraction: 1.0,
+            straggler_slowdown: 10.0,
+            drop_prob: 0.0,
+        };
+        let mut net = NetModel::paper_default(3, 1, &faults);
+        let d = net.async_fate(0, 1).unwrap();
+        assert!(d >= 2.0, "10x straggler factor must scale the delay: {d}");
+    }
+}

@@ -1,0 +1,222 @@
+//! The message plane shared by every execution backend.
+//!
+//! [`Transport`] is the seam between the node-local state machine
+//! (`crate::algo::wbp`) and the network substrate. Algorithm 3 needs
+//! exactly two communication capabilities from a node's point of view:
+//!
+//! * **broadcast** — send my freshest gradient to every neighbor;
+//! * **collect** — fold whatever neighbor gradients have arrived into my
+//!   mailbox before the Laplacian combine.
+//!
+//! The discrete-event simulator implements `broadcast` by scheduling
+//! delayed `Deliver` events (its event loop pushes them into node
+//! mailboxes, so `collect` is a no-op there), while the threaded
+//! executor implements both against [`MailboxGrid`] — one
+//! freshest-wins slot per directed edge, the concurrent analogue of the
+//! simulator's keep-freshest mailbox.
+//!
+//! [`FreshestSlot`] holds `(stamp, Arc<Vec<f64>>)` behind a mutex that
+//! is only ever held to swap or clone the `Arc` — never while copying
+//! gradient data — so writers and readers exchange an O(1) pointer, not
+//! an O(n) payload, and a slow reader can never make a writer wait for
+//! a data copy. This is what makes the barrier-free modes barrier-free
+//! in wall-clock terms: publishing a gradient costs the same whether
+//! the receiver is keeping up or stalled.
+
+use std::sync::{Arc, Mutex};
+
+use crate::algo::wbp::WbpNode;
+use crate::graph::Graph;
+
+/// Backend-agnostic gradient exchange for one experiment run.
+///
+/// `stamp` is the iteration the gradient was computed at (0 for the
+/// initial exchange, `k + 1` for activation `k`); receivers keep only
+/// the freshest stamp per neighbor, which makes delivery idempotent and
+/// out-of-order safe on every backend.
+pub trait Transport {
+    /// Send `grad` from node `src` toward all of its neighbors.
+    fn broadcast(&mut self, src: usize, stamp: u64, grad: Arc<Vec<f64>>);
+
+    /// Fold pending neighbor gradients into `node`'s mailbox. Pull-based
+    /// backends (threads) read their slots here; push-based backends
+    /// (the event-driven simulator) deliver from their event loop and
+    /// treat this as a no-op.
+    fn collect(&mut self, dst: usize, node: &mut WbpNode);
+}
+
+/// One freshest-wins mailbox slot for a single directed edge.
+///
+/// Single writer (the edge's source node), single reader (its
+/// destination); the lock guards only an `(u64, Arc)` swap.
+#[derive(Debug)]
+pub struct FreshestSlot {
+    inner: Mutex<(u64, Arc<Vec<f64>>)>,
+}
+
+impl FreshestSlot {
+    pub fn new(n: usize) -> Self {
+        Self { inner: Mutex::new((0, Arc::new(vec![0.0; n]))) }
+    }
+
+    /// Install `grad` if it is at least as fresh as the current content.
+    pub fn publish(&self, stamp: u64, grad: &Arc<Vec<f64>>) {
+        let mut slot = self.inner.lock().unwrap();
+        if stamp >= slot.0 {
+            *slot = (stamp, grad.clone());
+        }
+    }
+
+    /// Read the current (stamp, gradient) pair.
+    pub fn load(&self) -> (u64, Arc<Vec<f64>>) {
+        let slot = self.inner.lock().unwrap();
+        (slot.0, slot.1.clone())
+    }
+}
+
+/// The full m-node mailbox fabric: one [`FreshestSlot`] per directed
+/// edge, with routing precomputed so publishing never searches neighbor
+/// lists on the hot path.
+///
+/// Slot layout matches [`WbpNode::mailbox`]: the slots for destination
+/// `j` sit at `in_offset[j] .. in_offset[j] + deg(j)`, ordered by `j`'s
+/// sorted neighbor list, so `collect` can hand slot `s` straight to
+/// `node.deliver(s, ..)`.
+#[derive(Debug)]
+pub struct MailboxGrid {
+    slots: Vec<FreshestSlot>,
+    in_offset: Vec<usize>,
+    /// For each source node, the flat slot indices of its outgoing
+    /// per-neighbor slots (in neighbor order).
+    out_routes: Vec<Vec<usize>>,
+}
+
+impl MailboxGrid {
+    pub fn new(graph: &Graph, n: usize) -> Self {
+        let m = graph.num_nodes();
+        let mut in_offset = Vec::with_capacity(m + 1);
+        let mut acc = 0usize;
+        for j in 0..m {
+            in_offset.push(acc);
+            acc += graph.degree(j);
+        }
+        in_offset.push(acc);
+        let slots = (0..acc).map(|_| FreshestSlot::new(n)).collect();
+        let out_routes = (0..m)
+            .map(|i| {
+                graph
+                    .neighbors(i)
+                    .iter()
+                    .map(|&j| {
+                        let slot = graph
+                            .neighbors(j)
+                            .binary_search(&i)
+                            .expect("asymmetric adjacency");
+                        in_offset[j] + slot
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { slots, in_offset, out_routes }
+    }
+
+    /// Publish `grad` to every outgoing slot of `src`; returns the
+    /// number of messages sent.
+    pub fn publish(&self, src: usize, stamp: u64, grad: &Arc<Vec<f64>>) -> u64 {
+        for &idx in &self.out_routes[src] {
+            self.slots[idx].publish(stamp, grad);
+        }
+        self.out_routes[src].len() as u64
+    }
+
+    /// Fold `dst`'s incoming slots into its node mailbox.
+    pub fn collect(&self, dst: usize, node: &mut WbpNode) {
+        let lo = self.in_offset[dst];
+        let hi = self.in_offset[dst + 1];
+        for (s, slot) in self.slots[lo..hi].iter().enumerate() {
+            let (stamp, grad) = slot.load();
+            node.deliver(s, stamp, &grad);
+        }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// [`Transport`] over a shared [`MailboxGrid`] — the threaded
+/// executor's message plane. Each worker owns one (they are cheap);
+/// the grid itself is shared behind a reference.
+pub struct ThreadedTransport<'a> {
+    grid: &'a MailboxGrid,
+    /// Messages sent through this transport instance.
+    pub messages: u64,
+}
+
+impl<'a> ThreadedTransport<'a> {
+    pub fn new(grid: &'a MailboxGrid) -> Self {
+        Self { grid, messages: 0 }
+    }
+}
+
+impl Transport for ThreadedTransport<'_> {
+    fn broadcast(&mut self, src: usize, stamp: u64, grad: Arc<Vec<f64>>) {
+        self.messages += self.grid.publish(src, stamp, &grad);
+    }
+
+    fn collect(&mut self, dst: usize, node: &mut WbpNode) {
+        self.grid.collect(dst, node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TopologySpec;
+
+    #[test]
+    fn slot_keeps_freshest() {
+        let slot = FreshestSlot::new(2);
+        slot.publish(3, &Arc::new(vec![3.0, 3.0]));
+        slot.publish(1, &Arc::new(vec![1.0, 1.0])); // stale: ignored
+        let (stamp, g) = slot.load();
+        assert_eq!(stamp, 3);
+        assert_eq!(*g, vec![3.0, 3.0]);
+        slot.publish(3, &Arc::new(vec![9.0, 9.0])); // equal stamp: replaces
+        assert_eq!(*slot.load().1, vec![9.0, 9.0]);
+    }
+
+    #[test]
+    fn grid_routes_match_mailbox_slots() {
+        let graph = Graph::build(5, TopologySpec::Cycle);
+        let grid = MailboxGrid::new(&graph, 3);
+        assert_eq!(grid.num_slots(), 2 * graph.num_edges());
+        // node 0 broadcasts; neighbors 1 and 4 must see it in the slot
+        // matching 0's position in their sorted neighbor lists
+        let g = Arc::new(vec![7.0, 8.0, 9.0]);
+        assert_eq!(grid.publish(0, 5, &g), 2);
+        for &j in graph.neighbors(0) {
+            let mut node = WbpNode::new(3, graph.degree(j));
+            grid.collect(j, &mut node);
+            let s = graph.neighbors(j).binary_search(&0).unwrap();
+            assert_eq!(node.mailbox[s].0, 5);
+            assert_eq!(node.mailbox[s].1, vec![7.0, 8.0, 9.0]);
+        }
+    }
+
+    #[test]
+    fn threaded_transport_counts_messages() {
+        let graph = Graph::build(4, TopologySpec::Complete);
+        let grid = MailboxGrid::new(&graph, 1);
+        let mut t = ThreadedTransport::new(&grid);
+        t.broadcast(0, 1, Arc::new(vec![1.0]));
+        t.broadcast(2, 1, Arc::new(vec![2.0]));
+        assert_eq!(t.messages, 6);
+        let mut node = WbpNode::new(1, 3);
+        t.collect(1, &mut node);
+        // neighbors of 1 are [0, 2, 3]; slots 0 and 1 carry gradients
+        assert_eq!(node.mailbox[0].1, vec![1.0]);
+        assert_eq!(node.mailbox[1].1, vec![2.0]);
+        assert_eq!(node.mailbox[2].1, vec![0.0]);
+    }
+}

@@ -17,8 +17,26 @@
 //!   measures, metrics, CLI, bench harness) built from scratch.
 //!
 //! Python never runs on the request path: the Rust runtime executes the
-//! AOT artifacts through PJRT (`runtime`), or uses a bit-faithful native
-//! oracle (`ot`) cross-validated against them.
+//! AOT artifacts through PJRT (`runtime`, behind the `pjrt` feature), or
+//! uses a bit-faithful native oracle (`ot`) cross-validated against them.
+//!
+//! ## Execution backends
+//!
+//! Every experiment runs on one of two interchangeable backends behind
+//! [`exec::ExecutorSpec`]:
+//!
+//! * **`Sim`** (default) — the discrete-event simulator: virtual time,
+//!   bit-reproducible, the paper's §4 methodology. Use it for
+//!   reproduction, sweeps, and anything that must be deterministic.
+//! * **`Threads { workers }`** — the real-thread executor
+//!   ([`exec::threaded`]): each node is a unit of work on an OS thread
+//!   pool, gradients move through freshest-wins mailbox slots, DCWB
+//!   pays a real [`std::sync::Barrier`] per round while A²DWB never
+//!   waits. Use it to validate the paper's waiting-overhead claim on
+//!   actual hardware (`a2dwb speedup`, `benches/exec_threads.rs`).
+//!
+//! Both drive the same node-local state machine (`algo::wbp`) through
+//! the same [`exec::Transport`] seam, so the algorithms exist once.
 //!
 //! ## Quick start
 //!
@@ -39,6 +57,7 @@ pub mod algo;
 pub mod bench_util;
 pub mod cli;
 pub mod coordinator;
+pub mod exec;
 pub mod graph;
 pub mod linalg;
 pub mod measures;
@@ -56,6 +75,7 @@ pub mod prelude {
     pub use crate::coordinator::{
         run_experiment, ExperimentConfig, ExperimentReport, FaultModel, TaskSpec,
     };
+    pub use crate::exec::ExecutorSpec;
     pub use crate::graph::{Graph, TopologySpec};
     pub use crate::measures::MeasureSpec;
     pub use crate::metrics::Series;

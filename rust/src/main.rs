@@ -3,8 +3,10 @@
 //!
 //! ```text
 //! a2dwb gaussian --algorithm a2dwb --topology cycle --nodes 50 --duration 30
+//! a2dwb gaussian --executor threads --workers 4 --algorithm a2dwb
 //! a2dwb mnist    --digit 3 --topology er:0.1 --nodes 50
 //! a2dwb sweep    --nodes 30 --duration 20          # all algos × topologies
+//! a2dwb speedup  --workers 4 --nodes 16            # async vs sync wall-clock
 //! a2dwb oracle   --backend pjrt --m 32 --n 100     # oracle micro-check
 //! a2dwb inspect  --topology star --nodes 100       # graph spectral info
 //! ```
@@ -12,13 +14,15 @@
 use a2dwb::algo::wbp::DiagCoef;
 use a2dwb::cli::Args;
 use a2dwb::coordinator::{run_experiment, ExperimentConfig};
+use a2dwb::exec::ExecutorSpec;
 use a2dwb::graph::{Graph, TopologySpec};
 use a2dwb::measures::MeasureSpec;
 use a2dwb::metrics::{ascii_summary, write_csv};
 use a2dwb::ot::OracleBackendSpec;
 use a2dwb::prelude::AlgorithmKind;
 
-const SUBCOMMANDS: &[&str] = &["gaussian", "mnist", "sweep", "oracle", "inspect"];
+const SUBCOMMANDS: &[&str] =
+    &["gaussian", "mnist", "sweep", "speedup", "oracle", "inspect"];
 
 fn main() {
     let args = match Args::from_env() {
@@ -32,6 +36,7 @@ fn main() {
         Some("gaussian") => cmd_experiment(&args, false),
         Some("mnist") => cmd_experiment(&args, true),
         Some("sweep") => cmd_sweep(&args),
+        Some("speedup") => cmd_speedup(&args),
         Some("oracle") => cmd_oracle(&args),
         Some("inspect") => cmd_inspect(&args),
         _ => {
@@ -39,6 +44,7 @@ fn main() {
             eprintln!("common options:");
             eprintln!("  --nodes N --topology T --algorithm A --duration S --seed K");
             eprintln!("  --beta B --gamma-scale G --samples M --backend native|pjrt");
+            eprintln!("  --executor sim|threads --workers W  (execution backend)");
             eprintln!("  --out results/run.csv  (CSV of the metric series)");
             2
         }
@@ -82,10 +88,87 @@ fn config_from_args(args: &Args, mnist: bool) -> Result<ExperimentConfig, String
         },
         other => return Err(format!("unknown backend '{other}'")),
     };
+    let workers = args.get("workers", 0usize)?;
+    cfg.executor = ExecutorSpec::parse(&args.get_str("executor", "sim"), workers)?;
     if args.has_flag("paper-literal-diag") {
         cfg.diag = DiagCoef::PaperLiteral;
     }
     Ok(cfg)
+}
+
+/// Wall-clock speedup of A²DWB over DCWB on the threaded executor at an
+/// equal iteration budget — the paper's waiting-overhead claim on real
+/// threads. The simulator's virtual-time verdict is printed alongside.
+fn cmd_speedup(args: &Args) -> i32 {
+    let mut cfg = match config_from_args(args, false) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    // CI-friendly scale unless overridden; a small per-activation
+    // compute cost makes the barrier's waiting overhead visible.
+    let scale = || -> Result<(usize, f64, usize), String> {
+        Ok((
+            args.get("nodes", 16usize)?,
+            args.get("duration", 4.0)?,
+            args.get("workers", 4usize)?,
+        ))
+    };
+    let (nodes, duration, workers_arg) = match scale() {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    cfg.nodes = nodes;
+    cfg.duration = duration;
+    if args.get_opt("compute-time").is_none() {
+        cfg.compute_time = 0.0005;
+    }
+    let workers = match cfg.executor {
+        ExecutorSpec::Threads { workers } => workers,
+        ExecutorSpec::Sim => workers_arg.max(1),
+    };
+
+    println!(
+        "== wall-clock speedup: a2dwb vs dcwb, {} nodes, {} workers, equal budget ==",
+        cfg.nodes, workers
+    );
+    let (a, s) = match a2dwb::exec::run_speedup_pair(&cfg, workers) {
+        Ok(pair) => pair,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("{}", a.summary());
+    println!("{}", s.summary());
+    println!(
+        "SPEEDUP threads workers={workers} a2dwb={:.3}s dcwb={:.3}s -> {:.2}x \
+         (dual: a2dwb {:.6} vs dcwb {:.6})",
+        a.wall_seconds,
+        s.wall_seconds,
+        s.wall_seconds / a.wall_seconds.max(1e-12),
+        a.final_dual_objective(),
+        s.final_dual_objective(),
+    );
+    // simulator reference on the same configuration (virtual time)
+    cfg.executor = ExecutorSpec::Sim;
+    cfg.compute_time = 0.0;
+    for alg in [AlgorithmKind::A2dwb, AlgorithmKind::Dcwb] {
+        cfg.algorithm = alg;
+        match run_experiment(&cfg) {
+            Ok(r) => println!("sim reference: {}", r.summary()),
+            Err(e) => {
+                eprintln!("error [sim {}]: {e}", alg.name());
+                return 1;
+            }
+        }
+    }
+    0
 }
 
 fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
@@ -110,7 +193,12 @@ fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
             println!(
                 "{}",
                 ascii_summary(
-                    &[&report.dual_objective, &report.consensus, &report.primal_spread],
+                    &[
+                        &report.dual_objective,
+                        &report.consensus,
+                        &report.primal_spread,
+                        &report.dual_wall,
+                    ],
                     48
                 )
             );
@@ -123,6 +211,14 @@ fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
                     return 1;
                 }
                 println!("wrote {out}");
+                // the wall-clock axis lives in its own file: its time
+                // column is seconds of real time, not virtual time
+                let wall_out = format!("{out}.wall.csv");
+                if let Err(e) = write_csv(&wall_out, &[&report.dual_wall]) {
+                    eprintln!("error writing {wall_out}: {e}");
+                    return 1;
+                }
+                println!("wrote {wall_out}");
             }
             0
         }

@@ -132,7 +132,7 @@ pub enum OracleBackendSpec {
 }
 
 impl OracleBackendSpec {
-    pub fn build(&self, m: usize, n: usize) -> anyhow::Result<Box<dyn DualOracle>> {
+    pub fn build(&self, m: usize, n: usize) -> Result<Box<dyn DualOracle>, String> {
         match self {
             OracleBackendSpec::Native => Ok(Box::new(NativeOracle::default())),
             OracleBackendSpec::Pjrt { artifacts_dir } => Ok(Box::new(

@@ -5,24 +5,24 @@
 //! format xla_extension 0.5.1 accepts; serialized jax≥0.5 protos are
 //! rejected, see DESIGN.md). This module:
 //!
-//! * parses `artifacts/manifest.txt`,
+//! * parses `artifacts/manifest.txt` (always available, std-only),
 //! * compiles the requested shape variant on the PJRT CPU client
-//!   (`xla` crate 0.1.6),
+//!   (`xla` crate 0.1.6) **when the `pjrt` cargo feature is enabled**,
 //! * exposes it behind the same [`DualOracle`] trait as the native
 //!   backend, so the coordinator is backend-agnostic.
 //!
+//! The `xla` crate is an FFI dependency that cannot be assumed present
+//! in hermetic/offline builds, so the default build compiles a stub
+//! [`PjrtOracle`] whose `load` returns an actionable error; every
+//! caller already handles that error path (the oracle CLI subcommand,
+//! `benches/oracle.rs`, and the parity suite, which is additionally
+//! gated on the feature). Enable with `--features pjrt` after adding
+//! the `xla` crate to `rust/Cargo.toml`.
+//!
 //! One `PjRtClient` per process (cheap, but compile is not): compiled
-//! executables are cached per (M, n) in [`ArtifactCache`].
+//! executables are cached per (M, n) in `ArtifactCache`.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-
-use anyhow::{anyhow, bail, Context, Result};
-
-use crate::measures::CostRows;
-use crate::ot::DualOracle;
+use std::path::Path;
 
 /// Parsed `manifest.txt` entry.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -34,10 +34,10 @@ pub struct ManifestEntry {
 }
 
 /// Read `artifacts/manifest.txt` (lines: `kind M n filename`).
-pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
+pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>, String> {
     let path = dir.join("manifest.txt");
     let text = std::fs::read_to_string(&path)
-        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        .map_err(|e| format!("reading {path:?} — run `make artifacts` first: {e}"))?;
     let mut out = Vec::new();
     for line in text.lines() {
         let line = line.trim();
@@ -46,175 +46,256 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
         }
         let parts: Vec<&str> = line.split_whitespace().collect();
         if parts.len() != 4 {
-            bail!("malformed manifest line: {line:?}");
+            return Err(format!("malformed manifest line: {line:?}"));
         }
         out.push(ManifestEntry {
             kind: parts[0].to_string(),
             shape: parts[1].to_string(),
-            n: parts[2].parse().context("manifest n")?,
+            n: parts[2]
+                .parse()
+                .map_err(|e| format!("manifest n in {line:?}: {e}"))?,
             file: parts[3].to_string(),
         });
     }
     Ok(out)
 }
 
-thread_local! {
-    /// Per-thread PJRT CPU client (the xla handles are thread-affine).
-    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
-}
-
-/// The thread's PJRT CPU client (constructed on first use).
-fn thread_client() -> Result<Rc<xla::PjRtClient>> {
-    CLIENT.with(|slot| {
-        let mut slot = slot.borrow_mut();
-        if slot.is_none() {
-            let client =
-                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-            *slot = Some(Rc::new(client));
-        }
-        Ok(slot.as_ref().unwrap().clone())
-    })
-}
-
-/// Cache of compiled executables keyed by artifact file name.
-pub struct ArtifactCache {
-    dir: PathBuf,
-    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl ArtifactCache {
-    pub fn new(dir: impl Into<PathBuf>) -> Self {
-        Self { dir: dir.into(), compiled: RefCell::new(HashMap::new()) }
-    }
-
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Compile (or fetch cached) the artifact at `file`.
-    pub fn get(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.compiled.borrow().get(file) {
-            return Ok(exe.clone());
-        }
-        let path = self.dir.join(file);
-        let client = thread_client()?;
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {file}: {e}"))?,
-        );
-        self.compiled
-            .borrow_mut()
-            .insert(file.to_string(), exe.clone());
-        Ok(exe)
-    }
-}
-
-/// PJRT-backed [`DualOracle`] for one fixed (M, n) shape.
-pub struct PjrtOracle {
-    exe: Rc<xla::PjRtLoadedExecutable>,
+/// Locate the manifest entry for an `oracle` artifact of shape (M, n).
+pub fn find_oracle_entry(
+    manifest: &[ManifestEntry],
     m: usize,
     n: usize,
-    // staging buffers: f64 state → f32 literals
-    eta_f32: Vec<f32>,
-    cost_f32: Vec<f32>,
+) -> Result<&ManifestEntry, String> {
+    let want_shape = m.to_string();
+    manifest
+        .iter()
+        .find(|e| e.kind == "oracle" && e.shape == want_shape && e.n == n)
+        .ok_or_else(|| {
+            let have: Vec<String> = manifest
+                .iter()
+                .filter(|e| e.kind == "oracle")
+                .map(|e| format!("(M={}, n={})", e.shape, e.n))
+                .collect();
+            format!(
+                "no oracle artifact for (M={m}, n={n}); available: {have:?}. \
+                 Re-run `python -m compile.aot --shapes {m}x{n}`"
+            )
+        })
 }
 
-impl PjrtOracle {
-    /// Load the `oracle_m{M}_n{n}` artifact from `dir`.
-    pub fn load(dir: impl AsRef<Path>, m: usize, n: usize) -> Result<Self> {
-        let dir = dir.as_ref();
-        let manifest = read_manifest(dir)?;
-        let want_shape = m.to_string();
-        let entry = manifest
-            .iter()
-            .find(|e| e.kind == "oracle" && e.shape == want_shape && e.n == n)
-            .ok_or_else(|| {
-                let have: Vec<String> = manifest
-                    .iter()
-                    .filter(|e| e.kind == "oracle")
-                    .map(|e| format!("(M={}, n={})", e.shape, e.n))
-                    .collect();
-                anyhow!(
-                    "no oracle artifact for (M={m}, n={n}); available: {have:?}. \
-                     Re-run `python -m compile.aot --shapes {m}x{n}`"
-                )
-            })?;
-        let cache = ArtifactCache::new(dir);
-        let exe = cache.get(&entry.file)?;
-        Ok(Self {
-            exe,
-            m,
-            n,
-            eta_f32: vec![0.0; n],
-            cost_f32: vec![0.0; m * n],
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
+
+    use super::{find_oracle_entry, read_manifest};
+    use crate::measures::CostRows;
+    use crate::ot::DualOracle;
+
+    thread_local! {
+        /// Per-thread PJRT CPU client (the xla handles are thread-affine).
+        static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
+    }
+
+    /// The thread's PJRT CPU client (constructed on first use).
+    fn thread_client() -> Result<Rc<xla::PjRtClient>, String> {
+        CLIENT.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if slot.is_none() {
+                let client = xla::PjRtClient::cpu()
+                    .map_err(|e| format!("PJRT CPU client: {e}"))?;
+                *slot = Some(Rc::new(client));
+            }
+            Ok(slot.as_ref().unwrap().clone())
         })
     }
 
-    /// Execute the artifact once. Exposed for benches/tests.
-    pub fn eval_raw(
-        &mut self,
-        eta: &[f64],
-        cost: &[f64],
-        beta: f64,
-    ) -> Result<(Vec<f32>, f32)> {
-        assert_eq!(eta.len(), self.n);
-        assert_eq!(cost.len(), self.m * self.n);
-        for (dst, src) in self.eta_f32.iter_mut().zip(eta) {
-            *dst = *src as f32;
-        }
-        for (dst, src) in self.cost_f32.iter_mut().zip(cost) {
-            *dst = *src as f32;
-        }
-        let eta_lit = xla::Literal::vec1(&self.eta_f32);
-        let cost_lit = xla::Literal::vec1(&self.cost_f32)
-            .reshape(&[self.m as i64, self.n as i64])
-            .map_err(|e| anyhow!("reshape: {e}"))?;
-        let beta_lit = xla::Literal::vec1(&[beta as f32]);
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[eta_lit, cost_lit, beta_lit])
-            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e}"))?;
-        let (grad_lit, val_lit) =
-            result.to_tuple2().map_err(|e| anyhow!("tuple2: {e}"))?;
-        let grad = grad_lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
-        let val = val_lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0];
-        Ok((grad, val))
+    /// Cache of compiled executables keyed by artifact file name.
+    pub struct ArtifactCache {
+        dir: PathBuf,
+        compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     }
 
-    pub fn shape(&self) -> (usize, usize) {
-        (self.m, self.n)
+    impl ArtifactCache {
+        pub fn new(dir: impl Into<PathBuf>) -> Self {
+            Self { dir: dir.into(), compiled: RefCell::new(HashMap::new()) }
+        }
+
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// Compile (or fetch cached) the artifact at `file`.
+        pub fn get(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, String> {
+            if let Some(exe) = self.compiled.borrow().get(file) {
+                return Ok(exe.clone());
+            }
+            let path = self.dir.join(file);
+            let client = thread_client()?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| format!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Rc::new(
+                client
+                    .compile(&comp)
+                    .map_err(|e| format!("compiling {file}: {e}"))?,
+            );
+            self.compiled
+                .borrow_mut()
+                .insert(file.to_string(), exe.clone());
+            Ok(exe)
+        }
+    }
+
+    /// PJRT-backed [`DualOracle`] for one fixed (M, n) shape.
+    pub struct PjrtOracle {
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        m: usize,
+        n: usize,
+        // staging buffers: f64 state → f32 literals
+        eta_f32: Vec<f32>,
+        cost_f32: Vec<f32>,
+    }
+
+    impl PjrtOracle {
+        /// Load the `oracle_m{M}_n{n}` artifact from `dir`.
+        pub fn load(dir: impl AsRef<Path>, m: usize, n: usize) -> Result<Self, String> {
+            let dir = dir.as_ref();
+            let manifest = read_manifest(dir)?;
+            let entry = find_oracle_entry(&manifest, m, n)?;
+            let cache = ArtifactCache::new(dir);
+            let exe = cache.get(&entry.file)?;
+            Ok(Self {
+                exe,
+                m,
+                n,
+                eta_f32: vec![0.0; n],
+                cost_f32: vec![0.0; m * n],
+            })
+        }
+
+        /// Execute the artifact once. Exposed for benches/tests.
+        pub fn eval_raw(
+            &mut self,
+            eta: &[f64],
+            cost: &[f64],
+            beta: f64,
+        ) -> Result<(Vec<f32>, f32), String> {
+            assert_eq!(eta.len(), self.n);
+            assert_eq!(cost.len(), self.m * self.n);
+            for (dst, src) in self.eta_f32.iter_mut().zip(eta) {
+                *dst = *src as f32;
+            }
+            for (dst, src) in self.cost_f32.iter_mut().zip(cost) {
+                *dst = *src as f32;
+            }
+            let eta_lit = xla::Literal::vec1(&self.eta_f32);
+            let cost_lit = xla::Literal::vec1(&self.cost_f32)
+                .reshape(&[self.m as i64, self.n as i64])
+                .map_err(|e| format!("reshape: {e}"))?;
+            let beta_lit = xla::Literal::vec1(&[beta as f32]);
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[eta_lit, cost_lit, beta_lit])
+                .map_err(|e| format!("execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("to_literal: {e}"))?;
+            let (grad_lit, val_lit) =
+                result.to_tuple2().map_err(|e| format!("tuple2: {e}"))?;
+            let grad = grad_lit.to_vec::<f32>().map_err(|e| format!("{e}"))?;
+            let val = val_lit.to_vec::<f32>().map_err(|e| format!("{e}"))?[0];
+            Ok((grad, val))
+        }
+
+        pub fn shape(&self) -> (usize, usize) {
+            (self.m, self.n)
+        }
+    }
+
+    impl DualOracle for PjrtOracle {
+        fn eval(
+            &mut self,
+            eta: &[f64],
+            cost: &CostRows,
+            beta: f64,
+            grad: &mut [f64],
+        ) -> f64 {
+            assert_eq!(cost.m, self.m, "PJRT artifact is fixed-shape: M mismatch");
+            assert_eq!(cost.n, self.n, "PJRT artifact is fixed-shape: n mismatch");
+            let (g, v) = self
+                .eval_raw(eta, &cost.data, beta)
+                .expect("PJRT oracle execution failed");
+            for (dst, src) in grad.iter_mut().zip(&g) {
+                *dst = *src as f64;
+            }
+            v as f64
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
 
-impl DualOracle for PjrtOracle {
-    fn eval(
-        &mut self,
-        eta: &[f64],
-        cost: &CostRows,
-        beta: f64,
-        grad: &mut [f64],
-    ) -> f64 {
-        assert_eq!(cost.m, self.m, "PJRT artifact is fixed-shape: M mismatch");
-        assert_eq!(cost.n, self.n, "PJRT artifact is fixed-shape: n mismatch");
-        let (g, v) = self
-            .eval_raw(eta, &cost.data, beta)
-            .expect("PJRT oracle execution failed");
-        for (dst, src) in grad.iter_mut().zip(&g) {
-            *dst = *src as f64;
-        }
-        v as f64
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{ArtifactCache, PjrtOracle};
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use std::path::Path;
+
+    use super::{find_oracle_entry, read_manifest};
+    use crate::measures::CostRows;
+    use crate::ot::DualOracle;
+
+    /// Stub standing in for the PJRT backend when the crate is built
+    /// without the `pjrt` feature (the default, so offline builds never
+    /// need the `xla` FFI crate). `load` validates the artifact request
+    /// against the manifest exactly like the real backend — same error
+    /// text for a missing shape — then reports that PJRT execution is
+    /// unavailable in this build.
+    pub struct PjrtOracle {
+        m: usize,
+        n: usize,
     }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+    impl PjrtOracle {
+        pub fn load(dir: impl AsRef<Path>, m: usize, n: usize) -> Result<Self, String> {
+            let manifest = read_manifest(dir.as_ref())?;
+            find_oracle_entry(&manifest, m, n)?;
+            Err(format!(
+                "artifact for (M={m}, n={n}) found, but this binary was built \
+                 without the `pjrt` feature; rebuild with `--features pjrt` \
+                 (requires the xla crate) or use the native backend"
+            ))
+        }
+
+        pub fn shape(&self) -> (usize, usize) {
+            (self.m, self.n)
+        }
+    }
+
+    impl DualOracle for PjrtOracle {
+        fn eval(
+            &mut self,
+            _eta: &[f64],
+            _cost: &CostRows,
+            _beta: f64,
+            _grad: &mut [f64],
+        ) -> f64 {
+            unreachable!("stub PjrtOracle cannot be constructed")
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-stub"
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::PjrtOracle;
 
 #[cfg(test)]
 mod tests {
@@ -253,5 +334,19 @@ mod tests {
         assert!(read_manifest(&dir).is_err());
     }
 
-    // Execution tests live in rust/tests/pjrt_parity.rs (need artifacts).
+    #[test]
+    fn missing_shape_error_is_actionable() {
+        let entries = vec![ManifestEntry {
+            kind: "oracle".into(),
+            shape: "8".into(),
+            n: 100,
+            file: "oracle_m8_n100.hlo.txt".into(),
+        }];
+        let err = find_oracle_entry(&entries, 7, 13).unwrap_err();
+        assert!(err.contains("compile.aot"), "unhelpful error: {err}");
+        assert!(find_oracle_entry(&entries, 8, 100).is_ok());
+    }
+
+    // Execution tests live in rust/tests/pjrt_parity.rs (need artifacts
+    // and the `pjrt` feature).
 }

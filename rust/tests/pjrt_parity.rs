@@ -3,9 +3,12 @@
 //! oracle to f32 precision. This is the end-to-end proof that the
 //! three-layer stack computes the same mathematics.
 //!
-//! Requires `make artifacts`; tests are skipped (with a loud message)
-//! when the artifacts directory is absent so `cargo test` stays green in
-//! a fresh checkout.
+//! Requires `make artifacts` **and** building with `--features pjrt`
+//! (the whole file is compiled out otherwise — the default build ships
+//! a stub backend); tests are additionally skipped (with a loud
+//! message) when the artifacts directory is absent so `cargo test`
+//! stays green in a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use a2dwb::measures::CostRows;
 use a2dwb::ot::{dual_oracle, DualOracle};
