@@ -7,8 +7,6 @@
 //! node at 4x), so the measured async/sync gap is the barrier's waiting
 //! overhead, not oracle arithmetic.
 
-use std::io::Write;
-
 use a2dwb::graph::TopologySpec;
 use a2dwb::prelude::*;
 
@@ -99,13 +97,5 @@ fn main() {
         ));
     }
     json.push_str("  ]\n}\n");
-
-    // repo root = parent of the package dir, independent of cwd
-    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .expect("package has a parent dir")
-        .join("BENCH_exec.json");
-    let mut f = std::fs::File::create(&out).expect("create BENCH_exec.json");
-    f.write_all(json.as_bytes()).expect("write BENCH_exec.json");
-    println!("wrote {}", out.display());
+    a2dwb::bench_util::write_root_json("BENCH_exec.json", &json);
 }

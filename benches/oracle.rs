@@ -2,6 +2,9 @@
 //! and shapes (the L1/L2/L3 seam).
 //!
 //! * native Rust f64 oracle (production hot path)
+//! * materialized-vs-zero-copy comparison over the real measure
+//!   families at n ∈ {100, 784} — the kernel refactor's payoff, emitted
+//!   to `BENCH_kernel.json` to anchor the perf trajectory across PRs
 //! * PJRT execution of the AOT JAX/Pallas artifact (three-layer proof;
 //!   skipped with a message if `make artifacts` has not run)
 //!
@@ -9,7 +12,8 @@
 //! DESIGN.md §Perf roofline estimate (bytes touched per call).
 
 use a2dwb::bench_util::{bench, black_box, fmt_ns};
-use a2dwb::measures::CostRows;
+use a2dwb::kernel;
+use a2dwb::measures::{CostRows, MeasureSpec, NodeMeasure};
 use a2dwb::ot::{dual_oracle_into, DualOracle, NativeOracle, OracleScratch};
 use a2dwb::rng::Rng64;
 use a2dwb::runtime::{read_manifest, PjrtOracle};
@@ -24,7 +28,100 @@ fn case(seed: u64, m: usize, n: usize) -> (Vec<f64>, CostRows) {
     (eta, cost)
 }
 
+struct KernelCell {
+    measure: String,
+    m: usize,
+    n: usize,
+    materialized_ns: f64,
+    zero_copy_ns: f64,
+}
+
+/// One materialized-vs-zero-copy cell: pre-draw a fixed sample batch,
+/// then time (a) the retired per-activation path — materialize the M×n
+/// cost rows, run the oracle over the buffer — against (b) the kernel
+/// path reading the same rows zero-copy. Identical outputs (asserted),
+/// different memory traffic.
+fn kernel_cell(spec: &MeasureSpec, m: usize, seed: u64) -> KernelCell {
+    let n = spec.support_size();
+    let network = spec.build_network(1, seed);
+    let measure = &network[0];
+    let mut rng = Rng64::new(seed ^ 0xBEEF);
+    let eta: Vec<f64> = (0..n).map(|_| 0.2 * rng.normal()).collect();
+    let samples = measure.draw_samples(&mut rng, m);
+    let beta = 0.02;
+
+    let mut grad_a = vec![0.0; n];
+    let mut grad_b = vec![0.0; n];
+    let mut scratch = OracleScratch::default();
+    let mut cost = CostRows::new(m, n);
+
+    let name = spec.name();
+    let mat = bench(&format!("materialized_{name}_m{m}"), 10, 200, 7, |_| {
+        cost.fill_from(&measure.cost_rows(&samples));
+        black_box(dual_oracle_into(&eta, &cost, beta, &mut grad_a, &mut scratch))
+    });
+    let zc = bench(&format!("zero_copy_{name}_m{m}"), 10, 200, 7, |_| {
+        let rows = measure.cost_rows(&samples);
+        black_box(kernel::dual_oracle(&eta, &rows, beta, &mut grad_b, &mut scratch))
+    });
+    assert_eq!(grad_a, grad_b, "paths must agree bitwise");
+    println!(
+        "{}\n{}  → zero-copy speedup {:.2}x",
+        mat.report(),
+        zc.report(),
+        mat.median_ns / zc.median_ns
+    );
+    KernelCell {
+        measure: name,
+        m,
+        n,
+        materialized_ns: mat.median_ns,
+        zero_copy_ns: zc.median_ns,
+    }
+}
+
+fn emit_kernel_json(cells: &[KernelCell]) {
+    // hand-rolled JSON (the crate is dependency-free by design)
+    let mut json = String::from("{\n  \"bench\": \"kernel_oracle\",\n");
+    json.push_str("  \"compares\": \"materialized CostRows vs zero-copy CostRowSource\",\n");
+    json.push_str("  \"cells\": [\n");
+    for (idx, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"measure\": \"{}\", \"m\": {}, \"n\": {}, \
+             \"materialized_ns\": {:.1}, \"zero_copy_ns\": {:.1}, \
+             \"speedup\": {:.4}}}{}\n",
+            c.measure,
+            c.m,
+            c.n,
+            c.materialized_ns,
+            c.zero_copy_ns,
+            c.materialized_ns / c.zero_copy_ns,
+            if idx + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    a2dwb::bench_util::write_root_json("BENCH_kernel.json", &json);
+}
+
 fn main() {
+    println!("== kernel seam: materialized vs zero-copy oracle ==");
+    let m = 32;
+    let cells = vec![
+        kernel_cell(&MeasureSpec::Gaussian { n: 100 }, m, 1),
+        kernel_cell(&MeasureSpec::Gaussian { n: 784 }, m, 2),
+        kernel_cell(
+            &MeasureSpec::Digits { digit: 3, side: 10, idx_path: None },
+            m,
+            3,
+        ),
+        kernel_cell(
+            &MeasureSpec::Digits { digit: 3, side: 28, idx_path: None },
+            m,
+            4,
+        ),
+    ];
+    emit_kernel_json(&cells);
+    println!();
     let shapes = [(8usize, 100usize), (32, 100), (128, 100), (32, 784), (128, 784)];
     println!("== dual-oracle hot path: native backend ==");
     for (m, n) in shapes {

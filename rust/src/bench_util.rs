@@ -103,6 +103,20 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write a hand-rolled `BENCH_*.json` payload to the **repository
+/// root** (parent of the package dir, independent of cwd) and print the
+/// path — the one emitter every bench shares so output location and
+/// error handling cannot drift.
+pub fn write_root_json(filename: &str, contents: &str) {
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package has a parent dir")
+        .join(filename);
+    std::fs::write(&out, contents)
+        .unwrap_or_else(|e| panic!("write {}: {e}", out.display()));
+    println!("wrote {}", out.display());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -29,7 +29,7 @@ use crate::algo::wbp::WbpNode;
 use crate::algo::ThetaSeq;
 use crate::exec::{activate_node, initial_exchange, NetModel, StepCtx, Transport};
 use crate::graph::Graph;
-use crate::measures::CostRows;
+use crate::measures::Samples;
 use crate::metrics::Series;
 use crate::sim::{ActivationSchedule, EventQueue};
 
@@ -91,7 +91,13 @@ pub(super) fn run(
     let lambda_max = graph.lambda_max();
     let smoothness = lambda_max / cfg.beta;
     let gamma = cfg.gamma_scale / smoothness;
-    let ctx = StepCtx { beta: cfg.beta, gamma, m_theta: m, diag: cfg.diag };
+    let ctx = StepCtx {
+        beta: cfg.beta,
+        gamma,
+        batch: cfg.samples_per_activation,
+        m_theta: m,
+        diag: cfg.diag,
+    };
 
     let mut theta = ThetaSeq::new(m);
     let mut nodes: Vec<WbpNode> =
@@ -118,7 +124,7 @@ pub(super) fn run(
     let mut spread_series = Series::new("primal_spread");
     let mut dual_wall = Series::new("dual_wall");
 
-    let mut cost = CostRows::new(cfg.samples_per_activation, n);
+    let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
     let mut etas = vec![0.0; m * n];
     let mut activations: u64 = 0;
@@ -132,7 +138,8 @@ pub(super) fn run(
         &measures,
         &mut node_rngs,
         oracle.as_mut(),
-        &mut cost,
+        &mut samples,
+        cfg.samples_per_activation,
         &mut point,
         cfg.beta,
         &mut transport,
@@ -161,7 +168,7 @@ pub(super) fn run(
                     graph.degree(i),
                     measures[i].as_ref(),
                     &mut node_rngs[i],
-                    &mut cost,
+                    &mut samples,
                     &mut point,
                     oracle.as_mut(),
                     &mut transport,

@@ -9,19 +9,21 @@
 //! the shared-seed activation scheme of §3.3 enables.
 
 use crate::graph::Graph;
+use crate::kernel;
 use crate::linalg::CsrMatrix;
-use crate::measures::{CostRows, NodeMeasure, Samples};
-use crate::ot::{dual_oracle_into, OracleScratch};
+use crate::measures::{NodeMeasure, Samples};
+use crate::ot::OracleScratch;
 use crate::rng::Rng64;
 
 pub struct MetricsEvaluator {
     n: usize,
     beta: f64,
-    /// Per-node frozen evaluation samples.
+    /// Per-node frozen evaluation samples; each snapshot rebinds them
+    /// zero-copy through [`NodeMeasure::cost_rows`] — no cost rows are
+    /// materialized on the metric path either.
     samples: Vec<Samples>,
     laplacian: CsrMatrix,
     // scratch
-    cost: CostRows,
     scratch: OracleScratch,
     grad: Vec<f64>,
     /// Stacked primal blocks (m·n), reused.
@@ -49,11 +51,27 @@ impl MetricsEvaluator {
             beta,
             samples,
             laplacian: graph.laplacian_csr(),
-            cost: CostRows::new(eval_samples, n),
             scratch: OracleScratch::default(),
             grad: vec![0.0; n],
             primal: vec![0.0; m * n],
         }
+    }
+
+    /// Entry-wise mean of the m primal blocks — the one definition of
+    /// the network mean shared by [`Self::evaluate`] (primal spread)
+    /// and [`Self::barycenter`].
+    fn network_mean(&self) -> Vec<f64> {
+        let m = self.primal.len() / self.n;
+        let mut mean = vec![0.0; self.n];
+        for i in 0..m {
+            for l in 0..self.n {
+                mean[l] += self.primal[i * self.n + l];
+            }
+        }
+        for v in &mut mean {
+            *v /= m as f64;
+        }
+        mean
     }
 
     /// Evaluate (dual objective, consensus distance, primal spread) at
@@ -71,10 +89,10 @@ impl MetricsEvaluator {
         assert_eq!(etas.len(), m * self.n);
         let mut dual = 0.0;
         for i in 0..m {
-            measures[i].cost_rows_for(&self.samples[i], &mut self.cost);
-            let val = dual_oracle_into(
+            let rows = measures[i].cost_rows(&self.samples[i]);
+            let val = kernel::dual_oracle(
                 &etas[i * self.n..(i + 1) * self.n],
-                &self.cost,
+                &rows,
                 self.beta,
                 &mut self.grad,
                 &mut self.scratch,
@@ -84,15 +102,7 @@ impl MetricsEvaluator {
         }
         let consensus = self.laplacian.block_quad_form(&self.primal, self.n);
         // primal spread: mean L1 distance to the network mean
-        let mut mean = vec![0.0; self.n];
-        for i in 0..m {
-            for l in 0..self.n {
-                mean[l] += self.primal[i * self.n + l];
-            }
-        }
-        for v in &mut mean {
-            *v /= m as f64;
-        }
+        let mean = self.network_mean();
         let mut spread = 0.0;
         for i in 0..m {
             for l in 0..self.n {
@@ -106,17 +116,7 @@ impl MetricsEvaluator {
     /// The network-mean primal block from the last `evaluate` call —
     /// the barycenter estimate ν̂ the system outputs.
     pub fn barycenter(&self) -> Vec<f64> {
-        let m = self.primal.len() / self.n;
-        let mut mean = vec![0.0; self.n];
-        for i in 0..m {
-            for l in 0..self.n {
-                mean[l] += self.primal[i * self.n + l];
-            }
-        }
-        for v in &mut mean {
-            *v /= m as f64;
-        }
-        mean
+        self.network_mean()
     }
 
     pub fn support_size(&self) -> usize {

@@ -24,7 +24,7 @@ pub use evaluator::MetricsEvaluator;
 
 use crate::algo::wbp::DiagCoef;
 use crate::algo::AlgorithmKind;
-use crate::exec::ExecutorSpec;
+use crate::exec::{ExecutorSpec, SampleCadence};
 use crate::graph::{Graph, TopologySpec};
 use crate::measures::MeasureSpec;
 use crate::metrics::Series;
@@ -70,6 +70,11 @@ pub struct ExperimentConfig {
     /// (default; virtual time, bit-reproducible) or the real-thread
     /// wall-clock executor (`crate::exec::threaded`).
     pub executor: ExecutorSpec,
+    /// Metric sampling pace of the threaded executor (the simulator
+    /// samples on its own `metric_interval` virtual-time grid):
+    /// wall-clock (default) or every k-th activation (dense,
+    /// deterministic at `workers = 1`).
+    pub sample_cadence: SampleCadence,
 }
 
 /// Network fault model: heterogeneous slow nodes + iid message loss.
@@ -146,6 +151,7 @@ impl ExperimentConfig {
             compute_time: 0.0,
             faults: FaultModel::default(),
             executor: ExecutorSpec::Sim,
+            sample_cadence: SampleCadence::default(),
         }
     }
 
@@ -192,6 +198,7 @@ impl ExperimentConfig {
         }
         self.faults.validate()?;
         self.executor.validate()?;
+        self.sample_cadence.validate()?;
         Ok(())
     }
 }

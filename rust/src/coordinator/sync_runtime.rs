@@ -25,7 +25,7 @@ use crate::algo::wbp::WbpNode;
 use crate::algo::ThetaSeq;
 use crate::exec::{NetModel, Transport};
 use crate::graph::Graph;
-use crate::measures::CostRows;
+use crate::measures::Samples;
 use crate::metrics::Series;
 
 /// Barrier-mode [`Transport`]: a broadcast parks the sender's gradient
@@ -101,7 +101,7 @@ pub(super) fn run(
     let mut spread_series = Series::new("primal_spread");
     let mut dual_wall = Series::new("dual_wall");
 
-    let mut cost = CostRows::new(cfg.samples_per_activation, n);
+    let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
     let mut etas = vec![0.0; m * n];
     let mut grads: Vec<Vec<f64>> = vec![vec![0.0; n]; m];
@@ -146,8 +146,13 @@ pub(super) fn run(
         // ---- compute phase: every node evaluates at ū + θ_{r+1}² v̄
         for i in 0..m {
             nodes[i].eval_point(&mut theta, r, true, &mut point);
-            measures[i].sample_cost_rows(&mut node_rngs[i], &mut cost);
-            oracle.eval(&point, &cost, cfg.beta, &mut grads[i]);
+            measures[i].draw_samples_into(
+                &mut node_rngs[i],
+                cfg.samples_per_activation,
+                &mut samples,
+            );
+            let rows = measures[i].cost_rows(&samples);
+            oracle.eval(&point, &rows, cfg.beta, &mut grads[i]);
         }
         // ---- exchange phase: barrier = slowest effective edge this round
         let mut round_time: f64 = 0.0;

@@ -38,7 +38,7 @@ pub use transport::{FreshestSlot, MailboxGrid, ThreadedTransport, Transport};
 use crate::algo::wbp::{DiagCoef, WbpNode};
 use crate::algo::ThetaSeq;
 use crate::coordinator::FaultModel;
-use crate::measures::{CostRows, NodeMeasure};
+use crate::measures::{NodeMeasure, Samples};
 use crate::ot::DualOracle;
 use crate::rng::Rng64;
 use crate::sim::LinkDelayModel;
@@ -100,6 +100,45 @@ impl ExecutorSpec {
     }
 }
 
+/// How the threaded executor paces its metric sampling.
+///
+/// The simulator samples on the fixed virtual-time grid
+/// (`metric_interval`); the threaded executor has no virtual clock, so
+/// it offers two cadences:
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleCadence {
+    /// Snapshot roughly every `ms` wall-clock milliseconds (the
+    /// original behavior; curve density depends on machine speed).
+    WallClockMillis(u64),
+    /// Snapshot after every k-th completed activation (k ≥ 1):
+    /// machine-independent density, and — because the snapshot is taken
+    /// synchronously by the worker that finished the k-th activation —
+    /// a **dense, deterministic** curve when `workers = 1`.
+    ///
+    /// Memory: snapshots (m·n f64 each) queue up until the spawning
+    /// thread evaluates them, so pick k with `budget/k` in mind; the
+    /// queue is kept non-blocking for workers and only sheds snapshots
+    /// (reported loudly) past a generous safety cap.
+    Activations(u64),
+}
+
+impl Default for SampleCadence {
+    fn default() -> Self {
+        SampleCadence::WallClockMillis(50)
+    }
+}
+
+impl SampleCadence {
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            SampleCadence::Activations(0) => {
+                Err("SampleCadence::Activations needs k >= 1".into())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
 /// Per-run scalar parameters of the (u, v) update, shared by every
 /// backend so they cannot drift apart.
 #[derive(Clone, Copy, Debug)]
@@ -108,6 +147,8 @@ pub struct StepCtx {
     pub beta: f64,
     /// Step size γ.
     pub gamma: f64,
+    /// Per-activation sample batch M_k.
+    pub batch: usize,
     /// Block count in the θ-sequence: m for the async pair, 1 for DCWB.
     pub m_theta: usize,
     /// Own-gradient coefficient variant.
@@ -120,9 +161,11 @@ pub struct StepCtx {
 /// Shared verbatim by the simulator (which calls it from its `Activate`
 /// event) and the threaded executor (which calls it from a worker
 /// thread): evaluate the local point (compensated for A²DWB, stale-θ
-/// for A²DWBN), sample a fresh batch, query the dual oracle, broadcast
-/// the gradient, fold any pending neighbor gradients, apply the
-/// Laplacian combine + (u, v) update.
+/// for A²DWBN), draw a fresh sample batch into the reusable `samples`
+/// buffer, query the dual oracle through the zero-copy
+/// [`NodeMeasure::cost_rows`] binding (no M×n cost materialization),
+/// broadcast the gradient, fold any pending neighbor gradients, apply
+/// the Laplacian combine + (u, v) update.
 #[allow(clippy::too_many_arguments)]
 pub fn activate_node(
     node: &mut WbpNode,
@@ -134,16 +177,17 @@ pub fn activate_node(
     degree: usize,
     measure: &dyn NodeMeasure,
     rng: &mut Rng64,
-    cost: &mut CostRows,
+    samples: &mut Samples,
     point: &mut [f64],
     oracle: &mut dyn DualOracle,
     transport: &mut dyn Transport,
 ) {
     // line 5: evaluation point (compensated vs naive)
     node.eval_point(theta, k, compensated, point);
-    // line 6: sample M_k, oracle gradient
-    measure.sample_cost_rows(rng, cost);
-    oracle.eval(point, cost, ctx.beta, &mut node.own_grad);
+    // line 6: sample M_k, fused zero-copy oracle gradient
+    measure.draw_samples_into(rng, ctx.batch, samples);
+    let rows = measure.cost_rows(samples);
+    oracle.eval(point, &rows, ctx.beta, &mut node.own_grad);
     // broadcast g_i to neighbors; one shared Arc payload per broadcast
     transport.broadcast(i, k as u64 + 1, Arc::new(node.own_grad.clone()));
     // lines 7–8: combine with whatever the mailbox holds + update (u, v)
@@ -161,15 +205,17 @@ pub fn initial_exchange(
     measures: &[Box<dyn NodeMeasure>],
     node_rngs: &mut [Rng64],
     oracle: &mut dyn DualOracle,
-    cost: &mut CostRows,
+    samples: &mut Samples,
+    batch: usize,
     point: &mut [f64],
     beta: f64,
     transport: &mut dyn Transport,
 ) {
     for (i, node) in nodes.iter_mut().enumerate() {
         node.eval_point(theta, 0, true, point);
-        measures[i].sample_cost_rows(&mut node_rngs[i], cost);
-        oracle.eval(point, cost, beta, &mut node.own_grad);
+        measures[i].draw_samples_into(&mut node_rngs[i], batch, samples);
+        let rows = measures[i].cost_rows(samples);
+        oracle.eval(point, &rows, beta, &mut node.own_grad);
         transport.broadcast(i, 0, Arc::new(node.own_grad.clone()));
     }
 }

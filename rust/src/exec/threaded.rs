@@ -32,24 +32,29 @@
 //! and the gap between those two is exactly the paper's waiting
 //! overhead.
 //!
-//! Metrics: the spawning thread samples per-node dual-iterate snapshots
-//! on a wall-clock cadence and evaluates the same common-random-number
-//! metrics as the simulator; the virtual-equivalent timestamp of a
-//! sample is `activations/m · interval` so threaded and simulated
-//! curves share an x-axis, and `dual_wall` carries the honest
-//! wall-clock axis.
+//! Metrics: sampling is paced by [`SampleCadence`]. Under the default
+//! wall-clock cadence the spawning thread snapshots per-node dual
+//! iterates every few milliseconds; under
+//! [`SampleCadence::Activations`] the worker that completes every k-th
+//! activation takes the snapshot synchronously (dense and — at
+//! `workers = 1` — fully deterministic) and the spawning thread drains
+//! and evaluates the queued snapshots. Either way the same
+//! common-random-number metrics as the simulator are evaluated; the
+//! virtual-equivalent timestamp of a sample is `activations/m ·
+//! interval` so threaded and simulated curves share an x-axis, and
+//! `dual_wall` carries the honest wall-clock axis.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 use super::transport::{MailboxGrid, ThreadedTransport};
-use super::{activate_node, initial_exchange, StepCtx};
+use super::{activate_node, initial_exchange, SampleCadence, StepCtx};
 use crate::algo::wbp::WbpNode;
 use crate::algo::{AlgorithmKind, ThetaSeq};
 use crate::coordinator::{ExperimentConfig, ExperimentReport, MetricsEvaluator};
 use crate::graph::Graph;
-use crate::measures::{CostRows, NodeMeasure};
+use crate::measures::{NodeMeasure, Samples};
 use crate::metrics::Series;
 use crate::rng::Rng64;
 
@@ -61,6 +66,18 @@ struct Shared<'a> {
     measures: &'a [Box<dyn NodeMeasure>],
     grid: &'a MailboxGrid,
     eta_snaps: &'a [Mutex<Vec<f64>>],
+    /// (activations, wall seconds, stacked η̄) snapshots queued by
+    /// workers under [`SampleCadence::Activations`]; drained and
+    /// evaluated by the spawning thread.
+    snap_queue: &'a Mutex<Vec<(u64, f64, Vec<f64>)>>,
+    /// Snapshot-count cap derived from [`SNAP_QUEUE_BYTES`] and the
+    /// instance size m·n.
+    snap_cap: usize,
+    /// Snapshots shed past the cap (reported after the run).
+    snap_dropped: &'a AtomicU64,
+    /// Run start — workers stamp snapshots against it so `dual_wall`
+    /// carries capture time, not evaluation time.
+    t0: Instant,
     k_counter: &'a AtomicUsize,
     progress: &'a AtomicU64,
     barrier: &'a Barrier,
@@ -70,6 +87,47 @@ struct Shared<'a> {
     sweeps: usize,
     sync: bool,
     compensated: bool,
+}
+
+/// Memory-safety valve for the activation-paced snapshot queue: when
+/// the evaluating thread falls behind by this many **bytes** of queued
+/// snapshots (each m·n f64), workers shed further ones (counted and
+/// reported) instead of ballooning RSS — never reached at test scales,
+/// only by `Activations(small k)` × huge-budget runs. Sized in bytes so
+/// paper-scale instances (m=500, n=784 ⇒ ~3 MB per snapshot) stay
+/// bounded at the same memory as tiny ones.
+const SNAP_QUEUE_BYTES: usize = 256 << 20;
+
+/// Count one finished activation; under activation-paced sampling the
+/// worker crossing a multiple of k snapshots the whole network state
+/// (its own node's fresh η̄ is already in `eta_snaps`).
+fn bump_progress(sh: &Shared<'_>, n: usize) {
+    let acts = sh.progress.fetch_add(1, Ordering::Relaxed) + 1;
+    if let SampleCadence::Activations(k) = sh.cfg.sample_cadence {
+        if acts % k == 0 {
+            // cheap early check so shedding skips the m·n capture cost
+            // entirely in the overload regime…
+            if sh.snap_queue.lock().unwrap().len() >= sh.snap_cap {
+                sh.snap_dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            let m = sh.cfg.nodes;
+            let mut snap = vec![0.0; m * n];
+            for (j, slot) in sh.eta_snaps.iter().enumerate() {
+                snap[j * n..(j + 1) * n].copy_from_slice(&slot.lock().unwrap());
+            }
+            let wall = sh.t0.elapsed().as_secs_f64();
+            // …and a re-check under the push lock keeps the cap exact
+            // when several workers race past the early check at once.
+            let mut queue = sh.snap_queue.lock().unwrap();
+            if queue.len() >= sh.snap_cap {
+                drop(queue);
+                sh.snap_dropped.fetch_add(1, Ordering::Relaxed);
+            } else {
+                queue.push((acts, wall, snap));
+            }
+        }
+    }
 }
 
 /// Simulated compute cost of one activation: `compute_time`, scaled by
@@ -110,13 +168,14 @@ fn worker_loop(
         }
     };
     let mut theta = ThetaSeq::new(sh.m_theta);
-    let mut cost = CostRows::new(sh.cfg.samples_per_activation, n);
+    let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
     let mut transport = ThreadedTransport::new(sh.grid);
     let mut jitter = Rng64::new(sh.cfg.seed ^ 0x4A54_5452 ^ worker_id as u64);
     let ctx = StepCtx {
         beta: sh.cfg.beta,
         gamma: sh.gamma,
+        batch: sh.cfg.samples_per_activation,
         m_theta: sh.m_theta,
         diag: sh.cfg.diag,
     };
@@ -129,8 +188,9 @@ fn worker_loop(
                 let i = *i;
                 sleep_compute(&sh, i, &mut jitter);
                 node.eval_point(&mut theta, r, true, &mut point);
-                sh.measures[i].sample_cost_rows(rng, &mut cost);
-                oracle.eval(&point, &cost, ctx.beta, &mut node.own_grad);
+                sh.measures[i].draw_samples_into(rng, ctx.batch, &mut samples);
+                let rows = sh.measures[i].cost_rows(&samples);
+                oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
                 transport.broadcast(
                     i,
                     r as u64 + 1,
@@ -151,7 +211,7 @@ fn worker_loop(
                 );
                 node.eta(&mut theta, r + 1, &mut point);
                 sh.eta_snaps[i].lock().unwrap().copy_from_slice(&point);
-                sh.progress.fetch_add(1, Ordering::Relaxed);
+                bump_progress(&sh, n);
             }
             sh.barrier.wait();
         }
@@ -173,14 +233,14 @@ fn worker_loop(
                     sh.graph.degree(i),
                     sh.measures[i].as_ref(),
                     rng,
-                    &mut cost,
+                    &mut samples,
                     &mut point,
                     oracle.as_mut(),
                     &mut transport,
                 );
                 node.eta(&mut theta, k + 1, &mut point);
                 sh.eta_snaps[i].lock().unwrap().copy_from_slice(&point);
-                sh.progress.fetch_add(1, Ordering::Relaxed);
+                bump_progress(&sh, n);
             }
         }
     }
@@ -225,7 +285,7 @@ pub fn run(
     let node_factors = cfg.faults.node_factors(m, cfg.seed);
 
     let grid = MailboxGrid::new(graph, n);
-    let mut cost = CostRows::new(cfg.samples_per_activation, n);
+    let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
     let mut messages: u64 = 0;
 
@@ -241,7 +301,8 @@ pub fn run(
             &measures,
             &mut node_rngs,
             init_oracle.as_mut(),
-            &mut cost,
+            &mut samples,
+            cfg.samples_per_activation,
             &mut point,
             cfg.beta,
             &mut transport,
@@ -261,12 +322,40 @@ pub fn run(
     let barrier = Barrier::new(workers);
     let eta_snaps: Vec<Mutex<Vec<f64>>> =
         (0..m).map(|_| Mutex::new(vec![0.0; n])).collect();
+    let snap_queue: Mutex<Vec<(u64, f64, Vec<f64>)>> = Mutex::new(Vec::new());
+    let snap_dropped = AtomicU64::new(0);
+
+    let mut evaluator =
+        MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
+    let mut dual_series = Series::new("dual_objective");
+    let mut consensus_series = Series::new("consensus");
+    let mut spread_series = Series::new("primal_spread");
+    let mut dual_wall = Series::new("dual_wall");
+    let mut etas = vec![0.0; m * n];
+
+    // t = 0 sample: the zero state, same value the simulator reports.
+    {
+        let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
+        dual_series.push(0.0, dual);
+        consensus_series.push(0.0, consensus);
+        spread_series.push(0.0, spread);
+        dual_wall.push(0.0, dual);
+    }
+
+    // The wall clock starts after metric setup and the t=0 evaluation —
+    // dual_wall must measure experiment runtime, not evaluator
+    // construction (which at paper scale does a full m-node oracle pass).
+    let wall_t0 = Instant::now();
     let shared = Shared {
         cfg,
         graph,
         measures: &measures,
         grid: &grid,
         eta_snaps: &eta_snaps,
+        snap_queue: &snap_queue,
+        snap_cap: (SNAP_QUEUE_BYTES / (m * n * 8)).max(16),
+        snap_dropped: &snap_dropped,
+        t0: wall_t0,
         k_counter: &k_counter,
         progress: &progress,
         barrier: &barrier,
@@ -278,25 +367,46 @@ pub fn run(
         compensated,
     };
 
-    let mut evaluator =
-        MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
-    let mut dual_series = Series::new("dual_objective");
-    let mut consensus_series = Series::new("consensus");
-    let mut spread_series = Series::new("primal_spread");
-    let mut dual_wall = Series::new("dual_wall");
-    let mut etas = vec![0.0; m * n];
-
-    // t = 0 sample: the zero state, same value the simulator reports.
-    let wall_t0 = Instant::now();
-    {
-        let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
-        dual_series.push(0.0, dual);
-        consensus_series.push(0.0, consensus);
-        spread_series.push(0.0, spread);
-        dual_wall.push(0.0, dual);
-    }
-
     let mut nodes_back: Vec<Option<WbpNode>> = (0..m).map(|_| None).collect();
+
+    // Drain and evaluate worker-queued activation-paced snapshots.
+    // Each batch is sorted by activation count, and snapshots at or
+    // below the last evaluated count are dropped: with several workers
+    // a straggler can queue a lower-acts snapshot after a higher one
+    // was already evaluated (cross-batch inversion sorting cannot fix),
+    // and appending that older network state as a later point would
+    // fake a regression blip. Surviving acts are strictly increasing,
+    // so the virtual-time axis is monotone by construction; capture
+    // walls can still interleave slightly, hence the `last_wall` clamp.
+    // `dual_wall` uses the worker-side capture time, not the (possibly
+    // much later) evaluation time.
+    let drain_snaps = |evaluator: &mut MetricsEvaluator,
+                       dual_series: &mut Series,
+                       consensus_series: &mut Series,
+                       spread_series: &mut Series,
+                       dual_wall: &mut Series,
+                       last_acts: &mut u64,
+                       last_wall: &mut f64| {
+        let mut batch = std::mem::take(&mut *snap_queue.lock().unwrap());
+        batch.sort_by_key(|&(acts, _, _)| acts);
+        for (acts, wall, snap) in batch {
+            if acts <= *last_acts {
+                continue; // stale straggler snapshot
+            }
+            *last_acts = acts;
+            let (dual, consensus, spread) = evaluator.evaluate(&snap, &measures);
+            let t_equiv =
+                (acts as f64 / m as f64 * cfg.activation_interval).min(cfg.duration);
+            let wall = wall.max(*last_wall);
+            *last_wall = wall;
+            dual_series.push(t_equiv, dual);
+            consensus_series.push(t_equiv, consensus);
+            spread_series.push(t_equiv, spread);
+            dual_wall.push(wall, dual);
+        }
+    };
+    let mut cadence_last_acts = 0u64;
+    let mut cadence_last_wall = 0.0f64;
 
     std::thread::scope(|s| -> Result<(), String> {
         let mut handles = Vec::with_capacity(workers);
@@ -304,11 +414,26 @@ pub fn run(
             handles.push(s.spawn(move || worker_loop(shared, w, mine)));
         }
 
-        // Wall-clock metric sampling while the workers run.
-        let sample_every = Duration::from_millis(50);
+        // Metric sampling while the workers run, paced per the cadence.
+        let wall_every = match cfg.sample_cadence {
+            SampleCadence::WallClockMillis(ms) => Some(Duration::from_millis(ms)),
+            SampleCadence::Activations(_) => None,
+        };
         let mut last_sample = Instant::now();
         while handles.iter().any(|h| !h.is_finished()) {
             std::thread::sleep(Duration::from_millis(2));
+            let Some(sample_every) = wall_every else {
+                drain_snaps(
+                    &mut evaluator,
+                    &mut dual_series,
+                    &mut consensus_series,
+                    &mut spread_series,
+                    &mut dual_wall,
+                    &mut cadence_last_acts,
+                    &mut cadence_last_wall,
+                );
+                continue;
+            };
             if last_sample.elapsed() < sample_every {
                 continue;
             }
@@ -339,6 +464,27 @@ pub fn run(
         }
         Ok(())
     })?;
+
+    // Snapshots queued after the monitor's last pass (all of them, when
+    // workers outpace the 2 ms drain tick) land before the horizon point.
+    drain_snaps(
+        &mut evaluator,
+        &mut dual_series,
+        &mut consensus_series,
+        &mut spread_series,
+        &mut dual_wall,
+        &mut cadence_last_acts,
+        &mut cadence_last_wall,
+    );
+    let dropped = snap_dropped.load(Ordering::Relaxed);
+    if dropped > 0 {
+        eprintln!(
+            "warn: activation-paced sampling shed {dropped} snapshots \
+             (queue cap {} for this m·n); increase \
+             SampleCadence::Activations(k) for this budget",
+            shared.snap_cap
+        );
+    }
 
     // Final snapshot at a common θ index, mirroring the simulator's
     // horizon sample.

@@ -1,0 +1,395 @@
+//! The numeric core: stable log-sum-exp / softmax row kernels and the
+//! fused dual oracle, shared by every consumer in the crate.
+//!
+//! Before this module existed the crate carried three divergent
+//! log-sum-exp implementations (the oracle's row softmax in `ot`, the
+//! Sinkhorn solver's allocating `lse` closure, and the metric
+//! evaluator's copy of the oracle path). They are unified here, and the
+//! oracle's cost input is reworked into a **zero-copy seam**:
+//!
+//! * [`CostRowSource`] — the contract between cost generation and the
+//!   kernel. A source yields one [`CostRow`] per sample; a row is either
+//!   **borrowed** (`CostRow::Borrowed`, a view into a cached table —
+//!   the digits experiment's precomputed grid-distance rows) or a
+//!   **generator** (`CostRow::Quad1d`, the Gaussian experiment's
+//!   `c_l = (z_l − y)²·s`, evaluated *inside* the kernel pass). In
+//!   neither case does an owned M×n cost buffer exist on the hot path —
+//!   the memcpy tax the old `CostRows` materialization paid on every
+//!   activation is gone.
+//! * [`dual_oracle`] — the paper's Lemma 1 oracle
+//!   (`grad = mean_r softmax((η̄ − C_r)/β)`,
+//!   `val = mean_r β·logsumexp((η̄ − C_r)/β)`) over any source.
+//! * [`OracleScratch`] — pooled per-call scratch (one n-vector of
+//!   logits, grown on demand and reused forever): the kernel performs
+//!   zero heap allocation per activation.
+//!
+//! Numerics contract: for the same cost values the fused paths produce
+//! **bit-identical** results to materialize-then-softmax — `Quad1d`
+//! evaluates exactly the expression the old `Gaussian1d::fill_row`
+//! materialized (`d = z − y; c = d·d·s`) before the shared
+//! `(η − c)·β⁻¹` logit, and borrowed table rows hold exactly the values
+//! the old `DigitMeasure::fill_row` recomputed per activation. The sim
+//! golden and all RNG draw orders are therefore preserved by the
+//! refactor (guarded by the equivalence tests below and
+//! `rust/tests/kernel_zero_copy.rs`).
+
+use crate::measures::CostRows;
+
+/// One cost row, as the kernel consumes it.
+///
+/// The borrowed form is a zero-copy view into storage owned elsewhere
+/// (a cached distance table, a materialized buffer); the generator form
+/// carries the few scalars needed to produce each entry inside the
+/// kernel's logit pass, so the row never exists in memory at all.
+#[derive(Clone, Copy, Debug)]
+pub enum CostRow<'a> {
+    /// An already-materialized row, served by reference.
+    Borrowed(&'a [f64]),
+    /// Quadratic 1-D transport cost `c_l = (support[l] − y)²·inv_scale`,
+    /// fused into the kernel pass (never written to memory).
+    Quad1d { support: &'a [f64], y: f64, inv_scale: f64 },
+}
+
+impl CostRow<'_> {
+    /// Number of entries in the row.
+    pub fn len(&self) -> usize {
+        match self {
+            CostRow::Borrowed(row) => row.len(),
+            CostRow::Quad1d { support, .. } => support.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the row into `out` (bench baselines, the PJRT FFI
+    /// staging path, and tests — never the native hot path).
+    pub fn write_into(&self, out: &mut [f64]) {
+        match *self {
+            CostRow::Borrowed(row) => out.copy_from_slice(row),
+            CostRow::Quad1d { support, y, inv_scale } => {
+                for (c, &z) in out.iter_mut().zip(support) {
+                    let d = z - y;
+                    *c = d * d * inv_scale;
+                }
+            }
+        }
+    }
+}
+
+/// A batch of M cost rows of width n — the oracle's input seam.
+///
+/// Implemented by [`crate::measures::MeasureRows`] (the zero-copy
+/// production path) and by [`crate::measures::CostRows`] (materialized
+/// buffers: benches, tests, FFI staging).
+pub trait CostRowSource {
+    /// Batch size M (rows).
+    fn m(&self) -> usize;
+    /// Support size n (row width).
+    fn n(&self) -> usize;
+    /// Row `r`, zero-copy.
+    fn cost_row(&self, r: usize) -> CostRow<'_>;
+}
+
+impl CostRowSource for CostRows {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn cost_row(&self, r: usize) -> CostRow<'_> {
+        CostRow::Borrowed(self.row(r))
+    }
+}
+
+/// Pooled scratch reused across activations (no hot-path allocation).
+#[derive(Clone, Debug, Default)]
+pub struct OracleScratch {
+    logits: Vec<f64>,
+}
+
+/// Stable log-sum-exp over a slice.
+///
+/// `−∞` entries (masked bins in the Sinkhorn solver) contribute nothing;
+/// an all-`−∞` (or empty) input returns `−∞`, matching the restriction
+/// semantics of the log-domain solver.
+#[inline]
+pub fn logsumexp(xs: &[f64]) -> f64 {
+    let mut smax = f64::NEG_INFINITY;
+    for &x in xs {
+        if x > smax {
+            smax = x;
+        }
+    }
+    if smax == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let mut z = 0.0;
+    for &x in xs {
+        z += (x - smax).exp();
+    }
+    smax + z.ln()
+}
+
+/// Shared tail of the row kernels: exponentiate the max-subtracted
+/// logits in `probs`, normalize to a distribution, return the row lse.
+#[inline]
+fn exp_normalize(probs: &mut [f64], smax: f64) -> f64 {
+    let mut z = 0.0;
+    for p in probs.iter_mut() {
+        *p = (*p - smax).exp();
+        z += *p;
+    }
+    let inv_z = 1.0 / z;
+    for p in probs.iter_mut() {
+        *p *= inv_z;
+    }
+    smax + z.ln()
+}
+
+/// Stable single-row pass over a materialized cost row: writes the
+/// softmax of `(η − c)·β⁻¹` into `probs`, returns the row's lse.
+#[inline]
+pub fn softmax_lse_row(
+    eta: &[f64],
+    cost: &[f64],
+    inv_beta: f64,
+    probs: &mut [f64],
+) -> f64 {
+    let mut smax = f64::NEG_INFINITY;
+    for ((p, &e), &c) in probs.iter_mut().zip(eta).zip(cost) {
+        let s = (e - c) * inv_beta;
+        *p = s;
+        if s > smax {
+            smax = s;
+        }
+    }
+    exp_normalize(probs, smax)
+}
+
+/// Fused single-row pass for the quadratic 1-D cost family: generates
+/// `c_l = (z_l − y)²·inv_scale` inside the logit loop — the cost row is
+/// never written to memory. Bit-identical to materializing the row with
+/// the same expression and calling [`softmax_lse_row`].
+#[inline]
+pub fn softmax_lse_quad1d(
+    eta: &[f64],
+    support: &[f64],
+    y: f64,
+    inv_scale: f64,
+    inv_beta: f64,
+    probs: &mut [f64],
+) -> f64 {
+    let mut smax = f64::NEG_INFINITY;
+    for ((p, &e), &z) in probs.iter_mut().zip(eta).zip(support) {
+        let d = z - y;
+        let c = d * d * inv_scale;
+        let s = (e - c) * inv_beta;
+        *p = s;
+        if s > smax {
+            smax = s;
+        }
+    }
+    exp_normalize(probs, smax)
+}
+
+/// The fused dual oracle (paper Lemma 1) over any [`CostRowSource`].
+///
+/// `grad` (len n) receives `mean_r softmax((η̄ − C_r)/β)`; returns
+/// `mean_r β·logsumexp((η̄ − C_r)/β)`. Zero heap allocation once
+/// `scratch` has warmed up; zero cost-row copies for borrowed/generator
+/// sources.
+pub fn dual_oracle<S: CostRowSource + ?Sized>(
+    eta: &[f64],
+    rows: &S,
+    beta: f64,
+    grad: &mut [f64],
+    scratch: &mut OracleScratch,
+) -> f64 {
+    let n = rows.n();
+    let m = rows.m();
+    assert_eq!(eta.len(), n);
+    assert_eq!(grad.len(), n);
+    assert!(beta > 0.0 && m > 0);
+    scratch.logits.resize(n, 0.0);
+    let inv_beta = 1.0 / beta;
+    grad.fill(0.0);
+    let mut lse_sum = 0.0;
+    for r in 0..m {
+        let row = rows.cost_row(r);
+        debug_assert_eq!(row.len(), n);
+        let lse = match row {
+            CostRow::Borrowed(c) => {
+                softmax_lse_row(eta, c, inv_beta, &mut scratch.logits)
+            }
+            CostRow::Quad1d { support, y, inv_scale } => softmax_lse_quad1d(
+                eta,
+                support,
+                y,
+                inv_scale,
+                inv_beta,
+                &mut scratch.logits,
+            ),
+        };
+        lse_sum += lse;
+        for (g, p) in grad.iter_mut().zip(&scratch.logits) {
+            *g += p;
+        }
+    }
+    let inv_m = 1.0 / m as f64;
+    for g in grad.iter_mut() {
+        *g *= inv_m;
+    }
+    beta * lse_sum * inv_m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    /// A pure-generator source for the equivalence tests.
+    struct QuadSource {
+        support: Vec<f64>,
+        ys: Vec<f64>,
+        inv_scale: f64,
+    }
+
+    impl CostRowSource for QuadSource {
+        fn m(&self) -> usize {
+            self.ys.len()
+        }
+
+        fn n(&self) -> usize {
+            self.support.len()
+        }
+
+        fn cost_row(&self, r: usize) -> CostRow<'_> {
+            CostRow::Quad1d {
+                support: &self.support,
+                y: self.ys[r],
+                inv_scale: self.inv_scale,
+            }
+        }
+    }
+
+    fn materialize(src: &impl CostRowSource) -> CostRows {
+        let mut out = CostRows::new(src.m(), src.n());
+        for r in 0..src.m() {
+            src.cost_row(r).write_into(out.row_mut(r));
+        }
+        out
+    }
+
+    #[test]
+    fn logsumexp_matches_naive() {
+        let xs = [0.3, -1.2, 2.5, 0.0];
+        let naive: f64 = xs.iter().map(|x| x.exp()).sum::<f64>().ln();
+        assert!((logsumexp(&xs) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logsumexp_masked_and_empty() {
+        assert_eq!(logsumexp(&[]), f64::NEG_INFINITY);
+        assert_eq!(
+            logsumexp(&[f64::NEG_INFINITY, f64::NEG_INFINITY]),
+            f64::NEG_INFINITY
+        );
+        // −∞ entries are exact no-ops
+        let a = logsumexp(&[1.0, f64::NEG_INFINITY, 2.0]);
+        let b = logsumexp(&[1.0, 2.0]);
+        assert_eq!(a.to_bits(), b.to_bits());
+        // stable at large magnitudes
+        let big = logsumexp(&[1e4, 1e4]);
+        assert!((big - (1e4 + 2f64.ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_quad1d_equals_materialized_bitwise() {
+        // The refactor's core contract: fusing the quadratic cost into
+        // the kernel pass must not move a single bit vs materializing
+        // the row first (this is what preserves the sim golden).
+        let mut rng = Rng64::new(11);
+        for (m, n) in [(1usize, 7usize), (8, 33), (32, 100)] {
+            let src = QuadSource {
+                support: (0..n).map(|_| rng.uniform_in(-5.0, 5.0)).collect(),
+                ys: (0..m).map(|_| rng.normal()).collect(),
+                inv_scale: 1.0 / 25.0,
+            };
+            let eta: Vec<f64> = (0..n).map(|_| 0.3 * rng.normal()).collect();
+            let mat = materialize(&src);
+            let mut g_fused = vec![0.0; n];
+            let mut g_mat = vec![0.0; n];
+            let mut scratch = OracleScratch::default();
+            let v_fused =
+                dual_oracle(&eta, &src, 0.05, &mut g_fused, &mut scratch);
+            let v_mat = dual_oracle(&eta, &mat, 0.05, &mut g_mat, &mut scratch);
+            assert_eq!(v_fused.to_bits(), v_mat.to_bits(), "{m}x{n}");
+            for (a, b) in g_fused.iter().zip(&g_mat) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{m}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_over_borrowed_rows_matches_naive_value() {
+        let mut rng = Rng64::new(3);
+        let (m, n) = (8usize, 12usize);
+        let eta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut cost = CostRows::new(m, n);
+        for v in cost.data.iter_mut() {
+            *v = rng.uniform_in(0.0, 4.0);
+        }
+        let beta = 0.37;
+        let mut grad = vec![0.0; n];
+        let mut scratch = OracleScratch::default();
+        let val = dual_oracle(&eta, &cost, beta, &mut grad, &mut scratch);
+        let mut want = 0.0;
+        for r in 0..m {
+            let z: f64 = (0..n)
+                .map(|l| ((eta[l] - cost.row(r)[l]) / beta).exp())
+                .sum();
+            want += beta * z.ln();
+        }
+        want /= m as f64;
+        assert!((val - want).abs() < 1e-9, "{val} vs {want}");
+        assert!((grad.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scratch_is_reused_across_shapes() {
+        let mut scratch = OracleScratch::default();
+        let mut rng = Rng64::new(5);
+        for n in [4usize, 16, 8] {
+            let src = QuadSource {
+                support: (0..n).map(|i| i as f64).collect(),
+                ys: (0..3).map(|_| rng.normal()).collect(),
+                inv_scale: 1.0,
+            };
+            let eta = vec![0.0; n];
+            let mut grad = vec![0.0; n];
+            let v = dual_oracle(&eta, &src, 0.1, &mut grad, &mut scratch);
+            assert!(v.is_finite());
+            assert!((grad.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn write_into_roundtrips_both_variants() {
+        let support = [0.0, 1.0, 3.0];
+        let quad = CostRow::Quad1d { support: &support, y: 1.0, inv_scale: 0.5 };
+        let mut out = [0.0; 3];
+        quad.write_into(&mut out);
+        assert_eq!(out, [0.5, 0.0, 2.0]);
+        let borrowed = CostRow::Borrowed(&out);
+        let mut copy = [0.0; 3];
+        borrowed.write_into(&mut copy);
+        assert_eq!(out, copy);
+        assert_eq!(quad.len(), 3);
+        assert!(!quad.is_empty());
+    }
+}

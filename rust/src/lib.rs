@@ -19,6 +19,12 @@
 //! Python never runs on the request path: the Rust runtime executes the
 //! AOT artifacts through PJRT (`runtime`, behind the `pjrt` feature), or
 //! uses a bit-faithful native oracle (`ot`) cross-validated against them.
+//! All native numerics bottom out in the [`kernel`] layer: one stable
+//! log-sum-exp/softmax core and a fused dual oracle that consumes cost
+//! rows zero-copy through the [`kernel::CostRowSource`] seam (borrowed
+//! distance-table rows for the digit experiment, in-pass generated
+//! quadratic costs for the Gaussian one — no M×n cost buffer exists on
+//! the hot path).
 //!
 //! ## Execution backends
 //!
@@ -59,6 +65,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod exec;
 pub mod graph;
+pub mod kernel;
 pub mod linalg;
 pub mod measures;
 pub mod metrics;
@@ -75,7 +82,7 @@ pub mod prelude {
     pub use crate::coordinator::{
         run_experiment, ExperimentConfig, ExperimentReport, FaultModel, TaskSpec,
     };
-    pub use crate::exec::ExecutorSpec;
+    pub use crate::exec::{ExecutorSpec, SampleCadence};
     pub use crate::graph::{Graph, TopologySpec};
     pub use crate::measures::MeasureSpec;
     pub use crate::metrics::Series;

@@ -14,13 +14,16 @@
 
 use std::sync::Arc;
 
-use super::{CostRows, NodeMeasure};
+use super::{MeasureRows, NodeMeasure, Samples};
 use crate::rng::{Alias, Rng64};
 
-/// Shared geometry of a `side × side` grid: per-pixel coordinates and the
-/// cost normalizer. Cost rows are computed on the fly from coordinates —
-/// a full n×n distance matrix at n=784 (4.9 MB) is cache-hostile on the
-/// per-activation path; two fused multiplies per entry beat the lookup.
+/// Shared geometry of a `side × side` grid: per-pixel coordinates, the
+/// cost normalizer, and the **precomputed n×n distance table** every
+/// oracle activation reads by reference. The table is one shared
+/// allocation for the whole network (4.9 MB at n = 784, behind an
+/// `Arc`), so an activation serves its M cost rows with zero cost
+/// computation and zero copies — the kernel's softmax streams straight
+/// out of the cached rows.
 #[derive(Clone, Debug)]
 pub struct GridGeometry {
     pub side: usize,
@@ -28,16 +31,31 @@ pub struct GridGeometry {
     pub coords: Vec<(f64, f64)>,
     /// 1 / diag² with diag = √2·(side−1).
     pub inv_scale: f64,
+    /// Row-major n×n table: `dist[p·n + l] = ‖z_l − z_p‖²·inv_scale`.
+    /// Entries are bit-identical to what the retired per-activation
+    /// `fill_row` recomputed (same expression, same order).
+    pub dist: Vec<f64>,
 }
 
 impl GridGeometry {
     pub fn new(side: usize) -> Self {
         assert!(side >= 2);
-        let coords = (0..side * side)
+        let n = side * side;
+        let coords: Vec<(f64, f64)> = (0..n)
             .map(|i| ((i % side) as f64, (i / side) as f64))
             .collect();
         let d = (side - 1) as f64;
-        Self { side, coords, inv_scale: 1.0 / (2.0 * d * d) }
+        let inv_scale = 1.0 / (2.0 * d * d);
+        let mut dist = vec![0.0f64; n * n];
+        for (p, &(yx, yy)) in coords.iter().enumerate() {
+            let row = &mut dist[p * n..(p + 1) * n];
+            for (c, &(zx, zy)) in row.iter_mut().zip(coords.iter()) {
+                let dx = zx - yx;
+                let dy = zy - yy;
+                *c = (dx * dx + dy * dy) * inv_scale;
+            }
+        }
+        Self { side, coords, inv_scale, dist }
     }
 
     pub fn n(&self) -> usize {
@@ -61,44 +79,30 @@ impl DigitMeasure {
     }
 }
 
-impl DigitMeasure {
-    #[inline]
-    fn fill_row(&self, pix: usize, row: &mut [f64]) {
-        let inv = self.geom.inv_scale;
-        let (yx, yy) = self.geom.coords[pix];
-        for (c, &(zx, zy)) in row.iter_mut().zip(self.geom.coords.iter()) {
-            let dx = zx - yx;
-            let dy = zy - yy;
-            *c = (dx * dx + dy * dy) * inv;
-        }
-    }
-}
-
 impl NodeMeasure for DigitMeasure {
     fn support_size(&self) -> usize {
         self.geom.n()
     }
 
-    fn sample_cost_rows(&self, rng: &mut Rng64, out: &mut CostRows) {
-        assert_eq!(out.n, self.geom.n());
-        for r in 0..out.m {
-            let pix = self.sampler.sample(rng);
-            self.fill_row(pix, out.row_mut(r));
+    fn draw_samples_into(&self, rng: &mut Rng64, count: usize, out: &mut Samples) {
+        // Same draw sequence as the retired sample_cost_rows: one alias
+        // draw per row, in row order.
+        if !matches!(out, Samples::Pixels(_)) {
+            *out = Samples::Pixels(Vec::new());
+        }
+        let Samples::Pixels(pix) = out else { unreachable!() };
+        pix.clear();
+        pix.reserve(count);
+        for _ in 0..count {
+            pix.push(self.sampler.sample(rng));
         }
     }
 
-    fn draw_samples(&self, rng: &mut Rng64, count: usize) -> super::Samples {
-        super::Samples::Pixels((0..count).map(|_| self.sampler.sample(rng)).collect())
-    }
-
-    fn cost_rows_for(&self, samples: &super::Samples, out: &mut CostRows) {
-        let super::Samples::Pixels(pix) = samples else {
+    fn cost_rows<'a>(&'a self, samples: &'a Samples) -> MeasureRows<'a> {
+        let Samples::Pixels(pix) = samples else {
             panic!("DigitMeasure expects Pixels samples");
         };
-        assert_eq!(out.m, pix.len());
-        for (r, &p) in pix.iter().enumerate() {
-            self.fill_row(p, out.row_mut(r));
-        }
+        MeasureRows::Table { table: &self.geom.dist, n: self.geom.n(), pixels: pix }
     }
 }
 
@@ -235,6 +239,7 @@ pub fn synthetic_images(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::measures::CostRows;
 
     #[test]
     fn geometry_coords() {
@@ -246,6 +251,29 @@ mod tests {
         // max cost (corner to corner) normalizes to 1
         let (dx, dy) = (2.0, 2.0);
         assert!(((dx * dx + dy * dy) * g.inv_scale - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distance_table_matches_coordinate_formula() {
+        let g = GridGeometry::new(4);
+        let n = g.n();
+        assert_eq!(g.dist.len(), n * n);
+        for p in 0..n {
+            let (yx, yy) = g.coords[p];
+            for (l, &(zx, zy)) in g.coords.iter().enumerate() {
+                let dx = zx - yx;
+                let dy = zy - yy;
+                let want = (dx * dx + dy * dy) * g.inv_scale;
+                assert_eq!(want.to_bits(), g.dist[p * n + l].to_bits());
+            }
+        }
+        // diagonal is exactly zero, table is symmetric
+        for p in 0..n {
+            assert_eq!(g.dist[p * n + p], 0.0);
+            for l in 0..n {
+                assert_eq!(g.dist[p * n + l], g.dist[l * n + p]);
+            }
+        }
     }
 
     #[test]

@@ -4,10 +4,15 @@
 //! equispaced points on `[−5, 5]`; transport cost is squared distance,
 //! normalized by the squared support radius so that costs live in O(1)
 //! regardless of n — this keeps one `β` meaningful across experiments.
+//!
+//! Cost rows are never materialized: [`NodeMeasure::cost_rows`] binds
+//! the drawn sample locations to a [`MeasureRows::Quad1d`] source and
+//! the kernel generates `(z_l − Y_r)²·inv_scale` inside its softmax
+//! pass (bit-identical to the retired materialize-then-softmax path).
 
 use std::sync::Arc;
 
-use super::{CostRows, NodeMeasure};
+use super::{MeasureRows, NodeMeasure, Samples};
 use crate::rng::Rng64;
 
 /// `n` equispaced points on [lo, hi] (inclusive endpoints).
@@ -43,44 +48,33 @@ impl Gaussian1d {
     }
 }
 
-impl Gaussian1d {
-    #[inline]
-    fn fill_row(&self, y: f64, row: &mut [f64]) {
-        for (c, z) in row.iter_mut().zip(self.support.iter()) {
-            let d = z - y;
-            *c = d * d * self.inv_scale;
-        }
-    }
-}
-
 impl NodeMeasure for Gaussian1d {
     fn support_size(&self) -> usize {
         self.support.len()
     }
 
-    fn sample_cost_rows(&self, rng: &mut Rng64, out: &mut CostRows) {
-        assert_eq!(out.n, self.support.len());
-        for r in 0..out.m {
-            let y = rng.normal_with(self.theta, self.sigma);
-            self.fill_row(y, out.row_mut(r));
+    fn draw_samples_into(&self, rng: &mut Rng64, count: usize, out: &mut Samples) {
+        // Same draw sequence as the retired sample_cost_rows: one
+        // Box–Muller draw per row, in row order.
+        if !matches!(out, Samples::Points1d(_)) {
+            *out = Samples::Points1d(Vec::new());
+        }
+        let Samples::Points1d(ys) = out else { unreachable!() };
+        ys.clear();
+        ys.reserve(count);
+        for _ in 0..count {
+            ys.push(rng.normal_with(self.theta, self.sigma));
         }
     }
 
-    fn draw_samples(&self, rng: &mut Rng64, count: usize) -> super::Samples {
-        super::Samples::Points1d(
-            (0..count)
-                .map(|_| rng.normal_with(self.theta, self.sigma))
-                .collect(),
-        )
-    }
-
-    fn cost_rows_for(&self, samples: &super::Samples, out: &mut CostRows) {
-        let super::Samples::Points1d(ys) = samples else {
+    fn cost_rows<'a>(&'a self, samples: &'a Samples) -> MeasureRows<'a> {
+        let Samples::Points1d(ys) = samples else {
             panic!("Gaussian1d expects Points1d samples");
         };
-        assert_eq!(out.m, ys.len());
-        for (r, &y) in ys.iter().enumerate() {
-            self.fill_row(y, out.row_mut(r));
+        MeasureRows::Quad1d {
+            support: &self.support[..],
+            ys,
+            inv_scale: self.inv_scale,
         }
     }
 }
@@ -88,6 +82,7 @@ impl NodeMeasure for Gaussian1d {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::measures::CostRows;
 
     #[test]
     fn linspace_endpoints_and_spacing() {

@@ -2,15 +2,24 @@
 //!
 //! Each node holds a private measure `μ_i`; the barycenter lives on a
 //! fixed discrete support `{z_1..z_n}`. The only thing the algorithms
-//! ever need from a measure is: *draw M samples `Y_r ~ μ_i` and give me
-//! the cost rows `C[r, l] = c(z_l, Y_r)`* (Lemma 1). That contract is
-//! [`NodeMeasure::sample_cost_rows`].
+//! ever need from a measure is: *draw M samples `Y_r ~ μ_i` and let the
+//! kernel read the cost rows `C[r, l] = c(z_l, Y_r)`* (Lemma 1). That
+//! contract is the two-step seam
+//! [`NodeMeasure::draw_samples_into`] → [`NodeMeasure::cost_rows`]:
+//! sampling fills a reusable [`Samples`] buffer (the only per-activation
+//! state), and `cost_rows` binds those samples into a zero-copy
+//! [`MeasureRows`] source the kernel consumes row by row — no M×n cost
+//! buffer is ever materialized on the hot path.
 //!
 //! Two families, matching the paper's two experiments:
 //! * [`gaussian::Gaussian1d`] — continuous `N(θ_i, σ_i²)` on ℝ, support
 //!   = n equispaced points on [−5, 5], squared-distance cost (§4.1);
+//!   cost generation is fused into the kernel pass
+//!   ([`crate::kernel::CostRow::Quad1d`]);
 //! * [`digits::DigitMeasure`] — discrete 28×28 image histograms, support
-//!   = the same grid, squared Euclidean pixel-distance cost (§4.2).
+//!   = the same grid, squared Euclidean pixel-distance cost (§4.2);
+//!   cost rows are served **by reference** out of the shared precomputed
+//!   grid-distance table — zero per-activation cost work at all.
 //!   Synthetic glyphs by default; real MNIST IDX files if provided
 //!   (see [`idx`] and DESIGN.md §4 for the substitution argument).
 
@@ -18,9 +27,16 @@ pub mod digits;
 pub mod gaussian;
 pub mod idx;
 
+use crate::kernel::{CostRow, CostRowSource};
 use crate::rng::Rng64;
 
-/// Row-major M×n cost matrix buffer, reused across activations.
+/// Row-major M×n **materialized** cost matrix buffer.
+///
+/// No longer the hot-path representation (the oracle reads
+/// [`MeasureRows`] zero-copy); kept for the PJRT FFI staging path,
+/// bench baselines, and tests. Implements
+/// [`CostRowSource`](crate::kernel::CostRowSource) so every kernel
+/// entry point accepts it unchanged.
 #[derive(Clone, Debug)]
 pub struct CostRows {
     pub m: usize,
@@ -42,6 +58,16 @@ impl CostRows {
     pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
         &mut self.data[r * self.n..(r + 1) * self.n]
     }
+
+    /// Materialize every row of `src` into this buffer (shape-checked).
+    pub fn fill_from<S: CostRowSource + ?Sized>(&mut self, src: &S) {
+        assert_eq!(self.m, src.m(), "row-count mismatch");
+        assert_eq!(self.n, src.n(), "support-size mismatch");
+        for r in 0..self.m {
+            let row = src.cost_row(r);
+            row.write_into(self.row_mut(r));
+        }
+    }
 }
 
 /// A compact record of drawn samples, reusable to regenerate cost rows
@@ -55,6 +81,13 @@ pub enum Samples {
 }
 
 impl Samples {
+    /// An empty, variant-agnostic buffer for [`NodeMeasure::draw_samples_into`]
+    /// to fill (the first draw fixes the variant; later draws reuse the
+    /// allocation).
+    pub fn empty() -> Self {
+        Samples::Points1d(Vec::new())
+    }
+
     pub fn len(&self) -> usize {
         match self {
             Samples::Points1d(v) => v.len(),
@@ -67,20 +100,82 @@ impl Samples {
     }
 }
 
+/// A batch of drawn samples bound to their measure's cost structure —
+/// the zero-copy [`CostRowSource`] the kernel consumes.
+///
+/// Borrows both the measure's cached geometry (distance table /
+/// support) and the caller's [`Samples`] buffer; rebinding after each
+/// draw is free.
+#[derive(Clone, Copy, Debug)]
+pub enum MeasureRows<'a> {
+    /// Digit experiment: row `r` is `&table[pixels[r]·n ..][..n]` — a
+    /// borrowed view into the shared precomputed grid-distance table.
+    Table { table: &'a [f64], n: usize, pixels: &'a [usize] },
+    /// Gaussian experiment: `c_l = (support[l] − ys[r])²·inv_scale`,
+    /// generated inside the kernel pass.
+    Quad1d { support: &'a [f64], ys: &'a [f64], inv_scale: f64 },
+}
+
+impl CostRowSource for MeasureRows<'_> {
+    fn m(&self) -> usize {
+        match self {
+            MeasureRows::Table { pixels, .. } => pixels.len(),
+            MeasureRows::Quad1d { ys, .. } => ys.len(),
+        }
+    }
+
+    fn n(&self) -> usize {
+        match self {
+            MeasureRows::Table { n, .. } => *n,
+            MeasureRows::Quad1d { support, .. } => support.len(),
+        }
+    }
+
+    fn cost_row(&self, r: usize) -> CostRow<'_> {
+        match *self {
+            MeasureRows::Table { table, n, pixels } => {
+                let p = pixels[r];
+                CostRow::Borrowed(&table[p * n..(p + 1) * n])
+            }
+            MeasureRows::Quad1d { support, ys, inv_scale } => {
+                CostRow::Quad1d { support, y: ys[r], inv_scale }
+            }
+        }
+    }
+}
+
 /// A node's private measure: the sampling oracle of the paper.
 pub trait NodeMeasure: Send + Sync {
     /// Support size n (shared across the network).
     fn support_size(&self) -> usize;
 
-    /// Draw `out.m` samples from μ and fill the cost rows
-    /// `out[r, l] = c(z_l, Y_r)`. Must not allocate on the hot path.
-    fn sample_cost_rows(&self, rng: &mut Rng64, out: &mut CostRows);
+    /// Draw `count` samples from μ into `out`, reusing its storage
+    /// (steady-state: zero allocation). Implementations must consume
+    /// the exact same `Rng64` draw sequence as the retired
+    /// `sample_cost_rows` did — one sample per row, in row order — so
+    /// sim goldens and common-random-number comparisons are preserved.
+    fn draw_samples_into(&self, rng: &mut Rng64, count: usize, out: &mut Samples);
 
-    /// Draw `count` samples and return them in compact form.
-    fn draw_samples(&self, rng: &mut Rng64, count: usize) -> Samples;
+    /// Bind previously drawn samples to a zero-copy cost-row source.
+    fn cost_rows<'a>(&'a self, samples: &'a Samples) -> MeasureRows<'a>;
 
-    /// Regenerate the cost rows of previously drawn samples.
-    fn cost_rows_for(&self, samples: &Samples, out: &mut CostRows);
+    /// Draw `count` samples into a fresh buffer (metric-evaluator setup
+    /// and examples; the hot path uses [`Self::draw_samples_into`]).
+    fn draw_samples(&self, rng: &mut Rng64, count: usize) -> Samples {
+        let mut out = Samples::empty();
+        self.draw_samples_into(rng, count, &mut out);
+        out
+    }
+
+    /// Sample and **materialize** `out.m` cost rows
+    /// `out[r, l] = c(z_l, Y_r)` — the pre-kernel oracle input, kept as
+    /// a provided method for bench baselines, FFI staging, and tests.
+    /// Identical RNG draws and cost values as the zero-copy path.
+    fn sample_cost_rows(&self, rng: &mut Rng64, out: &mut CostRows) {
+        let samples = self.draw_samples(rng, out.m);
+        let rows = self.cost_rows(&samples);
+        out.fill_from(&rows);
+    }
 }
 
 /// Config-level description of the per-node measure family.

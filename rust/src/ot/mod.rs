@@ -1,4 +1,5 @@
-//! Entropic semi-discrete OT dual oracle — native Rust implementation.
+//! Entropic semi-discrete OT dual oracle — backend seam over the
+//! shared numeric core in [`crate::kernel`].
 //!
 //! Mirrors the L1 Pallas kernel / L2 model exactly (see
 //! `python/compile/kernels/ref.py` for the math): given the local
@@ -7,47 +8,29 @@
 //!   grad = mean_r softmax((η̄ − C_r)/β)          (paper Lemma 1 Eq. 6)
 //!   val  = mean_r β·logsumexp((η̄ − C_r)/β)      (dual objective part)
 //!
+//! The arithmetic lives in [`crate::kernel::dual_oracle`], which
+//! consumes cost rows through the zero-copy
+//! [`CostRowSource`](crate::kernel::CostRowSource) seam; this module
+//! keeps the backend contract:
+//!
 //! Two interchangeable backends implement [`DualOracle`]:
-//! * [`NativeOracle`] — this module; f64; zero FFI overhead.
+//! * [`NativeOracle`] — the kernel path; f64; zero FFI overhead, zero
+//!   per-activation cost-row copies.
 //! * [`crate::runtime::PjrtOracle`] — executes the AOT JAX/Pallas
-//!   artifact through PJRT, proving the three-layer path.
+//!   artifact through PJRT, proving the three-layer path (materializes
+//!   rows into its FFI staging buffer — inherent to the boundary).
 //! Integration tests pin them together (`rust/tests/pjrt_parity.rs`).
 
 pub mod sinkhorn;
 
+use crate::kernel::{self, CostRowSource};
 use crate::measures::CostRows;
 
-/// Scratch space reused across activations (no hot-path allocation).
-#[derive(Clone, Debug, Default)]
-pub struct OracleScratch {
-    logits: Vec<f64>,
-}
+pub use crate::kernel::OracleScratch;
 
-/// Stable single-row pass: returns (softmax written into `probs`, lse).
-#[inline]
-fn softmax_lse_row(eta: &[f64], cost: &[f64], inv_beta: f64, probs: &mut [f64]) -> f64 {
-    // logits s_l = (eta_l - c_l) * inv_beta, max-subtracted
-    let mut smax = f64::NEG_INFINITY;
-    for ((p, &e), &c) in probs.iter_mut().zip(eta).zip(cost) {
-        let s = (e - c) * inv_beta;
-        *p = s;
-        if s > smax {
-            smax = s;
-        }
-    }
-    let mut z = 0.0;
-    for p in probs.iter_mut() {
-        *p = (*p - smax).exp();
-        z += *p;
-    }
-    let inv_z = 1.0 / z;
-    for p in probs.iter_mut() {
-        *p *= inv_z;
-    }
-    smax + z.ln()
-}
-
-/// Compute the oracle into preallocated output buffers.
+/// Compute the oracle over a materialized buffer into preallocated
+/// outputs — thin wrapper over [`kernel::dual_oracle`], kept for
+/// benches/tests that hold a [`CostRows`].
 ///
 /// `grad` (len n) receives the mean softmax; returns the mean
 /// `β·logsumexp` value.
@@ -58,27 +41,7 @@ pub fn dual_oracle_into(
     grad: &mut [f64],
     scratch: &mut OracleScratch,
 ) -> f64 {
-    let n = cost.n;
-    let m = cost.m;
-    assert_eq!(eta.len(), n);
-    assert_eq!(grad.len(), n);
-    assert!(beta > 0.0 && m > 0);
-    scratch.logits.resize(n, 0.0);
-    let inv_beta = 1.0 / beta;
-    grad.fill(0.0);
-    let mut lse_sum = 0.0;
-    for r in 0..m {
-        let lse = softmax_lse_row(eta, cost.row(r), inv_beta, &mut scratch.logits);
-        lse_sum += lse;
-        for (g, p) in grad.iter_mut().zip(&scratch.logits) {
-            *g += p;
-        }
-    }
-    let inv_m = 1.0 / m as f64;
-    for g in grad.iter_mut() {
-        *g *= inv_m;
-    }
-    beta * lse_sum * inv_m
+    kernel::dual_oracle(eta, cost, beta, grad, scratch)
 }
 
 /// Allocating convenience wrapper.
@@ -91,17 +54,28 @@ pub fn dual_oracle(eta: &[f64], cost: &CostRows, beta: f64) -> (Vec<f64>, f64) {
 
 /// The oracle contract used by every algorithm and the coordinator.
 ///
+/// Cost rows arrive through the zero-copy
+/// [`CostRowSource`](crate::kernel::CostRowSource) seam — a
+/// [`crate::measures::MeasureRows`] binding on the hot path, or a
+/// materialized [`CostRows`] buffer (which implements the same trait)
+/// in benches and tests.
+///
 /// Not `Send`: the PJRT backend wraps thread-affine FFI handles and the
 /// coordinator's event loop is single-threaded by design (determinism).
 pub trait DualOracle {
     /// Fill `grad` with `∇̃W*_{β,μ}(η̄)` and return the dual value part.
-    fn eval(&mut self, eta: &[f64], cost: &CostRows, beta: f64, grad: &mut [f64])
-        -> f64;
+    fn eval(
+        &mut self,
+        eta: &[f64],
+        cost: &dyn CostRowSource,
+        beta: f64,
+        grad: &mut [f64],
+    ) -> f64;
 
     fn name(&self) -> &'static str;
 }
 
-/// f64 native backend.
+/// f64 native backend — the kernel, directly.
 #[derive(Default)]
 pub struct NativeOracle {
     scratch: OracleScratch,
@@ -111,11 +85,11 @@ impl DualOracle for NativeOracle {
     fn eval(
         &mut self,
         eta: &[f64],
-        cost: &CostRows,
+        cost: &dyn CostRowSource,
         beta: f64,
         grad: &mut [f64],
     ) -> f64 {
-        dual_oracle_into(eta, cost, beta, grad, &mut self.scratch)
+        kernel::dual_oracle(eta, cost, beta, grad, &mut self.scratch)
     }
 
     fn name(&self) -> &'static str {

@@ -9,6 +9,7 @@
 //! also a standalone substrate (log-domain, numerically robust at small
 //! β).
 
+use crate::kernel::logsumexp;
 use crate::linalg::Mat;
 
 /// Result of a Sinkhorn solve.
@@ -52,16 +53,12 @@ pub fn sinkhorn(
         b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
     let mut f = vec![0.0; r];
     let mut g = vec![0.0; c];
-
-    // stable logsumexp over a masked iterator
-    let lse = |it: &mut dyn Iterator<Item = f64>| -> f64 {
-        let vals: Vec<f64> = it.filter(|v| v.is_finite()).collect();
-        if vals.is_empty() {
-            return f64::NEG_INFINITY;
-        }
-        let m = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        m + vals.iter().map(|v| (v - m).exp()).sum::<f64>().ln()
-    };
+    // One shared logit scratch row for both sweep directions — the old
+    // per-call `lse` closure collected into a fresh Vec for every row
+    // and column of every iteration (the solver's top allocator); the
+    // kernel's logsumexp treats −∞ (masked bins) as exact no-ops, so
+    // filtering is unnecessary.
+    let mut logits = vec![0.0; r.max(c)];
 
     let mut iterations = 0;
     let mut marginal_error = f64::INFINITY;
@@ -73,16 +70,22 @@ pub fn sinkhorn(
                 continue;
             }
             let row = cost.row(i);
-            let v = lse(&mut (0..c).map(|j| (g[j] - row[j]) / beta + log_b[j]));
-            f[i] = -beta * v;
+            let buf = &mut logits[..c];
+            for (j, slot) in buf.iter_mut().enumerate() {
+                *slot = (g[j] - row[j]) / beta + log_b[j];
+            }
+            f[i] = -beta * logsumexp(buf);
         }
         // g_j = −β·LSE_i[(f_i − C_ij)/β + log a_i]
         for j in 0..c {
             if log_b[j].is_infinite() {
                 continue;
             }
-            let v = lse(&mut (0..r).map(|i| (f[i] - cost[(i, j)]) / beta + log_a[i]));
-            g[j] = -beta * v;
+            let buf = &mut logits[..r];
+            for (i, slot) in buf.iter_mut().enumerate() {
+                *slot = (f[i] - cost[(i, j)]) / beta + log_a[i];
+            }
+            g[j] = -beta * logsumexp(buf);
         }
         // row-marginal check every few iterations
         if it % 5 == 4 || it + 1 == max_iter {

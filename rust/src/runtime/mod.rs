@@ -91,7 +91,7 @@ mod pjrt_impl {
     use std::rc::Rc;
 
     use super::{find_oracle_entry, read_manifest};
-    use crate::measures::CostRows;
+    use crate::kernel::CostRowSource;
     use crate::ot::DualOracle;
 
     thread_local! {
@@ -154,9 +154,13 @@ mod pjrt_impl {
         exe: Rc<xla::PjRtLoadedExecutable>,
         m: usize,
         n: usize,
-        // staging buffers: f64 state → f32 literals
+        // staging buffers: f64 state → f32 literals. The FFI boundary
+        // needs a contiguous materialized batch, so `eval` writes the
+        // zero-copy rows into `cost_stage` first — the one backend that
+        // still pays the copy tax, inherent to the artifact ABI.
         eta_f32: Vec<f32>,
         cost_f32: Vec<f32>,
+        cost_stage: Vec<f64>,
     }
 
     impl PjrtOracle {
@@ -173,6 +177,7 @@ mod pjrt_impl {
                 n,
                 eta_f32: vec![0.0; n],
                 cost_f32: vec![0.0; m * n],
+                cost_stage: vec![0.0; m * n],
             })
         }
 
@@ -218,15 +223,22 @@ mod pjrt_impl {
         fn eval(
             &mut self,
             eta: &[f64],
-            cost: &CostRows,
+            cost: &dyn CostRowSource,
             beta: f64,
             grad: &mut [f64],
         ) -> f64 {
-            assert_eq!(cost.m, self.m, "PJRT artifact is fixed-shape: M mismatch");
-            assert_eq!(cost.n, self.n, "PJRT artifact is fixed-shape: n mismatch");
-            let (g, v) = self
-                .eval_raw(eta, &cost.data, beta)
-                .expect("PJRT oracle execution failed");
+            assert_eq!(cost.m(), self.m, "PJRT artifact is fixed-shape: M mismatch");
+            assert_eq!(cost.n(), self.n, "PJRT artifact is fixed-shape: n mismatch");
+            // materialize into the staging buffer (taken out to satisfy
+            // the borrow of `eval_raw(&mut self, ..)`)
+            let mut stage = std::mem::take(&mut self.cost_stage);
+            for r in 0..self.m {
+                cost.cost_row(r)
+                    .write_into(&mut stage[r * self.n..(r + 1) * self.n]);
+            }
+            let res = self.eval_raw(eta, &stage, beta);
+            self.cost_stage = stage;
+            let (g, v) = res.expect("PJRT oracle execution failed");
             for (dst, src) in grad.iter_mut().zip(&g) {
                 *dst = *src as f64;
             }
@@ -247,7 +259,7 @@ mod pjrt_stub {
     use std::path::Path;
 
     use super::{find_oracle_entry, read_manifest};
-    use crate::measures::CostRows;
+    use crate::kernel::CostRowSource;
     use crate::ot::DualOracle;
 
     /// Stub standing in for the PJRT backend when the crate is built
@@ -281,7 +293,7 @@ mod pjrt_stub {
         fn eval(
             &mut self,
             _eta: &[f64],
-            _cost: &CostRows,
+            _cost: &dyn CostRowSource,
             _beta: f64,
             _grad: &mut [f64],
         ) -> f64 {
