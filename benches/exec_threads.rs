@@ -1,17 +1,29 @@
 //! Threaded-executor bench: async (A²DWB) vs sync (DCWB) wall-clock at
-//! an equal iteration budget on 1/2/4/8 workers, plus the simulator
-//! reference run. Emits `BENCH_exec.json` at the repository root to
-//! anchor the perf trajectory across PRs.
+//! an equal iteration budget on 1/2/4/8 workers, a **cross-process**
+//! 2-shard datapoint over loopback TCP, plus the simulator reference
+//! run. Emits `BENCH_exec.json` at the repository root to anchor the
+//! perf trajectory across PRs (schema documented in ARCHITECTURE.md).
 //!
 //! Per-activation compute is simulated (1 ms ± 50% jitter, one straggler
 //! node at 4x), so the measured async/sync gap is the barrier's waiting
-//! overhead, not oracle arithmetic.
+//! overhead, not oracle arithmetic. Speedups are ratios of **run
+//! windows** (`ExperimentReport::run_window_seconds`): total wall time
+//! includes setup + metric evaluation that both algorithms pay
+//! identically and would bias the ratio toward 1x.
+//!
+//! The cross-process cells re-execute this very binary with a `serve`
+//! argv (forwarded to `a2dwb::exec::net::serve_main`), so each shard
+//! is a real OS process with its own address space and the gradients
+//! genuinely cross a socket.
 
+use a2dwb::exec::net::{self, Pacing};
 use a2dwb::graph::TopologySpec;
 use a2dwb::prelude::*;
 
 struct Cell {
     workers: usize,
+    async_window: f64,
+    sync_window: f64,
     async_wall: f64,
     sync_wall: f64,
     async_dual: f64,
@@ -19,6 +31,18 @@ struct Cell {
 }
 
 fn main() {
+    // Child-process mode: `<this-binary> serve --shard i/of ...` runs
+    // one shard of the cross-process cells below.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.first().map(String::as_str) == Some("serve") {
+        let args = a2dwb::cli::Args::parse(argv.into_iter().skip(1)).expect("serve args");
+        if let Err(e) = net::serve_main(&args) {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
+
     let nodes = 16;
     let base = ExperimentConfig {
         nodes,
@@ -41,22 +65,54 @@ fn main() {
         let (a, s) =
             a2dwb::exec::run_speedup_pair(&base, workers).expect("threaded run");
         println!(
-            "BENCH exec_threads workers={workers} async_wall={:.3}s sync_wall={:.3}s \
+            "BENCH exec_threads workers={workers} async_window={:.3}s sync_window={:.3}s \
              speedup={:.2}x async_dual={:.6} sync_dual={:.6}",
-            a.wall_seconds,
-            s.wall_seconds,
-            s.wall_seconds / a.wall_seconds.max(1e-12),
+            a.run_window_seconds(),
+            s.run_window_seconds(),
+            s.run_window_seconds() / a.run_window_seconds().max(1e-12),
             a.final_dual_objective(),
             s.final_dual_objective()
         );
         cells.push(Cell {
             workers,
+            async_window: a.run_window_seconds(),
+            sync_window: s.run_window_seconds(),
             async_wall: a.wall_seconds,
             sync_wall: s.wall_seconds,
             async_dual: a.final_dual_objective(),
             sync_dual: s.final_dual_objective(),
         });
     }
+
+    // Cross-process datapoint: the same pair on 2 shard processes
+    // exchanging gradients over loopback TCP, free-running (no
+    // cross-process barrier for the async side, round markers for
+    // DCWB).
+    let exe = std::env::current_exe().expect("current_exe");
+    let shards = 2usize;
+    let mut net_pair = Vec::new();
+    for alg in [AlgorithmKind::A2dwb, AlgorithmKind::Dcwb] {
+        let cfg = ExperimentConfig { algorithm: alg, ..base.clone() };
+        let r = net::run_mesh_processes(&cfg, &exe, shards, Pacing::Free, false)
+            .expect("cross-process mesh run");
+        println!(
+            "BENCH exec_net shards={shards} alg={} window={:.3}s messages={} \
+             wire_messages={} dual={:.6}",
+            alg.name(),
+            r.run_window_seconds(),
+            r.messages,
+            r.wire_messages,
+            r.final_dual_objective()
+        );
+        net_pair.push(r);
+    }
+    let (na, ns) = (&net_pair[0], &net_pair[1]);
+    println!(
+        "BENCH exec_net shards={shards} speedup={:.2}x (async {:.3}s vs sync {:.3}s)",
+        ns.run_window_seconds() / na.run_window_seconds().max(1e-12),
+        na.run_window_seconds(),
+        ns.run_window_seconds()
+    );
 
     // simulator reference (virtual time, no compute injection)
     let sim_cfg = ExperimentConfig {
@@ -84,18 +140,34 @@ fn main() {
     json.push_str("  \"cells\": [\n");
     for (idx, c) in cells.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"workers\": {}, \"async_wall_s\": {:.6}, \"sync_wall_s\": {:.6}, \
-             \"speedup\": {:.4}, \"async_final_dual\": {:.9}, \
-             \"sync_final_dual\": {:.9}}}{}\n",
+            "    {{\"workers\": {}, \"async_window_s\": {:.6}, \"sync_window_s\": {:.6}, \
+             \"speedup\": {:.4}, \"async_wall_s\": {:.6}, \"sync_wall_s\": {:.6}, \
+             \"async_final_dual\": {:.9}, \"sync_final_dual\": {:.9}}}{}\n",
             c.workers,
+            c.async_window,
+            c.sync_window,
+            c.sync_window / c.async_window.max(1e-12),
             c.async_wall,
             c.sync_wall,
-            c.sync_wall / c.async_wall.max(1e-12),
             c.async_dual,
             c.sync_dual,
             if idx + 1 == cells.len() { "" } else { "," }
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"cross_process\": {{\"shards\": {shards}, \"transport\": \"tcp-loopback\", \
+         \"async_window_s\": {:.6}, \"sync_window_s\": {:.6}, \"speedup\": {:.4}, \
+         \"async_wire_messages\": {}, \"sync_wire_messages\": {}, \
+         \"async_final_dual\": {:.9}, \"sync_final_dual\": {:.9}}}\n",
+        na.run_window_seconds(),
+        ns.run_window_seconds(),
+        ns.run_window_seconds() / na.run_window_seconds().max(1e-12),
+        na.wire_messages,
+        ns.wire_messages,
+        na.final_dual_objective(),
+        ns.final_dual_objective()
+    ));
+    json.push_str("}\n");
     a2dwb::bench_util::write_root_json("BENCH_exec.json", &json);
 }

@@ -224,6 +224,7 @@ pub(super) fn run(
         activations,
         rounds: 0,
         messages: transport.messages,
+        wire_messages: 0,
         events: transport.queue.processed(),
         lambda_max,
         wall_seconds: 0.0,

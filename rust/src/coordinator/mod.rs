@@ -180,7 +180,62 @@ impl ExperimentConfig {
         self.measure.support_size()
     }
 
-    fn validate(&self) -> Result<(), String> {
+    /// Build a config from parsed CLI flags (shared by the `a2dwb`
+    /// binary's experiment subcommands and the `serve` shard entry
+    /// point, so a child shard process reconstructs exactly the
+    /// experiment its parent described — see
+    /// [`crate::exec::net::shard::experiment_args`] for the inverse).
+    pub fn from_cli_args(args: &crate::cli::Args, mnist: bool) -> Result<Self, String> {
+        let mut cfg = if mnist {
+            ExperimentConfig::mnist_default(args.get::<u8>("digit", 2)?)
+        } else {
+            ExperimentConfig::gaussian_default()
+        };
+        cfg.nodes = args.get("nodes", cfg.nodes)?;
+        cfg.seed = args.get("seed", cfg.seed)?;
+        cfg.topology =
+            TopologySpec::parse(&args.get_str("topology", "complete"), cfg.seed)?;
+        cfg.algorithm = AlgorithmKind::parse(&args.get_str("algorithm", "a2dwb"))?;
+        cfg.beta = args.get("beta", cfg.beta)?;
+        cfg.gamma_scale = args.get("gamma-scale", cfg.gamma_scale)?;
+        cfg.samples_per_activation = args.get("samples", cfg.samples_per_activation)?;
+        cfg.eval_samples = args.get("eval-samples", cfg.eval_samples)?;
+        cfg.duration = args.get("duration", cfg.duration)?;
+        cfg.activation_interval =
+            args.get("activation-interval", cfg.activation_interval)?;
+        cfg.metric_interval = args.get("metric-interval", cfg.metric_interval)?;
+        cfg.compute_time = args.get("compute-time", cfg.compute_time)?;
+        cfg.faults.straggler_fraction =
+            args.get("straggler-fraction", cfg.faults.straggler_fraction)?;
+        cfg.faults.straggler_slowdown =
+            args.get("straggler-slowdown", cfg.faults.straggler_slowdown)?;
+        cfg.faults.drop_prob = args.get("drop-prob", cfg.faults.drop_prob)?;
+        if mnist {
+            let side = args.get("side", 28usize)?;
+            cfg.measure = MeasureSpec::Digits {
+                digit: args.get::<u8>("digit", 2)?,
+                side,
+                idx_path: args.get_opt("idx-path").map(str::to_string),
+            };
+        } else {
+            cfg.measure = MeasureSpec::Gaussian { n: args.get("support", 100usize)? };
+        }
+        cfg.backend = match args.get_str("backend", "native").as_str() {
+            "native" => OracleBackendSpec::Native,
+            "pjrt" => OracleBackendSpec::Pjrt {
+                artifacts_dir: args.get_str("artifacts", "artifacts"),
+            },
+            other => return Err(format!("unknown backend '{other}'")),
+        };
+        let workers = args.get("workers", 0usize)?;
+        cfg.executor = ExecutorSpec::parse(&args.get_str("executor", "sim"), workers)?;
+        if args.has_flag("paper-literal-diag") {
+            cfg.diag = DiagCoef::PaperLiteral;
+        }
+        Ok(cfg)
+    }
+
+    pub(crate) fn validate(&self) -> Result<(), String> {
         if self.nodes < 2 {
             return Err("need at least 2 nodes".into());
         }
@@ -230,6 +285,11 @@ pub struct ExperimentReport {
     pub activations: u64,
     pub rounds: u64,
     pub messages: u64,
+    /// TCP frames actually sent by a sharded (multi-process) run — one
+    /// per (broadcast, peer shard), so `wire_messages < messages` is
+    /// the fan-out dedup the socket transport buys. 0 for in-process
+    /// backends, which have no wire.
+    pub wire_messages: u64,
     pub events: u64,
     /// λ_max(W̄) of the topology actually built.
     pub lambda_max: f64,
@@ -248,11 +308,33 @@ impl ExperimentReport {
         self.consensus.last_value().unwrap_or(f64::NAN)
     }
 
+    /// Wall-clock seconds of the **run window** — the timestamp of the
+    /// last `dual_wall` sample, i.e. time from worker start to the
+    /// last worker finishing. This is the honest numerator/denominator
+    /// for async-vs-sync speedups: `wall_seconds` additionally counts
+    /// measure construction, evaluator setup, and metric evaluation,
+    /// which both algorithms pay identically, biasing any
+    /// `wall_seconds` ratio toward 1×.
+    pub fn run_window_seconds(&self) -> f64 {
+        self.dual_wall
+            .points
+            .last()
+            .map(|&(t, _)| t)
+            .filter(|&t| t > 0.0)
+            .unwrap_or(self.wall_seconds)
+    }
+
     /// One-line summary for bench output.
     pub fn summary(&self) -> String {
+        let wire = if self.wire_messages > 0 {
+            format!(" wire={}", self.wire_messages)
+        } else {
+            String::new()
+        };
         format!(
             "REPORT {tag} dual={dual:.6} consensus={cons:.3e} activations={act} \
-             rounds={rounds} messages={msg} events={ev} wall={wall:.2}s",
+             rounds={rounds} messages={msg}{wire} events={ev} window={win:.2}s \
+             wall={wall:.2}s",
             tag = self.tag,
             dual = self.final_dual_objective(),
             cons = self.final_consensus(),
@@ -260,6 +342,7 @@ impl ExperimentReport {
             rounds = self.rounds,
             msg = self.messages,
             ev = self.events,
+            win = self.run_window_seconds(),
             wall = self.wall_seconds,
         )
     }

@@ -211,6 +211,7 @@ pub(super) fn run(
         activations: rounds * m as u64,
         rounds,
         messages,
+        wire_messages: 0,
         events: rounds,
         lambda_max,
         wall_seconds: 0.0,

@@ -1,0 +1,697 @@
+//! Length-prefixed wire codec for the socket transport.
+//!
+//! Every frame on the wire is
+//!
+//! ```text
+//! ┌──────────────┬───────────┬──────────────────────────────┐
+//! │ len: u32 LE  │ kind: u8  │ payload (len − 1 bytes)      │
+//! └──────────────┴───────────┴──────────────────────────────┘
+//! ```
+//!
+//! where `len` counts everything after the length field (kind byte
+//! included). All integers are little-endian; all floats travel as the
+//! IEEE-754 bit pattern of `f64::to_bits`, so gradients and report
+//! series survive the wire **bit-for-bit** — the property the lockstep
+//! parity test ([`crate::exec::net`]) depends on.
+//!
+//! Frame kinds:
+//!
+//! * [`WireMsg::Hello`] — connection handshake. Carries the protocol
+//!   magic + version and a digest of the experiment configuration
+//!   (shard layout, m, n, seed, algorithm, sweep budget, pacing). Both
+//!   ends validate strictly; any mismatch kills the connection loudly
+//!   rather than letting two differently-configured shards silently
+//!   corrupt each other's mailboxes.
+//! * [`WireMsg::Grad`] — one gradient broadcast: source node, the
+//!   iteration stamp it was computed at, and the n-vector payload. The
+//!   stamp is what makes delivery idempotent and out-of-order safe:
+//!   receivers publish into [`FreshestSlot`]s, which keep only the
+//!   freshest stamp, exactly as the in-process mailbox grid does —
+//!   freshest-wins holds *across the wire*.
+//! * [`WireMsg::Done`] — a pacing marker ([`MarkerPhase`]): initial
+//!   exchange complete, sweep `r` complete (lockstep), or the two DCWB
+//!   round phases (published / collected — the cross-process stand-in
+//!   for the two `std::sync::Barrier` waits per round). Because markers
+//!   travel on the same TCP stream as the gradients they fence, FIFO
+//!   delivery makes "marker processed ⇒ preceding gradients processed"
+//!   a structural guarantee, not a timing assumption.
+//! * [`WireMsg::Bye`] — clean shutdown. A reader that hits EOF without
+//!   a preceding `Bye` reports the peer as crashed.
+//! * [`WireMsg::Report`] — a shard's end-of-run [`ShardReport`] (final
+//!   dual iterates, optional per-sweep trajectory blocks, counters),
+//!   shipped to the aggregating process.
+//!
+//! Decoding is strict: unknown kinds, short/trailing payload bytes,
+//! oversized frames ([`MAX_FRAME_BYTES`]), and bad magic/version are
+//! all hard errors. [`FrameReader`] additionally survives read
+//! timeouts without ever losing stream position (it buffers partial
+//! reads), so a socket with a read timeout can be polled safely.
+//!
+//! [`FreshestSlot`]: crate::exec::transport::FreshestSlot
+
+use std::io::{Read, Write};
+
+/// `b"A2WB"` — first four bytes of every handshake.
+pub const MAGIC: u32 = 0x4132_5742;
+/// Bump on any incompatible frame-layout change.
+pub const PROTOCOL_VERSION: u8 = 1;
+/// Hard upper bound on one frame (64 MiB): a length prefix beyond this
+/// is treated as stream corruption, not an allocation request.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+const KIND_HELLO: u8 = 1;
+const KIND_GRAD: u8 = 2;
+const KIND_DONE: u8 = 3;
+const KIND_BYE: u8 = 4;
+const KIND_REPORT: u8 = 5;
+
+/// Which fence a [`WireMsg::Done`] marker announces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MarkerPhase {
+    /// The shard finished its initial gradient exchange (async modes)
+    /// or its connection setup (DCWB): safe to start sweep 0.
+    Init,
+    /// Lockstep pacing: the shard finished its portion of sweep `value`.
+    SweepDone,
+    /// DCWB: the shard published every local round-`value` gradient
+    /// (first barrier of the round).
+    RoundPublished,
+    /// DCWB: the shard collected + updated for round `value` (second
+    /// barrier of the round).
+    RoundCollected,
+}
+
+impl MarkerPhase {
+    fn code(self) -> u8 {
+        match self {
+            MarkerPhase::Init => 0,
+            MarkerPhase::SweepDone => 1,
+            MarkerPhase::RoundPublished => 2,
+            MarkerPhase::RoundCollected => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self, String> {
+        match c {
+            0 => Ok(MarkerPhase::Init),
+            1 => Ok(MarkerPhase::SweepDone),
+            2 => Ok(MarkerPhase::RoundPublished),
+            3 => Ok(MarkerPhase::RoundCollected),
+            other => Err(format!("unknown marker phase {other}")),
+        }
+    }
+}
+
+/// Handshake contents: identity plus a digest of everything two shards
+/// must agree on before exchanging gradients.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HelloFrame {
+    pub shard: u32,
+    pub shards: u32,
+    /// Network size m.
+    pub nodes: u32,
+    /// Support size n (gradient width on the wire).
+    pub support: u32,
+    pub seed: u64,
+    /// [`AlgorithmKind`](crate::algo::AlgorithmKind) code (0/1/2).
+    pub algo: u8,
+    /// Sweep budget ⌈duration/interval⌉ — both ends must run the same
+    /// number of sweeps or the pacing markers deadlock.
+    pub sweeps: u64,
+    /// [`Pacing`](crate::exec::net::Pacing) code (0 free, 1 lockstep).
+    pub pacing: u8,
+    /// FNV-1a digest of every remaining experiment knob the explicit
+    /// fields above don't carry (β, γ-scale, batch sizes, topology,
+    /// measure family, fault model, diag variant, intervals — see
+    /// [`config_digest`](crate::exec::net::shard::config_digest)), so
+    /// two shards differing in *any* dynamics-relevant setting refuse
+    /// the handshake instead of silently mixing gradients.
+    pub digest: u64,
+}
+
+impl HelloFrame {
+    /// Everything except `shard` must agree between the two ends.
+    pub fn check_compatible(&self, other: &HelloFrame) -> Result<(), String> {
+        let a = (self.shards, self.nodes, self.support, self.seed, self.algo, self.sweeps, self.pacing, self.digest);
+        let b = (other.shards, other.nodes, other.support, other.seed, other.algo, other.sweeps, other.pacing, other.digest);
+        if a != b {
+            return Err(format!(
+                "shard config mismatch: local {a:?} vs peer {b:?} \
+                 (shards, nodes, support, seed, algo, sweeps, pacing, config digest)"
+            ));
+        }
+        if other.shard >= other.shards {
+            return Err(format!("peer shard {}/{} out of range", other.shard, other.shards));
+        }
+        Ok(())
+    }
+}
+
+/// One end-of-run shard report, shipped to the aggregator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// Activations executed by this shard's local nodes.
+    pub activations: u64,
+    /// Directed-edge message count (same granularity as the in-process
+    /// executors: one per (src, neighbor) pair per broadcast).
+    pub messages: u64,
+    /// TCP frames actually sent: one per (broadcast, peer *shard*) —
+    /// the wire dedup relative to `messages` is the point of sharding.
+    pub wire_messages: u64,
+    /// DCWB rounds completed (0 for the async pair).
+    pub rounds: u64,
+    /// Wall-clock seconds between sweep 0 and the last local activation.
+    pub window_secs: f64,
+    /// Local nodes' dual iterates η̄ at the common final θ index,
+    /// row-major (local node order).
+    pub final_etas: Vec<f64>,
+    /// Optional per-sweep trajectory blocks `(sweep, local η̄ block)` —
+    /// recorded under lockstep pacing so the aggregator can rebuild the
+    /// full-network metric series bit-for-bit.
+    pub sweep_etas: Vec<(u64, Vec<f64>)>,
+}
+
+/// A decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    Hello(HelloFrame),
+    Grad { src: u32, stamp: u64, grad: Vec<f64> },
+    Done { shard: u32, phase: MarkerPhase, value: u64 },
+    Bye { shard: u32 },
+    Report(ShardReport),
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_f64s(buf: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        put_f64(buf, v);
+    }
+}
+
+/// Finish a frame started with [`frame_start`]: backfill the length.
+fn frame_finish(mut buf: Vec<u8>) -> Vec<u8> {
+    let len = (buf.len() - 4) as u32;
+    buf[0..4].copy_from_slice(&len.to_le_bytes());
+    buf
+}
+
+fn frame_start(kind: u8, capacity: usize) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(capacity + 5);
+    put_u32(&mut buf, 0); // length placeholder
+    buf.push(kind);
+    buf
+}
+
+pub fn encode_hello(h: &HelloFrame) -> Vec<u8> {
+    let mut b = frame_start(KIND_HELLO, 48);
+    put_u32(&mut b, MAGIC);
+    b.push(PROTOCOL_VERSION);
+    put_u32(&mut b, h.shard);
+    put_u32(&mut b, h.shards);
+    put_u32(&mut b, h.nodes);
+    put_u32(&mut b, h.support);
+    put_u64(&mut b, h.seed);
+    b.push(h.algo);
+    put_u64(&mut b, h.sweeps);
+    b.push(h.pacing);
+    put_u64(&mut b, h.digest);
+    frame_finish(b)
+}
+
+/// Encode a gradient broadcast without going through an owned
+/// [`WireMsg`] (the send path borrows the worker's gradient buffer).
+pub fn encode_grad(src: u32, stamp: u64, grad: &[f64]) -> Vec<u8> {
+    let mut b = frame_start(KIND_GRAD, 16 + 8 * grad.len());
+    put_u32(&mut b, src);
+    put_u64(&mut b, stamp);
+    put_f64s(&mut b, grad);
+    frame_finish(b)
+}
+
+pub fn encode_done(shard: u32, phase: MarkerPhase, value: u64) -> Vec<u8> {
+    let mut b = frame_start(KIND_DONE, 16);
+    put_u32(&mut b, shard);
+    b.push(phase.code());
+    put_u64(&mut b, value);
+    frame_finish(b)
+}
+
+pub fn encode_bye(shard: u32) -> Vec<u8> {
+    let mut b = frame_start(KIND_BYE, 4);
+    put_u32(&mut b, shard);
+    frame_finish(b)
+}
+
+pub fn encode_report(r: &ShardReport) -> Vec<u8> {
+    let traj_bytes: usize = r.sweep_etas.iter().map(|(_, b)| 12 + 8 * b.len()).sum();
+    let mut b = frame_start(KIND_REPORT, 64 + 8 * r.final_etas.len() + traj_bytes);
+    put_u32(&mut b, r.shard as u32);
+    put_u64(&mut b, r.activations);
+    put_u64(&mut b, r.messages);
+    put_u64(&mut b, r.wire_messages);
+    put_u64(&mut b, r.rounds);
+    put_f64(&mut b, r.window_secs);
+    put_f64s(&mut b, &r.final_etas);
+    put_u32(&mut b, r.sweep_etas.len() as u32);
+    for (sweep, block) in &r.sweep_etas {
+        put_u64(&mut b, *sweep);
+        put_f64s(&mut b, block);
+    }
+    frame_finish(b)
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Strict little-endian cursor: every `take_*` fails on underrun, and
+/// [`Cursor::finish`] fails on trailing bytes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated frame: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn take_u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn take_u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn take_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    fn take_f64s(&mut self) -> Result<Vec<f64>, String> {
+        let count = self.take_u32()? as usize;
+        if count * 8 > self.buf.len() - self.pos {
+            return Err(format!("truncated frame: {count}-element f64 vector overruns payload"));
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.take_f64()?);
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!("{} trailing bytes after frame payload", self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame body (`kind` byte + payload, length prefix already
+/// stripped by the caller).
+pub fn decode(body: &[u8]) -> Result<WireMsg, String> {
+    let mut c = Cursor::new(body);
+    let kind = c.take_u8()?;
+    let msg = match kind {
+        KIND_HELLO => {
+            let magic = c.take_u32()?;
+            if magic != MAGIC {
+                return Err(format!("bad magic {magic:#010x} (want {MAGIC:#010x}) — not an a2dwb peer"));
+            }
+            let version = c.take_u8()?;
+            if version != PROTOCOL_VERSION {
+                return Err(format!("protocol version {version} (this build speaks {PROTOCOL_VERSION})"));
+            }
+            WireMsg::Hello(HelloFrame {
+                shard: c.take_u32()?,
+                shards: c.take_u32()?,
+                nodes: c.take_u32()?,
+                support: c.take_u32()?,
+                seed: c.take_u64()?,
+                algo: c.take_u8()?,
+                sweeps: c.take_u64()?,
+                pacing: c.take_u8()?,
+                digest: c.take_u64()?,
+            })
+        }
+        KIND_GRAD => WireMsg::Grad {
+            src: c.take_u32()?,
+            stamp: c.take_u64()?,
+            grad: c.take_f64s()?,
+        },
+        KIND_DONE => WireMsg::Done {
+            shard: c.take_u32()?,
+            phase: MarkerPhase::from_code(c.take_u8()?)?,
+            value: c.take_u64()?,
+        },
+        KIND_BYE => WireMsg::Bye { shard: c.take_u32()? },
+        KIND_REPORT => {
+            let shard = c.take_u32()? as usize;
+            let activations = c.take_u64()?;
+            let messages = c.take_u64()?;
+            let wire_messages = c.take_u64()?;
+            let rounds = c.take_u64()?;
+            let window_secs = c.take_f64()?;
+            let final_etas = c.take_f64s()?;
+            let traj = c.take_u32()? as usize;
+            let mut sweep_etas = Vec::with_capacity(traj.min(1 << 16));
+            for _ in 0..traj {
+                let sweep = c.take_u64()?;
+                sweep_etas.push((sweep, c.take_f64s()?));
+            }
+            WireMsg::Report(ShardReport {
+                shard,
+                activations,
+                messages,
+                wire_messages,
+                rounds,
+                window_secs,
+                final_etas,
+                sweep_etas,
+            })
+        }
+        other => return Err(format!("unknown frame kind {other}")),
+    };
+    c.finish()?;
+    Ok(msg)
+}
+
+/// What one [`FrameReader::next_frame`] poll produced.
+#[derive(Debug)]
+pub enum ReadEvent {
+    Msg(WireMsg),
+    /// The socket's read timeout elapsed; stream position is intact —
+    /// call again.
+    Timeout,
+    /// Clean EOF at a frame boundary.
+    Eof,
+}
+
+/// Incremental frame reader that never loses stream position.
+///
+/// Uses `read` (not `read_exact`), buffering whatever arrives, so a
+/// read timeout mid-frame leaves the partial frame in the buffer and
+/// the next poll resumes where it left off — the property that lets
+/// shard readers poll a timeout-configured socket while watching a
+/// shutdown flag. EOF in the middle of a frame is reported as a
+/// truncated-frame error, never silently dropped.
+pub struct FrameReader<R: Read> {
+    r: R,
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted opportunistically).
+    pos: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(r: R) -> Self {
+        Self { r, buf: Vec::with_capacity(16 << 10), pos: 0 }
+    }
+
+    fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pull more bytes from the socket. Ok(true) = got data,
+    /// Ok(false) = EOF.
+    fn fill(&mut self) -> Result<bool, ReadErr> {
+        if self.pos > 0 && self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > (1 << 20) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        let mut chunk = [0u8; 16 << 10];
+        loop {
+            match self.r.read(&mut chunk) {
+                Ok(0) => return Ok(false),
+                Ok(k) => {
+                    self.buf.extend_from_slice(&chunk[..k]);
+                    return Ok(true);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Err(ReadErr::Timeout)
+                }
+                Err(e) => return Err(ReadErr::Fatal(format!("socket read: {e}"))),
+            }
+        }
+    }
+
+    /// Read until one full frame (or timeout/EOF) is available.
+    pub fn next_frame(&mut self) -> Result<ReadEvent, String> {
+        loop {
+            if self.buffered() >= 4 {
+                let len = u32::from_le_bytes(
+                    self.buf[self.pos..self.pos + 4].try_into().unwrap(),
+                ) as usize;
+                if len == 0 || len > MAX_FRAME_BYTES {
+                    return Err(format!(
+                        "frame length {len} out of range (1..={MAX_FRAME_BYTES}) — stream corrupt"
+                    ));
+                }
+                if self.buffered() >= 4 + len {
+                    let body = &self.buf[self.pos + 4..self.pos + 4 + len];
+                    let msg = decode(body)?;
+                    self.pos += 4 + len;
+                    return Ok(ReadEvent::Msg(msg));
+                }
+            }
+            match self.fill() {
+                Ok(true) => continue,
+                Ok(false) => {
+                    return if self.buffered() == 0 {
+                        Ok(ReadEvent::Eof)
+                    } else {
+                        Err(format!(
+                            "connection closed mid-frame ({} buffered bytes)",
+                            self.buffered()
+                        ))
+                    };
+                }
+                Err(ReadErr::Timeout) => return Ok(ReadEvent::Timeout),
+                Err(ReadErr::Fatal(e)) => return Err(e),
+            }
+        }
+    }
+}
+
+enum ReadErr {
+    Timeout,
+    Fatal(String),
+}
+
+/// Write one pre-encoded frame.
+pub fn write_all(w: &mut impl Write, frame: &[u8]) -> Result<(), String> {
+    w.write_all(frame).map_err(|e| format!("socket write: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Vec<u8>) -> WireMsg {
+        let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+        assert_eq!(len + 4, frame.len(), "length prefix covers the body exactly");
+        decode(&frame[4..]).expect("decode")
+    }
+
+    #[test]
+    fn hello_roundtrip_and_compat() {
+        let h = HelloFrame {
+            shard: 1,
+            shards: 4,
+            nodes: 50,
+            support: 100,
+            seed: 42,
+            algo: 0,
+            sweeps: 150,
+            pacing: 1,
+            digest: 0xDEAD_BEEF,
+        };
+        match roundtrip(encode_hello(&h)) {
+            WireMsg::Hello(got) => {
+                assert_eq!(got, h);
+                assert!(h.check_compatible(&got).is_ok());
+                let bad = HelloFrame { seed: 43, ..got };
+                assert!(h.check_compatible(&bad).is_err());
+                // a differing config digest alone must also refuse
+                let bad = HelloFrame { digest: 1, ..got };
+                assert!(h.check_compatible(&bad).is_err());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn grad_roundtrip_is_bit_exact() {
+        let grad = vec![0.1, -2.5e-300, f64::MIN_POSITIVE, 3.7e250];
+        match roundtrip(encode_grad(7, 99, &grad)) {
+            WireMsg::Grad { src, stamp, grad: got } => {
+                assert_eq!((src, stamp), (7, 99));
+                assert_eq!(got.len(), grad.len());
+                for (a, b) in got.iter().zip(&grad) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn done_and_bye_roundtrip() {
+        match roundtrip(encode_done(2, MarkerPhase::RoundPublished, 17)) {
+            WireMsg::Done { shard, phase, value } => {
+                assert_eq!((shard, phase, value), (2, MarkerPhase::RoundPublished, 17));
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(encode_bye(3)) {
+            WireMsg::Bye { shard } => assert_eq!(shard, 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let r = ShardReport {
+            shard: 1,
+            activations: 80,
+            messages: 160,
+            wire_messages: 20,
+            rounds: 0,
+            window_secs: 0.125,
+            final_etas: vec![1.0, 2.0, 3.0],
+            sweep_etas: vec![(0, vec![0.5; 3]), (1, vec![-0.25; 3])],
+        };
+        match roundtrip(encode_report(&r)) {
+            WireMsg::Report(got) => assert_eq!(got, r),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected_loudly() {
+        let full = encode_grad(0, 1, &[1.0, 2.0]);
+        // chop the payload: every prefix of the body must fail, not
+        // silently decode
+        for cut in 1..full.len() - 4 {
+            let err = decode(&full[4..4 + cut]);
+            assert!(err.is_err(), "prefix of {cut} bytes decoded silently");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut full = encode_bye(1);
+        full.push(0xFF);
+        assert!(decode(&full[4..]).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_and_bad_magic_are_rejected() {
+        assert!(decode(&[42u8, 0, 0]).is_err());
+        let mut hello = encode_hello(&HelloFrame {
+            shard: 0,
+            shards: 1,
+            nodes: 2,
+            support: 3,
+            seed: 4,
+            algo: 0,
+            sweeps: 5,
+            pacing: 0,
+            digest: 6,
+        });
+        hello[5] ^= 0xFF; // corrupt the magic
+        assert!(decode(&hello[4..]).is_err());
+    }
+
+    #[test]
+    fn frame_reader_handles_split_and_coalesced_frames() {
+        // two frames delivered in pathological chunk sizes must come
+        // out intact and in order
+        let f1 = encode_grad(1, 5, &[9.0; 8]);
+        let f2 = encode_done(1, MarkerPhase::SweepDone, 5);
+        let mut stream: Vec<u8> = Vec::new();
+        stream.extend_from_slice(&f1);
+        stream.extend_from_slice(&f2);
+        for chunk in [1usize, 3, stream.len()] {
+            let mut reader = FrameReader::new(Chunked { data: &stream, pos: 0, chunk });
+            match reader.next_frame().unwrap() {
+                ReadEvent::Msg(WireMsg::Grad { src, stamp, grad }) => {
+                    assert_eq!((src, stamp, grad.len()), (1, 5, 8));
+                }
+                other => panic!("{other:?}"),
+            }
+            match reader.next_frame().unwrap() {
+                ReadEvent::Msg(WireMsg::Done { value, .. }) => assert_eq!(value, 5),
+                other => panic!("{other:?}"),
+            }
+            assert!(matches!(reader.next_frame().unwrap(), ReadEvent::Eof));
+        }
+    }
+
+    #[test]
+    fn frame_reader_rejects_oversized_and_mid_frame_eof() {
+        // oversized length prefix
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        huge.push(KIND_BYE);
+        let mut reader = FrameReader::new(std::io::Cursor::new(huge));
+        assert!(reader.next_frame().is_err());
+        // EOF mid-frame
+        let full = encode_grad(0, 1, &[1.0; 4]);
+        let mut reader = FrameReader::new(std::io::Cursor::new(full[..full.len() - 3].to_vec()));
+        assert!(reader.next_frame().is_err());
+    }
+
+    /// Read adapter delivering at most `chunk` bytes per call.
+    struct Chunked<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for Chunked<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let k = self.chunk.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..k].copy_from_slice(&self.data[self.pos..self.pos + k]);
+            self.pos += k;
+            Ok(k)
+        }
+    }
+}

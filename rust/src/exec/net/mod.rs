@@ -1,0 +1,230 @@
+//! Socket-backed multi-process transport — the executor past one box.
+//!
+//! The threaded executor ([`crate::exec::threaded`]) proves the paper's
+//! waiting-overhead claim on one machine; this subsystem is the first
+//! step past it: the m network nodes are partitioned into **shards**,
+//! each shard runs in its own OS process, and gradients cross shard
+//! boundaries over TCP (loopback by default, any reachable address in
+//! principle). Because A²DWB is asynchronous by construction, the
+//! cross-process fast path needs **no barrier of any kind**: a shard
+//! publishes a gradient frame and moves on, exactly as a thread
+//! publishes into a mailbox slot and moves on.
+//!
+//! ## Layers
+//!
+//! * [`codec`] — the length-prefixed, versioned wire format. Gradients
+//!   travel as `(src, stamp, f64 bits)`; the stamp is the same
+//!   freshest-wins sequence number the in-process
+//!   [`MailboxGrid`](crate::exec::transport::MailboxGrid) keys on, so
+//!   duplicated, reordered, or stale frames are all safely absorbed by
+//!   the receiving slot — **freshest-wins holds across the wire**.
+//! * [`shard`] — the [`ShardedMailboxGrid`](shard::ShardedMailboxGrid)
+//!   (intra-shard edges stay on the lock-based slot fast path,
+//!   cross-shard edges get one frame per peer *shard*, not per edge),
+//!   the mesh of per-peer reader/writer threads, the shard run loop,
+//!   and the report aggregation that stitches per-shard results back
+//!   into one [`ExperimentReport`](crate::coordinator::ExperimentReport).
+//!
+//! ## Sharding
+//!
+//! [`ShardPlan`] deals nodes into contiguous balanced ranges: shard `s`
+//! of `P` owns `m/P` (±1) consecutive node indices. Contiguity is a
+//! correctness ingredient, not just a convenience: under
+//! [`Pacing::Lockstep`] the shards execute their ranges in index
+//! order, which reproduces the single-process `workers = 1` activation
+//! order `0, 1, …, m−1` exactly.
+//!
+//! ## Pacing
+//!
+//! * [`Pacing::Free`] (default) — barrier-free. Each shard sweeps its
+//!   local nodes at its own pace; cross-shard gradients arrive whenever
+//!   they arrive and the freshest wins. This is the production mode and
+//!   the honest cross-process analogue of the paper's asynchronous
+//!   executor: the only synchronization in the whole run is one
+//!   initial-exchange marker so no shard starts before the mesh is up.
+//! * [`Pacing::Lockstep`] — the validation mode. Shards take turns in
+//!   shard order, one sweep at a time, fenced by `Done` markers that
+//!   travel on the same TCP streams as the gradients they fence (FIFO
+//!   ⇒ marker seen means gradients seen). With one worker per shard
+//!   this makes the full distributed run a **bit-for-bit replay** of
+//!   the single-process `Threads { workers: 1 }` run — same activation
+//!   order, same θ indices, same mailbox contents, same dual
+//!   trajectory — which is how `rust/tests/exec_net.rs` proves the
+//!   wire layer moves gradients without perturbing a single bit.
+//!
+//! DCWB is always round-fenced: the two `std::sync::Barrier` waits per
+//! round become two marker exchanges per round
+//! ([`codec::MarkerPhase::RoundPublished`] /
+//! [`codec::MarkerPhase::RoundCollected`]) — the coordinator
+//! round-token the synchronous baseline pays for, now with real
+//! network latency in it.
+//!
+//! ## Determinism contract
+//!
+//! Sharded runs assign iteration `k = sweep·m + node` deterministically
+//! (there is no cross-process atomic counter to race on), so θ indices
+//! and stamps are pure functions of the schedule. Under lockstep
+//! pacing the mailbox contents are too, which yields the bit-identical
+//! trajectory; under free pacing the trajectory is timing-dependent
+//! (like the multi-worker threaded executor) but every individual
+//! exchange is still stamp-ordered.
+//!
+//! ## Teardown
+//!
+//! Shards announce shutdown with a `Bye` frame and half-close the
+//! socket; a reader keeps draining (and publishing — harmless, the
+//! slots are stamp-guarded) until it has seen `Bye` from its peer, so
+//! no shard can wedge a slower peer's writer by vanishing early. EOF
+//! without `Bye` is reported as a crashed peer.
+
+pub mod codec;
+pub mod shard;
+
+pub use codec::{HelloFrame, MarkerPhase, ShardReport, WireMsg, MAX_FRAME_BYTES, PROTOCOL_VERSION};
+pub use shard::{
+    aggregate_reports, collect_reports, config_digest, experiment_args, run_mesh_processes,
+    run_mesh_threads, run_shard, serve_main, ShardRunOpts, ShardedMailboxGrid, ShardedTransport,
+};
+
+/// Contiguous balanced partition of the m network nodes into shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// This shard's index (0-based).
+    pub shard: usize,
+    /// Total shard count P.
+    pub shards: usize,
+    /// Network size m.
+    pub nodes: usize,
+}
+
+impl ShardPlan {
+    pub fn new(shard: usize, shards: usize, nodes: usize) -> Result<Self, String> {
+        if shards == 0 {
+            return Err("shard count must be >= 1".into());
+        }
+        if shard >= shards {
+            return Err(format!("shard index {shard} out of range 0..{shards}"));
+        }
+        if shards > nodes {
+            return Err(format!("cannot deal {nodes} nodes onto {shards} shards"));
+        }
+        Ok(Self { shard, shards, nodes })
+    }
+
+    /// Parse the CLI form `"i/of"` (e.g. `--shard 0/2`).
+    pub fn parse(s: &str, nodes: usize) -> Result<Self, String> {
+        let (i, of) = s
+            .split_once('/')
+            .ok_or_else(|| format!("--shard wants i/of, got '{s}'"))?;
+        let shard = i.trim().parse::<usize>().map_err(|e| format!("shard index: {e}"))?;
+        let shards = of.trim().parse::<usize>().map_err(|e| format!("shard count: {e}"))?;
+        Self::new(shard, shards, nodes)
+    }
+
+    /// Node range owned by shard `s`: the first `m % P` shards get one
+    /// extra node, ranges are contiguous and in index order.
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        let base = self.nodes / self.shards;
+        let rem = self.nodes % self.shards;
+        let start = s * base + s.min(rem);
+        let len = base + usize::from(s < rem);
+        start..start + len
+    }
+
+    /// This shard's own node range.
+    pub fn local(&self) -> std::ops::Range<usize> {
+        self.range(self.shard)
+    }
+
+    /// Which shard owns node `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        debug_assert!(i < self.nodes);
+        let base = self.nodes / self.shards;
+        let rem = self.nodes % self.shards;
+        let fat = rem * (base + 1);
+        if i < fat {
+            i / (base + 1)
+        } else {
+            rem + (i - fat) / base
+        }
+    }
+}
+
+/// How the sharded run is paced — see the [module docs](self) for the
+/// full contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Pacing {
+    /// Barrier-free: shards sweep independently, freshest gradient wins.
+    #[default]
+    Free,
+    /// Shards take turns in shard order (validation mode: bit-identical
+    /// to the single-process `workers = 1` run).
+    Lockstep,
+}
+
+impl Pacing {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "free" | "async" => Ok(Pacing::Free),
+            "lockstep" | "sequential" => Ok(Pacing::Lockstep),
+            other => Err(format!("unknown pacing '{other}' (free|lockstep)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pacing::Free => "free",
+            Pacing::Lockstep => "lockstep",
+        }
+    }
+
+    pub(crate) fn code(&self) -> u8 {
+        match self {
+            Pacing::Free => 0,
+            Pacing::Lockstep => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_ranges_are_contiguous_and_balanced() {
+        for (nodes, shards) in [(10, 3), (8, 2), (7, 7), (500, 4), (5, 1)] {
+            let plan = ShardPlan::new(0, shards, nodes).unwrap();
+            let mut next = 0usize;
+            for s in 0..shards {
+                let r = plan.range(s);
+                assert_eq!(r.start, next, "gap before shard {s}");
+                assert!(!r.is_empty());
+                for i in r.clone() {
+                    assert_eq!(plan.owner(i), s, "owner({i}) for m={nodes} P={shards}");
+                }
+                next = r.end;
+            }
+            assert_eq!(next, nodes);
+            let sizes: Vec<usize> = (0..shards).map(|s| plan.range(s).len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn plan_parse_and_validation() {
+        let p = ShardPlan::parse("1/2", 8).unwrap();
+        assert_eq!((p.shard, p.shards), (1, 2));
+        assert!(ShardPlan::parse("2/2", 8).is_err());
+        assert!(ShardPlan::parse("0", 8).is_err());
+        assert!(ShardPlan::new(0, 9, 8).is_err());
+        assert!(ShardPlan::new(0, 0, 8).is_err());
+    }
+
+    #[test]
+    fn pacing_parse() {
+        assert_eq!(Pacing::parse("free").unwrap(), Pacing::Free);
+        assert_eq!(Pacing::parse("LOCKSTEP").unwrap(), Pacing::Lockstep);
+        assert!(Pacing::parse("chaos").is_err());
+    }
+}

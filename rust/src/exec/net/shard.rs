@@ -1,0 +1,1345 @@
+//! Sharded execution: the mailbox grid split across processes.
+//!
+//! One **shard** = one process (or, in the in-process harness
+//! [`run_mesh_threads`], one thread with its own TCP sockets) owning a
+//! contiguous block of network nodes. The shard runs its local nodes
+//! through the same [`activate_node`](crate::exec::activate_node) body
+//! as every other backend; only the transport differs:
+//!
+//! * **intra-shard** edges use the lock-based freshest-wins slots of a
+//!   local [`MailboxGrid`] replica, exactly like the threaded executor;
+//! * **cross-shard** edges serialize the gradient once per *peer
+//!   shard* (not per edge — the receiving shard's grid replica fans it
+//!   out to every local neighbor of the source) and ship it over TCP
+//!   through a writer thread per peer; a reader thread per peer feeds
+//!   incoming gradients straight into the local grid.
+//!
+//! The shard reports no metrics of its own — network-global metrics
+//! (dual objective, consensus) need every node's iterate, so shards
+//! ship their final (and, under lockstep recording, per-sweep) dual
+//! iterates to the aggregator, which stitches them and evaluates the
+//! usual [`MetricsEvaluator`] series. Frame sizes are bounded by
+//! [`MAX_FRAME_BYTES`](super::MAX_FRAME_BYTES); per-sweep recording is
+//! a validation feature for CI-scale instances, not a paper-scale
+//! telemetry path.
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::codec::{
+    self, FrameReader, HelloFrame, MarkerPhase, ReadEvent, ShardReport, WireMsg,
+};
+use super::{Pacing, ShardPlan};
+use crate::algo::wbp::WbpNode;
+use crate::algo::{AlgorithmKind, ThetaSeq};
+use crate::coordinator::{ExperimentConfig, ExperimentReport, MetricsEvaluator};
+use crate::exec::transport::MailboxGrid;
+use crate::exec::{activate_node, StepCtx, Transport};
+use crate::graph::Graph;
+use crate::measures::{MeasureSpec, Samples};
+use crate::metrics::Series;
+use crate::ot::OracleBackendSpec;
+use crate::rng::Rng64;
+
+/// How long socket reads block before the reader re-checks its
+/// shutdown flag (the [`FrameReader`] preserves stream position across
+/// these timeouts).
+const READ_POLL: Duration = Duration::from_millis(200);
+/// How long a finished shard tolerates **continuous silence** (no
+/// frame at all, measured from the last one received) from a peer that
+/// has not said `Bye` before declaring it crashed. Any frame re-arms
+/// the window, so a slow but active peer is drained indefinitely.
+const DRAIN_GRACE: Duration = Duration::from_secs(30);
+
+fn algo_code(a: AlgorithmKind) -> u8 {
+    match a {
+        AlgorithmKind::A2dwb => 0,
+        AlgorithmKind::A2dwbn => 1,
+        AlgorithmKind::Dcwb => 2,
+    }
+}
+
+/// FNV-1a digest of every experiment knob that shapes the dynamics but
+/// has no explicit [`HelloFrame`] field: β, γ-scale, batch sizes,
+/// topology (with the ER edge probability), measure family (n / digit
+/// / side / idx path), fault model, intervals, compute time, and the
+/// diag variant. Two shards whose digests differ refuse the handshake
+/// — β or topology disagreements must fail as loudly as a seed
+/// disagreement, never silently mix gradients. Floats are hashed by
+/// `to_bits` (fault-model and topology floats via their
+/// shortest-roundtrip `Debug`), so the digest is exactly as strict as
+/// the bit-level parity contract.
+pub fn config_digest(cfg: &ExperimentConfig) -> u64 {
+    let desc = format!(
+        "{:?}|{:?}|{:x}|{:x}|{}|{}|{:x}|{:x}|{:x}|{:?}|{:?}",
+        cfg.measure,
+        cfg.topology,
+        cfg.beta.to_bits(),
+        cfg.gamma_scale.to_bits(),
+        cfg.samples_per_activation,
+        cfg.eval_samples,
+        cfg.duration.to_bits(),
+        cfg.activation_interval.to_bits(),
+        cfg.compute_time.to_bits(),
+        cfg.faults,
+        cfg.diag,
+    );
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in desc.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ------------------------------------------------------------ grid
+
+/// The full-network routing table with shard-local storage: publishing
+/// is identical to the single-process [`MailboxGrid`] (every directed
+/// edge has a slot), but only slots whose *destination* is local carry
+/// an n-vector — remote-destination slots are routing stubs that cost
+/// an `Arc` pointer swap and nothing else
+/// ([`MailboxGrid::new_for`]).
+pub struct ShardedMailboxGrid {
+    plan: ShardPlan,
+    grid: MailboxGrid,
+    /// Per local node (index − `plan.local().start`): the peer shards
+    /// owning at least one neighbor, sorted and deduped — the wire
+    /// fan-out of one broadcast.
+    remote_fanout: Vec<Vec<usize>>,
+}
+
+impl ShardedMailboxGrid {
+    pub fn new(graph: &Graph, n: usize, plan: ShardPlan) -> Self {
+        let local = plan.local();
+        let grid = MailboxGrid::new_for(graph, n, |j| local.contains(&j));
+        let remote_fanout = local
+            .clone()
+            .map(|i| {
+                let mut peers: Vec<usize> = graph
+                    .neighbors(i)
+                    .iter()
+                    .map(|&j| plan.owner(j))
+                    .filter(|&p| p != plan.shard)
+                    .collect();
+                peers.sort_unstable();
+                peers.dedup();
+                peers
+            })
+            .collect();
+        Self { plan, grid, remote_fanout }
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The local grid replica (reader threads publish remote gradients
+    /// here; workers collect from it).
+    pub fn grid(&self) -> &MailboxGrid {
+        &self.grid
+    }
+
+    /// Peer shards that must receive node `src`'s broadcasts.
+    pub fn fanout(&self, src: usize) -> &[usize] {
+        &self.remote_fanout[src - self.plan.local().start]
+    }
+}
+
+/// [`Transport`] over a [`ShardedMailboxGrid`] plus per-peer writer
+/// channels. `messages` counts directed-edge deliveries (the same
+/// granularity every other backend reports); `wire_messages` counts
+/// TCP frames — the dedup between the two is what sharding buys.
+pub struct ShardedTransport<'a> {
+    sgrid: &'a ShardedMailboxGrid,
+    senders: &'a [Option<mpsc::Sender<Arc<Vec<u8>>>>],
+    pub messages: u64,
+    pub wire_messages: u64,
+}
+
+impl<'a> ShardedTransport<'a> {
+    pub fn new(
+        sgrid: &'a ShardedMailboxGrid,
+        senders: &'a [Option<mpsc::Sender<Arc<Vec<u8>>>>],
+    ) -> Self {
+        Self { sgrid, senders, messages: 0, wire_messages: 0 }
+    }
+}
+
+impl Transport for ShardedTransport<'_> {
+    fn broadcast(&mut self, src: usize, stamp: u64, grad: Arc<Vec<f64>>) {
+        self.messages += self.sgrid.grid.publish(src, stamp, &grad);
+        let peers = self.sgrid.fanout(src);
+        if peers.is_empty() {
+            return;
+        }
+        let frame = Arc::new(codec::encode_grad(src as u32, stamp, &grad));
+        for &p in peers {
+            if let Some(tx) = &self.senders[p] {
+                // a send error means the writer already recorded a
+                // mesh failure; the run loop will surface it
+                if tx.send(frame.clone()).is_ok() {
+                    self.wire_messages += 1;
+                }
+            }
+        }
+    }
+
+    fn collect(&mut self, dst: usize, node: &mut WbpNode) {
+        self.sgrid.grid.collect(dst, node);
+    }
+}
+
+// ------------------------------------------------------------ marker board
+
+/// Cross-shard progress markers, updated by reader threads and waited
+/// on by the run loop. All waits are condvar-based with a hard
+/// timeout, and any mesh error wakes every waiter immediately.
+struct Board {
+    state: Mutex<BoardState>,
+    cv: Condvar,
+}
+
+struct BoardState {
+    init: Vec<bool>,
+    /// Completed sweeps per shard (lockstep): `r + 1` after `Done(SweepDone, r)`.
+    sweeps: Vec<u64>,
+    /// Completed publish phases per shard (DCWB).
+    published: Vec<u64>,
+    /// Completed collect phases per shard (DCWB).
+    collected: Vec<u64>,
+    error: Option<String>,
+}
+
+impl Board {
+    fn new(shards: usize) -> Self {
+        Self {
+            state: Mutex::new(BoardState {
+                init: vec![false; shards],
+                sweeps: vec![0; shards],
+                published: vec![0; shards],
+                collected: vec![0; shards],
+                error: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn mark(&self, shard: usize, phase: MarkerPhase, value: u64) {
+        let mut s = self.state.lock().unwrap();
+        if shard < s.init.len() {
+            match phase {
+                MarkerPhase::Init => s.init[shard] = true,
+                MarkerPhase::SweepDone => s.sweeps[shard] = s.sweeps[shard].max(value + 1),
+                MarkerPhase::RoundPublished => {
+                    s.published[shard] = s.published[shard].max(value + 1)
+                }
+                MarkerPhase::RoundCollected => {
+                    s.collected[shard] = s.collected[shard].max(value + 1)
+                }
+            }
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    fn fail(&self, err: String) {
+        let mut s = self.state.lock().unwrap();
+        if s.error.is_none() {
+            s.error = Some(err);
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    fn error(&self) -> Option<String> {
+        self.state.lock().unwrap().error.clone()
+    }
+
+    fn wait_until(
+        &self,
+        timeout: Duration,
+        what: &str,
+        pred: impl Fn(&BoardState) -> bool,
+    ) -> Result<(), String> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(e) = &s.error {
+                return Err(format!("mesh failed while waiting for {what}: {e}"));
+            }
+            if pred(&s) {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(format!("timed out after {timeout:?} waiting for {what}"));
+            }
+            let (guard, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+}
+
+// ------------------------------------------------------------ mesh
+
+/// The live connection fabric of one shard: per-peer writer channels,
+/// reader threads feeding the grid, and the marker board.
+struct Mesh {
+    shard: usize,
+    senders: Vec<Option<mpsc::Sender<Arc<Vec<u8>>>>>,
+    board: Arc<Board>,
+    stop: Arc<AtomicBool>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    writers: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn dial_retry(addr: &str, deadline: Instant) -> Result<TcpStream, String> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(format!("connecting to peer {addr}: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+/// Read the peer's handshake (tolerating read-timeout polls).
+fn handshake_read(
+    fr: &mut FrameReader<TcpStream>,
+    deadline: Instant,
+    addr: &str,
+) -> Result<HelloFrame, String> {
+    loop {
+        match fr.next_frame()? {
+            ReadEvent::Msg(WireMsg::Hello(h)) => return Ok(h),
+            ReadEvent::Msg(other) => {
+                return Err(format!("peer {addr} sent {other:?} before Hello"))
+            }
+            ReadEvent::Eof => return Err(format!("peer {addr} closed during handshake")),
+            ReadEvent::Timeout => {
+                if Instant::now() >= deadline {
+                    return Err(format!("handshake with {addr} timed out"));
+                }
+            }
+        }
+    }
+}
+
+fn prepare_stream(stream: &TcpStream) -> Result<(), String> {
+    stream.set_nodelay(true).map_err(|e| format!("set_nodelay: {e}"))?;
+    stream
+        .set_read_timeout(Some(READ_POLL))
+        .map_err(|e| format!("set_read_timeout: {e}"))?;
+    Ok(())
+}
+
+impl Mesh {
+    /// Connect the full peer mesh: this shard dials every higher-index
+    /// peer and accepts one connection from every lower-index peer
+    /// (one duplex TCP stream per unordered pair), exchanging and
+    /// validating [`HelloFrame`]s on each.
+    fn establish(
+        plan: ShardPlan,
+        listener: TcpListener,
+        peer_addrs: &[String],
+        hello: HelloFrame,
+        sgrid: Arc<ShardedMailboxGrid>,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<Mesh, String> {
+        let shards = plan.shards;
+        if peer_addrs.len() != shards {
+            return Err(format!(
+                "--peers lists {} addresses for {} shards",
+                peer_addrs.len(),
+                shards
+            ));
+        }
+        let deadline = Instant::now() + timeout;
+        let board = Arc::new(Board::new(shards));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut conns: Vec<Option<(TcpStream, FrameReader<TcpStream>)>> =
+            (0..shards).map(|_| None).collect();
+
+        // Dial up: this shard initiates toward every higher index.
+        for t in plan.shard + 1..shards {
+            let addr = &peer_addrs[t];
+            let stream = dial_retry(addr, deadline)?;
+            prepare_stream(&stream)?;
+            codec::write_all(&mut (&stream), &codec::encode_hello(&hello))?;
+            let clone = stream.try_clone().map_err(|e| format!("try_clone: {e}"))?;
+            let mut fr = FrameReader::new(clone);
+            let peer = handshake_read(&mut fr, deadline, addr)?;
+            hello.check_compatible(&peer)?;
+            if peer.shard as usize != t {
+                return Err(format!("{addr} answered as shard {}, expected {t}", peer.shard));
+            }
+            conns[t] = Some((stream, fr));
+        }
+
+        // Accept down: every lower index dials us.
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("listener nonblocking: {e}"))?;
+        let mut accepted = 0usize;
+        while accepted < plan.shard {
+            match listener.accept() {
+                Ok((stream, from)) => {
+                    stream
+                        .set_nonblocking(false)
+                        .map_err(|e| format!("stream blocking: {e}"))?;
+                    prepare_stream(&stream)?;
+                    let clone =
+                        stream.try_clone().map_err(|e| format!("try_clone: {e}"))?;
+                    let mut fr = FrameReader::new(clone);
+                    let peer = handshake_read(&mut fr, deadline, &from.to_string())?;
+                    hello.check_compatible(&peer)?;
+                    let t = peer.shard as usize;
+                    if t >= plan.shard {
+                        return Err(format!(
+                            "shard {t} dialed shard {} (higher shards must be dialed, not dial)",
+                            plan.shard
+                        ));
+                    }
+                    if conns[t].is_some() {
+                        return Err(format!("duplicate connection from shard {t}"));
+                    }
+                    codec::write_all(&mut (&stream), &codec::encode_hello(&hello))?;
+                    conns[t] = Some((stream, fr));
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(format!(
+                            "timed out accepting peers ({accepted}/{} connected)",
+                            plan.shard
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(format!("accept: {e}")),
+            }
+        }
+
+        // Spawn the per-peer reader/writer pairs.
+        let m = plan.nodes;
+        let mut senders: Vec<Option<mpsc::Sender<Arc<Vec<u8>>>>> =
+            (0..shards).map(|_| None).collect();
+        let mut readers = Vec::new();
+        let mut writers = Vec::new();
+        for (t, conn) in conns.into_iter().enumerate() {
+            let Some((stream, fr)) = conn else { continue };
+            let (tx, rx) = mpsc::channel::<Arc<Vec<u8>>>();
+            senders[t] = Some(tx);
+            let wboard = board.clone();
+            let own = plan.shard as u32;
+            writers.push(std::thread::spawn(move || {
+                writer_loop(stream, rx, own, t, &wboard)
+            }));
+            let rboard = board.clone();
+            let rstop = stop.clone();
+            let rgrid = sgrid.clone();
+            readers.push(std::thread::spawn(move || {
+                reader_loop(fr, rgrid, &rboard, &rstop, m, n, t)
+            }));
+        }
+        Ok(Mesh { shard: plan.shard, senders, board, stop, readers, writers })
+    }
+
+    /// Send one marker to every peer (after any gradients already
+    /// queued — FIFO per stream is the fencing guarantee).
+    fn broadcast_marker(&self, phase: MarkerPhase, value: u64) {
+        let frame = Arc::new(codec::encode_done(self.shard as u32, phase, value));
+        for tx in self.senders.iter().flatten() {
+            let _ = tx.send(frame.clone());
+        }
+    }
+
+    /// Close the mesh: writers flush + say `Bye`, readers drain peers
+    /// until their `Bye`. Returns any error any network thread hit.
+    fn shutdown(mut self) -> Result<(), String> {
+        for tx in self.senders.iter_mut() {
+            *tx = None; // closes the channel; writer sends Bye and exits
+        }
+        for h in self.writers.drain(..) {
+            let _ = h.join();
+        }
+        self.stop.store(true, Ordering::Release);
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        match self.board.error() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+fn writer_loop(
+    stream: TcpStream,
+    rx: mpsc::Receiver<Arc<Vec<u8>>>,
+    own_shard: u32,
+    peer: usize,
+    board: &Board,
+) {
+    let mut w = &stream;
+    loop {
+        match rx.recv() {
+            Ok(frame) => {
+                if let Err(e) = codec::write_all(&mut w, &frame) {
+                    board.fail(format!("writer to shard {peer}: {e}"));
+                    return;
+                }
+                // drain whatever else is queued before the next block
+                while let Ok(next) = rx.try_recv() {
+                    if let Err(e) = codec::write_all(&mut w, &next) {
+                        board.fail(format!("writer to shard {peer}: {e}"));
+                        return;
+                    }
+                }
+            }
+            Err(_) => {
+                // clean shutdown: all senders dropped
+                let _ = codec::write_all(&mut w, &codec::encode_bye(own_shard));
+                let _ = stream.shutdown(Shutdown::Write);
+                return;
+            }
+        }
+    }
+}
+
+fn reader_loop(
+    mut fr: FrameReader<TcpStream>,
+    sgrid: Arc<ShardedMailboxGrid>,
+    board: &Board,
+    stop: &AtomicBool,
+    m: usize,
+    n: usize,
+    peer: usize,
+) {
+    // Armed once the local shard has shut down; any frame from the
+    // peer re-arms it, so only a peer that is genuinely *silent* for
+    // the whole grace window is declared dead — an actively-sending
+    // slow peer is drained for as long as it keeps talking.
+    let mut stop_seen: Option<Instant> = None;
+    loop {
+        match fr.next_frame() {
+            Ok(ReadEvent::Msg(WireMsg::Grad { src, stamp, grad })) => {
+                stop_seen = None;
+                if src as usize >= m || grad.len() != n {
+                    board.fail(format!(
+                        "shard {peer} sent invalid gradient (src {src}, len {})",
+                        grad.len()
+                    ));
+                    return;
+                }
+                sgrid.grid.publish(src as usize, stamp, &Arc::new(grad));
+            }
+            Ok(ReadEvent::Msg(WireMsg::Done { shard, phase, value })) => {
+                stop_seen = None;
+                board.mark(shard as usize, phase, value);
+            }
+            Ok(ReadEvent::Msg(WireMsg::Bye { .. })) => return,
+            Ok(ReadEvent::Msg(other)) => {
+                board.fail(format!("shard {peer} sent unexpected {other:?}"));
+                return;
+            }
+            Ok(ReadEvent::Eof) => {
+                board.fail(format!("shard {peer} closed the stream without Bye"));
+                return;
+            }
+            Ok(ReadEvent::Timeout) => {
+                if stop.load(Ordering::Acquire) {
+                    let first = *stop_seen.get_or_insert_with(Instant::now);
+                    if first.elapsed() > DRAIN_GRACE {
+                        board.fail(format!(
+                            "shard {peer} silent for {DRAIN_GRACE:?} straight after \
+                             local shutdown (no Bye)"
+                        ));
+                        return;
+                    }
+                }
+            }
+            Err(e) => {
+                board.fail(format!("reader from shard {peer}: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ shard run
+
+/// Everything [`run_shard`] needs besides the experiment itself.
+pub struct ShardRunOpts {
+    pub plan: ShardPlan,
+    pub pacing: Pacing,
+    /// Record the local η̄ block after every sweep so the aggregator
+    /// can rebuild the full metric trajectory (lockstep validation).
+    pub record_sweeps: bool,
+    /// Pre-bound listening socket for lower-index peers to dial.
+    pub listener: TcpListener,
+    /// All shard listen addresses, in shard order (own entry included).
+    pub peer_addrs: Vec<String>,
+}
+
+/// Run this shard's slice of the experiment against the live mesh.
+///
+/// Iteration indices are assigned deterministically as
+/// `k = sweep·m + node` (no cross-process counter), so θ indices and
+/// wire stamps are schedule-pure; see the
+/// [module docs](crate::exec::net) for what each [`Pacing`] guarantees
+/// on top.
+pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardReport, String> {
+    cfg.validate()?;
+    let plan = opts.plan;
+    if plan.nodes != cfg.nodes {
+        return Err(format!("plan covers {} nodes, config has {}", plan.nodes, cfg.nodes));
+    }
+    if cfg.faults.drop_prob > 0.0 {
+        // Only the simulator has a message-fate model; TCP does not
+        // drop frames, so accepting drop_prob here would silently run
+        // a lossless experiment labeled as a lossy one.
+        return Err(
+            "drop_prob > 0 is modeled by the sim executor only; the socket \
+             transport delivers reliably (wire-level loss injection is a \
+             ROADMAP follow-up)"
+                .into(),
+        );
+    }
+    let m = cfg.nodes;
+    let n = cfg.support_size();
+    let graph = Graph::build(m, cfg.topology);
+    if !graph.is_connected() {
+        return Err("topology must be connected".into());
+    }
+    let sync = cfg.algorithm == AlgorithmKind::Dcwb;
+    let compensated = cfg.algorithm != AlgorithmKind::A2dwbn;
+    let m_theta = if sync { 1 } else { m };
+    let sweeps = ((cfg.duration / cfg.activation_interval).round() as usize).max(1);
+    let local = plan.local();
+
+    let measures = cfg.measure.build_network(m, cfg.seed);
+    let mut oracle = cfg.backend.build(cfg.samples_per_activation, n)?;
+    let lambda_max = graph.lambda_max();
+    let gamma = cfg.gamma_scale / (lambda_max / cfg.beta);
+    let ctx = StepCtx {
+        beta: cfg.beta,
+        gamma,
+        batch: cfg.samples_per_activation,
+        m_theta,
+        diag: cfg.diag,
+    };
+
+    // Node state + RNG streams: derived for the whole network exactly
+    // as the threaded executor derives them, then only the local block
+    // is used — so node i's draws are identical no matter which shard
+    // (or thread) hosts it.
+    let mut root = Rng64::new(cfg.seed ^ 0x5254_4E44);
+    let mut node_rngs: Vec<Rng64> = (0..m).map(|i| root.split(i as u64)).collect();
+    let node_factors = cfg.faults.node_factors(m, cfg.seed);
+    let mut nodes: Vec<WbpNode> =
+        local.clone().map(|i| WbpNode::new(n, graph.degree(i))).collect();
+
+    let sgrid = Arc::new(ShardedMailboxGrid::new(&graph, n, plan));
+    let hello = HelloFrame {
+        shard: plan.shard as u32,
+        shards: plan.shards as u32,
+        nodes: m as u32,
+        support: n as u32,
+        seed: cfg.seed,
+        algo: algo_code(cfg.algorithm),
+        sweeps: sweeps as u64,
+        pacing: opts.pacing.code(),
+        digest: config_digest(cfg),
+    };
+    let total_compute = sweeps as f64 * m as f64 * cfg.compute_time.max(0.0);
+    let wait_budget =
+        Duration::from_secs_f64(60.0 + 2.0 * cfg.duration + 10.0 * total_compute);
+    let mesh = Mesh::establish(
+        plan,
+        opts.listener,
+        &opts.peer_addrs,
+        hello,
+        sgrid.clone(),
+        n,
+        wait_budget,
+    )?;
+
+    let mut transport = ShardedTransport::new(&sgrid, &mesh.senders);
+    let mut theta = ThetaSeq::new(m_theta);
+    let mut samples = Samples::empty();
+    let mut point = vec![0.0; n];
+    let mut jitter = Rng64::new(cfg.seed ^ 0x4A54_5452 ^ plan.shard as u64);
+    let mut sweep_etas: Vec<(u64, Vec<f64>)> = Vec::new();
+    let mut block = vec![0.0; local.len() * n];
+
+    let t0 = Instant::now();
+
+    if !sync {
+        // Algorithm 3 line 1 for the local nodes (same draws, in node
+        // order, as `exec::initial_exchange` makes over the full set).
+        for (li, i) in local.clone().enumerate() {
+            let node = &mut nodes[li];
+            node.eval_point(&mut theta, 0, true, &mut point);
+            measures[i].draw_samples_into(&mut node_rngs[i], ctx.batch, &mut samples);
+            let rows = measures[i].cost_rows(&samples);
+            oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
+            transport.broadcast(i, 0, Arc::new(node.own_grad.clone()));
+        }
+    }
+    // Init marker: fences the initial gradients (FIFO) and holds every
+    // shard at the start line until the whole mesh is up.
+    mesh.broadcast_marker(MarkerPhase::Init, 0);
+    let me = plan.shard;
+    mesh.board.wait_until(wait_budget, "initial exchange", |s| {
+        s.init.iter().enumerate().all(|(t, &ok)| t == me || ok)
+    })?;
+
+    if sync {
+        // DCWB: the two in-process barriers per round become two
+        // marker exchanges per round — the coordinator round-token.
+        for r in 0..sweeps {
+            for (li, i) in local.clone().enumerate() {
+                let node = &mut nodes[li];
+                sleep_compute(cfg, &node_factors, i, &mut jitter);
+                node.eval_point(&mut theta, r, true, &mut point);
+                measures[i].draw_samples_into(&mut node_rngs[i], ctx.batch, &mut samples);
+                let rows = measures[i].cost_rows(&samples);
+                oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
+                transport.broadcast(i, r as u64 + 1, Arc::new(node.own_grad.clone()));
+            }
+            mesh.broadcast_marker(MarkerPhase::RoundPublished, r as u64);
+            mesh.board.wait_until(wait_budget, "round publish fence", |s| {
+                s.published.iter().enumerate().all(|(t, &p)| t == me || p >= r as u64 + 1)
+            })?;
+            for (li, i) in local.clone().enumerate() {
+                let node = &mut nodes[li];
+                transport.collect(i, node);
+                node.apply_update(&mut theta, r, ctx.m_theta, ctx.gamma, graph.degree(i), ctx.diag);
+                node.eta(&mut theta, r + 1, &mut point);
+                block[li * n..(li + 1) * n].copy_from_slice(&point);
+            }
+            if opts.record_sweeps {
+                sweep_etas.push((r as u64, block.clone()));
+            }
+            mesh.broadcast_marker(MarkerPhase::RoundCollected, r as u64);
+            mesh.board.wait_until(wait_budget, "round collect fence", |s| {
+                s.collected.iter().enumerate().all(|(t, &c)| t == me || c >= r as u64 + 1)
+            })?;
+        }
+    } else {
+        for r in 0..sweeps {
+            if opts.pacing == Pacing::Lockstep {
+                // my turn once every lower shard finished sweep r and
+                // every higher shard finished sweep r−1
+                mesh.board.wait_until(wait_budget, "lockstep turn", |s| {
+                    s.sweeps.iter().enumerate().all(|(t, &done)| {
+                        if t == me {
+                            true
+                        } else if t < me {
+                            done >= r as u64 + 1
+                        } else {
+                            done >= r as u64
+                        }
+                    })
+                })?;
+            }
+            for (li, i) in local.clone().enumerate() {
+                let node = &mut nodes[li];
+                let k = r * m + i;
+                sleep_compute(cfg, &node_factors, i, &mut jitter);
+                activate_node(
+                    node,
+                    i,
+                    k,
+                    compensated,
+                    &mut theta,
+                    &ctx,
+                    graph.degree(i),
+                    measures[i].as_ref(),
+                    &mut node_rngs[i],
+                    &mut samples,
+                    &mut point,
+                    oracle.as_mut(),
+                    &mut transport,
+                );
+                node.eta(&mut theta, k + 1, &mut point);
+                block[li * n..(li + 1) * n].copy_from_slice(&point);
+            }
+            if opts.record_sweeps {
+                sweep_etas.push((r as u64, block.clone()));
+            }
+            if opts.pacing == Pacing::Lockstep {
+                mesh.broadcast_marker(MarkerPhase::SweepDone, r as u64);
+            }
+        }
+    }
+    let window_secs = t0.elapsed().as_secs_f64();
+
+    // Final η̄ at the common θ index every backend reports at.
+    let k_final = if sync { sweeps } else { sweeps * m };
+    let mut theta_final = ThetaSeq::new(m_theta);
+    let mut final_etas = vec![0.0; local.len() * n];
+    for (li, node) in nodes.iter().enumerate() {
+        node.eta(&mut theta_final, k_final.max(1), &mut point);
+        final_etas[li * n..(li + 1) * n].copy_from_slice(&point);
+    }
+
+    let (messages, wire_messages) = (transport.messages, transport.wire_messages);
+    mesh.shutdown()?;
+    Ok(ShardReport {
+        shard: plan.shard,
+        activations: (local.len() * sweeps) as u64,
+        messages,
+        wire_messages,
+        rounds: if sync { sweeps as u64 } else { 0 },
+        window_secs,
+        final_etas,
+        sweep_etas,
+    })
+}
+
+fn sleep_compute(
+    cfg: &ExperimentConfig,
+    node_factors: &[f64],
+    i: usize,
+    jitter: &mut Rng64,
+) {
+    crate::exec::sleep_compute(cfg.compute_time, node_factors[i], jitter);
+}
+
+// ------------------------------------------------------------ aggregation
+
+/// Stitch the per-shard reports back into one [`ExperimentReport`]:
+/// evaluate the zero state, every complete recorded sweep (when all
+/// shards recorded trajectories), and the final stitched state, with
+/// the exact timestamp formulas the threaded executor uses — which is
+/// why a lockstep mesh's series is comparable (bit-for-bit) to a
+/// single-process `SampleCadence::Activations(m)` run.
+pub fn aggregate_reports(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    mut reports: Vec<ShardReport>,
+) -> Result<ExperimentReport, String> {
+    let m = cfg.nodes;
+    let n = cfg.support_size();
+    let plan = ShardPlan::new(0, shards, m)?;
+    reports.sort_by_key(|r| r.shard);
+    if reports.len() != shards
+        || reports.iter().enumerate().any(|(s, r)| r.shard != s)
+    {
+        let got: Vec<usize> = reports.iter().map(|r| r.shard).collect();
+        return Err(format!("need one report per shard 0..{shards}, got {got:?}"));
+    }
+    for (s, r) in reports.iter().enumerate() {
+        let want = plan.range(s).len() * n;
+        if r.final_etas.len() != want {
+            return Err(format!(
+                "shard {s} reported {} final values, expected {want}",
+                r.final_etas.len()
+            ));
+        }
+    }
+    let sweeps = ((cfg.duration / cfg.activation_interval).round() as usize).max(1);
+    let graph = Graph::build(m, cfg.topology);
+    let measures = cfg.measure.build_network(m, cfg.seed);
+    let mut evaluator =
+        MetricsEvaluator::new(&graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
+
+    let mut dual_series = Series::new("dual_objective");
+    let mut consensus_series = Series::new("consensus");
+    let mut spread_series = Series::new("primal_spread");
+    let mut dual_wall = Series::new("dual_wall");
+
+    let mut etas = vec![0.0; m * n];
+    let (d0, c0, s0) = evaluator.evaluate(&etas, &measures);
+    dual_series.push(0.0, d0);
+    consensus_series.push(0.0, c0);
+    spread_series.push(0.0, s0);
+    dual_wall.push(0.0, d0);
+
+    let stitch = |etas: &mut [f64], pick: &dyn Fn(&ShardReport) -> Option<&[f64]>| -> bool {
+        for (s, r) in reports.iter().enumerate() {
+            let Some(blk) = pick(r) else { return false };
+            let range = plan.range(s);
+            etas[range.start * n..range.end * n].copy_from_slice(blk);
+        }
+        true
+    };
+
+    if reports.iter().all(|r| !r.sweep_etas.is_empty()) {
+        for r in 0..sweeps as u64 {
+            let complete = stitch(&mut etas, &|rep| {
+                rep.sweep_etas
+                    .iter()
+                    .find(|(sw, _)| *sw == r)
+                    .map(|(_, b)| b.as_slice())
+            });
+            if !complete {
+                return Err(format!("sweep {r} missing from some shard's trajectory"));
+            }
+            let (d, c, s) = evaluator.evaluate(&etas, &measures);
+            let acts = (r + 1) * m as u64;
+            let t = (acts as f64 / m as f64 * cfg.activation_interval).min(cfg.duration);
+            dual_series.push(t, d);
+            consensus_series.push(t, c);
+            spread_series.push(t, s);
+        }
+    }
+
+    stitch(&mut etas, &|rep| Some(rep.final_etas.as_slice()));
+    let (d, c, s) = evaluator.evaluate(&etas, &measures);
+    dual_series.push(cfg.duration, d);
+    consensus_series.push(cfg.duration, c);
+    spread_series.push(cfg.duration, s);
+    let window = reports.iter().map(|r| r.window_secs).fold(0.0, f64::max);
+    dual_wall.push(window, d);
+
+    let sync = cfg.algorithm == AlgorithmKind::Dcwb;
+    let budget: u64 = reports.iter().map(|r| r.activations).sum();
+    Ok(ExperimentReport {
+        tag: format!("{}_net{}", cfg.tag(), shards),
+        algorithm: cfg.algorithm,
+        dual_objective: dual_series,
+        consensus: consensus_series,
+        primal_spread: spread_series,
+        dual_wall,
+        activations: budget,
+        rounds: if sync { sweeps as u64 } else { 0 },
+        messages: reports.iter().map(|r| r.messages).sum(),
+        wire_messages: reports.iter().map(|r| r.wire_messages).sum(),
+        events: budget,
+        lambda_max: graph.lambda_max(),
+        wall_seconds: 0.0,
+        barycenter: evaluator.barycenter(),
+    })
+}
+
+// ------------------------------------------------------------ mesh runners
+
+/// Run a full sharded experiment **in one process**: every shard on
+/// its own thread, but with its own sockets — the complete wire path
+/// (codec, reader/writer threads, markers) minus process isolation.
+/// This is the harness the integration tests and benches use; the
+/// CLI's `speedup --processes` uses [`run_mesh_processes`] for the
+/// real thing.
+pub fn run_mesh_threads(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    pacing: Pacing,
+    record_sweeps: bool,
+) -> Result<ExperimentReport, String> {
+    let t_all = Instant::now();
+    let _ = ShardPlan::new(0, shards, cfg.nodes)?;
+    let mut listeners = Vec::with_capacity(shards);
+    let mut addrs = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let l = TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind: {e}"))?;
+        addrs.push(l.local_addr().map_err(|e| format!("local_addr: {e}"))?.to_string());
+        listeners.push(l);
+    }
+    let results: Vec<Result<ShardReport, String>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shards);
+        for (s, listener) in listeners.into_iter().enumerate() {
+            let addrs = addrs.clone();
+            let plan = ShardPlan { shard: s, shards, nodes: cfg.nodes };
+            handles.push(scope.spawn(move || {
+                run_shard(
+                    cfg,
+                    ShardRunOpts { plan, pacing, record_sweeps, listener, peer_addrs: addrs },
+                )
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err("shard thread panicked".into())))
+            .collect()
+    });
+    let reports: Vec<ShardReport> = results.into_iter().collect::<Result<_, _>>()?;
+    let mut report = aggregate_reports(cfg, shards, reports)?;
+    report.wall_seconds = t_all.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Serialize `cfg` back into the CLI flags `serve` re-parses, so child
+/// shard processes reconstruct the **identical** experiment (every
+/// float formatted with Rust's shortest-roundtrip `Display`, which
+/// re-parses bit-exactly).
+pub fn experiment_args(cfg: &ExperimentConfig) -> Result<Vec<String>, String> {
+    if !matches!(cfg.backend, OracleBackendSpec::Native) {
+        return Err("multi-process meshes support the native oracle backend only".into());
+    }
+    if let crate::graph::TopologySpec::ErdosRenyi { seed, .. } = cfg.topology {
+        if seed != cfg.seed {
+            return Err(
+                "er topology carries a seed different from cfg.seed; \
+                 child shards could not rebuild the same graph"
+                    .into(),
+            );
+        }
+    }
+    fn push(a: &mut Vec<String>, k: &str, v: String) {
+        a.push(format!("--{k}"));
+        a.push(v);
+    }
+    let mut a: Vec<String> = Vec::new();
+    match &cfg.measure {
+        MeasureSpec::Gaussian { n } => push(&mut a, "support", n.to_string()),
+        MeasureSpec::Digits { digit, side, idx_path } => {
+            a.push("--mnist".into());
+            push(&mut a, "digit", digit.to_string());
+            push(&mut a, "side", side.to_string());
+            if let Some(p) = idx_path {
+                push(&mut a, "idx-path", p.clone());
+            }
+        }
+    }
+    push(&mut a, "nodes", cfg.nodes.to_string());
+    push(&mut a, "seed", cfg.seed.to_string());
+    push(&mut a, "topology", cfg.topology.cli_string());
+    push(&mut a, "algorithm", cfg.algorithm.name().to_string());
+    push(&mut a, "beta", cfg.beta.to_string());
+    push(&mut a, "gamma-scale", cfg.gamma_scale.to_string());
+    push(&mut a, "samples", cfg.samples_per_activation.to_string());
+    push(&mut a, "eval-samples", cfg.eval_samples.to_string());
+    push(&mut a, "duration", cfg.duration.to_string());
+    push(&mut a, "activation-interval", cfg.activation_interval.to_string());
+    push(&mut a, "metric-interval", cfg.metric_interval.to_string());
+    push(&mut a, "compute-time", cfg.compute_time.to_string());
+    push(&mut a, "straggler-fraction", cfg.faults.straggler_fraction.to_string());
+    push(&mut a, "straggler-slowdown", cfg.faults.straggler_slowdown.to_string());
+    push(&mut a, "drop-prob", cfg.faults.drop_prob.to_string());
+    if cfg.diag == crate::algo::wbp::DiagCoef::PaperLiteral {
+        a.push("--paper-literal-diag".into());
+    }
+    Ok(a)
+}
+
+/// Spawn `shards` child `serve` processes (`exe` must be a binary
+/// whose `serve` subcommand reaches [`serve_main`] — the `a2dwb` CLI,
+/// or a bench binary that forwards), collect their reports over a
+/// local TCP socket, and aggregate.
+///
+/// Free loopback ports are discovered by binding-then-releasing, so a
+/// hostile process racing for ports can make a child fail to bind; the
+/// child's error is inherited on stderr and surfaces here as a failed
+/// report collection.
+pub fn run_mesh_processes(
+    cfg: &ExperimentConfig,
+    exe: &Path,
+    shards: usize,
+    pacing: Pacing,
+    record_sweeps: bool,
+) -> Result<ExperimentReport, String> {
+    let t_all = Instant::now();
+    let _ = ShardPlan::new(0, shards, cfg.nodes)?;
+    let base_args = experiment_args(cfg)?;
+
+    // Bind the report socket BEFORE probing shard ports: it stays
+    // bound, so it can never be handed one of the just-released probe
+    // ports a child was told to --listen on.
+    let report_listener =
+        TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind report socket: {e}"))?;
+    let report_addr = report_listener
+        .local_addr()
+        .map_err(|e| format!("local_addr: {e}"))?
+        .to_string();
+    let mut addrs = Vec::with_capacity(shards);
+    {
+        let mut probes = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let l = TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind: {e}"))?;
+            addrs.push(l.local_addr().map_err(|e| format!("local_addr: {e}"))?.to_string());
+            probes.push(l);
+        } // probes drop here, releasing the ports for the children
+    }
+
+    let mut children = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.arg("serve")
+            .arg("--shard")
+            .arg(format!("{s}/{shards}"))
+            .arg("--listen")
+            .arg(&addrs[s])
+            .arg("--peers")
+            .arg(addrs.join(","))
+            .arg("--pacing")
+            .arg(pacing.name())
+            .arg("--report")
+            .arg(&report_addr);
+        if record_sweeps {
+            cmd.arg("--record-sweeps");
+        }
+        cmd.args(&base_args).stdin(std::process::Stdio::null());
+        children.push(
+            cmd.spawn()
+                .map_err(|e| format!("spawning shard {s} ({}): {e}", exe.display()))?,
+        );
+    }
+
+    let kill_all = |children: &mut Vec<std::process::Child>| {
+        for c in children.iter_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    };
+
+    let sweeps = ((cfg.duration / cfg.activation_interval).round() as usize).max(1);
+    let total_compute = sweeps as f64 * cfg.nodes as f64 * cfg.compute_time.max(0.0);
+    let deadline = Instant::now()
+        + Duration::from_secs_f64(120.0 + 2.0 * cfg.duration + 10.0 * total_compute);
+    let collected = {
+        // fail fast if any child dies before reporting
+        let children = &mut children;
+        collect_reports(&report_listener, shards, deadline, &mut || {
+            for (s, c) in children.iter_mut().enumerate() {
+                if let Ok(Some(status)) = c.try_wait() {
+                    if !status.success() {
+                        return Err(format!("shard {s} exited with {status}"));
+                    }
+                }
+            }
+            Ok(())
+        })
+    };
+    let reports = match collected {
+        Ok(r) => r,
+        Err(e) => {
+            kill_all(&mut children);
+            return Err(e);
+        }
+    };
+    for (s, mut c) in children.into_iter().enumerate() {
+        let status = c.wait().map_err(|e| format!("waiting for shard {s}: {e}"))?;
+        if !status.success() {
+            return Err(format!("shard {s} exited with {status}"));
+        }
+    }
+    let mut report = aggregate_reports(cfg, shards, reports)?;
+    report.wall_seconds = t_all.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Accept `shards` report connections on `listener` (each carrying one
+/// [`WireMsg::Report`] frame) until `deadline`; `poll` runs on every
+/// idle tick so callers can watch for dead children or other abort
+/// conditions. Shared by [`run_mesh_processes`] and the `a2dwb join`
+/// subcommand (manual multi-box orchestration).
+pub fn collect_reports(
+    listener: &TcpListener,
+    shards: usize,
+    deadline: Instant,
+    poll: &mut dyn FnMut() -> Result<(), String>,
+) -> Result<Vec<ShardReport>, String> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("report socket nonblocking: {e}"))?;
+    let mut reports: Vec<ShardReport> = Vec::with_capacity(shards);
+    while reports.len() < shards {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| format!("report stream: {e}"))?;
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                let mut fr = FrameReader::new(stream);
+                loop {
+                    match fr.next_frame() {
+                        Ok(ReadEvent::Msg(WireMsg::Report(r))) => {
+                            reports.push(r);
+                            break;
+                        }
+                        Ok(ReadEvent::Timeout) => {
+                            poll()?;
+                            if Instant::now() >= deadline {
+                                return Err("timed out reading a shard report".into());
+                            }
+                        }
+                        Ok(other) => {
+                            return Err(format!("expected a Report frame, got {other:?}"))
+                        }
+                        Err(e) => return Err(format!("reading shard report: {e}")),
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                poll()?;
+                if Instant::now() >= deadline {
+                    return Err(format!(
+                        "timed out waiting for shard reports ({}/{shards})",
+                        reports.len()
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(format!("report accept: {e}")),
+        }
+    }
+    Ok(reports)
+}
+
+/// Body of the `serve` subcommand (also reachable from bench binaries
+/// so `cargo bench` can fan out over real processes): parse the shard
+/// plan + experiment flags, run the shard, optionally ship the report
+/// to `--report HOST:PORT`.
+pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
+    let cfg = ExperimentConfig::from_cli_args(args, args.has_flag("mnist"))?;
+    let plan = ShardPlan::parse(&args.get_str("shard", "0/1"), cfg.nodes)?;
+    let listen = args.get_str("listen", "127.0.0.1:0");
+    let listener =
+        TcpListener::bind(&listen).map_err(|e| format!("binding {listen}: {e}"))?;
+    let own_addr = listener
+        .local_addr()
+        .map_err(|e| format!("local_addr: {e}"))?
+        .to_string();
+    let mut peer_addrs: Vec<String> = args
+        .get_str("peers", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if peer_addrs.is_empty() && plan.shards == 1 {
+        peer_addrs = vec![own_addr.clone()];
+    }
+    let pacing = Pacing::parse(&args.get_str("pacing", "free"))?;
+    eprintln!(
+        "shard {}/{} listening on {own_addr} ({} pacing, {} on {})",
+        plan.shard,
+        plan.shards,
+        pacing.name(),
+        cfg.algorithm.name(),
+        cfg.topology.name(),
+    );
+    let report = run_shard(
+        &cfg,
+        ShardRunOpts {
+            plan,
+            pacing,
+            record_sweeps: args.has_flag("record-sweeps"),
+            listener,
+            peer_addrs,
+        },
+    )?;
+    println!(
+        "SHARD {}/{} activations={} messages={} wire_messages={} window={:.3}s",
+        report.shard,
+        plan.shards,
+        report.activations,
+        report.messages,
+        report.wire_messages,
+        report.window_secs
+    );
+    if let Some(addr) = args.get_opt("report") {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connecting report sink {addr}: {e}"))?;
+        codec::write_all(&mut (&stream), &codec::encode_report(&report))?;
+        stream.shutdown(Shutdown::Both).ok();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TopologySpec;
+
+    #[test]
+    fn sharded_grid_fanout_dedupes_peer_shards() {
+        // complete graph on 6 nodes, 3 shards of 2: every node has
+        // neighbors in both other shards but each peer appears once
+        let graph = Graph::build(6, TopologySpec::Complete);
+        let plan = ShardPlan::new(1, 3, 6).unwrap();
+        let sg = ShardedMailboxGrid::new(&graph, 4, plan);
+        assert_eq!(sg.fanout(2), &[0, 2]);
+        assert_eq!(sg.fanout(3), &[0, 2]);
+        // cycle: shard 1 of 3 on 6 nodes owns {2, 3}; node 2 touches
+        // node 1 (shard 0) only, node 3 touches node 4 (shard 2) only
+        let cyc = Graph::build(6, TopologySpec::Cycle);
+        let sg = ShardedMailboxGrid::new(&cyc, 4, plan);
+        assert_eq!(sg.fanout(2), &[0]);
+        assert_eq!(sg.fanout(3), &[2]);
+    }
+
+    #[test]
+    fn experiment_args_roundtrip_through_cli() {
+        let mut cfg = ExperimentConfig::gaussian_default();
+        cfg.nodes = 12;
+        cfg.seed = 7;
+        cfg.beta = 0.037;
+        cfg.duration = 2.5;
+        cfg.compute_time = 0.00025;
+        cfg.faults.straggler_fraction = 0.25;
+        cfg.faults.straggler_slowdown = 3.0;
+        let flags = experiment_args(&cfg).unwrap();
+        let parsed = crate::cli::Args::parse(flags).unwrap();
+        let back = ExperimentConfig::from_cli_args(&parsed, parsed.has_flag("mnist")).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn experiment_args_rejects_pjrt() {
+        let cfg = ExperimentConfig {
+            backend: OracleBackendSpec::Pjrt { artifacts_dir: "x".into() },
+            ..ExperimentConfig::gaussian_default()
+        };
+        assert!(experiment_args(&cfg).is_err());
+    }
+
+    #[test]
+    fn config_digest_tracks_every_dynamics_knob() {
+        let base = ExperimentConfig::gaussian_default();
+        let d0 = config_digest(&base);
+        assert_eq!(d0, config_digest(&base.clone()), "digest must be deterministic");
+        let mut c = base.clone();
+        c.beta = 0.1;
+        assert_ne!(config_digest(&c), d0, "beta must change the digest");
+        let mut c = base.clone();
+        c.topology = TopologySpec::Star;
+        assert_ne!(config_digest(&c), d0, "topology must change the digest");
+        let mut c = base.clone();
+        c.diag = crate::algo::wbp::DiagCoef::PaperLiteral;
+        assert_ne!(config_digest(&c), d0, "diag variant must change the digest");
+        let mut c = base.clone();
+        c.faults.drop_prob = 0.05;
+        assert_ne!(config_digest(&c), d0, "fault model must change the digest");
+    }
+
+    #[test]
+    fn experiment_args_carry_the_diag_variant() {
+        let cfg = ExperimentConfig {
+            diag: crate::algo::wbp::DiagCoef::PaperLiteral,
+            ..ExperimentConfig::gaussian_default()
+        };
+        let flags = experiment_args(&cfg).unwrap();
+        assert!(flags.iter().any(|f| f == "--paper-literal-diag"));
+        let parsed = crate::cli::Args::parse(flags).unwrap();
+        let back = ExperimentConfig::from_cli_args(&parsed, false).unwrap();
+        assert_eq!(back.diag, crate::algo::wbp::DiagCoef::PaperLiteral);
+    }
+
+    #[test]
+    fn board_waits_and_fails() {
+        let b = Board::new(2);
+        b.mark(1, MarkerPhase::SweepDone, 4);
+        b.wait_until(Duration::from_millis(50), "sweeps", |s| s.sweeps[1] >= 5).unwrap();
+        assert!(b
+            .wait_until(Duration::from_millis(20), "more", |s| s.sweeps[1] >= 6)
+            .is_err());
+        b.fail("boom".into());
+        let err = b
+            .wait_until(Duration::from_secs(5), "anything", |_| false)
+            .unwrap_err();
+        assert!(err.contains("boom"));
+    }
+}

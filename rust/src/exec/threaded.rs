@@ -130,43 +130,93 @@ fn bump_progress(sh: &Shared<'_>, n: usize) {
     }
 }
 
-/// Simulated compute cost of one activation: `compute_time`, scaled by
-/// the node's straggler factor and a per-activation jitter in
-/// [0.5, 1.5) (mean 1 — `compute_time` stays the expected cost).
+/// Simulated compute cost of one activation — delegates to the
+/// backend-shared [`super::sleep_compute`] (one jitter/straggler
+/// formula for the threaded and sharded executors).
 fn sleep_compute(sh: &Shared<'_>, i: usize, jitter: &mut Rng64) {
-    if sh.cfg.compute_time <= 0.0 {
-        return;
-    }
-    let secs =
-        sh.cfg.compute_time * sh.node_factors[i] * (0.5 + jitter.uniform());
-    std::thread::sleep(Duration::from_secs_f64(secs));
+    super::sleep_compute(sh.cfg.compute_time, sh.node_factors[i], jitter);
 }
 
-/// Body of one worker thread. Returns its nodes (for the final metric
-/// snapshot) and the number of messages it published.
-///
-/// On oracle-build failure the worker still participates in every
-/// barrier phase (doing no work) before reporting the error, so a
-/// failing worker can never strand its DCWB peers at a
-/// [`Barrier::wait`] — std barriers have no poisoning.
+/// Ledger of this worker's progress through the DCWB barrier
+/// protocol: every wait goes through [`SyncPacer::wait`], so on any
+/// early exit — an error return or a panic caught by [`worker_loop`]
+/// — [`SyncPacer::drain`] can stand in for the remaining phases and
+/// no peer is ever stranded at a [`Barrier::wait`] (std barriers have
+/// no poisoning). Async runs have `total = 0` and drain is a no-op.
+struct SyncPacer<'a> {
+    barrier: &'a Barrier,
+    /// Waits this worker owes over the whole run (2 per DCWB round).
+    total: usize,
+    waited: std::cell::Cell<usize>,
+}
+
+impl<'a> SyncPacer<'a> {
+    fn new(barrier: &'a Barrier, total: usize) -> Self {
+        Self { barrier, total, waited: std::cell::Cell::new(0) }
+    }
+
+    fn wait(&self) {
+        self.waited.set(self.waited.get() + 1);
+        self.barrier.wait();
+    }
+
+    /// Serve every remaining barrier phase without doing any work.
+    fn drain(&self) {
+        while self.waited.get() < self.total {
+            self.wait();
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+/// One worker thread: runs [`worker_body`] with panic containment.
+/// Whatever goes wrong — an error return (oracle build failure) or a
+/// panic anywhere in the activation path — the worker first honors
+/// every barrier phase it still owes its DCWB peers, then reports the
+/// failure; the monitor loop sees every handle finish and `run`
+/// returns the error instead of spinning on a wedged barrier forever.
 fn worker_loop(
     sh: Shared<'_>,
     worker_id: usize,
+    mine: Vec<(usize, WbpNode, Rng64)>,
+) -> Result<(Vec<(usize, WbpNode)>, u64), String> {
+    let pacer =
+        SyncPacer::new(sh.barrier, if sh.sync { 2 * sh.sweeps } else { 0 });
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        worker_body(&sh, worker_id, mine, &pacer)
+    }))
+    .unwrap_or_else(|payload| {
+        Err(format!("worker {worker_id} panicked: {}", panic_message(payload.as_ref())))
+    });
+    if out.is_err() {
+        pacer.drain();
+    }
+    out
+}
+
+/// The worker's actual run. Returns its nodes (for the final metric
+/// snapshot) and the number of messages it published. All barrier
+/// traffic goes through `pacer` so [`worker_loop`] can settle the
+/// protocol on early exit.
+fn worker_body(
+    sh: &Shared<'_>,
+    worker_id: usize,
     mut mine: Vec<(usize, WbpNode, Rng64)>,
+    pacer: &SyncPacer<'_>,
 ) -> Result<(Vec<(usize, WbpNode)>, u64), String> {
     let n = sh.cfg.support_size();
-    let mut oracle = match sh.cfg.backend.build(sh.cfg.samples_per_activation, n) {
-        Ok(o) => o,
-        Err(e) => {
-            if sh.sync {
-                for _ in 0..sh.sweeps {
-                    sh.barrier.wait();
-                    sh.barrier.wait();
-                }
-            }
-            return Err(format!("worker {worker_id}: oracle build failed: {e}"));
-        }
-    };
+    let mut oracle = sh
+        .cfg
+        .backend
+        .build(sh.cfg.samples_per_activation, n)
+        .map_err(|e| format!("worker {worker_id}: oracle build failed: {e}"))?;
     let mut theta = ThetaSeq::new(sh.m_theta);
     let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
@@ -186,7 +236,7 @@ fn worker_loop(
         for r in 0..sh.sweeps {
             for (i, node, rng) in mine.iter_mut() {
                 let i = *i;
-                sleep_compute(&sh, i, &mut jitter);
+                sleep_compute(sh, i, &mut jitter);
                 node.eval_point(&mut theta, r, true, &mut point);
                 sh.measures[i].draw_samples_into(rng, ctx.batch, &mut samples);
                 let rows = sh.measures[i].cost_rows(&samples);
@@ -197,7 +247,7 @@ fn worker_loop(
                     std::sync::Arc::new(node.own_grad.clone()),
                 );
             }
-            sh.barrier.wait();
+            pacer.wait();
             for (i, node, _) in mine.iter_mut() {
                 let i = *i;
                 transport.collect(i, node);
@@ -211,9 +261,9 @@ fn worker_loop(
                 );
                 node.eta(&mut theta, r + 1, &mut point);
                 sh.eta_snaps[i].lock().unwrap().copy_from_slice(&point);
-                bump_progress(&sh, n);
+                bump_progress(sh, n);
             }
-            sh.barrier.wait();
+            pacer.wait();
         }
     } else {
         // A²DWB / A²DWBN: barrier-free. Claim a global iteration index,
@@ -222,7 +272,7 @@ fn worker_loop(
             for (i, node, rng) in mine.iter_mut() {
                 let i = *i;
                 let k = sh.k_counter.fetch_add(1, Ordering::Relaxed);
-                sleep_compute(&sh, i, &mut jitter);
+                sleep_compute(sh, i, &mut jitter);
                 activate_node(
                     node,
                     i,
@@ -240,7 +290,7 @@ fn worker_loop(
                 );
                 node.eta(&mut theta, k + 1, &mut point);
                 sh.eta_snaps[i].lock().unwrap().copy_from_slice(&point);
-                bump_progress(&sh, n);
+                bump_progress(sh, n);
             }
         }
     }
@@ -261,6 +311,16 @@ pub fn run(
     let n = cfg.support_size();
     if workers == 0 {
         return Err("threads executor needs workers >= 1".into());
+    }
+    if cfg.faults.drop_prob > 0.0 {
+        // The mailbox grid delivers every publish; only the simulator
+        // has a message-fate model. Refuse rather than silently run a
+        // lossless experiment labeled as a lossy one.
+        return Err(
+            "drop_prob > 0 is modeled by the sim executor only; the threads \
+             executor has no message-loss model (straggler factors apply)"
+                .into(),
+        );
     }
     let workers = workers.min(m);
     let measures = cfg.measure.build_network(m, cfg.seed);
@@ -454,8 +514,10 @@ pub fn run(
         }
 
         for h in handles {
+            // worker panics are caught inside worker_loop (after the
+            // barrier ledger is settled) and surface as Err here
             let joined =
-                h.join().map_err(|_| "threaded worker panicked".to_string())?;
+                h.join().map_err(|_| "threaded worker died unrecoverably".to_string())?;
             let (mine, msgs) = joined?;
             messages += msgs;
             for (i, node) in mine {
@@ -464,6 +526,11 @@ pub fn run(
         }
         Ok(())
     })?;
+    // The run window closes when the last worker finishes — recorded
+    // before the final metric evaluation below so `dual_wall` (and the
+    // speedup ratios derived from its last timestamp) measure the
+    // algorithms' execution, not the evaluator.
+    let run_window = wall_t0.elapsed().as_secs_f64();
 
     // Snapshots queued after the monitor's last pass (all of them, when
     // workers outpace the 2 ms drain tick) land before the horizon point.
@@ -499,7 +566,7 @@ pub fn run(
     dual_series.push(cfg.duration, dual);
     consensus_series.push(cfg.duration, consensus);
     spread_series.push(cfg.duration, spread);
-    dual_wall.push(wall_t0.elapsed().as_secs_f64(), dual);
+    dual_wall.push(run_window, dual);
 
     Ok(ExperimentReport {
         tag: format!("{}_thr{}", cfg.tag(), workers),
@@ -511,9 +578,40 @@ pub fn run(
         activations: budget as u64,
         rounds: if sync { sweeps as u64 } else { 0 },
         messages,
+        wire_messages: 0,
         events: budget as u64,
         lambda_max,
         wall_seconds: 0.0,
         barycenter: evaluator.barycenter(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_pacer_drain_settles_the_protocol_for_a_failed_worker() {
+        // One worker does a single round of real work then "fails";
+        // its drain must keep serving barrier phases so the healthy
+        // worker (which owes 4 waits) is never stranded. A regression
+        // here deadlocks the test rather than passing silently.
+        let barrier = Barrier::new(2);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let p = SyncPacer::new(&barrier, 4);
+                p.wait();
+                p.drain();
+                assert_eq!(p.waited.get(), 4);
+            });
+            s.spawn(|| {
+                let p = SyncPacer::new(&barrier, 4);
+                for _ in 0..4 {
+                    p.wait();
+                }
+                p.drain(); // completed worker: drain is a no-op
+                assert_eq!(p.waited.get(), 4);
+            });
+        });
+    }
 }

@@ -93,6 +93,22 @@ pub struct MailboxGrid {
 
 impl MailboxGrid {
     pub fn new(graph: &Graph, n: usize) -> Self {
+        Self::new_for(graph, n, |_| true)
+    }
+
+    /// Build a grid that only backs the inbound slots of destinations
+    /// selected by `stores_dst` with real n-vectors; the other slots
+    /// exist for routing (so `publish` stays O(deg) and unconditional)
+    /// but start from an empty buffer that is only ever replaced by
+    /// `Arc` pointer swaps — they cost pointers, not gradients. This is
+    /// how a [`crate::exec::net::ShardedMailboxGrid`] keeps a
+    /// full-network routing table while paying memory only for its own
+    /// shard's mailboxes.
+    pub fn new_for(
+        graph: &Graph,
+        n: usize,
+        stores_dst: impl Fn(usize) -> bool,
+    ) -> Self {
         let m = graph.num_nodes();
         let mut in_offset = Vec::with_capacity(m + 1);
         let mut acc = 0usize;
@@ -101,7 +117,13 @@ impl MailboxGrid {
             acc += graph.degree(j);
         }
         in_offset.push(acc);
-        let slots = (0..acc).map(|_| FreshestSlot::new(n)).collect();
+        let mut slots = Vec::with_capacity(acc);
+        for j in 0..m {
+            let width = if stores_dst(j) { n } else { 0 };
+            for _ in 0..graph.degree(j) {
+                slots.push(FreshestSlot::new(width));
+            }
+        }
         let out_routes = (0..m)
             .map(|i| {
                 graph
@@ -202,6 +224,27 @@ mod tests {
             assert_eq!(node.mailbox[s].0, 5);
             assert_eq!(node.mailbox[s].1, vec![7.0, 8.0, 9.0]);
         }
+    }
+
+    #[test]
+    fn partial_grid_stores_only_selected_destinations() {
+        let graph = Graph::build(4, TopologySpec::Cycle);
+        let grid = MailboxGrid::new_for(&graph, 3, |j| j < 2);
+        let g = Arc::new(vec![1.0, 2.0, 3.0]);
+        // node 1 broadcasts to neighbors {0, 2}: dst 0 is stored, dst 2
+        // is routing-only
+        assert_eq!(grid.publish(1, 7, &g), 2);
+        let mut node = WbpNode::new(3, graph.degree(0));
+        grid.collect(0, &mut node);
+        let s = graph.neighbors(0).binary_search(&1).unwrap();
+        assert_eq!(node.mailbox[s], (7, vec![1.0, 2.0, 3.0]));
+        // the routing-only slot swapped in the sender's Arc (pointer
+        // equality — no payload copy happened)
+        let slot_idx =
+            grid.in_offset[2] + graph.neighbors(2).binary_search(&1).unwrap();
+        let (stamp, held) = grid.slots[slot_idx].load();
+        assert_eq!(stamp, 7);
+        assert!(Arc::ptr_eq(&held, &g));
     }
 
     #[test]

@@ -39,6 +39,20 @@ impl TopologySpec {
         }
     }
 
+    /// The parseable inverse of [`TopologySpec::parse`]: a string that
+    /// re-parses (with the same seed) to an identical spec. Used to
+    /// hand an experiment to shard child processes
+    /// (`crate::exec::net`) without lossy naming — unlike
+    /// [`TopologySpec::name`], this keeps the Erdős–Rényi edge
+    /// probability (`f64`'s `Display` is shortest-roundtrip, so the
+    /// value survives bit-exactly).
+    pub fn cli_string(&self) -> String {
+        match self {
+            TopologySpec::ErdosRenyi { p, .. } => format!("er:{p}"),
+            other => other.name().to_string(),
+        }
+    }
+
     /// Parse "complete" | "er" | "erdos-renyi[:p]" | "cycle" | "star" |
     /// "path" | "grid".
     pub fn parse(s: &str, seed: u64) -> Result<Self, String> {

@@ -32,6 +32,13 @@
 //! golden and all RNG draw orders are therefore preserved by the
 //! refactor (guarded by the equivalence tests below and
 //! `rust/tests/kernel_zero_copy.rs`).
+//!
+//! Every consumer bottoms out here: the oracle backends in
+//! [`crate::ot`], the Sinkhorn solver's log-domain inner loop, the
+//! metric evaluator, and through them every executor — simulator,
+//! threads, and the multi-process mesh ([`crate::exec::net`]). The
+//! zero-copy performance numbers are tracked in `BENCH_kernel.json`
+//! (emitted by `benches/oracle.rs`; schema in `ARCHITECTURE.md`).
 
 use crate::measures::CostRows;
 

@@ -44,6 +44,21 @@
 //! Both drive the same node-local state machine (`algo::wbp`) through
 //! the same [`exec::Transport`] seam, so the algorithms exist once.
 //!
+//! Past one process, [`exec::net`] shards the network across OS
+//! processes connected by TCP (`a2dwb serve` / `a2dwb speedup
+//! --processes P`): intra-shard edges stay on the in-process mailbox
+//! fast path, cross-shard gradients travel as stamped wire frames, and
+//! the freshest-wins invariant — receivers keep only the highest
+//! iteration stamp per directed edge, making delivery idempotent and
+//! reorder-safe — holds unchanged across the wire. Because A²DWB is
+//! barrier-free by construction, the sharded async path has no
+//! cross-process barrier at all.
+//!
+//! A file-level map of all the layers (with the zero-copy and
+//! mailbox invariants spelled out), the `BENCH_*.json` schemas, and
+//! the golden-blessing workflow live in `ARCHITECTURE.md` at the
+//! repository root.
+//!
 //! ## Quick start
 //!
 //! ```no_run

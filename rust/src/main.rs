@@ -7,22 +7,23 @@
 //! a2dwb mnist    --digit 3 --topology er:0.1 --nodes 50
 //! a2dwb sweep    --nodes 30 --duration 20          # all algos × topologies
 //! a2dwb speedup  --workers 4 --nodes 16            # async vs sync wall-clock
+//! a2dwb speedup  --processes 2 --nodes 16          # sharded over loopback TCP
+//! a2dwb serve    --shard 0/2 --listen 127.0.0.1:7701 --peers 127.0.0.1:7701,127.0.0.1:7702
+//! a2dwb join     --listen 127.0.0.1:7700 --shards 2  # aggregate shard reports
 //! a2dwb oracle   --backend pjrt --m 32 --n 100     # oracle micro-check
 //! a2dwb inspect  --topology star --nodes 100       # graph spectral info
 //! ```
 
-use a2dwb::algo::wbp::DiagCoef;
 use a2dwb::cli::Args;
 use a2dwb::coordinator::{run_experiment, ExperimentConfig};
-use a2dwb::exec::ExecutorSpec;
+use a2dwb::exec::net::{self, Pacing};
+use a2dwb::exec::{ExecutorSpec, SampleCadence};
 use a2dwb::graph::{Graph, TopologySpec};
-use a2dwb::measures::MeasureSpec;
 use a2dwb::metrics::{ascii_summary, write_csv};
-use a2dwb::ot::OracleBackendSpec;
 use a2dwb::prelude::AlgorithmKind;
 
 const SUBCOMMANDS: &[&str] =
-    &["gaussian", "mnist", "sweep", "speedup", "oracle", "inspect"];
+    &["gaussian", "mnist", "sweep", "speedup", "serve", "join", "oracle", "inspect"];
 
 fn main() {
     let args = match Args::from_env() {
@@ -37,6 +38,8 @@ fn main() {
         Some("mnist") => cmd_experiment(&args, true),
         Some("sweep") => cmd_sweep(&args),
         Some("speedup") => cmd_speedup(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("join") => cmd_join(&args),
         Some("oracle") => cmd_oracle(&args),
         Some("inspect") => cmd_inspect(&args),
         _ => {
@@ -46,59 +49,30 @@ fn main() {
             eprintln!("  --beta B --gamma-scale G --samples M --backend native|pjrt");
             eprintln!("  --executor sim|threads --workers W  (execution backend)");
             eprintln!("  --out results/run.csv  (CSV of the metric series)");
+            eprintln!("multi-process (see ARCHITECTURE.md):");
+            eprintln!("  speedup --processes P          spawn P shard processes over loopback TCP");
+            eprintln!("  serve --shard i/of --listen A --peers A0,..,Ap [--report ADDR]");
+            eprintln!("  join  --listen A --shards P    collect shard reports + aggregate");
             2
         }
     };
     std::process::exit(code);
 }
 
-/// Build an ExperimentConfig from shared CLI options.
+/// Build an ExperimentConfig from shared CLI options (the parsing
+/// itself lives in the library so `serve` shard processes reconstruct
+/// experiments identically — see `ExperimentConfig::from_cli_args`).
 fn config_from_args(args: &Args, mnist: bool) -> Result<ExperimentConfig, String> {
-    let mut cfg = if mnist {
-        ExperimentConfig::mnist_default(args.get::<u8>("digit", 2)?)
-    } else {
-        ExperimentConfig::gaussian_default()
-    };
-    cfg.nodes = args.get("nodes", cfg.nodes)?;
-    cfg.seed = args.get("seed", cfg.seed)?;
-    cfg.topology = TopologySpec::parse(&args.get_str("topology", "complete"), cfg.seed)?;
-    cfg.algorithm = AlgorithmKind::parse(&args.get_str("algorithm", "a2dwb"))?;
-    cfg.beta = args.get("beta", cfg.beta)?;
-    cfg.gamma_scale = args.get("gamma-scale", cfg.gamma_scale)?;
-    cfg.samples_per_activation = args.get("samples", cfg.samples_per_activation)?;
-    cfg.eval_samples = args.get("eval-samples", cfg.eval_samples)?;
-    cfg.duration = args.get("duration", cfg.duration)?;
-    cfg.activation_interval = args.get("activation-interval", cfg.activation_interval)?;
-    cfg.metric_interval = args.get("metric-interval", cfg.metric_interval)?;
-    cfg.compute_time = args.get("compute-time", cfg.compute_time)?;
-    if mnist {
-        let side = args.get("side", 28usize)?;
-        cfg.measure = MeasureSpec::Digits {
-            digit: args.get::<u8>("digit", 2)?,
-            side,
-            idx_path: args.get_opt("idx-path").map(str::to_string),
-        };
-    } else {
-        cfg.measure = MeasureSpec::Gaussian { n: args.get("support", 100usize)? };
-    }
-    cfg.backend = match args.get_str("backend", "native").as_str() {
-        "native" => OracleBackendSpec::Native,
-        "pjrt" => OracleBackendSpec::Pjrt {
-            artifacts_dir: args.get_str("artifacts", "artifacts"),
-        },
-        other => return Err(format!("unknown backend '{other}'")),
-    };
-    let workers = args.get("workers", 0usize)?;
-    cfg.executor = ExecutorSpec::parse(&args.get_str("executor", "sim"), workers)?;
-    if args.has_flag("paper-literal-diag") {
-        cfg.diag = DiagCoef::PaperLiteral;
-    }
-    Ok(cfg)
+    ExperimentConfig::from_cli_args(args, mnist)
 }
 
-/// Wall-clock speedup of A²DWB over DCWB on the threaded executor at an
-/// equal iteration budget — the paper's waiting-overhead claim on real
-/// threads. The simulator's virtual-time verdict is printed alongside.
+/// Wall-clock speedup of A²DWB over DCWB at an equal iteration budget
+/// — the paper's waiting-overhead claim on real threads, and with
+/// `--processes P` on real processes exchanging gradients over
+/// loopback TCP. Ratios use the **run window** (time from worker start
+/// to last worker done, `ExperimentReport::run_window_seconds`), not
+/// total wall time: setup and metric evaluation are identical for both
+/// algorithms and would bias a total-wall ratio toward 1×.
 fn cmd_speedup(args: &Args) -> i32 {
     let mut cfg = match config_from_args(args, false) {
         Ok(c) => c,
@@ -109,14 +83,15 @@ fn cmd_speedup(args: &Args) -> i32 {
     };
     // CI-friendly scale unless overridden; a small per-activation
     // compute cost makes the barrier's waiting overhead visible.
-    let scale = || -> Result<(usize, f64, usize), String> {
+    let scale = || -> Result<(usize, f64, usize, usize), String> {
         Ok((
             args.get("nodes", 16usize)?,
             args.get("duration", 4.0)?,
             args.get("workers", 4usize)?,
+            args.get("processes", 0usize)?,
         ))
     };
-    let (nodes, duration, workers_arg) = match scale() {
+    let (nodes, duration, workers_arg, processes) = match scale() {
         Ok(v) => v,
         Err(e) => {
             eprintln!("error: {e}");
@@ -127,6 +102,9 @@ fn cmd_speedup(args: &Args) -> i32 {
     cfg.duration = duration;
     if args.get_opt("compute-time").is_none() {
         cfg.compute_time = 0.0005;
+    }
+    if processes >= 2 {
+        return cmd_speedup_processes(&cfg, processes);
     }
     let workers = match cfg.executor {
         ExecutorSpec::Threads { workers } => workers,
@@ -148,10 +126,10 @@ fn cmd_speedup(args: &Args) -> i32 {
     println!("{}", s.summary());
     println!(
         "SPEEDUP threads workers={workers} a2dwb={:.3}s dcwb={:.3}s -> {:.2}x \
-         (dual: a2dwb {:.6} vs dcwb {:.6})",
-        a.wall_seconds,
-        s.wall_seconds,
-        s.wall_seconds / a.wall_seconds.max(1e-12),
+         (run window; dual: a2dwb {:.6} vs dcwb {:.6})",
+        a.run_window_seconds(),
+        s.run_window_seconds(),
+        s.run_window_seconds() / a.run_window_seconds().max(1e-12),
         a.final_dual_objective(),
         s.final_dual_objective(),
     );
@@ -169,6 +147,141 @@ fn cmd_speedup(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// `speedup --processes P`: spawn P shard child processes (`serve`)
+/// exchanging gradients over loopback TCP, run the async-vs-sync pair
+/// free-running, then demonstrate the wire layer's fidelity: a
+/// lockstep 2+-shard mesh must reproduce the single-process
+/// `workers = 1` A²DWB dual trajectory **bit-for-bit**.
+fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
+    let exe = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: current_exe: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "== cross-process speedup: a2dwb vs dcwb, {} nodes on {processes} shard \
+         processes (loopback TCP), equal budget ==",
+        cfg.nodes
+    );
+    let mut pair = Vec::new();
+    for alg in [AlgorithmKind::A2dwb, AlgorithmKind::Dcwb] {
+        let mut c = cfg.clone();
+        c.algorithm = alg;
+        match net::run_mesh_processes(&c, &exe, processes, Pacing::Free, false) {
+            Ok(r) => {
+                println!("{}", r.summary());
+                pair.push(r);
+            }
+            Err(e) => {
+                eprintln!("error [{} x{processes} processes]: {e}", alg.name());
+                return 1;
+            }
+        }
+    }
+    let (a, s) = (&pair[0], &pair[1]);
+    println!(
+        "SPEEDUP processes shards={processes} a2dwb={:.3}s dcwb={:.3}s -> {:.2}x \
+         (run window; wire frames: a2dwb {} dcwb {})",
+        a.run_window_seconds(),
+        s.run_window_seconds(),
+        s.run_window_seconds() / a.run_window_seconds().max(1e-12),
+        a.wire_messages,
+        s.wire_messages,
+    );
+
+    // Fidelity check: lockstep mesh vs single-process single-worker.
+    let mut pcfg = cfg.clone();
+    pcfg.algorithm = AlgorithmKind::A2dwb;
+    let mesh = match net::run_mesh_processes(&pcfg, &exe, processes, Pacing::Lockstep, true) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error [lockstep mesh]: {e}");
+            return 1;
+        }
+    };
+    let mut single = pcfg.clone();
+    single.executor = ExecutorSpec::Threads { workers: 1 };
+    single.sample_cadence = SampleCadence::Activations(pcfg.nodes as u64);
+    let reference = match run_experiment(&single) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error [single-process reference]: {e}");
+            return 1;
+        }
+    };
+    let ok = series_bits_equal(&mesh.dual_objective, &reference.dual_objective)
+        && series_bits_equal(&mesh.consensus, &reference.consensus)
+        && series_bits_equal(&mesh.primal_spread, &reference.primal_spread);
+    println!(
+        "PARITY lockstep shards={processes} vs threads:1 -> {} \
+         ({} trajectory points, final dual {:.9} vs {:.9})",
+        if ok { "bit-identical" } else { "MISMATCH" },
+        mesh.dual_objective.len(),
+        mesh.final_dual_objective(),
+        reference.final_dual_objective(),
+    );
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn series_bits_equal(a: &a2dwb::metrics::Series, b: &a2dwb::metrics::Series) -> bool {
+    a.points.len() == b.points.len()
+        && a.points.iter().zip(&b.points).all(|(p, q)| {
+            p.0.to_bits() == q.0.to_bits() && p.1.to_bits() == q.1.to_bits()
+        })
+}
+
+/// Run one shard of a multi-process mesh (see `exec::net`): blocks
+/// until the shard's slice of the experiment completes, then
+/// optionally ships the shard report to `--report HOST:PORT`.
+fn cmd_serve(args: &Args) -> i32 {
+    match net::serve_main(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Collect `--shards P` shard reports on `--listen ADDR` and aggregate
+/// them into one experiment report — the manual counterpart of
+/// `speedup --processes` for meshes whose `serve` processes were
+/// launched by hand (potentially on other machines).
+fn cmd_join(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let cfg = config_from_args(args, args.has_flag("mnist"))?;
+        let shards = args.get("shards", 2usize)?;
+        let listen = args.get_str("listen", "127.0.0.1:7700");
+        let listener = std::net::TcpListener::bind(&listen)
+            .map_err(|e| format!("binding {listen}: {e}"))?;
+        let timeout = args.get("timeout", 600.0)?;
+        println!(
+            "join: waiting for {shards} shard reports on {} (timeout {timeout}s)",
+            listener.local_addr().map_err(|e| e.to_string())?
+        );
+        let t0 = std::time::Instant::now();
+        let deadline = t0 + std::time::Duration::from_secs_f64(timeout);
+        let reports = net::collect_reports(&listener, shards, deadline, &mut || Ok(()))?;
+        let mut report = net::aggregate_reports(&cfg, shards, reports)?;
+        report.wall_seconds = t0.elapsed().as_secs_f64();
+        println!("{}", report.summary());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_experiment(args: &Args, mnist: bool) -> i32 {

@@ -22,6 +22,14 @@
 //!   grid-distance table — zero per-activation cost work at all.
 //!   Synthetic glyphs by default; real MNIST IDX files if provided
 //!   (see [`idx`] and DESIGN.md §4 for the substitution argument).
+//!
+//! Determinism contract: [`MeasureSpec::build_network`] and every
+//! sampling method are pure functions of the master seed and the RNG
+//! stream handed in, which is what lets each backend — and each
+//! *shard process* of a multi-process mesh ([`crate::exec::net`]) —
+//! rebuild the identical network of measures independently instead of
+//! serializing them. This file sits at the bottom of the layer map in
+//! `ARCHITECTURE.md`.
 
 pub mod digits;
 pub mod gaussian;

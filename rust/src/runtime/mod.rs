@@ -8,8 +8,10 @@
 //! * parses `artifacts/manifest.txt` (always available, std-only),
 //! * compiles the requested shape variant on the PJRT CPU client
 //!   (`xla` crate 0.1.6) **when the `pjrt` cargo feature is enabled**,
-//! * exposes it behind the same [`DualOracle`] trait as the native
-//!   backend, so the coordinator is backend-agnostic.
+//! * exposes it behind the same [`DualOracle`](crate::ot::DualOracle)
+//!   trait as the native backend, so the coordinator is
+//!   backend-agnostic (and with it every executor, the multi-process
+//!   mesh included — each shard process builds its own oracle).
 //!
 //! The `xla` crate is an FFI dependency that cannot be assumed present
 //! in hermetic/offline builds, so the default build compiles a stub

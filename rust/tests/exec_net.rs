@@ -1,0 +1,202 @@
+//! The socket-transport contract of `a2dwb::exec::net`:
+//!
+//! * the wire layer must move gradients **without perturbing a bit** —
+//!   a lockstep 2-shard (and 3-shard) loopback-TCP mesh at one worker
+//!   per shard replays the single-process `Threads { workers: 1 }`
+//!   A²DWB run bit-for-bit, trajectory included;
+//! * DCWB's cross-process round token preserves the barrier semantics
+//!   exactly, so its result is bit-identical at *any* pacing;
+//! * free-running meshes (the production mode) converge to the same
+//!   destination as the simulator within the racy-schedule tolerance
+//!   the threaded executor is held to;
+//! * a mesh whose shards disagree on the experiment must die loudly in
+//!   the handshake, not corrupt each other's mailboxes.
+
+use std::net::TcpListener;
+
+use a2dwb::exec::net::{self, Pacing, ShardPlan, ShardRunOpts};
+use a2dwb::prelude::*;
+
+fn tiny(alg: AlgorithmKind) -> ExperimentConfig {
+    ExperimentConfig {
+        nodes: 8,
+        topology: TopologySpec::Cycle,
+        algorithm: alg,
+        measure: MeasureSpec::Gaussian { n: 20 },
+        samples_per_activation: 8,
+        eval_samples: 16,
+        duration: 3.0,
+        metric_interval: 0.5,
+        ..ExperimentConfig::gaussian_default()
+    }
+}
+
+fn series_bits(s: &Series) -> Vec<(u64, u64)> {
+    s.points.iter().map(|&(t, v)| (t.to_bits(), v.to_bits())).collect()
+}
+
+#[test]
+fn lockstep_two_shard_mesh_is_bit_identical_to_single_process() {
+    let cfg = tiny(AlgorithmKind::A2dwb);
+    let m = cfg.nodes;
+    // the reference: one process, one worker, snapshots at every sweep
+    // boundary (the cadence the mesh's per-sweep recording mirrors)
+    let single = run_experiment(&ExperimentConfig {
+        executor: ExecutorSpec::Threads { workers: 1 },
+        sample_cadence: SampleCadence::Activations(m as u64),
+        ..cfg.clone()
+    })
+    .unwrap();
+    let mesh = net::run_mesh_threads(&cfg, 2, Pacing::Lockstep, true).unwrap();
+
+    assert_eq!(
+        series_bits(&mesh.dual_objective),
+        series_bits(&single.dual_objective),
+        "dual trajectory must survive the wire bit-for-bit"
+    );
+    assert_eq!(series_bits(&mesh.consensus), series_bits(&single.consensus));
+    assert_eq!(series_bits(&mesh.primal_spread), series_bits(&single.primal_spread));
+    assert_eq!(mesh.barycenter, single.barycenter);
+    assert_eq!(mesh.activations, single.activations);
+    // edge-granularity message count is backend-invariant...
+    assert_eq!(mesh.messages, single.messages);
+    // ...while the wire carries one frame per (broadcast, peer shard):
+    // on the 8-cycle split 0..4 / 4..8, exactly nodes {0, 3, 4, 7}
+    // touch the other shard, each broadcasting once in the initial
+    // exchange and once per sweep.
+    let sweeps = (cfg.duration / cfg.activation_interval).round() as u64;
+    assert_eq!(mesh.wire_messages, 4 * (sweeps + 1));
+    assert_eq!(single.wire_messages, 0);
+}
+
+#[test]
+fn lockstep_three_shard_mesh_is_bit_identical_to_single_process() {
+    // P > 2 exercises multi-peer marker fan-in and uneven shard sizes
+    // (6 nodes on 3 shards of 2, complete graph: every node has
+    // cross-shard neighbors in both directions).
+    let cfg = ExperimentConfig {
+        nodes: 6,
+        topology: TopologySpec::Complete,
+        duration: 2.0,
+        ..tiny(AlgorithmKind::A2dwb)
+    };
+    let single = run_experiment(&ExperimentConfig {
+        executor: ExecutorSpec::Threads { workers: 1 },
+        sample_cadence: SampleCadence::Activations(cfg.nodes as u64),
+        ..cfg.clone()
+    })
+    .unwrap();
+    let mesh = net::run_mesh_threads(&cfg, 3, Pacing::Lockstep, true).unwrap();
+    assert_eq!(series_bits(&mesh.dual_objective), series_bits(&single.dual_objective));
+    assert_eq!(mesh.barycenter, single.barycenter);
+    assert_eq!(mesh.messages, single.messages);
+    assert!(mesh.wire_messages > 0);
+}
+
+#[test]
+fn dcwb_round_token_matches_in_process_barriers_bit_for_bit() {
+    // DCWB is fully fenced, so unlike the async pair its destination
+    // is schedule-independent: the mesh (any pacing) must equal the
+    // single-process run exactly.
+    let cfg = tiny(AlgorithmKind::Dcwb);
+    let single = run_experiment(&ExperimentConfig {
+        executor: ExecutorSpec::Threads { workers: 1 },
+        ..cfg.clone()
+    })
+    .unwrap();
+    let mesh = net::run_mesh_threads(&cfg, 2, Pacing::Free, false).unwrap();
+    assert_eq!(
+        mesh.final_dual_objective().to_bits(),
+        single.final_dual_objective().to_bits()
+    );
+    assert_eq!(mesh.barycenter, single.barycenter);
+    let sweeps = (cfg.duration / cfg.activation_interval).round() as u64;
+    assert_eq!(mesh.rounds, sweeps);
+    assert_eq!(mesh.activations, sweeps * cfg.nodes as u64);
+    assert_eq!(mesh.messages, single.messages);
+}
+
+#[test]
+fn free_running_mesh_converges_like_the_simulator() {
+    let cfg = tiny(AlgorithmKind::A2dwb);
+    let sim = run_experiment(&cfg).unwrap();
+    let mesh = net::run_mesh_threads(&cfg, 2, Pacing::Free, false).unwrap();
+
+    let sim_first = sim.dual_objective.first_value().unwrap();
+    let sim_final = sim.final_dual_objective();
+    let progress = sim_first - sim_final;
+    assert!(progress > 0.0, "simulator made no progress");
+
+    let mesh_final = mesh.final_dual_objective();
+    assert!(mesh_final.is_finite());
+    // same instance, same budget, same oracle: the racy cross-shard
+    // schedule may move the trajectory but not the destination (same
+    // tolerance the threaded executor is held to in exec_threads.rs)
+    assert!(
+        (mesh_final - sim_final).abs() <= 0.35 * progress + 1e-9,
+        "mesh dual {mesh_final} vs sim {sim_final} (progress {progress})"
+    );
+    let mesh_first = mesh.dual_objective.first_value().unwrap();
+    assert!(
+        mesh_first - mesh_final >= 0.5 * progress,
+        "mesh progress {} vs sim progress {progress}",
+        mesh_first - mesh_final
+    );
+    assert_eq!(mesh.activations, sim.activations);
+    assert!(mesh.wire_messages > 0);
+    // run window recorded for the speedup ratios
+    assert!(mesh.run_window_seconds() > 0.0);
+}
+
+#[test]
+fn mismatched_shard_configs_fail_the_handshake() {
+    // two shards that disagree on the seed must refuse to exchange
+    // gradients — both sides report an error instead of running
+    let mut cfg0 = tiny(AlgorithmKind::A2dwb);
+    let mut cfg1 = cfg0.clone();
+    cfg0.seed = 1;
+    cfg1.seed = 2;
+    let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addrs =
+        vec![l0.local_addr().unwrap().to_string(), l1.local_addr().unwrap().to_string()];
+    let (r0, r1) = std::thread::scope(|s| {
+        let a0 = addrs.clone();
+        let a1 = addrs.clone();
+        let h0 = s.spawn(move || {
+            net::run_shard(
+                &cfg0,
+                ShardRunOpts {
+                    plan: ShardPlan::new(0, 2, cfg0.nodes).unwrap(),
+                    pacing: Pacing::Free,
+                    record_sweeps: false,
+                    listener: l0,
+                    peer_addrs: a0,
+                },
+            )
+        });
+        let h1 = s.spawn(move || {
+            net::run_shard(
+                &cfg1,
+                ShardRunOpts {
+                    plan: ShardPlan::new(1, 2, cfg1.nodes).unwrap(),
+                    pacing: Pacing::Free,
+                    record_sweeps: false,
+                    listener: l1,
+                    peer_addrs: a1,
+                },
+            )
+        });
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    assert!(r0.is_err(), "shard 0 accepted a mismatched peer: {r0:?}");
+    assert!(r1.is_err(), "shard 1 accepted a mismatched peer: {r1:?}");
+    let msg = format!("{} / {}", r0.unwrap_err(), r1.unwrap_err());
+    assert!(msg.contains("mismatch"), "unexpected errors: {msg}");
+}
+
+#[test]
+fn aggregation_rejects_incomplete_report_sets() {
+    let cfg = tiny(AlgorithmKind::A2dwb);
+    assert!(net::aggregate_reports(&cfg, 2, Vec::new()).is_err());
+}
