@@ -21,15 +21,16 @@ fn main() {
     );
     let mut curve = Series::new("final_dual_vs_interval");
     for interval in [1.6, 0.8, 0.4, 0.2, 0.1, 0.05, 0.025] {
-        let cfg = ExperimentConfig {
-            nodes: 24,
-            topology: TopologySpec::Cycle,
-            algorithm: AlgorithmKind::A2dwb,
-            duration: 20.0,
-            activation_interval: interval,
-            ..ExperimentConfig::gaussian_default()
-        };
-        let r = run_experiment(&cfg).expect("run");
+        let r = ExperimentBuilder::gaussian()
+            .nodes(24)
+            .topology(TopologySpec::Cycle)
+            .algorithm(AlgorithmKind::A2dwb)
+            .duration(20.0)
+            .activation_interval(interval)
+            .build()
+            .expect("valid experiment")
+            .run()
+            .expect("run");
         println!(
             "{:<12} {:>12} {:>14.6} {:>14.3e} {:>12}",
             format!("{interval}s"),

@@ -11,16 +11,18 @@ use a2dwb::graph::TopologySpec;
 use a2dwb::prelude::*;
 
 fn run_one(alg: AlgorithmKind, interval: f64, diag: DiagCoef) -> f64 {
-    let cfg = ExperimentConfig {
-        nodes: 24,
-        topology: TopologySpec::Cycle,
-        algorithm: alg,
-        duration: 20.0,
-        activation_interval: interval,
-        diag,
-        ..ExperimentConfig::gaussian_default()
-    };
-    run_experiment(&cfg).expect("run").final_dual_objective()
+    ExperimentBuilder::gaussian()
+        .nodes(24)
+        .topology(TopologySpec::Cycle)
+        .algorithm(alg)
+        .duration(20.0)
+        .activation_interval(interval)
+        .diag(diag)
+        .build()
+        .expect("valid experiment")
+        .run()
+        .expect("run")
+        .final_dual_objective()
 }
 
 fn main() {

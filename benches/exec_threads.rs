@@ -44,18 +44,18 @@ fn main() {
     }
 
     let nodes = 16;
-    let base = ExperimentConfig {
-        nodes,
-        topology: TopologySpec::Cycle,
-        duration: 3.0,
-        compute_time: 0.001,
-        faults: FaultModel {
+    let base = ExperimentBuilder::gaussian()
+        .nodes(nodes)
+        .topology(TopologySpec::Cycle)
+        .duration(3.0)
+        .compute_time(0.001)
+        .faults(FaultModel {
             straggler_fraction: 1.0 / nodes as f64,
             straggler_slowdown: 4.0,
             drop_prob: 0.0,
-        },
-        ..ExperimentConfig::gaussian_default()
-    };
+        })
+        .config()
+        .expect("valid experiment");
     let budget =
         (base.duration / base.activation_interval).round() as u64 * nodes as u64;
 
@@ -115,12 +115,13 @@ fn main() {
     );
 
     // simulator reference (virtual time, no compute injection)
-    let sim_cfg = ExperimentConfig {
-        compute_time: 0.0,
-        faults: FaultModel::default(),
-        ..base.clone()
-    };
-    let sim = run_experiment(&sim_cfg).expect("sim run");
+    let sim = ExperimentBuilder::from_config(base.clone())
+        .compute_time(0.0)
+        .faults(FaultModel::default())
+        .build()
+        .expect("valid experiment")
+        .run()
+        .expect("sim run");
     println!("sim reference: {}", sim.summary());
 
     // hand-rolled JSON (the crate is dependency-free by design)

@@ -29,21 +29,22 @@ fn main() {
         let mut series: Vec<Series> = Vec::new();
         let mut finals = Vec::new();
         for alg in AlgorithmKind::all() {
-            let cfg = ExperimentConfig {
-                nodes,
-                topology: topo,
-                algorithm: alg,
-                duration,
-                seed,
-                beta: 0.004,
-                measure: MeasureSpec::Digits {
+            let r = ExperimentBuilder::gaussian()
+                .nodes(nodes)
+                .topology(topo)
+                .algorithm(alg)
+                .duration(duration)
+                .seed(seed)
+                .beta(0.004)
+                .measure(MeasureSpec::Digits {
                     digit,
                     side,
                     idx_path: idx_path.clone(),
-                },
-                ..ExperimentConfig::gaussian_default()
-            };
-            let r = run_experiment(&cfg).expect("run");
+                })
+                .build()
+                .expect("valid experiment")
+                .run()
+                .expect("run");
             println!("{}", r.summary());
             let mut dual = r.dual_objective.clone();
             dual.name = format!("dual_{}", alg.name());

@@ -74,13 +74,13 @@ fn main() {
         (50, TopologySpec::Complete),
         (200, TopologySpec::Cycle),
     ] {
-        let cfg = ExperimentConfig {
-            nodes,
-            topology: topo,
-            duration: 10.0,
-            metric_interval: 2.0,
-            ..ExperimentConfig::gaussian_default()
-        };
+        let cfg = ExperimentBuilder::gaussian()
+            .nodes(nodes)
+            .topology(topo)
+            .duration(10.0)
+            .metric_interval(2.0)
+            .config()
+            .expect("valid experiment");
         let (report, secs) = time_once(|| run_experiment(&cfg).expect("run"));
         println!(
             "m={nodes:<4} {:<9} events={:<8} wall={secs:.2}s -> {:.0} events/s, {:.0} activations/s",

@@ -29,15 +29,16 @@ fn main() {
 
     let mut all_series: Vec<Series> = Vec::new();
     for alg in AlgorithmKind::all() {
-        let cfg = ExperimentConfig {
-            nodes,
-            topology,
-            algorithm: alg,
-            duration,
-            seed,
-            ..ExperimentConfig::gaussian_default()
-        };
-        let report = run_experiment(&cfg).expect("run failed");
+        let report = ExperimentBuilder::gaussian()
+            .nodes(nodes)
+            .topology(topology)
+            .algorithm(alg)
+            .duration(duration)
+            .seed(seed)
+            .build()
+            .expect("valid experiment")
+            .run()
+            .expect("run failed");
         println!("{}", report.summary());
         let mut dual = report.dual_objective.clone();
         dual.name = format!("dual_{}", alg.name());
@@ -72,15 +73,16 @@ fn main() {
     // for the A²DWB barycenter vs the uniform histogram (the paper only
     // reports the dual because the primal is "hard to directly
     // calculate" — with a discrete OT solver, we can).
-    let cfg = ExperimentConfig {
-        nodes,
-        topology,
-        algorithm: AlgorithmKind::A2dwb,
-        duration,
-        seed,
-        ..ExperimentConfig::gaussian_default()
-    };
-    let report = run_experiment(&cfg).expect("rerun");
+    let session = ExperimentBuilder::gaussian()
+        .nodes(nodes)
+        .topology(topology)
+        .algorithm(AlgorithmKind::A2dwb)
+        .duration(duration)
+        .seed(seed)
+        .build()
+        .expect("valid experiment");
+    let cfg = session.config().clone();
+    let report = session.run().expect("rerun");
     let n = report.barycenter.len();
     let support: Vec<f64> =
         (0..n).map(|i| -5.0 + 10.0 * i as f64 / (n - 1) as f64).collect();

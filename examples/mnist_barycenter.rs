@@ -40,26 +40,26 @@ fn main() {
     let topology =
         TopologySpec::parse(&args.get_str("topology", "er:0.15"), seed).unwrap();
 
-    let cfg = ExperimentConfig {
-        nodes,
-        topology,
-        algorithm: AlgorithmKind::A2dwb,
-        measure: MeasureSpec::Digits {
+    let session = ExperimentBuilder::gaussian()
+        .nodes(nodes)
+        .topology(topology)
+        .algorithm(AlgorithmKind::A2dwb)
+        .measure(MeasureSpec::Digits {
             digit,
             side,
             idx_path: args.get_opt("idx-path").map(str::to_string),
-        },
-        duration,
-        seed,
-        beta: 0.004,
-        ..ExperimentConfig::gaussian_default()
-    };
+        })
+        .duration(duration)
+        .seed(seed)
+        .beta(0.004)
+        .build()
+        .expect("valid experiment");
 
     println!(
         "digit-{digit} barycenter: m={nodes} grid={side}x{side} topology={} T={duration}s",
         topology.name()
     );
-    let report = run_experiment(&cfg).expect("run failed");
+    let report = session.run().expect("run failed");
     println!("{}", report.summary());
 
     println!("\nnetwork-agreed barycenter (digit {digit}):");

@@ -1,5 +1,7 @@
 //! Quickstart: compute a decentralized Wasserstein barycenter of
-//! Gaussian measures with A²DWB in under a minute.
+//! Gaussian measures with A²DWB in under a minute — driven through the
+//! session/observer API (typed builder, streaming metric samples, a
+//! cancel token you could flip from another thread).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -10,20 +12,37 @@ use a2dwb::prelude::*;
 fn main() {
     // 20 nodes on a cycle, each holding a private N(θ_i, σ_i²);
     // jointly estimate the barycenter on 100 support points in [−5, 5].
-    let cfg = ExperimentConfig {
-        nodes: 20,
-        topology: TopologySpec::Cycle,
-        algorithm: AlgorithmKind::A2dwb,
-        duration: 20.0,
-        ..ExperimentConfig::gaussian_default()
-    };
+    let session = ExperimentBuilder::gaussian()
+        .nodes(20)
+        .topology(TopologySpec::Cycle)
+        .algorithm(AlgorithmKind::A2dwb)
+        .duration(20.0)
+        .build()
+        .expect("valid experiment");
 
     println!(
         "== A²DWB quickstart: {} nodes on a {} graph ==",
-        cfg.nodes,
-        cfg.topology.name()
+        session.config().nodes,
+        session.config().topology.name()
     );
-    let report = run_experiment(&cfg).expect("experiment failed");
+
+    // `cancel.cancel()` from any thread (or from inside the observer)
+    // would stop the run early with a well-formed partial report.
+    let _cancel: CancelToken = session.cancel_token();
+
+    // Metric samples stream while the run executes; print a sparse
+    // live trace instead of waiting silently for the final report.
+    let mut seen = 0u32;
+    let report = session
+        .run_with(&mut |ev: &RunEvent| {
+            if let RunEvent::MetricSample { t, dual, .. } = ev {
+                seen += 1;
+                if seen % 5 == 1 {
+                    println!("  live: t={t:5.1}s dual={dual:+.6}");
+                }
+            }
+        })
+        .expect("experiment failed");
 
     println!("{}", report.summary());
     println!(

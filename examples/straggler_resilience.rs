@@ -16,19 +16,20 @@ use a2dwb::graph::TopologySpec;
 use a2dwb::prelude::*;
 
 fn run(alg: AlgorithmKind, slowdown: f64, drop: f64, nodes: usize) -> (f64, u64) {
-    let cfg = ExperimentConfig {
-        nodes,
-        topology: TopologySpec::ErdosRenyi { p: 0.15, seed: 42 },
-        algorithm: alg,
-        duration: 25.0,
-        faults: FaultModel {
+    let r = ExperimentBuilder::gaussian()
+        .nodes(nodes)
+        .topology(TopologySpec::ErdosRenyi { p: 0.15, seed: 42 })
+        .algorithm(alg)
+        .duration(25.0)
+        .faults(FaultModel {
             straggler_fraction: 0.1,
             straggler_slowdown: slowdown,
             drop_prob: drop,
-        },
-        ..ExperimentConfig::gaussian_default()
-    };
-    let r = run_experiment(&cfg).expect("run");
+        })
+        .build()
+        .expect("valid experiment")
+        .run()
+        .expect("run");
     let work = if alg == AlgorithmKind::Dcwb { r.rounds } else { r.activations };
     (r.final_dual_objective(), work)
 }

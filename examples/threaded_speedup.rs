@@ -32,18 +32,18 @@ fn main() {
         None => vec![1, 2, 4, 8],
     };
 
-    let base = ExperimentConfig {
-        nodes,
-        topology: TopologySpec::Cycle,
-        duration,
-        compute_time,
-        faults: FaultModel {
+    let base = ExperimentBuilder::gaussian()
+        .nodes(nodes)
+        .topology(TopologySpec::Cycle)
+        .duration(duration)
+        .compute_time(compute_time)
+        .faults(FaultModel {
             straggler_fraction: 0.125,
             straggler_slowdown: straggler,
             drop_prob: 0.0,
-        },
-        ..ExperimentConfig::gaussian_default()
-    };
+        })
+        .config()
+        .expect("valid experiment");
     let sweeps = (duration / base.activation_interval).round() as usize;
     println!(
         "== equal budget: {} activations/node ({} nodes, compute {:.1} ms ± 50%, \

@@ -38,15 +38,16 @@ fn main() {
             }
         }
         let g = Graph::build(nodes, topo);
-        let cfg = ExperimentConfig {
-            nodes,
-            topology: topo,
-            algorithm: AlgorithmKind::A2dwb,
-            duration,
-            seed,
-            ..ExperimentConfig::gaussian_default()
-        };
-        let r = run_experiment(&cfg).expect("run failed");
+        let r = ExperimentBuilder::gaussian()
+            .nodes(nodes)
+            .topology(topo)
+            .algorithm(AlgorithmKind::A2dwb)
+            .duration(duration)
+            .seed(seed)
+            .build()
+            .expect("valid experiment")
+            .run()
+            .expect("run failed");
         println!(
             "{:<14} {:>7} {:>9.4} {:>9.3} {:>12.6} {:>12.3e} {:>10}",
             topo.name(),

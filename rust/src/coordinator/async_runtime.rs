@@ -24,13 +24,13 @@
 
 use std::sync::Arc;
 
-use super::{evaluator::MetricsEvaluator, ExperimentConfig, ExperimentReport};
+use super::session::{RunCtl, RunEvent, RunTotals};
+use super::{evaluator::MetricsEvaluator, ExperimentConfig};
 use crate::algo::wbp::WbpNode;
 use crate::algo::ThetaSeq;
 use crate::exec::{activate_node, initial_exchange, NetModel, StepCtx, Transport};
 use crate::graph::Graph;
 use crate::measures::Samples;
-use crate::metrics::Series;
 use crate::sim::{ActivationSchedule, EventQueue};
 
 enum Event {
@@ -80,7 +80,8 @@ pub(super) fn run(
     cfg: &ExperimentConfig,
     graph: &Graph,
     compensated: bool,
-) -> Result<ExperimentReport, String> {
+    ctl: &mut RunCtl<'_>,
+) -> Result<(), String> {
     let m = cfg.nodes;
     let n = cfg.support_size();
     let measures = cfg.measure.build_network(m, cfg.seed);
@@ -119,11 +120,6 @@ pub(super) fn run(
     let mut node_rngs: Vec<crate::rng::Rng64> =
         (0..m).map(|i| root.split(i as u64)).collect();
 
-    let mut dual_series = Series::new("dual_objective");
-    let mut consensus_series = Series::new("consensus");
-    let mut spread_series = Series::new("primal_spread");
-    let mut dual_wall = Series::new("dual_wall");
-
     let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
     let mut etas = vec![0.0; m * n];
@@ -152,8 +148,16 @@ pub(super) fn run(
     }
     transport.queue.schedule(0.0, Event::Metric);
 
-    // ---- main event loop
-    while let Some(ev) = transport.queue.pop_until(cfg.duration) {
+    // ---- main event loop (cancellation is checked before popping, so
+    // no event is consumed-but-unexecuted: `events`, `queue.now()`, and
+    // the final sample's timestamp all reflect work actually done)
+    loop {
+        if ctl.cancelled() {
+            break;
+        }
+        let Some(ev) = transport.queue.pop_until(cfg.duration) else {
+            break;
+        };
         match ev.payload {
             Event::Activate(i) => {
                 let k = k_global;
@@ -192,10 +196,15 @@ pub(super) fn run(
                     etas[i * n..(i + 1) * n].copy_from_slice(&point);
                 }
                 let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
-                dual_series.push(t, dual);
-                consensus_series.push(t, consensus);
-                spread_series.push(t, spread);
-                dual_wall.push(wall_t0.elapsed().as_secs_f64(), dual);
+                ctl.sample(
+                    t,
+                    wall_t0.elapsed().as_secs_f64(),
+                    dual,
+                    consensus,
+                    spread,
+                    activations,
+                    0,
+                );
                 if t + cfg.metric_interval <= cfg.duration {
                     transport.queue.schedule_in(cfg.metric_interval, Event::Metric);
                 }
@@ -203,31 +212,41 @@ pub(super) fn run(
         }
     }
 
-    // final metric point at the horizon
+    // Final metric point: at the horizon, or — when cancelled — at the
+    // virtual time the run actually reached, so the partial trajectory
+    // stays monotone and ends on the true final state.
+    let cancelled = ctl.cancelled();
+    let t_end = if cancelled {
+        transport.queue.now().min(cfg.duration)
+    } else {
+        cfg.duration
+    };
     for (i, node) in nodes.iter().enumerate() {
         node.eta(&mut theta, k_global.max(1), &mut point);
         etas[i * n..(i + 1) * n].copy_from_slice(&point);
     }
     let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
-    dual_series.push(cfg.duration, dual);
-    consensus_series.push(cfg.duration, consensus);
-    spread_series.push(cfg.duration, spread);
-    dual_wall.push(wall_t0.elapsed().as_secs_f64(), dual);
+    ctl.sample(
+        t_end,
+        wall_t0.elapsed().as_secs_f64(),
+        dual,
+        consensus,
+        spread,
+        activations,
+        0,
+    );
 
-    Ok(ExperimentReport {
+    ctl.emit(RunEvent::Finished(RunTotals {
         tag: cfg.tag(),
         algorithm: cfg.algorithm,
-        dual_objective: dual_series,
-        consensus: consensus_series,
-        primal_spread: spread_series,
-        dual_wall,
         activations,
         rounds: 0,
         messages: transport.messages,
         wire_messages: 0,
         events: transport.queue.processed(),
         lambda_max,
-        wall_seconds: 0.0,
         barycenter: evaluator.barycenter(),
-    })
+        cancelled,
+    }));
+    Ok(())
 }

@@ -13,19 +13,30 @@
 //! categorical link delays on {0.2..1.0} s, a `perm(m)` activation sweep
 //! every 0.2 s, metrics = dual objective + consensus distance sampled on
 //! a fixed grid with common random numbers across algorithms.
+//!
+//! Experiments are driven through the [`session`] layer: an
+//! [`ExperimentBuilder`] validates a configuration into a [`Session`],
+//! which streams [`RunEvent`]s to a pluggable [`RunObserver`] while it
+//! runs and honors a [`CancelToken`] for early stop.
+//! [`run_experiment`] survives as a thin shim over that surface.
 
 mod async_runtime;
 pub mod checkpoint;
 mod evaluator;
+pub mod session;
 mod sync_runtime;
 
 pub use checkpoint::Checkpoint;
 pub use evaluator::MetricsEvaluator;
+pub use session::{
+    CancelToken, ExperimentBuilder, RunEvent, RunObserver, RunTotals, Session,
+    TrajectorySink,
+};
 
 use crate::algo::wbp::DiagCoef;
 use crate::algo::AlgorithmKind;
 use crate::exec::{ExecutorSpec, SampleCadence};
-use crate::graph::{Graph, TopologySpec};
+use crate::graph::TopologySpec;
 use crate::measures::MeasureSpec;
 use crate::metrics::Series;
 use crate::ot::OracleBackendSpec;
@@ -165,20 +176,57 @@ impl ExperimentConfig {
         }
     }
 
-    /// A short human-readable tag for file names.
+    /// A short human-readable tag for file names. Includes the executor
+    /// and the seed: a threaded and a simulated run of the same cell —
+    /// or two seeds of the same sweep — must not collide on output
+    /// filenames.
     pub fn tag(&self) -> String {
         format!(
-            "{}_{}_{}_m{}",
+            "{}_{}_{}_m{}_{}_s{}",
             self.algorithm.name(),
             self.topology.name(),
             self.measure.name(),
-            self.nodes
+            self.nodes,
+            self.executor.tag_token(),
+            self.seed
         )
     }
 
     pub fn support_size(&self) -> usize {
         self.measure.support_size()
     }
+
+    /// Every flag [`ExperimentConfig::from_cli_args`] consumes, for
+    /// [`crate::cli::Args::reject_unknown`] — subcommands append their
+    /// own extras so a typo'd `--nodse` fails loudly instead of being
+    /// silently defaulted.
+    pub const CLI_FLAGS: &'static [&'static str] = &[
+        "nodes",
+        "seed",
+        "topology",
+        "algorithm",
+        "beta",
+        "gamma-scale",
+        "samples",
+        "eval-samples",
+        "duration",
+        "activation-interval",
+        "metric-interval",
+        "compute-time",
+        "straggler-fraction",
+        "straggler-slowdown",
+        "drop-prob",
+        "digit",
+        "side",
+        "idx-path",
+        "support",
+        "backend",
+        "artifacts",
+        "workers",
+        "executor",
+        "paper-literal-diag",
+        "mnist",
+    ];
 
     /// Build a config from parsed CLI flags (shared by the `a2dwb`
     /// binary's experiment subcommands and the `serve` shard entry
@@ -297,6 +345,10 @@ pub struct ExperimentReport {
     pub wall_seconds: f64,
     /// The final barycenter estimate (network average of primal blocks).
     pub barycenter: Vec<f64>,
+    /// True when the run was stopped early through a
+    /// [`CancelToken`] — the series and counters then
+    /// cover the work actually performed, not the configured budget.
+    pub cancelled: bool,
 }
 
 impl ExperimentReport {
@@ -348,25 +400,18 @@ impl ExperimentReport {
     }
 }
 
-/// Run one experiment cell. Dispatches on the executor backend, then on
-/// the algorithm kind.
+/// Run one experiment cell to completion and return the terminal
+/// report.
+///
+/// Thin compat shim over the [`session`] layer: exactly
+/// [`Session::from_config`] + [`Session::run`], which validates the
+/// config *and* the topology (a disconnected user-supplied graph is an
+/// `Err`, never a panic), streams the run through an internal
+/// [`TrajectorySink`], and assembles the same report the old monolith
+/// returned — bit for bit. Callers that want live progress or
+/// cancellation use [`ExperimentBuilder`]/[`Session`] directly.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentReport, String> {
-    cfg.validate()?;
-    let graph = Graph::build(cfg.nodes, cfg.topology);
-    assert!(graph.is_connected(), "topology must be connected");
-    let t0 = std::time::Instant::now();
-    let mut report = match cfg.executor {
-        ExecutorSpec::Sim => match cfg.algorithm {
-            AlgorithmKind::A2dwb => async_runtime::run(cfg, &graph, true),
-            AlgorithmKind::A2dwbn => async_runtime::run(cfg, &graph, false),
-            AlgorithmKind::Dcwb => sync_runtime::run(cfg, &graph),
-        },
-        ExecutorSpec::Threads { workers } => {
-            crate::exec::threaded::run(cfg, &graph, workers)
-        }
-    }?;
-    report.wall_seconds = t0.elapsed().as_secs_f64();
-    Ok(report)
+    Session::from_config(cfg.clone())?.run()
 }
 
 #[cfg(test)]

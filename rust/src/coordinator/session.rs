@@ -1,0 +1,650 @@
+//! Streaming, cancellable experiment driving — the session/observer API.
+//!
+//! [`run_experiment`](crate::coordinator::run_experiment) blocks until
+//! the horizon and hands back one terminal [`ExperimentReport`]. That is
+//! fine for CI cells, but a service driving paper-scale runs needs to
+//! *watch* a run (live metric curves, activation counters, shard
+//! snapshot arrivals) and *stop* one mid-flight without losing what it
+//! already produced. This module is that surface:
+//!
+//! * [`ExperimentBuilder`] — typed construction of an experiment.
+//!   Absorbs the struct-literal defaults (`gaussian()` / `mnist(d)`)
+//!   and the CLI path (`from_cli_args`); everything is validated at
+//!   [`ExperimentBuilder::build`], which also builds the topology and
+//!   returns `Err` — never panics — on a disconnected graph.
+//! * [`Session`] — one validated, runnable experiment. Runs on any
+//!   in-process backend ([`ExecutorSpec::Sim`] or
+//!   [`ExecutorSpec::Threads`]) via [`Session::run`] /
+//!   [`Session::run_with`]; sharded TCP meshes are driven through the
+//!   same observer seam by
+//!   [`run_mesh_threads_with`](crate::exec::net::run_mesh_threads_with)
+//!   and friends.
+//! * [`RunObserver`] — the pluggable event tap. Every backend emits
+//!   [`RunEvent`]s *while running*: a `Started` header, a
+//!   `MetricSample` per metric evaluation, `Progress` counter updates,
+//!   `ShardSnapshot` arrivals (mesh runs), and a terminal
+//!   `Finished(RunTotals)`. Closures observe for free
+//!   (`impl<F: FnMut(&RunEvent)> RunObserver for F`).
+//! * [`TrajectorySink`] — the observer that rebuilds the classic
+//!   [`ExperimentReport`] from the event stream. `run_experiment` is
+//!   now a thin shim: `Session` + `TrajectorySink`, bit-identical
+//!   output to the old monolith.
+//! * [`CancelToken`] — cooperative early stop. Clone it out of the
+//!   session before running (or capture it in an observer), call
+//!   [`CancelToken::cancel`] from anywhere; every backend checks it at
+//!   activation/round granularity and winds down cleanly: workers
+//!   settle their barrier ledgers, a final metric sample is taken, and
+//!   the report comes back well-formed with
+//!   [`ExperimentReport::cancelled`] set and the counters reflecting
+//!   the work actually done.
+//!
+//! ## Event flow
+//!
+//! ```text
+//!   ExperimentBuilder --build()--> Session --run_with(observer)-->
+//!       backend (Sim | Threads | net shards)
+//!           │ Started
+//!           │ MetricSample*  Progress*  ShardSnapshot*   (streaming)
+//!           │ Finished(RunTotals)
+//!           ▼
+//!       observer (yours)  +  TrajectorySink (internal)
+//!                                └──> ExperimentReport
+//! ```
+//!
+//! Cancellation is cooperative and loss-free: after
+//! [`CancelToken::cancel`] the backend stops issuing new activations,
+//! finishes (or drains) the protocol phases already in flight, samples
+//! the final state, and emits `Finished { cancelled: true, .. }` — so a
+//! cancelled run's partial report has exactly the same shape as a
+//! completed one.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::{ExperimentConfig, ExperimentReport, FaultModel};
+use crate::algo::wbp::DiagCoef;
+use crate::algo::AlgorithmKind;
+use crate::exec::{ExecutorSpec, SampleCadence};
+use crate::graph::{Graph, TopologySpec};
+use crate::measures::MeasureSpec;
+use crate::metrics::Series;
+use crate::ot::OracleBackendSpec;
+
+// ------------------------------------------------------------ cancel
+
+/// Cooperative cancellation handle: cheap to clone, safe to trigger
+/// from any thread (or from inside a [`RunObserver`] callback). All
+/// clones share one flag; cancellation is sticky.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request early stop. Backends notice at activation/round
+    /// granularity and wind down cleanly (see the module docs).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+// ------------------------------------------------------------ events
+
+/// End-of-run counters, carried by [`RunEvent::Finished`]. This is
+/// everything an [`ExperimentReport`] holds besides the metric series
+/// (which stream as [`RunEvent::MetricSample`]s) and `wall_seconds`
+/// (stamped by the caller).
+#[derive(Clone, Debug)]
+pub struct RunTotals {
+    pub tag: String,
+    pub algorithm: AlgorithmKind,
+    pub activations: u64,
+    pub rounds: u64,
+    pub messages: u64,
+    pub wire_messages: u64,
+    pub events: u64,
+    pub lambda_max: f64,
+    /// Final barycenter estimate (network mean of the primal blocks).
+    pub barycenter: Vec<f64>,
+    /// True when the run stopped on a [`CancelToken`] before reaching
+    /// its horizon; the counters above then reflect the work actually
+    /// performed, not the configured budget.
+    pub cancelled: bool,
+}
+
+/// One progress event from a running experiment.
+#[derive(Clone, Debug)]
+pub enum RunEvent {
+    /// The run is about to start executing.
+    Started {
+        tag: String,
+        algorithm: AlgorithmKind,
+        nodes: usize,
+        /// Support size n (length of every gradient / barycenter).
+        support: usize,
+    },
+    /// One metric evaluation: `t` on the virtual(-equivalent) axis,
+    /// `wall` in seconds since the run's clock started. These are the
+    /// points of `dual_objective` / `consensus` / `primal_spread` /
+    /// `dual_wall` in the assembled report, in stream order.
+    MetricSample { t: f64, wall: f64, dual: f64, consensus: f64, spread: f64 },
+    /// Counter heartbeat (monotone, emitted alongside metric samples).
+    Progress { activations: u64, rounds: u64 },
+    /// A sharded run's per-sweep state block arrived at the aggregator
+    /// (mesh backends only; the evaluated sample follows as its own
+    /// [`RunEvent::MetricSample`] once every shard delivered the sweep).
+    ShardSnapshot { shard: usize, sweep: u64 },
+    /// Terminal event: the run is over (completed or cancelled).
+    Finished(RunTotals),
+}
+
+/// Observer of a running experiment. Implementations must be cheap —
+/// callbacks run on the driving thread, between activations or metric
+/// evaluations. Any `FnMut(&RunEvent)` closure is an observer.
+pub trait RunObserver {
+    fn on_event(&mut self, event: &RunEvent);
+}
+
+impl<F: FnMut(&RunEvent)> RunObserver for F {
+    fn on_event(&mut self, event: &RunEvent) {
+        self(event)
+    }
+}
+
+/// The report-assembling observer: collects [`RunEvent::MetricSample`]s
+/// into the four metric series and the [`RunEvent::Finished`] totals
+/// into the counters, then yields a classic [`ExperimentReport`] via
+/// [`TrajectorySink::into_report`]. [`Session::run`] (and therefore the
+/// `run_experiment` shim) is exactly this sink and nothing else.
+#[derive(Debug)]
+pub struct TrajectorySink {
+    dual_objective: Series,
+    consensus: Series,
+    primal_spread: Series,
+    dual_wall: Series,
+    totals: Option<RunTotals>,
+}
+
+impl Default for TrajectorySink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrajectorySink {
+    pub fn new() -> Self {
+        Self {
+            dual_objective: Series::new("dual_objective"),
+            consensus: Series::new("consensus"),
+            primal_spread: Series::new("primal_spread"),
+            dual_wall: Series::new("dual_wall"),
+            totals: None,
+        }
+    }
+
+    /// True once a [`RunEvent::Finished`] has been observed.
+    pub fn finished(&self) -> bool {
+        self.totals.is_some()
+    }
+
+    /// Assemble the report. `wall_seconds` is left at 0 — the caller
+    /// owning the clock ([`Session::run_with`]) stamps it.
+    pub fn into_report(self) -> Result<ExperimentReport, String> {
+        let totals = self
+            .totals
+            .ok_or_else(|| "run ended without a Finished event".to_string())?;
+        Ok(ExperimentReport {
+            tag: totals.tag,
+            algorithm: totals.algorithm,
+            dual_objective: self.dual_objective,
+            consensus: self.consensus,
+            primal_spread: self.primal_spread,
+            dual_wall: self.dual_wall,
+            activations: totals.activations,
+            rounds: totals.rounds,
+            messages: totals.messages,
+            wire_messages: totals.wire_messages,
+            events: totals.events,
+            lambda_max: totals.lambda_max,
+            wall_seconds: 0.0,
+            barycenter: totals.barycenter,
+            cancelled: totals.cancelled,
+        })
+    }
+}
+
+impl RunObserver for TrajectorySink {
+    fn on_event(&mut self, event: &RunEvent) {
+        match event {
+            RunEvent::MetricSample { t, wall, dual, consensus, spread } => {
+                self.dual_objective.push(*t, *dual);
+                self.consensus.push(*t, *consensus);
+                self.primal_spread.push(*t, *spread);
+                self.dual_wall.push(*wall, *dual);
+            }
+            RunEvent::Finished(totals) => self.totals = Some(totals.clone()),
+            _ => {}
+        }
+    }
+}
+
+/// Fan one event stream out to two observers (the user's and the
+/// report-assembling sink).
+struct Tee<'a, 'b> {
+    user: &'a mut dyn RunObserver,
+    sink: &'b mut TrajectorySink,
+}
+
+impl RunObserver for Tee<'_, '_> {
+    fn on_event(&mut self, event: &RunEvent) {
+        self.user.on_event(event);
+        self.sink.on_event(event);
+    }
+}
+
+/// What the backends actually receive: the observer plus the cancel
+/// flag, with emission helpers. Crate-internal — public callers hold a
+/// [`Session`] and a [`RunObserver`].
+pub(crate) struct RunCtl<'a> {
+    pub(crate) observer: &'a mut dyn RunObserver,
+    cancel: CancelToken,
+}
+
+impl<'a> RunCtl<'a> {
+    pub(crate) fn new(observer: &'a mut dyn RunObserver, cancel: CancelToken) -> Self {
+        Self { observer, cancel }
+    }
+
+    pub(crate) fn emit(&mut self, event: RunEvent) {
+        self.observer.on_event(&event);
+    }
+
+    /// One metric sample + a counter heartbeat.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn sample(
+        &mut self,
+        t: f64,
+        wall: f64,
+        dual: f64,
+        consensus: f64,
+        spread: f64,
+        activations: u64,
+        rounds: u64,
+    ) {
+        self.emit(RunEvent::MetricSample { t, wall, dual, consensus, spread });
+        self.emit(RunEvent::Progress { activations, rounds });
+    }
+
+    pub(crate) fn cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// A clone of the cancel flag, for worker threads to poll directly.
+    pub(crate) fn token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+}
+
+// ------------------------------------------------------------ builder
+
+/// Typed, validated-at-`build()` construction of an experiment.
+///
+/// Starts from the paper defaults ([`ExperimentBuilder::gaussian`] /
+/// [`ExperimentBuilder::mnist`], CI-scaled exactly like
+/// [`ExperimentConfig::gaussian_default`]) or from parsed CLI flags
+/// ([`ExperimentBuilder::from_cli_args`] — the one definition shared by
+/// every `a2dwb` subcommand and the `serve` shard entry point), then
+/// override any knob with the fluent setters. Nothing is checked until
+/// [`ExperimentBuilder::build`], which validates the whole
+/// configuration *and* the topology it implies — a disconnected
+/// user-supplied graph is an `Err`, never a process abort.
+#[derive(Clone, Debug)]
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+    /// Explicit topology override (user-supplied edge lists); checked
+    /// for connectivity at `build()` like every generated topology.
+    graph: Option<Graph>,
+}
+
+impl ExperimentBuilder {
+    /// §4.1 Gaussian defaults (CI scale).
+    pub fn gaussian() -> Self {
+        Self { cfg: ExperimentConfig::gaussian_default(), graph: None }
+    }
+
+    /// §4.2 digit defaults (CI scale).
+    pub fn mnist(digit: u8) -> Self {
+        Self { cfg: ExperimentConfig::mnist_default(digit), graph: None }
+    }
+
+    /// Start from an existing config (the escape hatch for callers that
+    /// already hold one).
+    pub fn from_config(cfg: ExperimentConfig) -> Self {
+        Self { cfg, graph: None }
+    }
+
+    /// Build from parsed CLI flags — every flag
+    /// [`ExperimentConfig::from_cli_args`] understands round-trips
+    /// through the corresponding typed setter (guarded by
+    /// `rust/tests/session.rs`).
+    pub fn from_cli_args(args: &crate::cli::Args, mnist: bool) -> Result<Self, String> {
+        Ok(Self { cfg: ExperimentConfig::from_cli_args(args, mnist)?, graph: None })
+    }
+
+    pub fn nodes(mut self, m: usize) -> Self {
+        self.cfg.nodes = m;
+        self
+    }
+
+    pub fn topology(mut self, t: TopologySpec) -> Self {
+        self.cfg.topology = t;
+        self
+    }
+
+    /// Run on an explicit, user-supplied graph instead of a generated
+    /// [`TopologySpec`] (in-process backends only — sharded meshes
+    /// rebuild the topology from the spec on every shard). Also sets
+    /// `nodes` to the graph's node count.
+    pub fn graph(mut self, g: Graph) -> Self {
+        self.cfg.nodes = g.num_nodes();
+        self.graph = Some(g);
+        self
+    }
+
+    pub fn algorithm(mut self, a: AlgorithmKind) -> Self {
+        self.cfg.algorithm = a;
+        self
+    }
+
+    pub fn measure(mut self, m: MeasureSpec) -> Self {
+        self.cfg.measure = m;
+        self
+    }
+
+    pub fn backend(mut self, b: OracleBackendSpec) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    pub fn beta(mut self, beta: f64) -> Self {
+        self.cfg.beta = beta;
+        self
+    }
+
+    pub fn gamma_scale(mut self, g: f64) -> Self {
+        self.cfg.gamma_scale = g;
+        self
+    }
+
+    pub fn samples_per_activation(mut self, k: usize) -> Self {
+        self.cfg.samples_per_activation = k;
+        self
+    }
+
+    pub fn eval_samples(mut self, k: usize) -> Self {
+        self.cfg.eval_samples = k;
+        self
+    }
+
+    pub fn duration(mut self, secs: f64) -> Self {
+        self.cfg.duration = secs;
+        self
+    }
+
+    pub fn activation_interval(mut self, secs: f64) -> Self {
+        self.cfg.activation_interval = secs;
+        self
+    }
+
+    pub fn metric_interval(mut self, secs: f64) -> Self {
+        self.cfg.metric_interval = secs;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn diag(mut self, d: DiagCoef) -> Self {
+        self.cfg.diag = d;
+        self
+    }
+
+    pub fn compute_time(mut self, secs: f64) -> Self {
+        self.cfg.compute_time = secs;
+        self
+    }
+
+    pub fn faults(mut self, f: FaultModel) -> Self {
+        self.cfg.faults = f;
+        self
+    }
+
+    pub fn executor(mut self, e: ExecutorSpec) -> Self {
+        self.cfg.executor = e;
+        self
+    }
+
+    pub fn sample_cadence(mut self, c: SampleCadence) -> Self {
+        self.cfg.sample_cadence = c;
+        self
+    }
+
+    /// Validate and yield the bare config (for callers that feed
+    /// config-taking entry points such as
+    /// [`run_speedup_pair`](crate::exec::run_speedup_pair) or the mesh
+    /// runners). Topology construction/connectivity is deferred to the
+    /// consumer; [`ExperimentBuilder::build`] checks both. Errs if an
+    /// explicit [`ExperimentBuilder::graph`] override is set — a bare
+    /// config cannot carry it, and silently running the spec-generated
+    /// topology instead would be wrong.
+    pub fn config(self) -> Result<ExperimentConfig, String> {
+        if self.graph.is_some() {
+            return Err(
+                "an explicit .graph(...) override only runs through build(); \
+                 config() would silently drop it"
+                    .into(),
+            );
+        }
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+
+    /// Validate everything and produce a runnable [`Session`].
+    pub fn build(self) -> Result<Session, String> {
+        self.cfg.validate()?;
+        let graph = match self.graph {
+            Some(g) => {
+                if g.num_nodes() != self.cfg.nodes {
+                    return Err(format!(
+                        "explicit graph has {} nodes, config says {}",
+                        g.num_nodes(),
+                        self.cfg.nodes
+                    ));
+                }
+                g
+            }
+            None => Graph::build(self.cfg.nodes, self.cfg.topology),
+        };
+        if !graph.is_connected() {
+            return Err("topology must be connected".into());
+        }
+        Ok(Session { cfg: self.cfg, graph, cancel: CancelToken::new() })
+    }
+}
+
+// ------------------------------------------------------------ session
+
+/// One validated, runnable experiment: the config, the topology it
+/// runs on, and a [`CancelToken`]. Produced by
+/// [`ExperimentBuilder::build`] (or [`Session::from_config`] for
+/// callers holding a raw [`ExperimentConfig`]); consumed by
+/// [`Session::run`] / [`Session::run_with`].
+pub struct Session {
+    cfg: ExperimentConfig,
+    graph: Graph,
+    cancel: CancelToken,
+}
+
+impl Session {
+    /// Validate `cfg` (including topology connectivity — `Err`, not a
+    /// panic) and wrap it into a session.
+    pub fn from_config(cfg: ExperimentConfig) -> Result<Self, String> {
+        ExperimentBuilder::from_config(cfg).build()
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Clone the cancel handle out before (or while) running; calling
+    /// [`CancelToken::cancel`] on it stops the run early with a
+    /// well-formed partial report.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Run to completion (or cancellation) and return the assembled
+    /// report — the exact behavior of the old `run_experiment` monolith.
+    pub fn run(self) -> Result<ExperimentReport, String> {
+        self.run_with(&mut |_: &RunEvent| {})
+    }
+
+    /// Run while streaming [`RunEvent`]s to `observer`; the report is
+    /// assembled from an internal [`TrajectorySink`] fed by the same
+    /// stream, so observing costs nothing in fidelity.
+    pub fn run_with(self, observer: &mut dyn RunObserver) -> Result<ExperimentReport, String> {
+        let Session { cfg, graph, cancel } = self;
+        let mut sink = TrajectorySink::new();
+        let t0 = std::time::Instant::now();
+        {
+            let mut tee = Tee { user: observer, sink: &mut sink };
+            let mut ctl = RunCtl::new(&mut tee, cancel);
+            ctl.emit(RunEvent::Started {
+                tag: cfg.tag(),
+                algorithm: cfg.algorithm,
+                nodes: cfg.nodes,
+                support: cfg.support_size(),
+            });
+            match cfg.executor {
+                ExecutorSpec::Sim => match cfg.algorithm {
+                    AlgorithmKind::A2dwb => {
+                        super::async_runtime::run(&cfg, &graph, true, &mut ctl)
+                    }
+                    AlgorithmKind::A2dwbn => {
+                        super::async_runtime::run(&cfg, &graph, false, &mut ctl)
+                    }
+                    AlgorithmKind::Dcwb => super::sync_runtime::run(&cfg, &graph, &mut ctl),
+                },
+                ExecutorSpec::Threads { workers } => {
+                    crate::exec::threaded::run(&cfg, &graph, workers, &mut ctl)
+                }
+            }?;
+        }
+        let mut report = sink.into_report()?;
+        report.wall_seconds = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_is_shared_and_sticky() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled() && !b.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled() && b.is_cancelled());
+    }
+
+    #[test]
+    fn builder_defaults_match_config_defaults() {
+        let built = ExperimentBuilder::gaussian().config().unwrap();
+        let legacy = ExperimentConfig::gaussian_default();
+        assert_eq!(format!("{built:?}"), format!("{legacy:?}"));
+        let built = ExperimentBuilder::mnist(2).config().unwrap();
+        let legacy = ExperimentConfig::mnist_default(2);
+        assert_eq!(format!("{built:?}"), format!("{legacy:?}"));
+    }
+
+    #[test]
+    fn build_rejects_disconnected_user_graphs() {
+        // two disjoint triangles: a user-supplied topology the generated
+        // specs can never produce — must be a clean Err, not an abort
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)]);
+        assert!(!g.is_connected());
+        let err = ExperimentBuilder::gaussian().graph(g).build().unwrap_err();
+        assert!(err.contains("connected"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_invalid_configs() {
+        assert!(ExperimentBuilder::gaussian().nodes(1).build().is_err());
+        assert!(ExperimentBuilder::gaussian().beta(0.0).build().is_err());
+        assert!(ExperimentBuilder::gaussian()
+            .faults(FaultModel {
+                straggler_fraction: 1.5,
+                straggler_slowdown: 1.0,
+                drop_prob: 0.0
+            })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn sink_without_finished_is_an_error() {
+        let sink = TrajectorySink::new();
+        assert!(!sink.finished());
+        assert!(sink.into_report().is_err());
+    }
+
+    #[test]
+    fn sink_assembles_report_from_events() {
+        let mut sink = TrajectorySink::new();
+        sink.on_event(&RunEvent::MetricSample {
+            t: 0.0,
+            wall: 0.0,
+            dual: 1.0,
+            consensus: 2.0,
+            spread: 3.0,
+        });
+        sink.on_event(&RunEvent::MetricSample {
+            t: 1.0,
+            wall: 0.5,
+            dual: 0.5,
+            consensus: 1.0,
+            spread: 1.5,
+        });
+        sink.on_event(&RunEvent::Finished(RunTotals {
+            tag: "t".into(),
+            algorithm: AlgorithmKind::A2dwb,
+            activations: 7,
+            rounds: 0,
+            messages: 9,
+            wire_messages: 0,
+            events: 11,
+            lambda_max: 2.0,
+            barycenter: vec![1.0],
+            cancelled: false,
+        }));
+        let r = sink.into_report().unwrap();
+        assert_eq!(r.dual_objective.points, vec![(0.0, 1.0), (1.0, 0.5)]);
+        assert_eq!(r.dual_wall.points, vec![(0.0, 1.0), (0.5, 0.5)]);
+        assert_eq!(r.activations, 7);
+        assert!(!r.cancelled);
+    }
+}

@@ -20,13 +20,13 @@
 
 use std::sync::Arc;
 
-use super::{evaluator::MetricsEvaluator, ExperimentConfig, ExperimentReport};
+use super::session::{RunCtl, RunEvent, RunTotals};
+use super::{evaluator::MetricsEvaluator, ExperimentConfig};
 use crate::algo::wbp::WbpNode;
 use crate::algo::ThetaSeq;
 use crate::exec::{NetModel, Transport};
 use crate::graph::Graph;
 use crate::measures::Samples;
-use crate::metrics::Series;
 
 /// Barrier-mode [`Transport`]: a broadcast parks the sender's gradient
 /// in its outbox; `collect` reads every neighbor's outbox — the
@@ -69,7 +69,8 @@ impl Transport for BarrierTransport<'_> {
 pub(super) fn run(
     cfg: &ExperimentConfig,
     graph: &Graph,
-) -> Result<ExperimentReport, String> {
+    ctl: &mut RunCtl<'_>,
+) -> Result<(), String> {
     let m = cfg.nodes;
     let n = cfg.support_size();
     let measures = cfg.measure.build_network(m, cfg.seed);
@@ -96,11 +97,6 @@ pub(super) fn run(
     let mut node_rngs: Vec<crate::rng::Rng64> =
         (0..m).map(|i| root.split(i as u64)).collect();
 
-    let mut dual_series = Series::new("dual_objective");
-    let mut consensus_series = Series::new("consensus");
-    let mut spread_series = Series::new("primal_spread");
-    let mut dual_wall = Series::new("dual_wall");
-
     let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
     let mut etas = vec![0.0; m * n];
@@ -116,10 +112,8 @@ pub(super) fn run(
                       theta: &mut ThetaSeq,
                       k: usize,
                       evaluator: &mut MetricsEvaluator,
-                      dual_series: &mut Series,
-                      consensus_series: &mut Series,
-                      spread_series: &mut Series,
-                      dual_wall: &mut Series,
+                      ctl: &mut RunCtl<'_>,
+                      rounds: u64,
                       wall: f64,
                       etas: &mut [f64],
                       point: &mut [f64]| {
@@ -128,21 +122,20 @@ pub(super) fn run(
             etas[i * n..(i + 1) * n].copy_from_slice(point);
         }
         let (dual, consensus, spread) = evaluator.evaluate(etas, &measures);
-        dual_series.push(t, dual);
-        consensus_series.push(t, consensus);
-        spread_series.push(t, spread);
-        dual_wall.push(wall, dual);
+        ctl.sample(t, wall, dual, consensus, spread, rounds * m as u64, rounds);
     };
 
     record(
-        0.0, &nodes, &mut theta, 0, &mut evaluator, &mut dual_series,
-        &mut consensus_series, &mut spread_series, &mut dual_wall,
+        0.0, &nodes, &mut theta, 0, &mut evaluator, ctl, 0,
         wall_t0.elapsed().as_secs_f64(), &mut etas, &mut point,
     );
     next_metric += cfg.metric_interval;
 
     let mut r: usize = 0; // round counter
     loop {
+        if ctl.cancelled() {
+            break;
+        }
         // ---- compute phase: every node evaluates at ū + θ_{r+1}² v̄
         for i in 0..m {
             nodes[i].eval_point(&mut theta, r, true, &mut point);
@@ -182,10 +175,8 @@ pub(super) fn run(
         // metric grid points crossed by this round
         while next_metric <= t_new.min(cfg.duration) {
             record(
-                next_metric, &nodes, &mut theta, r, &mut evaluator,
-                &mut dual_series, &mut consensus_series, &mut spread_series,
-                &mut dual_wall, wall_t0.elapsed().as_secs_f64(), &mut etas,
-                &mut point,
+                next_metric, &nodes, &mut theta, r, &mut evaluator, ctl,
+                rounds, wall_t0.elapsed().as_secs_f64(), &mut etas, &mut point,
             );
             next_metric += cfg.metric_interval;
         }
@@ -195,26 +186,26 @@ pub(super) fn run(
         }
     }
 
+    // Final point at the horizon — or, for a cancelled run, at the
+    // virtual time the rounds actually reached.
+    let cancelled = ctl.cancelled();
+    let t_end = if cancelled { now.min(cfg.duration) } else { cfg.duration };
     record(
-        cfg.duration, &nodes, &mut theta, r, &mut evaluator, &mut dual_series,
-        &mut consensus_series, &mut spread_series, &mut dual_wall,
+        t_end, &nodes, &mut theta, r, &mut evaluator, ctl, rounds,
         wall_t0.elapsed().as_secs_f64(), &mut etas, &mut point,
     );
 
-    Ok(ExperimentReport {
+    ctl.emit(RunEvent::Finished(RunTotals {
         tag: cfg.tag(),
         algorithm: cfg.algorithm,
-        dual_objective: dual_series,
-        consensus: consensus_series,
-        primal_spread: spread_series,
-        dual_wall,
         activations: rounds * m as u64,
         rounds,
         messages,
         wire_messages: 0,
         events: rounds,
         lambda_max,
-        wall_seconds: 0.0,
         barycenter: evaluator.barycenter(),
-    })
+        cancelled,
+    }));
+    Ok(())
 }

@@ -68,6 +68,17 @@ impl ExecutorSpec {
         }
     }
 
+    /// Compact filename token (`sim`, `thr4`) — part of
+    /// [`ExperimentConfig::tag`](crate::coordinator::ExperimentConfig::tag),
+    /// so runs of the same cell on different backends never collide on
+    /// output files.
+    pub fn tag_token(&self) -> String {
+        match self {
+            ExecutorSpec::Sim => "sim".to_string(),
+            ExecutorSpec::Threads { workers } => format!("thr{workers}"),
+        }
+    }
+
     /// Parse "sim" | "threads" | "threads:N". `default_workers` is used
     /// for a bare "threads" (0 → available parallelism).
     pub fn parse(s: &str, default_workers: usize) -> Result<Self, String> {

@@ -37,9 +37,17 @@
 //!   a structural guarantee, not a timing assumption.
 //! * [`WireMsg::Bye`] — clean shutdown. A reader that hits EOF without
 //!   a preceding `Bye` reports the peer as crashed.
+//! * [`WireMsg::Snapshot`] — one **incremental** trajectory block: the
+//!   shard's local η̄ state after sweep `sweep`, streamed to the
+//!   aggregator *while the run is in flight*. The aggregator
+//!   ([`StreamAggregator`](crate::exec::net::StreamAggregator))
+//!   evaluates each sweep as soon as every shard has delivered it and
+//!   drops the block — trajectory recording is O(network state), not
+//!   O(trajectory), on both ends of the wire.
 //! * [`WireMsg::Report`] — a shard's end-of-run [`ShardReport`] (final
-//!   dual iterates, optional per-sweep trajectory blocks, counters),
-//!   shipped to the aggregating process.
+//!   dual iterates and counters — the trajectory itself travels
+//!   incrementally as `Snapshot` frames), shipped on the same stream
+//!   after the last snapshot.
 //!
 //! Decoding is strict: unknown kinds, short/trailing payload bytes,
 //! oversized frames ([`MAX_FRAME_BYTES`]), and bad magic/version are
@@ -54,7 +62,9 @@ use std::io::{Read, Write};
 /// `b"A2WB"` — first four bytes of every handshake.
 pub const MAGIC: u32 = 0x4132_5742;
 /// Bump on any incompatible frame-layout change.
-pub const PROTOCOL_VERSION: u8 = 1;
+/// v2: `Report` lost its embedded per-sweep trajectory; trajectories
+/// now stream incrementally as `Snapshot` frames.
+pub const PROTOCOL_VERSION: u8 = 2;
 /// Hard upper bound on one frame (64 MiB): a length prefix beyond this
 /// is treated as stream corruption, not an allocation request.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
@@ -64,6 +74,7 @@ const KIND_GRAD: u8 = 2;
 const KIND_DONE: u8 = 3;
 const KIND_BYE: u8 = 4;
 const KIND_REPORT: u8 = 5;
+const KIND_SNAPSHOT: u8 = 6;
 
 /// Which fence a [`WireMsg::Done`] marker announces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,10 +177,6 @@ pub struct ShardReport {
     /// Local nodes' dual iterates η̄ at the common final θ index,
     /// row-major (local node order).
     pub final_etas: Vec<f64>,
-    /// Optional per-sweep trajectory blocks `(sweep, local η̄ block)` —
-    /// recorded under lockstep pacing so the aggregator can rebuild the
-    /// full-network metric series bit-for-bit.
-    pub sweep_etas: Vec<(u64, Vec<f64>)>,
 }
 
 /// A decoded frame.
@@ -179,6 +186,9 @@ pub enum WireMsg {
     Grad { src: u32, stamp: u64, grad: Vec<f64> },
     Done { shard: u32, phase: MarkerPhase, value: u64 },
     Bye { shard: u32 },
+    /// Incremental trajectory block: the sending shard's local η̄ state
+    /// right after sweep `sweep` (row-major over its local nodes).
+    Snapshot { shard: u32, sweep: u64, etas: Vec<f64> },
     Report(ShardReport),
 }
 
@@ -258,8 +268,7 @@ pub fn encode_bye(shard: u32) -> Vec<u8> {
 }
 
 pub fn encode_report(r: &ShardReport) -> Vec<u8> {
-    let traj_bytes: usize = r.sweep_etas.iter().map(|(_, b)| 12 + 8 * b.len()).sum();
-    let mut b = frame_start(KIND_REPORT, 64 + 8 * r.final_etas.len() + traj_bytes);
+    let mut b = frame_start(KIND_REPORT, 64 + 8 * r.final_etas.len());
     put_u32(&mut b, r.shard as u32);
     put_u64(&mut b, r.activations);
     put_u64(&mut b, r.messages);
@@ -267,11 +276,16 @@ pub fn encode_report(r: &ShardReport) -> Vec<u8> {
     put_u64(&mut b, r.rounds);
     put_f64(&mut b, r.window_secs);
     put_f64s(&mut b, &r.final_etas);
-    put_u32(&mut b, r.sweep_etas.len() as u32);
-    for (sweep, block) in &r.sweep_etas {
-        put_u64(&mut b, *sweep);
-        put_f64s(&mut b, block);
-    }
+    frame_finish(b)
+}
+
+/// Encode one streamed trajectory block (the shard's local η̄ state
+/// after `sweep`) without going through an owned [`WireMsg`].
+pub fn encode_snapshot(shard: u32, sweep: u64, etas: &[f64]) -> Vec<u8> {
+    let mut b = frame_start(KIND_SNAPSHOT, 20 + 8 * etas.len());
+    put_u32(&mut b, shard);
+    put_u64(&mut b, sweep);
+    put_f64s(&mut b, etas);
     frame_finish(b)
 }
 
@@ -376,31 +390,20 @@ pub fn decode(body: &[u8]) -> Result<WireMsg, String> {
             value: c.take_u64()?,
         },
         KIND_BYE => WireMsg::Bye { shard: c.take_u32()? },
-        KIND_REPORT => {
-            let shard = c.take_u32()? as usize;
-            let activations = c.take_u64()?;
-            let messages = c.take_u64()?;
-            let wire_messages = c.take_u64()?;
-            let rounds = c.take_u64()?;
-            let window_secs = c.take_f64()?;
-            let final_etas = c.take_f64s()?;
-            let traj = c.take_u32()? as usize;
-            let mut sweep_etas = Vec::with_capacity(traj.min(1 << 16));
-            for _ in 0..traj {
-                let sweep = c.take_u64()?;
-                sweep_etas.push((sweep, c.take_f64s()?));
-            }
-            WireMsg::Report(ShardReport {
-                shard,
-                activations,
-                messages,
-                wire_messages,
-                rounds,
-                window_secs,
-                final_etas,
-                sweep_etas,
-            })
-        }
+        KIND_SNAPSHOT => WireMsg::Snapshot {
+            shard: c.take_u32()?,
+            sweep: c.take_u64()?,
+            etas: c.take_f64s()?,
+        },
+        KIND_REPORT => WireMsg::Report(ShardReport {
+            shard: c.take_u32()? as usize,
+            activations: c.take_u64()?,
+            messages: c.take_u64()?,
+            wire_messages: c.take_u64()?,
+            rounds: c.take_u64()?,
+            window_secs: c.take_f64()?,
+            final_etas: c.take_f64s()?,
+        }),
         other => return Err(format!("unknown frame kind {other}")),
     };
     c.finish()?;
@@ -596,10 +599,24 @@ mod tests {
             rounds: 0,
             window_secs: 0.125,
             final_etas: vec![1.0, 2.0, 3.0],
-            sweep_etas: vec![(0, vec![0.5; 3]), (1, vec![-0.25; 3])],
         };
         match roundtrip(encode_report(&r)) {
             WireMsg::Report(got) => assert_eq!(got, r),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bit_exact() {
+        let etas = vec![0.5, -3.25e-200, f64::MAX, 1.0 / 3.0];
+        match roundtrip(encode_snapshot(2, 17, &etas)) {
+            WireMsg::Snapshot { shard, sweep, etas: got } => {
+                assert_eq!((shard, sweep), (2, 17));
+                assert_eq!(got.len(), etas.len());
+                for (a, b) in got.iter().zip(&etas) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -22,8 +22,16 @@
 //!   (intra-shard edges stay on the lock-based slot fast path,
 //!   cross-shard edges get one frame per peer *shard*, not per edge),
 //!   the mesh of per-peer reader/writer threads, the shard run loop,
-//!   and the report aggregation that stitches per-shard results back
-//!   into one [`ExperimentReport`](crate::coordinator::ExperimentReport).
+//!   and the **streaming** aggregation
+//!   ([`StreamAggregator`]): trajectory recording ships
+//!   one incremental `Snapshot` frame per sweep while the run is in
+//!   flight, the aggregator evaluates each sweep as soon as every
+//!   shard has delivered it (emitting
+//!   [`RunEvent`](crate::coordinator::RunEvent)s to any
+//!   [`RunObserver`](crate::coordinator::RunObserver)), and the
+//!   end-of-run `Report` frame carries only counters + final state —
+//!   nothing is rebuilt centrally, and memory on both ends is
+//!   O(network state), not O(trajectory).
 //!
 //! ## Sharding
 //!
@@ -82,8 +90,10 @@ pub mod shard;
 
 pub use codec::{HelloFrame, MarkerPhase, ShardReport, WireMsg, MAX_FRAME_BYTES, PROTOCOL_VERSION};
 pub use shard::{
-    aggregate_reports, collect_reports, config_digest, experiment_args, run_mesh_processes,
-    run_mesh_threads, run_shard, serve_main, ShardRunOpts, ShardedMailboxGrid, ShardedTransport,
+    aggregate_reports, collect_shard_streams, config_digest, experiment_args,
+    run_mesh_processes, run_mesh_processes_with, run_mesh_threads, run_mesh_threads_with,
+    run_shard, serve_main, ShardRunOpts, ShardedMailboxGrid, ShardedTransport,
+    StreamAggregator, SERVE_FLAGS,
 };
 
 /// Contiguous balanced partition of the m network nodes into shards.

@@ -23,6 +23,7 @@
 //! a validation feature for CI-scale instances, not a paper-scale
 //! telemetry path.
 
+use std::collections::BTreeMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -35,11 +36,13 @@ use super::codec::{
 use super::{Pacing, ShardPlan};
 use crate::algo::wbp::WbpNode;
 use crate::algo::{AlgorithmKind, ThetaSeq};
-use crate::coordinator::{ExperimentConfig, ExperimentReport, MetricsEvaluator};
+use crate::coordinator::{
+    ExperimentConfig, ExperimentReport, MetricsEvaluator, RunEvent, RunObserver,
+};
 use crate::exec::transport::MailboxGrid;
 use crate::exec::{activate_node, StepCtx, Transport};
 use crate::graph::Graph;
-use crate::measures::{MeasureSpec, Samples};
+use crate::measures::{MeasureSpec, NodeMeasure, Samples};
 use crate::metrics::Series;
 use crate::ot::OracleBackendSpec;
 use crate::rng::Rng64;
@@ -53,6 +56,13 @@ const READ_POLL: Duration = Duration::from_millis(200);
 /// has not said `Bye` before declaring it crashed. Any frame re-arms
 /// the window, so a slow but active peer is drained indefinitely.
 const DRAIN_GRACE: Duration = Duration::from_secs(30);
+/// How many sweeps ahead of the slowest shard the snapshot collector
+/// keeps reading a fast shard's trajectory stream before throttling it
+/// (TCP backpressure then paces the shard). Bounds
+/// [`StreamAggregator`]'s pending memory to `MAX_SNAPSHOT_LEAD ×
+/// shards × block` under free-pacing skew instead of the full
+/// trajectory.
+const MAX_SNAPSHOT_LEAD: u64 = 64;
 
 fn algo_code(a: AlgorithmKind) -> u8 {
     match a {
@@ -60,6 +70,22 @@ fn algo_code(a: AlgorithmKind) -> u8 {
         AlgorithmKind::A2dwbn => 1,
         AlgorithmKind::Dcwb => 2,
     }
+}
+
+/// Filename tag of an aggregated mesh run: same shape as
+/// [`ExperimentConfig::tag`] but with the executor token replaced by
+/// `netP` — the run executed on P shard processes, not on the
+/// in-process backend `cfg.executor` names.
+fn mesh_tag(cfg: &ExperimentConfig, shards: usize) -> String {
+    format!(
+        "{}_{}_{}_m{}_net{}_s{}",
+        cfg.algorithm.name(),
+        cfg.topology.name(),
+        cfg.measure.name(),
+        cfg.nodes,
+        shards,
+        cfg.seed
+    )
 }
 
 /// FNV-1a digest of every experiment knob that shapes the dynamics but
@@ -582,13 +608,20 @@ fn reader_loop(
 pub struct ShardRunOpts {
     pub plan: ShardPlan,
     pub pacing: Pacing,
-    /// Record the local η̄ block after every sweep so the aggregator
-    /// can rebuild the full metric trajectory (lockstep validation).
+    /// Stream the local η̄ block to the aggregator after every sweep
+    /// (as incremental [`WireMsg::Snapshot`] frames on the `report`
+    /// stream) so it can evaluate the full metric trajectory while the
+    /// run is in flight. Requires `report`.
     pub record_sweeps: bool,
     /// Pre-bound listening socket for lower-index peers to dial.
     pub listener: TcpListener,
     /// All shard listen addresses, in shard order (own entry included).
     pub peer_addrs: Vec<String>,
+    /// Already-connected stream to the aggregating process: per-sweep
+    /// [`WireMsg::Snapshot`] frames travel on it during the run, the
+    /// final [`WireMsg::Report`] closes it. `None` for a shard nobody
+    /// aggregates (manual `serve` without `--report`).
+    pub report: Option<TcpStream>,
 }
 
 /// Run this shard's slice of the experiment against the live mesh.
@@ -600,7 +633,14 @@ pub struct ShardRunOpts {
 /// on top.
 pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardReport, String> {
     cfg.validate()?;
-    let plan = opts.plan;
+    let ShardRunOpts { plan, pacing, record_sweeps, listener, peer_addrs, report } = opts;
+    if record_sweeps && report.is_none() {
+        return Err(
+            "record_sweeps streams per-sweep Snapshot frames and therefore \
+             needs a report stream (serve: pass --report HOST:PORT)"
+                .into(),
+        );
+    }
     if plan.nodes != cfg.nodes {
         return Err(format!("plan covers {} nodes, config has {}", plan.nodes, cfg.nodes));
     }
@@ -658,7 +698,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         seed: cfg.seed,
         algo: algo_code(cfg.algorithm),
         sweeps: sweeps as u64,
-        pacing: opts.pacing.code(),
+        pacing: pacing.code(),
         digest: config_digest(cfg),
     };
     let total_compute = sweeps as f64 * m as f64 * cfg.compute_time.max(0.0);
@@ -666,8 +706,8 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         Duration::from_secs_f64(60.0 + 2.0 * cfg.duration + 10.0 * total_compute);
     let mesh = Mesh::establish(
         plan,
-        opts.listener,
-        &opts.peer_addrs,
+        listener,
+        &peer_addrs,
         hello,
         sgrid.clone(),
         n,
@@ -679,8 +719,16 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
     let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
     let mut jitter = Rng64::new(cfg.seed ^ 0x4A54_5452 ^ plan.shard as u64);
-    let mut sweep_etas: Vec<(u64, Vec<f64>)> = Vec::new();
     let mut block = vec![0.0; local.len() * n];
+    // Stream one Snapshot frame per recorded sweep: the aggregator
+    // evaluates it while we keep sweeping — nothing accumulates here.
+    let ship_snapshot = |sweep: u64, block: &[f64]| -> Result<(), String> {
+        if !record_sweeps {
+            return Ok(());
+        }
+        let mut w = report.as_ref().expect("checked above");
+        codec::write_all(&mut w, &codec::encode_snapshot(plan.shard as u32, sweep, block))
+    };
 
     let t0 = Instant::now();
 
@@ -728,9 +776,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
                 node.eta(&mut theta, r + 1, &mut point);
                 block[li * n..(li + 1) * n].copy_from_slice(&point);
             }
-            if opts.record_sweeps {
-                sweep_etas.push((r as u64, block.clone()));
-            }
+            ship_snapshot(r as u64, &block)?;
             mesh.broadcast_marker(MarkerPhase::RoundCollected, r as u64);
             mesh.board.wait_until(wait_budget, "round collect fence", |s| {
                 s.collected.iter().enumerate().all(|(t, &c)| t == me || c >= r as u64 + 1)
@@ -738,7 +784,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         }
     } else {
         for r in 0..sweeps {
-            if opts.pacing == Pacing::Lockstep {
+            if pacing == Pacing::Lockstep {
                 // my turn once every lower shard finished sweep r and
                 // every higher shard finished sweep r−1
                 mesh.board.wait_until(wait_budget, "lockstep turn", |s| {
@@ -775,10 +821,8 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
                 node.eta(&mut theta, k + 1, &mut point);
                 block[li * n..(li + 1) * n].copy_from_slice(&point);
             }
-            if opts.record_sweeps {
-                sweep_etas.push((r as u64, block.clone()));
-            }
-            if opts.pacing == Pacing::Lockstep {
+            ship_snapshot(r as u64, &block)?;
+            if pacing == Pacing::Lockstep {
                 mesh.broadcast_marker(MarkerPhase::SweepDone, r as u64);
             }
         }
@@ -796,7 +840,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
 
     let (messages, wire_messages) = (transport.messages, transport.wire_messages);
     mesh.shutdown()?;
-    Ok(ShardReport {
+    let shard_report = ShardReport {
         shard: plan.shard,
         activations: (local.len() * sweeps) as u64,
         messages,
@@ -804,8 +848,16 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         rounds: if sync { sweeps as u64 } else { 0 },
         window_secs,
         final_etas,
-        sweep_etas,
-    })
+    };
+    // The final Report frame travels on the same stream, after every
+    // streamed Snapshot (FIFO: the aggregator is guaranteed to have
+    // seen the whole trajectory once it reads the Report).
+    if let Some(stream) = &report {
+        let mut w = stream;
+        codec::write_all(&mut w, &codec::encode_report(&shard_report))?;
+        let _ = stream.shutdown(Shutdown::Write);
+    }
+    Ok(shard_report)
 }
 
 fn sleep_compute(
@@ -819,127 +871,347 @@ fn sleep_compute(
 
 // ------------------------------------------------------------ aggregation
 
-/// Stitch the per-shard reports back into one [`ExperimentReport`]:
-/// evaluate the zero state, every complete recorded sweep (when all
-/// shards recorded trajectories), and the final stitched state, with
-/// the exact timestamp formulas the threaded executor uses — which is
-/// why a lockstep mesh's series is comparable (bit-for-bit) to a
-/// single-process `SampleCadence::Activations(m)` run.
+/// Streaming trajectory aggregation: consumes per-sweep
+/// [`WireMsg::Snapshot`] blocks *as they arrive*, evaluates each sweep
+/// the moment every shard has delivered it (with the exact timestamp
+/// formulas the threaded executor uses — which is why a lockstep
+/// mesh's series is comparable, bit for bit, to a single-process
+/// `SampleCadence::Activations(m)` run), and drops the blocks
+/// immediately. Memory is O(network state × shard skew), not
+/// O(trajectory) — the paper-scale telemetry path ROADMAP item (m)
+/// asked for. [`StreamAggregator::finish`] stitches the final state
+/// from the end-of-run [`ShardReport`]s into the one
+/// [`ExperimentReport`].
+pub struct StreamAggregator {
+    cfg: ExperimentConfig,
+    plan: ShardPlan,
+    graph: Graph,
+    measures: Vec<Box<dyn NodeMeasure>>,
+    evaluator: MetricsEvaluator,
+    sweeps_total: u64,
+    /// Scratch: the stitched m×n state of the sweep being evaluated.
+    etas: Vec<f64>,
+    /// Sweeps with at least one block still missing: sweep → per-shard
+    /// slots. Completed sweeps are evaluated and removed on the spot,
+    /// so this holds at most the shard skew — and the collector
+    /// throttles any shard running [`MAX_SNAPSHOT_LEAD`] sweeps ahead
+    /// (TCP backpressure then paces the shard itself), keeping it
+    /// bounded even under free pacing with one straggler.
+    pending: BTreeMap<u64, Vec<Option<Vec<f64>>>>,
+    /// Highest `sweep + 1` delivered per shard (drives the
+    /// [`StreamAggregator::lead`] throttle).
+    delivered_hi: Vec<u64>,
+    /// Next sweep to evaluate (sweeps are evaluated strictly in order,
+    /// so the series stays monotone even when shards skew).
+    next_sweep: u64,
+    saw_snapshot: bool,
+    dual_series: Series,
+    consensus_series: Series,
+    spread_series: Series,
+    dual_wall: Series,
+    t0: Instant,
+}
+
+impl StreamAggregator {
+    pub fn new(cfg: &ExperimentConfig, shards: usize) -> Result<Self, String> {
+        let m = cfg.nodes;
+        let n = cfg.support_size();
+        let plan = ShardPlan::new(0, shards, m)?;
+        let sweeps_total =
+            ((cfg.duration / cfg.activation_interval).round() as u64).max(1);
+        let graph = Graph::build(m, cfg.topology);
+        let measures = cfg.measure.build_network(m, cfg.seed);
+        let mut evaluator =
+            MetricsEvaluator::new(&graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
+
+        let mut dual_series = Series::new("dual_objective");
+        let mut consensus_series = Series::new("consensus");
+        let mut spread_series = Series::new("primal_spread");
+        let mut dual_wall = Series::new("dual_wall");
+        let etas = vec![0.0; m * n];
+        let (d0, c0, s0) = evaluator.evaluate(&etas, &measures);
+        dual_series.push(0.0, d0);
+        consensus_series.push(0.0, c0);
+        spread_series.push(0.0, s0);
+        dual_wall.push(0.0, d0);
+
+        Ok(Self {
+            cfg: cfg.clone(),
+            plan,
+            graph,
+            measures,
+            evaluator,
+            sweeps_total,
+            etas,
+            pending: BTreeMap::new(),
+            delivered_hi: vec![0; shards],
+            next_sweep: 0,
+            saw_snapshot: false,
+            dual_series,
+            consensus_series,
+            spread_series,
+            dual_wall,
+            t0: Instant::now(),
+        })
+    }
+
+    /// Feed one streamed block (shard-local η̄ after `sweep`, taken by
+    /// value — the decoded frame's allocation is parked, never copied).
+    /// Evaluates — and reports to `observer` as [`RunEvent`]s — every
+    /// sweep this completes, in order.
+    pub fn on_snapshot(
+        &mut self,
+        shard: usize,
+        sweep: u64,
+        block: Vec<f64>,
+        observer: &mut dyn RunObserver,
+    ) -> Result<(), String> {
+        let n = self.cfg.support_size();
+        if shard >= self.plan.shards {
+            return Err(format!("snapshot from shard {shard} of {}", self.plan.shards));
+        }
+        if sweep >= self.sweeps_total {
+            return Err(format!(
+                "snapshot for sweep {sweep} beyond the {}-sweep budget",
+                self.sweeps_total
+            ));
+        }
+        let want = self.plan.range(shard).len() * n;
+        if block.len() != want {
+            return Err(format!(
+                "shard {shard} snapshot carries {} values, expected {want}",
+                block.len()
+            ));
+        }
+        if sweep < self.next_sweep {
+            return Err(format!("shard {shard} re-sent already-evaluated sweep {sweep}"));
+        }
+        observer.on_event(&RunEvent::ShardSnapshot { shard, sweep });
+        let shards = self.plan.shards;
+        let slots =
+            self.pending.entry(sweep).or_insert_with(|| vec![None; shards]);
+        if slots[shard].is_some() {
+            return Err(format!("shard {shard} sent sweep {sweep} twice"));
+        }
+        slots[shard] = Some(block);
+        self.delivered_hi[shard] = self.delivered_hi[shard].max(sweep + 1);
+
+        // Evaluate every now-complete sweep in order, dropping blocks.
+        while let Some(slots) = self.pending.get(&self.next_sweep) {
+            if slots.iter().any(|s| s.is_none()) {
+                break;
+            }
+            let slots = self.pending.remove(&self.next_sweep).unwrap();
+            for (s, blk) in slots.iter().enumerate() {
+                let range = self.plan.range(s);
+                self.etas[range.start * n..range.end * n]
+                    .copy_from_slice(blk.as_ref().unwrap());
+            }
+            let (d, c, sp) = self.evaluator.evaluate(&self.etas, &self.measures);
+            let r = self.next_sweep;
+            let m = self.cfg.nodes as u64;
+            let acts = (r + 1) * m;
+            let t = (acts as f64 / m as f64 * self.cfg.activation_interval)
+                .min(self.cfg.duration);
+            self.dual_series.push(t, d);
+            self.consensus_series.push(t, c);
+            self.spread_series.push(t, sp);
+            observer.on_event(&RunEvent::MetricSample {
+                t,
+                wall: self.t0.elapsed().as_secs_f64(),
+                dual: d,
+                consensus: c,
+                spread: sp,
+            });
+            observer.on_event(&RunEvent::Progress {
+                activations: acts,
+                rounds: if self.cfg.algorithm == AlgorithmKind::Dcwb { r + 1 } else { 0 },
+            });
+            self.next_sweep += 1;
+        }
+        self.saw_snapshot = true;
+        Ok(())
+    }
+
+    /// How many sweeps `shard` has delivered beyond the next one to be
+    /// evaluated — the collector stops draining a stream whose shard
+    /// leads by [`MAX_SNAPSHOT_LEAD`], letting TCP backpressure pace
+    /// the shard and keeping `pending` bounded under free-pacing skew.
+    fn lead(&self, shard: usize) -> u64 {
+        self.delivered_hi[shard].saturating_sub(self.next_sweep)
+    }
+
+    /// Stitch the end-of-run reports into the final
+    /// [`ExperimentReport`]. Fails if any streamed trajectory is
+    /// incomplete (a shard recorded sweeps the others never delivered).
+    pub fn finish(mut self, mut reports: Vec<ShardReport>) -> Result<ExperimentReport, String> {
+        let shards = self.plan.shards;
+        let n = self.cfg.support_size();
+        reports.sort_by_key(|r| r.shard);
+        if reports.len() != shards
+            || reports.iter().enumerate().any(|(s, r)| r.shard != s)
+        {
+            let got: Vec<usize> = reports.iter().map(|r| r.shard).collect();
+            return Err(format!("need one report per shard 0..{shards}, got {got:?}"));
+        }
+        for (s, r) in reports.iter().enumerate() {
+            let want = self.plan.range(s).len() * n;
+            if r.final_etas.len() != want {
+                return Err(format!(
+                    "shard {s} reported {} final values, expected {want}",
+                    r.final_etas.len()
+                ));
+            }
+        }
+        if self.saw_snapshot && (self.next_sweep < self.sweeps_total || !self.pending.is_empty()) {
+            return Err(format!(
+                "sweep {} missing from some shard's trajectory stream",
+                self.next_sweep
+            ));
+        }
+
+        for (s, r) in reports.iter().enumerate() {
+            let range = self.plan.range(s);
+            self.etas[range.start * n..range.end * n].copy_from_slice(&r.final_etas);
+        }
+        let (d, c, sp) = self.evaluator.evaluate(&self.etas, &self.measures);
+        self.dual_series.push(self.cfg.duration, d);
+        self.consensus_series.push(self.cfg.duration, c);
+        self.spread_series.push(self.cfg.duration, sp);
+        let window = reports.iter().map(|r| r.window_secs).fold(0.0, f64::max);
+        self.dual_wall.push(window, d);
+
+        let sync = self.cfg.algorithm == AlgorithmKind::Dcwb;
+        let budget: u64 = reports.iter().map(|r| r.activations).sum();
+        Ok(ExperimentReport {
+            tag: mesh_tag(&self.cfg, shards),
+            algorithm: self.cfg.algorithm,
+            dual_objective: self.dual_series,
+            consensus: self.consensus_series,
+            primal_spread: self.spread_series,
+            dual_wall: self.dual_wall,
+            activations: budget,
+            rounds: if sync { self.sweeps_total } else { 0 },
+            messages: reports.iter().map(|r| r.messages).sum(),
+            wire_messages: reports.iter().map(|r| r.wire_messages).sum(),
+            events: budget,
+            lambda_max: self.graph.lambda_max(),
+            wall_seconds: 0.0,
+            barycenter: self.evaluator.barycenter(),
+            cancelled: false,
+        })
+    }
+}
+
+/// Emit the observer-contract bookends for a mesh run: `Started` plus
+/// the zero-state sample before the shards spin up, and the final
+/// sample plus `Finished(RunTotals)` mirroring the aggregated report —
+/// so a [`TrajectorySink`] (or any observer gating on
+/// the terminal event) works on the net backend like it does on
+/// `Sim`/`Threads`: the stream reproduces the report's virtual-time
+/// series (`dual_objective`/`consensus`/`primal_spread`) bit for bit.
+/// `MetricSample.wall` is the *aggregator's* clock (arrival time of
+/// each completed sweep) and is stream-local: the report's `dual_wall`
+/// keeps only the zero point and the shard-side run window, so a sink's
+/// wall series is an arrival-time view, not the report's.
+///
+/// [`TrajectorySink`]: crate::coordinator::TrajectorySink
+fn emit_started(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    agg: &StreamAggregator,
+    observer: &mut dyn RunObserver,
+) {
+    observer.on_event(&RunEvent::Started {
+        tag: mesh_tag(cfg, shards),
+        algorithm: cfg.algorithm,
+        nodes: cfg.nodes,
+        support: cfg.support_size(),
+    });
+    // the aggregator evaluated the zero state at construction
+    observer.on_event(&RunEvent::MetricSample {
+        t: 0.0,
+        wall: 0.0,
+        dual: agg.dual_series.points[0].1,
+        consensus: agg.consensus_series.points[0].1,
+        spread: agg.spread_series.points[0].1,
+    });
+}
+
+fn emit_finished(
+    report: &ExperimentReport,
+    agg_clock: Instant,
+    observer: &mut dyn RunObserver,
+) {
+    // The final stitched sample (pushed by StreamAggregator::finish).
+    // Its wall stays on the aggregator's arrival clock — the same one
+    // every per-sweep sample used — so the streamed wall axis is
+    // monotone (the report's shard-side run window would not be).
+    if let (Some(&(t, dual)), Some(&(_, consensus)), Some(&(_, spread))) = (
+        report.dual_objective.points.last(),
+        report.consensus.points.last(),
+        report.primal_spread.points.last(),
+    ) {
+        let wall = agg_clock.elapsed().as_secs_f64();
+        observer.on_event(&RunEvent::MetricSample { t, wall, dual, consensus, spread });
+    }
+    observer.on_event(&RunEvent::Finished(crate::coordinator::RunTotals {
+        tag: report.tag.clone(),
+        algorithm: report.algorithm,
+        activations: report.activations,
+        rounds: report.rounds,
+        messages: report.messages,
+        wire_messages: report.wire_messages,
+        events: report.events,
+        lambda_max: report.lambda_max,
+        barycenter: report.barycenter.clone(),
+        cancelled: report.cancelled,
+    }));
+}
+
+/// Aggregate end-of-run reports with no streamed trajectory (zero
+/// state + final state only) — the compat path for callers holding
+/// already-collected [`ShardReport`]s; streamed runs go through
+/// [`StreamAggregator`] / [`collect_shard_streams`].
 pub fn aggregate_reports(
     cfg: &ExperimentConfig,
     shards: usize,
-    mut reports: Vec<ShardReport>,
+    reports: Vec<ShardReport>,
 ) -> Result<ExperimentReport, String> {
-    let m = cfg.nodes;
-    let n = cfg.support_size();
-    let plan = ShardPlan::new(0, shards, m)?;
-    reports.sort_by_key(|r| r.shard);
-    if reports.len() != shards
-        || reports.iter().enumerate().any(|(s, r)| r.shard != s)
-    {
-        let got: Vec<usize> = reports.iter().map(|r| r.shard).collect();
-        return Err(format!("need one report per shard 0..{shards}, got {got:?}"));
-    }
-    for (s, r) in reports.iter().enumerate() {
-        let want = plan.range(s).len() * n;
-        if r.final_etas.len() != want {
-            return Err(format!(
-                "shard {s} reported {} final values, expected {want}",
-                r.final_etas.len()
-            ));
-        }
-    }
-    let sweeps = ((cfg.duration / cfg.activation_interval).round() as usize).max(1);
-    let graph = Graph::build(m, cfg.topology);
-    let measures = cfg.measure.build_network(m, cfg.seed);
-    let mut evaluator =
-        MetricsEvaluator::new(&graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
-
-    let mut dual_series = Series::new("dual_objective");
-    let mut consensus_series = Series::new("consensus");
-    let mut spread_series = Series::new("primal_spread");
-    let mut dual_wall = Series::new("dual_wall");
-
-    let mut etas = vec![0.0; m * n];
-    let (d0, c0, s0) = evaluator.evaluate(&etas, &measures);
-    dual_series.push(0.0, d0);
-    consensus_series.push(0.0, c0);
-    spread_series.push(0.0, s0);
-    dual_wall.push(0.0, d0);
-
-    let stitch = |etas: &mut [f64], pick: &dyn Fn(&ShardReport) -> Option<&[f64]>| -> bool {
-        for (s, r) in reports.iter().enumerate() {
-            let Some(blk) = pick(r) else { return false };
-            let range = plan.range(s);
-            etas[range.start * n..range.end * n].copy_from_slice(blk);
-        }
-        true
-    };
-
-    if reports.iter().all(|r| !r.sweep_etas.is_empty()) {
-        for r in 0..sweeps as u64 {
-            let complete = stitch(&mut etas, &|rep| {
-                rep.sweep_etas
-                    .iter()
-                    .find(|(sw, _)| *sw == r)
-                    .map(|(_, b)| b.as_slice())
-            });
-            if !complete {
-                return Err(format!("sweep {r} missing from some shard's trajectory"));
-            }
-            let (d, c, s) = evaluator.evaluate(&etas, &measures);
-            let acts = (r + 1) * m as u64;
-            let t = (acts as f64 / m as f64 * cfg.activation_interval).min(cfg.duration);
-            dual_series.push(t, d);
-            consensus_series.push(t, c);
-            spread_series.push(t, s);
-        }
-    }
-
-    stitch(&mut etas, &|rep| Some(rep.final_etas.as_slice()));
-    let (d, c, s) = evaluator.evaluate(&etas, &measures);
-    dual_series.push(cfg.duration, d);
-    consensus_series.push(cfg.duration, c);
-    spread_series.push(cfg.duration, s);
-    let window = reports.iter().map(|r| r.window_secs).fold(0.0, f64::max);
-    dual_wall.push(window, d);
-
-    let sync = cfg.algorithm == AlgorithmKind::Dcwb;
-    let budget: u64 = reports.iter().map(|r| r.activations).sum();
-    Ok(ExperimentReport {
-        tag: format!("{}_net{}", cfg.tag(), shards),
-        algorithm: cfg.algorithm,
-        dual_objective: dual_series,
-        consensus: consensus_series,
-        primal_spread: spread_series,
-        dual_wall,
-        activations: budget,
-        rounds: if sync { sweeps as u64 } else { 0 },
-        messages: reports.iter().map(|r| r.messages).sum(),
-        wire_messages: reports.iter().map(|r| r.wire_messages).sum(),
-        events: budget,
-        lambda_max: graph.lambda_max(),
-        wall_seconds: 0.0,
-        barycenter: evaluator.barycenter(),
-    })
+    StreamAggregator::new(cfg, shards)?.finish(reports)
 }
 
 // ------------------------------------------------------------ mesh runners
 
 /// Run a full sharded experiment **in one process**: every shard on
 /// its own thread, but with its own sockets — the complete wire path
-/// (codec, reader/writer threads, markers) minus process isolation.
-/// This is the harness the integration tests and benches use; the
-/// CLI's `speedup --processes` uses [`run_mesh_processes`] for the
-/// real thing.
+/// (codec, reader/writer threads, markers, streamed Snapshot frames)
+/// minus process isolation. This is the harness the integration tests
+/// and benches use; the CLI's `speedup --processes` uses
+/// [`run_mesh_processes`] for the real thing.
 pub fn run_mesh_threads(
     cfg: &ExperimentConfig,
     shards: usize,
     pacing: Pacing,
     record_sweeps: bool,
 ) -> Result<ExperimentReport, String> {
+    run_mesh_threads_with(cfg, shards, pacing, record_sweeps, &mut |_: &RunEvent| {})
+}
+
+/// [`run_mesh_threads`] with a live [`RunObserver`]: shard snapshot
+/// arrivals and the evaluated per-sweep metric samples stream to
+/// `observer` while the mesh runs.
+pub fn run_mesh_threads_with(
+    cfg: &ExperimentConfig,
+    shards: usize,
+    pacing: Pacing,
+    record_sweeps: bool,
+    observer: &mut dyn RunObserver,
+) -> Result<ExperimentReport, String> {
     let t_all = Instant::now();
     let _ = ShardPlan::new(0, shards, cfg.nodes)?;
+    let mut agg = StreamAggregator::new(cfg, shards)?;
+    emit_started(cfg, shards, &agg, observer);
     let mut listeners = Vec::with_capacity(shards);
     let mut addrs = Vec::with_capacity(shards);
     for _ in 0..shards {
@@ -947,26 +1219,72 @@ pub fn run_mesh_threads(
         addrs.push(l.local_addr().map_err(|e| format!("local_addr: {e}"))?.to_string());
         listeners.push(l);
     }
-    let results: Vec<Result<ShardReport, String>> = std::thread::scope(|scope| {
+    let report_listener =
+        TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind report socket: {e}"))?;
+    let report_addr = report_listener
+        .local_addr()
+        .map_err(|e| format!("local_addr: {e}"))?
+        .to_string();
+
+    let sweeps = ((cfg.duration / cfg.activation_interval).round() as usize).max(1);
+    let total_compute = sweeps as f64 * cfg.nodes as f64 * cfg.compute_time.max(0.0);
+    let deadline = Instant::now()
+        + Duration::from_secs_f64(120.0 + 2.0 * cfg.duration + 10.0 * total_compute);
+
+    // The aggregating collector runs on this thread, concurrently with
+    // the shard threads — streamed snapshots are evaluated while the
+    // mesh is still sweeping.
+    let (collected, shard_results) = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(shards);
         for (s, listener) in listeners.into_iter().enumerate() {
             let addrs = addrs.clone();
+            let report_addr = report_addr.clone();
             let plan = ShardPlan { shard: s, shards, nodes: cfg.nodes };
-            handles.push(scope.spawn(move || {
+            handles.push(scope.spawn(move || -> Result<ShardReport, String> {
+                // connect the report stream before running, so a shard
+                // that fails is seen as an EOF by the collector instead
+                // of an endless accept wait
+                let report = TcpStream::connect(&report_addr)
+                    .map_err(|e| format!("shard {s}: report connect: {e}"))?;
                 run_shard(
                     cfg,
-                    ShardRunOpts { plan, pacing, record_sweeps, listener, peer_addrs: addrs },
+                    ShardRunOpts {
+                        plan,
+                        pacing,
+                        record_sweeps,
+                        listener,
+                        peer_addrs: addrs,
+                        report: Some(report),
+                    },
                 )
             }));
         }
-        handles
+        let collected = collect_shard_streams(
+            &report_listener,
+            shards,
+            &mut agg,
+            deadline,
+            &mut || Ok(()),
+            observer,
+        );
+        let shard_results: Vec<Result<ShardReport, String>> = handles
             .into_iter()
             .map(|h| h.join().unwrap_or_else(|_| Err("shard thread panicked".into())))
-            .collect()
+            .collect();
+        (collected, shard_results)
     });
-    let reports: Vec<ShardReport> = results.into_iter().collect::<Result<_, _>>()?;
-    let mut report = aggregate_reports(cfg, shards, reports)?;
+    // A shard's own error is the root cause — prefer it over the
+    // collector's (usually derivative) stream error.
+    for r in &shard_results {
+        if let Err(e) = r {
+            return Err(e.clone());
+        }
+    }
+    let reports = collected?;
+    let agg_clock = agg.t0;
+    let mut report = agg.finish(reports)?;
     report.wall_seconds = t_all.elapsed().as_secs_f64();
+    emit_finished(&report, agg_clock, observer);
     Ok(report)
 }
 
@@ -1040,9 +1358,25 @@ pub fn run_mesh_processes(
     pacing: Pacing,
     record_sweeps: bool,
 ) -> Result<ExperimentReport, String> {
+    run_mesh_processes_with(cfg, exe, shards, pacing, record_sweeps, &mut |_: &RunEvent| {})
+}
+
+/// [`run_mesh_processes`] with a live [`RunObserver`] fed from the
+/// streamed Snapshot frames the child shard processes ship while they
+/// run.
+pub fn run_mesh_processes_with(
+    cfg: &ExperimentConfig,
+    exe: &Path,
+    shards: usize,
+    pacing: Pacing,
+    record_sweeps: bool,
+    observer: &mut dyn RunObserver,
+) -> Result<ExperimentReport, String> {
     let t_all = Instant::now();
     let _ = ShardPlan::new(0, shards, cfg.nodes)?;
     let base_args = experiment_args(cfg)?;
+    let mut agg = StreamAggregator::new(cfg, shards)?;
+    emit_started(cfg, shards, &agg, observer);
 
     // Bind the report socket BEFORE probing shard ports: it stays
     // bound, so it can never be handed one of the just-released probe
@@ -1101,7 +1435,7 @@ pub fn run_mesh_processes(
     let collected = {
         // fail fast if any child dies before reporting
         let children = &mut children;
-        collect_reports(&report_listener, shards, deadline, &mut || {
+        collect_shard_streams(&report_listener, shards, &mut agg, deadline, &mut || {
             for (s, c) in children.iter_mut().enumerate() {
                 if let Ok(Some(status)) = c.try_wait() {
                     if !status.success() {
@@ -1110,7 +1444,7 @@ pub fn run_mesh_processes(
                 }
             }
             Ok(())
-        })
+        }, observer)
     };
     let reports = match collected {
         Ok(r) => r,
@@ -1125,74 +1459,131 @@ pub fn run_mesh_processes(
             return Err(format!("shard {s} exited with {status}"));
         }
     }
-    let mut report = aggregate_reports(cfg, shards, reports)?;
+    let agg_clock = agg.t0;
+    let mut report = agg.finish(reports)?;
     report.wall_seconds = t_all.elapsed().as_secs_f64();
+    emit_finished(&report, agg_clock, observer);
     Ok(report)
 }
 
-/// Accept `shards` report connections on `listener` (each carrying one
-/// [`WireMsg::Report`] frame) until `deadline`; `poll` runs on every
-/// idle tick so callers can watch for dead children or other abort
-/// conditions. Shared by [`run_mesh_processes`] and the `a2dwb join`
-/// subcommand (manual multi-box orchestration).
-pub fn collect_reports(
+/// Accept `shards` report-stream connections on `listener` and
+/// multiplex them until every shard has delivered its terminal
+/// [`WireMsg::Report`]: interleaved [`WireMsg::Snapshot`] frames are
+/// fed to `agg` **as they arrive** (each completed sweep is evaluated
+/// and its blocks dropped on the spot — nothing is rebuilt at the
+/// end), with arrival/sample events streamed to `observer`. `poll`
+/// runs on every idle tick so callers can watch for dead children or
+/// other abort conditions. Shared by [`run_mesh_threads_with`],
+/// [`run_mesh_processes_with`], and the `a2dwb join` subcommand
+/// (manual multi-box orchestration).
+pub fn collect_shard_streams(
     listener: &TcpListener,
     shards: usize,
+    agg: &mut StreamAggregator,
     deadline: Instant,
     poll: &mut dyn FnMut() -> Result<(), String>,
+    observer: &mut dyn RunObserver,
 ) -> Result<Vec<ShardReport>, String> {
     listener
         .set_nonblocking(true)
         .map_err(|e| format!("report socket nonblocking: {e}"))?;
+    // (reader, report-received, observed shard id) per accepted stream;
+    // non-blocking reads keep every stream draining concurrently, so a
+    // shard's snapshot backlog can never stall a peer behind a full
+    // socket buffer — except when that shard runs MAX_SNAPSHOT_LEAD
+    // sweeps ahead of the slowest one, where we deliberately stop
+    // reading it (TCP backpressure then paces the shard) so `pending`
+    // stays bounded under free-pacing skew.
+    let mut streams: Vec<(FrameReader<TcpStream>, bool, Option<usize>)> =
+        Vec::with_capacity(shards);
     let mut reports: Vec<ShardReport> = Vec::with_capacity(shards);
     while reports.len() < shards {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream
-                    .set_nonblocking(false)
-                    .map_err(|e| format!("report stream: {e}"))?;
-                let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
-                let mut fr = FrameReader::new(stream);
-                loop {
-                    match fr.next_frame() {
-                        Ok(ReadEvent::Msg(WireMsg::Report(r))) => {
-                            reports.push(r);
+        let mut advanced = false;
+        if streams.len() < shards {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream
+                        .set_nonblocking(true)
+                        .map_err(|e| format!("report stream: {e}"))?;
+                    streams.push((FrameReader::new(stream), false, None));
+                    advanced = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => return Err(format!("report accept: {e}")),
+            }
+        }
+        for (fr, done, conn_shard) in streams.iter_mut() {
+            if *done {
+                continue;
+            }
+            if let Some(s) = *conn_shard {
+                if agg.lead(s) >= MAX_SNAPSHOT_LEAD {
+                    continue; // throttled: let the slowest shard catch up
+                }
+            }
+            loop {
+                match fr.next_frame() {
+                    Ok(ReadEvent::Msg(WireMsg::Snapshot { shard, sweep, etas })) => {
+                        *conn_shard = Some(shard as usize);
+                        agg.on_snapshot(shard as usize, sweep, etas, observer)?;
+                        advanced = true;
+                        if agg.lead(shard as usize) >= MAX_SNAPSHOT_LEAD {
                             break;
                         }
-                        Ok(ReadEvent::Timeout) => {
-                            poll()?;
-                            if Instant::now() >= deadline {
-                                return Err("timed out reading a shard report".into());
-                            }
-                        }
-                        Ok(other) => {
-                            return Err(format!("expected a Report frame, got {other:?}"))
-                        }
-                        Err(e) => return Err(format!("reading shard report: {e}")),
                     }
+                    Ok(ReadEvent::Msg(WireMsg::Report(r))) => {
+                        reports.push(r);
+                        *done = true;
+                        advanced = true;
+                        break;
+                    }
+                    Ok(ReadEvent::Timeout) => break,
+                    Ok(ReadEvent::Eof) => {
+                        return Err(
+                            "shard stream closed before its Report frame".to_string()
+                        )
+                    }
+                    Ok(ReadEvent::Msg(other)) => {
+                        return Err(format!(
+                            "expected Snapshot/Report on the report stream, got {other:?}"
+                        ))
+                    }
+                    Err(e) => return Err(format!("reading shard stream: {e}")),
                 }
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                poll()?;
-                if Instant::now() >= deadline {
-                    return Err(format!(
-                        "timed out waiting for shard reports ({}/{shards})",
-                        reports.len()
-                    ));
-                }
-                std::thread::sleep(Duration::from_millis(20));
+        }
+        if !advanced {
+            poll()?;
+            if Instant::now() >= deadline {
+                return Err(format!(
+                    "timed out waiting for shard reports ({}/{shards})",
+                    reports.len()
+                ));
             }
-            Err(e) => return Err(format!("report accept: {e}")),
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
     Ok(reports)
 }
 
+/// CLI flags the `serve` subcommand understands on top of
+/// [`ExperimentConfig::CLI_FLAGS`].
+pub const SERVE_FLAGS: &[&str] =
+    &["shard", "listen", "peers", "pacing", "report", "record-sweeps"];
+
 /// Body of the `serve` subcommand (also reachable from bench binaries
 /// so `cargo bench` can fan out over real processes): parse the shard
-/// plan + experiment flags, run the shard, optionally ship the report
-/// to `--report HOST:PORT`.
+/// plan + experiment flags, dial the `--report HOST:PORT` aggregator
+/// (if given) up front — per-sweep Snapshot frames stream on that
+/// connection while the shard runs, the terminal Report frame closes
+/// it — then run the shard.
 pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
+    let known: Vec<&str> = ExperimentConfig::CLI_FLAGS
+        .iter()
+        .chain(SERVE_FLAGS.iter())
+        .copied()
+        .collect();
+    args.reject_unknown(&known)?;
     let cfg = ExperimentConfig::from_cli_args(args, args.has_flag("mnist"))?;
     let plan = ShardPlan::parse(&args.get_str("shard", "0/1"), cfg.nodes)?;
     let listen = args.get_str("listen", "127.0.0.1:0");
@@ -1213,6 +1604,21 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
         peer_addrs = vec![own_addr.clone()];
     }
     let pacing = Pacing::parse(&args.get_str("pacing", "free"))?;
+    // Dial the aggregator with retry: operators may start the `serve`
+    // shards before `a2dwb join` is listening (a valid order when the
+    // report connection was only opened at end-of-run), so keep trying
+    // for the same window the run itself is given rather than dying on
+    // the first refusal.
+    let report_stream = match args.get_opt("report") {
+        Some(addr) => {
+            let sweeps = ((cfg.duration / cfg.activation_interval).round()).max(1.0);
+            let total_compute = sweeps * cfg.nodes as f64 * cfg.compute_time.max(0.0);
+            let window =
+                Duration::from_secs_f64(60.0 + 2.0 * cfg.duration + 10.0 * total_compute);
+            Some(dial_retry(addr, Instant::now() + window)?)
+        }
+        None => None,
+    };
     eprintln!(
         "shard {}/{} listening on {own_addr} ({} pacing, {} on {})",
         plan.shard,
@@ -1229,6 +1635,7 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
             record_sweeps: args.has_flag("record-sweeps"),
             listener,
             peer_addrs,
+            report: report_stream,
         },
     )?;
     println!(
@@ -1240,12 +1647,6 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
         report.wire_messages,
         report.window_secs
     );
-    if let Some(addr) = args.get_opt("report") {
-        let stream =
-            TcpStream::connect(addr).map_err(|e| format!("connecting report sink {addr}: {e}"))?;
-        codec::write_all(&mut (&stream), &codec::encode_report(&report))?;
-        stream.shutdown(Shutdown::Both).ok();
-    }
     Ok(())
 }
 

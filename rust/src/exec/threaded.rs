@@ -52,10 +52,10 @@ use super::transport::{MailboxGrid, ThreadedTransport};
 use super::{activate_node, initial_exchange, SampleCadence, StepCtx};
 use crate::algo::wbp::WbpNode;
 use crate::algo::{AlgorithmKind, ThetaSeq};
-use crate::coordinator::{ExperimentConfig, ExperimentReport, MetricsEvaluator};
+use crate::coordinator::session::{RunCtl, RunEvent, RunTotals};
+use crate::coordinator::{CancelToken, ExperimentConfig, MetricsEvaluator};
 use crate::graph::Graph;
 use crate::measures::{NodeMeasure, Samples};
-use crate::metrics::Series;
 use crate::rng::Rng64;
 
 /// Read-only run context shared by every worker thread.
@@ -80,6 +80,10 @@ struct Shared<'a> {
     t0: Instant,
     k_counter: &'a AtomicUsize,
     progress: &'a AtomicU64,
+    /// Cooperative early-stop flag (the session's
+    /// [`CancelToken`]): workers poll it at activation/round
+    /// granularity and wind down through the normal join path.
+    cancel: &'a CancelToken,
     barrier: &'a Barrier,
     node_factors: &'a [f64],
     gamma: f64,
@@ -186,7 +190,7 @@ fn worker_loop(
     sh: Shared<'_>,
     worker_id: usize,
     mine: Vec<(usize, WbpNode, Rng64)>,
-) -> Result<(Vec<(usize, WbpNode)>, u64), String> {
+) -> Result<(Vec<(usize, WbpNode)>, u64, usize), String> {
     let pacer =
         SyncPacer::new(sh.barrier, if sh.sync { 2 * sh.sweeps } else { 0 });
     let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -202,15 +206,17 @@ fn worker_loop(
 }
 
 /// The worker's actual run. Returns its nodes (for the final metric
-/// snapshot) and the number of messages it published. All barrier
-/// traffic goes through `pacer` so [`worker_loop`] can settle the
-/// protocol on early exit.
+/// snapshot), the number of messages it published, and how many sweeps
+/// it completed (shorter than the budget only under cancellation). All
+/// barrier traffic goes through `pacer` so [`worker_loop`] (or the
+/// cancellation path, which drains the remaining DCWB phases exactly
+/// like a failed worker would) can settle the protocol on early exit.
 fn worker_body(
     sh: &Shared<'_>,
     worker_id: usize,
     mut mine: Vec<(usize, WbpNode, Rng64)>,
     pacer: &SyncPacer<'_>,
-) -> Result<(Vec<(usize, WbpNode)>, u64), String> {
+) -> Result<(Vec<(usize, WbpNode)>, u64, usize), String> {
     let n = sh.cfg.support_size();
     let mut oracle = sh
         .cfg
@@ -230,10 +236,18 @@ fn worker_body(
         diag: sh.cfg.diag,
     };
 
+    let mut sweeps_done = 0usize;
     if sh.sync {
         // DCWB: two barriers per round — broadcasts of round r+1 must
         // not overtake a slow neighbor still collecting round r.
         for r in 0..sh.sweeps {
+            if sh.cancel.is_cancelled() {
+                // settle the remaining barrier phases (peers may notice
+                // the flag a round later — drain keeps them paced, the
+                // exact mechanism a failed worker uses)
+                pacer.drain();
+                break;
+            }
             for (i, node, rng) in mine.iter_mut() {
                 let i = *i;
                 sleep_compute(sh, i, &mut jitter);
@@ -264,12 +278,16 @@ fn worker_body(
                 bump_progress(sh, n);
             }
             pacer.wait();
+            sweeps_done = r + 1;
         }
     } else {
         // A²DWB / A²DWBN: barrier-free. Claim a global iteration index,
         // activate, publish, move on.
-        for _sweep in 0..sh.sweeps {
+        'sweeps: for sweep in 0..sh.sweeps {
             for (i, node, rng) in mine.iter_mut() {
+                if sh.cancel.is_cancelled() {
+                    break 'sweeps;
+                }
                 let i = *i;
                 let k = sh.k_counter.fetch_add(1, Ordering::Relaxed);
                 sleep_compute(sh, i, &mut jitter);
@@ -292,21 +310,26 @@ fn worker_body(
                 sh.eta_snaps[i].lock().unwrap().copy_from_slice(&point);
                 bump_progress(sh, n);
             }
+            sweeps_done = sweep + 1;
         }
     }
 
     Ok((
         mine.into_iter().map(|(i, node, _)| (i, node)).collect(),
         transport.messages,
+        sweeps_done,
     ))
 }
 
-/// Run one experiment on the threaded executor.
-pub fn run(
+/// Run one experiment on the threaded executor, streaming progress
+/// through `ctl` (metric samples from the monitor thread, a terminal
+/// [`RunEvent::Finished`]) and honoring its cancel flag.
+pub(crate) fn run(
     cfg: &ExperimentConfig,
     graph: &Graph,
     workers: usize,
-) -> Result<ExperimentReport, String> {
+    ctl: &mut RunCtl<'_>,
+) -> Result<(), String> {
     let m = cfg.nodes;
     let n = cfg.support_size();
     if workers == 0 {
@@ -384,22 +407,16 @@ pub fn run(
         (0..m).map(|_| Mutex::new(vec![0.0; n])).collect();
     let snap_queue: Mutex<Vec<(u64, f64, Vec<f64>)>> = Mutex::new(Vec::new());
     let snap_dropped = AtomicU64::new(0);
+    let cancel_token = ctl.token();
 
     let mut evaluator =
         MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
-    let mut dual_series = Series::new("dual_objective");
-    let mut consensus_series = Series::new("consensus");
-    let mut spread_series = Series::new("primal_spread");
-    let mut dual_wall = Series::new("dual_wall");
     let mut etas = vec![0.0; m * n];
 
     // t = 0 sample: the zero state, same value the simulator reports.
     {
         let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
-        dual_series.push(0.0, dual);
-        consensus_series.push(0.0, consensus);
-        spread_series.push(0.0, spread);
-        dual_wall.push(0.0, dual);
+        ctl.sample(0.0, 0.0, dual, consensus, spread, 0, 0);
     }
 
     // The wall clock starts after metric setup and the t=0 evaluation —
@@ -418,6 +435,7 @@ pub fn run(
         t0: wall_t0,
         k_counter: &k_counter,
         progress: &progress,
+        cancel: &cancel_token,
         barrier: &barrier,
         node_factors: &node_factors,
         gamma,
@@ -440,11 +458,9 @@ pub fn run(
     // walls can still interleave slightly, hence the `last_wall` clamp.
     // `dual_wall` uses the worker-side capture time, not the (possibly
     // much later) evaluation time.
+    let rounds_of = |acts: u64| if sync { acts / m as u64 } else { 0 };
     let drain_snaps = |evaluator: &mut MetricsEvaluator,
-                       dual_series: &mut Series,
-                       consensus_series: &mut Series,
-                       spread_series: &mut Series,
-                       dual_wall: &mut Series,
+                       ctl: &mut RunCtl<'_>,
                        last_acts: &mut u64,
                        last_wall: &mut f64| {
         let mut batch = std::mem::take(&mut *snap_queue.lock().unwrap());
@@ -459,14 +475,12 @@ pub fn run(
                 (acts as f64 / m as f64 * cfg.activation_interval).min(cfg.duration);
             let wall = wall.max(*last_wall);
             *last_wall = wall;
-            dual_series.push(t_equiv, dual);
-            consensus_series.push(t_equiv, consensus);
-            spread_series.push(t_equiv, spread);
-            dual_wall.push(wall, dual);
+            ctl.sample(t_equiv, wall, dual, consensus, spread, acts, rounds_of(acts));
         }
     };
     let mut cadence_last_acts = 0u64;
     let mut cadence_last_wall = 0.0f64;
+    let mut sweeps_done_min = sweeps;
 
     std::thread::scope(|s| -> Result<(), String> {
         let mut handles = Vec::with_capacity(workers);
@@ -485,10 +499,7 @@ pub fn run(
             let Some(sample_every) = wall_every else {
                 drain_snaps(
                     &mut evaluator,
-                    &mut dual_series,
-                    &mut consensus_series,
-                    &mut spread_series,
-                    &mut dual_wall,
+                    ctl,
                     &mut cadence_last_acts,
                     &mut cadence_last_wall,
                 );
@@ -507,10 +518,15 @@ pub fn run(
             // so the raw product can overshoot and un-sort the series
             let t_equiv =
                 (acts as f64 / m as f64 * cfg.activation_interval).min(cfg.duration);
-            dual_series.push(t_equiv, dual);
-            consensus_series.push(t_equiv, consensus);
-            spread_series.push(t_equiv, spread);
-            dual_wall.push(wall_t0.elapsed().as_secs_f64(), dual);
+            ctl.sample(
+                t_equiv,
+                wall_t0.elapsed().as_secs_f64(),
+                dual,
+                consensus,
+                spread,
+                acts,
+                rounds_of(acts),
+            );
         }
 
         for h in handles {
@@ -518,8 +534,9 @@ pub fn run(
             // barrier ledger is settled) and surface as Err here
             let joined =
                 h.join().map_err(|_| "threaded worker died unrecoverably".to_string())?;
-            let (mine, msgs) = joined?;
+            let (mine, msgs, sweeps_done) = joined?;
             messages += msgs;
+            sweeps_done_min = sweeps_done_min.min(sweeps_done);
             for (i, node) in mine {
                 nodes_back[i] = Some(node);
             }
@@ -534,15 +551,7 @@ pub fn run(
 
     // Snapshots queued after the monitor's last pass (all of them, when
     // workers outpace the 2 ms drain tick) land before the horizon point.
-    drain_snaps(
-        &mut evaluator,
-        &mut dual_series,
-        &mut consensus_series,
-        &mut spread_series,
-        &mut dual_wall,
-        &mut cadence_last_acts,
-        &mut cadence_last_wall,
-    );
+    drain_snaps(&mut evaluator, ctl, &mut cadence_last_acts, &mut cadence_last_wall);
     let dropped = snap_dropped.load(Ordering::Relaxed);
     if dropped > 0 {
         eprintln!(
@@ -554,8 +563,21 @@ pub fn run(
     }
 
     // Final snapshot at a common θ index, mirroring the simulator's
-    // horizon sample.
-    let k_final = if sync { sweeps } else { k_counter.load(Ordering::Relaxed) };
+    // horizon sample. Under cancellation the θ index and timestamp
+    // reflect the work actually completed (the minimum sweep any worker
+    // reached keeps the index common across nodes).
+    let cancelled = cancel_token.is_cancelled();
+    let acts_done = progress.load(Ordering::Relaxed);
+    let k_final = if sync {
+        sweeps_done_min
+    } else {
+        k_counter.load(Ordering::Relaxed).min(acts_done as usize)
+    };
+    let t_end = if cancelled {
+        (acts_done as f64 / m as f64 * cfg.activation_interval).min(cfg.duration)
+    } else {
+        cfg.duration
+    };
     let mut theta_final = ThetaSeq::new(m_theta);
     for (i, slot) in nodes_back.iter().enumerate() {
         let node = slot.as_ref().expect("worker returned every node");
@@ -563,27 +585,23 @@ pub fn run(
         etas[i * n..(i + 1) * n].copy_from_slice(&point);
     }
     let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
-    dual_series.push(cfg.duration, dual);
-    consensus_series.push(cfg.duration, consensus);
-    spread_series.push(cfg.duration, spread);
-    dual_wall.push(run_window, dual);
+    let rounds_done = if sync { sweeps_done_min as u64 } else { 0 };
+    ctl.sample(t_end, run_window, dual, consensus, spread, acts_done, rounds_done);
 
-    Ok(ExperimentReport {
-        tag: format!("{}_thr{}", cfg.tag(), workers),
+    ctl.emit(RunEvent::Finished(RunTotals {
+        tag: cfg.tag(),
         algorithm: cfg.algorithm,
-        dual_objective: dual_series,
-        consensus: consensus_series,
-        primal_spread: spread_series,
-        dual_wall,
-        activations: budget as u64,
-        rounds: if sync { sweeps as u64 } else { 0 },
+        activations: acts_done,
+        rounds: rounds_done,
         messages,
         wire_messages: 0,
-        events: budget as u64,
+        events: acts_done,
         lambda_max,
-        wall_seconds: 0.0,
         barycenter: evaluator.barycenter(),
-    })
+        cancelled,
+    }));
+    debug_assert!(cancelled || acts_done == budget as u64);
+    Ok(())
 }
 
 #[cfg(test)]

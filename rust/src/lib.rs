@@ -61,18 +61,32 @@
 //!
 //! ## Quick start
 //!
+//! Experiments are driven through the session layer
+//! ([`coordinator::session`]): build, observe, cancel.
+//!
 //! ```no_run
 //! use a2dwb::prelude::*;
 //!
-//! let cfg = ExperimentConfig {
-//!     nodes: 20,
-//!     topology: TopologySpec::Cycle,
-//!     algorithm: AlgorithmKind::A2dwb,
-//!     ..ExperimentConfig::gaussian_default()
-//! };
-//! let report = run_experiment(&cfg).unwrap();
+//! let session = ExperimentBuilder::gaussian()
+//!     .nodes(20)
+//!     .topology(TopologySpec::Cycle)
+//!     .algorithm(AlgorithmKind::A2dwb)
+//!     .build()
+//!     .unwrap();
+//! let cancel = session.cancel_token(); // cancel.cancel() stops it early
+//! let report = session
+//!     .run_with(&mut |ev: &RunEvent| {
+//!         if let RunEvent::MetricSample { t, dual, .. } = ev {
+//!             println!("t={t:.1}s dual={dual:.6}");
+//!         }
+//!     })
+//!     .unwrap();
 //! println!("final dual objective: {}", report.final_dual_objective());
+//! # drop(cancel);
 //! ```
+//!
+//! The one-shot form (`run_experiment(&cfg)`) survives as a thin shim
+//! over the same machinery.
 
 pub mod algo;
 pub mod bench_util;
@@ -95,7 +109,9 @@ pub mod sim;
 pub mod prelude {
     pub use crate::algo::{AlgorithmKind, ThetaSeq};
     pub use crate::coordinator::{
-        run_experiment, ExperimentConfig, ExperimentReport, FaultModel, TaskSpec,
+        run_experiment, CancelToken, ExperimentBuilder, ExperimentConfig,
+        ExperimentReport, FaultModel, RunEvent, RunObserver, RunTotals, Session,
+        TaskSpec, TrajectorySink,
     };
     pub use crate::exec::{ExecutorSpec, SampleCadence};
     pub use crate::graph::{Graph, TopologySpec};

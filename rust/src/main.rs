@@ -3,24 +3,31 @@
 //!
 //! ```text
 //! a2dwb gaussian --algorithm a2dwb --topology cycle --nodes 50 --duration 30
-//! a2dwb gaussian --executor threads --workers 4 --algorithm a2dwb
+//! a2dwb gaussian --executor threads --workers 4 --progress
 //! a2dwb mnist    --digit 3 --topology er:0.1 --nodes 50
 //! a2dwb sweep    --nodes 30 --duration 20          # all algos × topologies
 //! a2dwb speedup  --workers 4 --nodes 16            # async vs sync wall-clock
 //! a2dwb speedup  --processes 2 --nodes 16          # sharded over loopback TCP
 //! a2dwb serve    --shard 0/2 --listen 127.0.0.1:7701 --peers 127.0.0.1:7701,127.0.0.1:7702
-//! a2dwb join     --listen 127.0.0.1:7700 --shards 2  # aggregate shard reports
+//! a2dwb join     --listen 127.0.0.1:7700 --shards 2  # stream + aggregate shard reports
 //! a2dwb oracle   --backend pjrt --m 32 --n 100     # oracle micro-check
 //! a2dwb inspect  --topology star --nodes 100       # graph spectral info
 //! ```
+//!
+//! Every experiment subcommand builds its run through
+//! `ExperimentBuilder` → `Session` (the session/observer API); pass
+//! `--progress` to stream metric samples to the terminal while the run
+//! is in flight. Unknown flags are rejected loudly.
 
 use a2dwb::cli::Args;
-use a2dwb::coordinator::{run_experiment, ExperimentConfig};
-use a2dwb::exec::net::{self, Pacing};
+use a2dwb::coordinator::session::{RunEvent, RunObserver};
+use a2dwb::exec::net::{self, Pacing, StreamAggregator};
 use a2dwb::exec::{ExecutorSpec, SampleCadence};
 use a2dwb::graph::{Graph, TopologySpec};
 use a2dwb::metrics::{ascii_summary, write_csv};
-use a2dwb::prelude::AlgorithmKind;
+use a2dwb::prelude::{
+    run_experiment, AlgorithmKind, ExperimentBuilder, ExperimentConfig, ExperimentReport,
+};
 
 const SUBCOMMANDS: &[&str] =
     &["gaussian", "mnist", "sweep", "speedup", "serve", "join", "oracle", "inspect"];
@@ -48,22 +55,38 @@ fn main() {
             eprintln!("  --nodes N --topology T --algorithm A --duration S --seed K");
             eprintln!("  --beta B --gamma-scale G --samples M --backend native|pjrt");
             eprintln!("  --executor sim|threads --workers W  (execution backend)");
+            eprintln!("gaussian|mnist only:");
+            eprintln!("  --progress  (stream metric samples while the run executes; also join)");
             eprintln!("  --out results/run.csv  (CSV of the metric series)");
             eprintln!("multi-process (see ARCHITECTURE.md):");
             eprintln!("  speedup --processes P          spawn P shard processes over loopback TCP");
             eprintln!("  serve --shard i/of --listen A --peers A0,..,Ap [--report ADDR]");
-            eprintln!("  join  --listen A --shards P    collect shard reports + aggregate");
+            eprintln!("  join  --listen A --shards P    stream shard snapshots + aggregate");
             2
         }
     };
     std::process::exit(code);
 }
 
-/// Build an ExperimentConfig from shared CLI options (the parsing
-/// itself lives in the library so `serve` shard processes reconstruct
-/// experiments identically — see `ExperimentConfig::from_cli_args`).
-fn config_from_args(args: &Args, mnist: bool) -> Result<ExperimentConfig, String> {
-    ExperimentConfig::from_cli_args(args, mnist)
+/// `ExperimentConfig::CLI_FLAGS` plus a subcommand's own extras — the
+/// full accept list for `Args::reject_unknown`.
+fn known_flags(extra: &[&'static str]) -> Vec<&'static str> {
+    ExperimentConfig::CLI_FLAGS.iter().chain(extra.iter()).copied().collect()
+}
+
+/// A terminal observer: one line per metric sample as the run streams.
+fn progress_printer() -> impl FnMut(&RunEvent) {
+    |ev: &RunEvent| match ev {
+        RunEvent::Started { tag, nodes, .. } => {
+            println!("  [started {tag} on {nodes} nodes]");
+        }
+        RunEvent::MetricSample { t, wall, dual, consensus, .. } => {
+            println!(
+                "  t={t:8.2}s wall={wall:7.2}s dual={dual:+.6} consensus={consensus:.3e}"
+            );
+        }
+        _ => {}
+    }
 }
 
 /// Wall-clock speedup of A²DWB over DCWB at an equal iteration budget
@@ -74,7 +97,11 @@ fn config_from_args(args: &Args, mnist: bool) -> Result<ExperimentConfig, String
 /// total wall time: setup and metric evaluation are identical for both
 /// algorithms and would bias a total-wall ratio toward 1×.
 fn cmd_speedup(args: &Args) -> i32 {
-    let mut cfg = match config_from_args(args, false) {
+    if let Err(e) = args.reject_unknown(&known_flags(&["processes"])) {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    let mut cfg = match ExperimentBuilder::from_cli_args(args, false).and_then(|b| b.config()) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("error: {e}");
@@ -153,7 +180,9 @@ fn cmd_speedup(args: &Args) -> i32 {
 /// exchanging gradients over loopback TCP, run the async-vs-sync pair
 /// free-running, then demonstrate the wire layer's fidelity: a
 /// lockstep 2+-shard mesh must reproduce the single-process
-/// `workers = 1` A²DWB dual trajectory **bit-for-bit**.
+/// `workers = 1` A²DWB dual trajectory **bit-for-bit** — with the
+/// trajectory streamed as incremental Snapshot frames while the mesh
+/// runs.
 fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
     let exe = match std::env::current_exe() {
         Ok(p) => p,
@@ -196,7 +225,20 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
     // Fidelity check: lockstep mesh vs single-process single-worker.
     let mut pcfg = cfg.clone();
     pcfg.algorithm = AlgorithmKind::A2dwb;
-    let mesh = match net::run_mesh_processes(&pcfg, &exe, processes, Pacing::Lockstep, true) {
+    let mut snapshots_seen = 0u64;
+    let mut count_snaps = |ev: &RunEvent| {
+        if matches!(ev, RunEvent::ShardSnapshot { .. }) {
+            snapshots_seen += 1;
+        }
+    };
+    let mesh = match net::run_mesh_processes_with(
+        &pcfg,
+        &exe,
+        processes,
+        Pacing::Lockstep,
+        true,
+        &mut count_snaps,
+    ) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("error [lockstep mesh]: {e}");
@@ -218,7 +260,8 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
         && series_bits_equal(&mesh.primal_spread, &reference.primal_spread);
     println!(
         "PARITY lockstep shards={processes} vs threads:1 -> {} \
-         ({} trajectory points, final dual {:.9} vs {:.9})",
+         ({} trajectory points from {snapshots_seen} streamed snapshot frames, \
+         final dual {:.9} vs {:.9})",
         if ok { "bit-identical" } else { "MISMATCH" },
         mesh.dual_objective.len(),
         mesh.final_dual_objective(),
@@ -239,8 +282,9 @@ fn series_bits_equal(a: &a2dwb::metrics::Series, b: &a2dwb::metrics::Series) -> 
 }
 
 /// Run one shard of a multi-process mesh (see `exec::net`): blocks
-/// until the shard's slice of the experiment completes, then
-/// optionally ships the shard report to `--report HOST:PORT`.
+/// until the shard's slice of the experiment completes, streaming
+/// per-sweep Snapshot frames (and the terminal Report) to `--report
+/// HOST:PORT` while it runs.
 fn cmd_serve(args: &Args) -> i32 {
     match net::serve_main(args) {
         Ok(()) => 0,
@@ -251,26 +295,41 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
-/// Collect `--shards P` shard reports on `--listen ADDR` and aggregate
-/// them into one experiment report — the manual counterpart of
-/// `speedup --processes` for meshes whose `serve` processes were
-/// launched by hand (potentially on other machines).
+/// Stream `--shards P` shard report connections on `--listen ADDR` —
+/// Snapshot frames are evaluated as they arrive — and aggregate into
+/// one experiment report: the manual counterpart of `speedup
+/// --processes` for meshes whose `serve` processes were launched by
+/// hand (potentially on other machines).
 fn cmd_join(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
-        let cfg = config_from_args(args, args.has_flag("mnist"))?;
+        args.reject_unknown(&known_flags(&["shards", "listen", "timeout", "progress"]))?;
+        let cfg = ExperimentBuilder::from_cli_args(args, args.has_flag("mnist"))?.config()?;
         let shards = args.get("shards", 2usize)?;
         let listen = args.get_str("listen", "127.0.0.1:7700");
         let listener = std::net::TcpListener::bind(&listen)
             .map_err(|e| format!("binding {listen}: {e}"))?;
         let timeout = args.get("timeout", 600.0)?;
         println!(
-            "join: waiting for {shards} shard reports on {} (timeout {timeout}s)",
+            "join: streaming {shards} shard reports on {} (timeout {timeout}s)",
             listener.local_addr().map_err(|e| e.to_string())?
         );
         let t0 = std::time::Instant::now();
         let deadline = t0 + std::time::Duration::from_secs_f64(timeout);
-        let reports = net::collect_reports(&listener, shards, deadline, &mut || Ok(()))?;
-        let mut report = net::aggregate_reports(&cfg, shards, reports)?;
+        let mut agg = StreamAggregator::new(&cfg, shards)?;
+        let mut observer: Box<dyn RunObserver> = if args.has_flag("progress") {
+            Box::new(progress_printer())
+        } else {
+            Box::new(|_: &RunEvent| {})
+        };
+        let reports = net::collect_shard_streams(
+            &listener,
+            shards,
+            &mut agg,
+            deadline,
+            &mut || Ok(()),
+            observer.as_mut(),
+        )?;
+        let mut report = agg.finish(reports)?;
         report.wall_seconds = t0.elapsed().as_secs_f64();
         println!("{}", report.summary());
         Ok(())
@@ -285,13 +344,18 @@ fn cmd_join(args: &Args) -> i32 {
 }
 
 fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
-    let cfg = match config_from_args(args, mnist) {
-        Ok(c) => c,
+    let build = || -> Result<a2dwb::coordinator::Session, String> {
+        args.reject_unknown(&known_flags(&["out", "progress"]))?;
+        ExperimentBuilder::from_cli_args(args, mnist)?.build()
+    };
+    let session = match build() {
+        Ok(s) => s,
         Err(e) => {
             eprintln!("error: {e}");
             return 2;
         }
     };
+    let cfg = session.config();
     println!(
         "running {} on {} ({} nodes, {:.0}s virtual, backend {:?})",
         cfg.algorithm.name(),
@@ -300,7 +364,14 @@ fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
         cfg.duration,
         cfg.backend
     );
-    match run_experiment(&cfg) {
+    let run = || -> Result<ExperimentReport, String> {
+        if args.has_flag("progress") {
+            session.run_with(&mut progress_printer())
+        } else {
+            session.run()
+        }
+    };
+    match run() {
         Ok(report) => {
             println!("{}", report.summary());
             println!(
@@ -343,19 +414,31 @@ fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
 }
 
 fn cmd_sweep(args: &Args) -> i32 {
+    if let Err(e) = args.reject_unknown(&known_flags(&[])) {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    // one parse up front: the ER topologies below must be built from
+    // the seed the experiments actually run with
+    let seed = match ExperimentBuilder::from_cli_args(args, false).and_then(|b| b.config())
+    {
+        Ok(cfg) => cfg.seed,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let topologies = ["complete", "er:0.1", "cycle", "star"];
     for topo in topologies {
         for alg in AlgorithmKind::all() {
-            let mut cfg = match config_from_args(args, false) {
-                Ok(c) => c,
-                Err(e) => {
-                    eprintln!("error: {e}");
-                    return 2;
-                }
+            let run = || -> Result<ExperimentReport, String> {
+                ExperimentBuilder::from_cli_args(args, false)?
+                    .topology(TopologySpec::parse(topo, seed)?)
+                    .algorithm(alg)
+                    .build()?
+                    .run()
             };
-            cfg.topology = TopologySpec::parse(topo, cfg.seed).unwrap();
-            cfg.algorithm = alg;
-            match run_experiment(&cfg) {
+            match run() {
                 Ok(r) => println!("{}", r.summary()),
                 Err(e) => {
                     eprintln!("error [{topo}/{}]: {e}", alg.name());
@@ -370,6 +453,12 @@ fn cmd_sweep(args: &Args) -> i32 {
 fn cmd_oracle(args: &Args) -> i32 {
     use a2dwb::measures::CostRows;
     use a2dwb::ot::DualOracle;
+    if let Err(e) =
+        args.reject_unknown(&["m", "n", "beta", "seed", "backend", "artifacts"])
+    {
+        eprintln!("error: {e}");
+        return 2;
+    }
     let m: usize = args.get("m", 32usize).unwrap_or(32);
     let n: usize = args.get("n", 100usize).unwrap_or(100);
     let beta: f64 = args.get("beta", 0.02).unwrap_or(0.02);
@@ -411,6 +500,10 @@ fn cmd_oracle(args: &Args) -> i32 {
 }
 
 fn cmd_inspect(args: &Args) -> i32 {
+    if let Err(e) = args.reject_unknown(&["seed", "nodes", "topology"]) {
+        eprintln!("error: {e}");
+        return 2;
+    }
     let seed = args.get("seed", 42u64).unwrap_or(42);
     let nodes = args.get("nodes", 50usize).unwrap_or(50);
     let topo = match TopologySpec::parse(&args.get_str("topology", "complete"), seed) {

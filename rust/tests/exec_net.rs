@@ -172,6 +172,7 @@ fn mismatched_shard_configs_fail_the_handshake() {
                     record_sweeps: false,
                     listener: l0,
                     peer_addrs: a0,
+                    report: None,
                 },
             )
         });
@@ -184,6 +185,7 @@ fn mismatched_shard_configs_fail_the_handshake() {
                     record_sweeps: false,
                     listener: l1,
                     peer_addrs: a1,
+                    report: None,
                 },
             )
         });
@@ -199,4 +201,58 @@ fn mismatched_shard_configs_fail_the_handshake() {
 fn aggregation_rejects_incomplete_report_sets() {
     let cfg = tiny(AlgorithmKind::A2dwb);
     assert!(net::aggregate_reports(&cfg, 2, Vec::new()).is_err());
+}
+
+#[test]
+fn streamed_snapshot_frames_feed_the_observer_and_match_the_report() {
+    // The trajectory now travels as incremental Snapshot frames while
+    // the mesh runs: the observer must see Started, every (shard,
+    // sweep) block arrive, one evaluated MetricSample per sweep (plus
+    // the zero-state and final bookends), and a terminal Finished —
+    // and the series assembled from that stream must be the report's
+    // series, bit for bit.
+    let cfg = tiny(AlgorithmKind::A2dwb);
+    let shards = 2usize;
+    let sweeps = (cfg.duration / cfg.activation_interval).round() as u64;
+    let mut snapshots: Vec<(usize, u64)> = Vec::new();
+    let mut sampled = Series::new("observed_dual");
+    let mut started = 0u32;
+    let mut finished = 0u32;
+    let report = net::run_mesh_threads_with(
+        &cfg,
+        shards,
+        Pacing::Lockstep,
+        true,
+        &mut |ev: &RunEvent| match ev {
+            RunEvent::Started { .. } => started += 1,
+            RunEvent::ShardSnapshot { shard, sweep } => snapshots.push((*shard, *sweep)),
+            RunEvent::MetricSample { t, dual, .. } => sampled.push(*t, *dual),
+            RunEvent::Finished(totals) => {
+                finished += 1;
+                assert!(!totals.cancelled);
+            }
+            _ => {}
+        },
+    )
+    .unwrap();
+    assert_eq!((started, finished), (1, 1));
+    // every shard ships every sweep exactly once
+    assert_eq!(snapshots.len() as u64, shards as u64 * sweeps);
+    for s in 0..shards {
+        for r in 0..sweeps {
+            assert!(snapshots.contains(&(s, r)), "missing snapshot ({s}, {r})");
+        }
+    }
+    // the streamed samples ARE the report's trajectory: zero state,
+    // one point per sweep, final stitched state
+    assert_eq!(report.dual_objective.len() as u64, sweeps + 2);
+    assert_eq!(
+        series_bits(&sampled),
+        report
+            .dual_objective
+            .points
+            .iter()
+            .map(|&(t, v)| (t.to_bits(), v.to_bits()))
+            .collect::<Vec<_>>()
+    );
 }

@@ -1,0 +1,352 @@
+//! The session/observer contract of `a2dwb::coordinator::session`:
+//!
+//! * `ExperimentBuilder` is CLI-complete — every flag
+//!   `ExperimentConfig::from_cli_args` understands round-trips through
+//!   a typed setter, invalid fault bounds and unknown flags fail
+//!   loudly, and a disconnected user-supplied topology is an `Err`,
+//!   never a process abort;
+//! * runs stream `RunEvent`s while executing, and the report assembled
+//!   from the stream is the report (`run_experiment` is a shim);
+//! * a `CancelToken` stops a threaded run mid-flight and the partial
+//!   report is well-formed: monotone series, true counters,
+//!   `cancelled = true`, a distribution barycenter;
+//! * `tag()` carries executor and seed, so colliding output filenames
+//!   between backends/seeds of the same cell are impossible.
+
+use a2dwb::algo::wbp::DiagCoef;
+use a2dwb::cli::Args;
+use a2dwb::prelude::*;
+
+fn parse(flags: &[&str]) -> Args {
+    Args::parse(flags.iter().map(|s| s.to_string())).unwrap()
+}
+
+fn tiny(alg: AlgorithmKind) -> ExperimentBuilder {
+    ExperimentBuilder::gaussian()
+        .nodes(8)
+        .topology(TopologySpec::Cycle)
+        .algorithm(alg)
+        .measure(MeasureSpec::Gaussian { n: 20 })
+        .samples_per_activation(8)
+        .eval_samples(16)
+        .duration(6.0)
+        .metric_interval(0.5)
+}
+
+// ------------------------------------------------------- builder/CLI parity
+
+#[test]
+fn every_cli_flag_round_trips_through_the_builder() {
+    let args = parse(&[
+        "gaussian",
+        "--nodes", "12",
+        "--seed", "7",
+        "--topology", "er:0.3",
+        "--algorithm", "dcwb",
+        "--beta", "0.05",
+        "--gamma-scale", "0.7",
+        "--samples", "16",
+        "--eval-samples", "24",
+        "--duration", "9.5",
+        "--activation-interval", "0.25",
+        "--metric-interval", "1.5",
+        "--compute-time", "0.001",
+        "--straggler-fraction", "0.25",
+        "--straggler-slowdown", "3.0",
+        "--drop-prob", "0.1",
+        "--support", "64",
+        "--backend", "native",
+        "--executor", "threads:3",
+        "--paper-literal-diag",
+    ]);
+    let from_cli = ExperimentConfig::from_cli_args(&args, false).unwrap();
+    let from_builder = ExperimentBuilder::gaussian()
+        .nodes(12)
+        .seed(7)
+        .topology(TopologySpec::ErdosRenyi { p: 0.3, seed: 7 })
+        .algorithm(AlgorithmKind::Dcwb)
+        .beta(0.05)
+        .gamma_scale(0.7)
+        .samples_per_activation(16)
+        .eval_samples(24)
+        .duration(9.5)
+        .activation_interval(0.25)
+        .metric_interval(1.5)
+        .compute_time(0.001)
+        .faults(FaultModel {
+            straggler_fraction: 0.25,
+            straggler_slowdown: 3.0,
+            drop_prob: 0.1,
+        })
+        .measure(MeasureSpec::Gaussian { n: 64 })
+        .backend(OracleBackendSpec::Native)
+        .executor(ExecutorSpec::Threads { workers: 3 })
+        .diag(DiagCoef::PaperLiteral)
+        .config()
+        .unwrap();
+    assert_eq!(format!("{from_cli:?}"), format!("{from_builder:?}"));
+    // and the builder's CLI entry point is the same parse
+    let via_builder_cli =
+        ExperimentBuilder::from_cli_args(&args, false).unwrap().config().unwrap();
+    assert_eq!(format!("{from_cli:?}"), format!("{via_builder_cli:?}"));
+}
+
+#[test]
+fn mnist_flags_round_trip_through_the_builder() {
+    let args = parse(&[
+        "mnist", "--digit", "5", "--side", "16", "--idx-path", "data/mnist.idx",
+        "--nodes", "10",
+    ]);
+    let from_cli = ExperimentConfig::from_cli_args(&args, true).unwrap();
+    let from_builder = ExperimentBuilder::mnist(5)
+        .nodes(10)
+        .measure(MeasureSpec::Digits {
+            digit: 5,
+            side: 16,
+            idx_path: Some("data/mnist.idx".into()),
+        })
+        .config()
+        .unwrap();
+    assert_eq!(format!("{from_cli:?}"), format!("{from_builder:?}"));
+}
+
+#[test]
+fn invalid_fault_bounds_are_errors_not_aborts() {
+    for flags in [
+        &["gaussian", "--straggler-fraction", "1.5"][..],
+        &["gaussian", "--straggler-slowdown", "0.5"][..],
+        &["gaussian", "--drop-prob", "1.0"][..],
+    ] {
+        let args = parse(flags);
+        let err = ExperimentBuilder::from_cli_args(&args, false)
+            .unwrap()
+            .build()
+            .unwrap_err();
+        assert!(
+            err.contains("straggler") || err.contains("drop_prob"),
+            "{flags:?}: {err}"
+        );
+    }
+    // nonsense values fail at parse time with the flag named
+    let args = parse(&["gaussian", "--nodes", "many"]);
+    let err = ExperimentBuilder::from_cli_args(&args, false).unwrap_err();
+    assert!(err.contains("nodes"), "{err}");
+    let args = parse(&["gaussian", "--executor", "gpu"]);
+    assert!(ExperimentBuilder::from_cli_args(&args, false).is_err());
+}
+
+#[test]
+fn unknown_flags_are_rejected_by_the_shared_accept_list() {
+    let args = parse(&["gaussian", "--nodse", "5"]);
+    let err = args.reject_unknown(ExperimentConfig::CLI_FLAGS).unwrap_err();
+    assert!(err.contains("nodse"), "{err}");
+    // every flag from_cli_args consumes is on the list
+    let args = parse(&[
+        "gaussian",
+        "--nodes", "8",
+        "--seed", "1",
+        "--topology", "cycle",
+        "--algorithm", "a2dwb",
+        "--beta", "0.02",
+        "--gamma-scale", "0.5",
+        "--samples", "8",
+        "--eval-samples", "8",
+        "--duration", "5",
+        "--activation-interval", "0.2",
+        "--metric-interval", "1",
+        "--compute-time", "0",
+        "--straggler-fraction", "0",
+        "--straggler-slowdown", "1",
+        "--drop-prob", "0",
+        "--support", "20",
+        "--backend", "native",
+        "--artifacts", "artifacts",
+        "--workers", "2",
+        "--executor", "threads",
+        "--paper-literal-diag",
+    ]);
+    args.reject_unknown(ExperimentConfig::CLI_FLAGS).unwrap();
+    ExperimentConfig::from_cli_args(&args, false).unwrap();
+}
+
+// ------------------------------------------------------- validation
+
+#[test]
+fn disconnected_topology_is_an_err_everywhere() {
+    // user-supplied edge list with two components
+    let g = Graph::from_edges(6, &[(0, 1), (1, 2), (3, 4), (4, 5)]);
+    assert!(!g.is_connected());
+    let err = tiny(AlgorithmKind::A2dwb).graph(g).build().unwrap_err();
+    assert!(err.contains("connected"), "{err}");
+    // the run_experiment shim validates the same way (no panic path)
+    let cfg = tiny(AlgorithmKind::A2dwb).config().unwrap();
+    assert!(run_experiment(&cfg).is_ok());
+}
+
+#[test]
+fn tags_distinguish_executors_and_seeds() {
+    let sim = tiny(AlgorithmKind::A2dwb).config().unwrap();
+    let thr = tiny(AlgorithmKind::A2dwb)
+        .executor(ExecutorSpec::Threads { workers: 4 })
+        .config()
+        .unwrap();
+    let other_seed = tiny(AlgorithmKind::A2dwb).seed(sim.seed + 1).config().unwrap();
+    assert_ne!(sim.tag(), thr.tag(), "executor must be part of the tag");
+    assert_ne!(sim.tag(), other_seed.tag(), "seed must be part of the tag");
+    assert!(sim.tag().contains("sim") && sim.tag().contains("s42"), "{}", sim.tag());
+    assert!(thr.tag().contains("thr4"), "{}", thr.tag());
+}
+
+// ------------------------------------------------------- observation
+
+#[test]
+fn shim_and_session_agree_bit_for_bit() {
+    let cfg = tiny(AlgorithmKind::A2dwb).config().unwrap();
+    let via_shim = run_experiment(&cfg).unwrap();
+    let via_session = Session::from_config(cfg).unwrap().run().unwrap();
+    assert_eq!(via_shim.dual_objective.points, via_session.dual_objective.points);
+    assert_eq!(via_shim.consensus.points, via_session.consensus.points);
+    assert_eq!(via_shim.barycenter, via_session.barycenter);
+    assert_eq!(via_shim.messages, via_session.messages);
+    assert!(!via_session.cancelled);
+}
+
+#[test]
+fn observer_sees_the_exact_series_the_report_carries() {
+    let session = tiny(AlgorithmKind::A2dwb).build().unwrap();
+    let mut streamed = Series::new("streamed_dual");
+    let mut started = 0u32;
+    let mut finished = 0u32;
+    let report = session
+        .run_with(&mut |ev: &RunEvent| match ev {
+            RunEvent::Started { .. } => started += 1,
+            RunEvent::MetricSample { t, dual, .. } => streamed.push(*t, *dual),
+            RunEvent::Finished(totals) => {
+                finished += 1;
+                assert!(!totals.cancelled);
+            }
+            _ => {}
+        })
+        .unwrap();
+    assert_eq!((started, finished), (1, 1));
+    assert_eq!(streamed.points, report.dual_objective.points);
+}
+
+// ------------------------------------------------------- cancellation
+
+fn assert_well_formed_partial(report: &ExperimentReport, budget: u64) {
+    assert!(report.cancelled, "report must be marked cancelled");
+    assert!(report.activations > 0, "cancel landed before any work");
+    assert!(
+        report.activations < budget,
+        "cancel had no effect: {} of {budget} activations ran",
+        report.activations
+    );
+    assert!(report.dual_objective.len() >= 2);
+    assert_eq!(report.dual_objective.len(), report.consensus.len());
+    assert_eq!(report.dual_objective.len(), report.dual_wall.len());
+    for w in report.dual_objective.points.windows(2) {
+        assert!(w[1].0 >= w[0].0, "non-monotone partial series: {:?} {:?}", w[0], w[1]);
+    }
+    assert!(report.final_dual_objective().is_finite());
+    let s: f64 = report.barycenter.iter().sum();
+    assert!((s - 1.0).abs() < 1e-6, "partial barycenter sum {s}");
+}
+
+#[test]
+fn threaded_run_cancels_mid_flight_with_a_well_formed_partial_report() {
+    // ~2.4 s of simulated compute at full budget; cancel after a few
+    // streamed samples (~100 ms in) — the run must stop early, join all
+    // workers, and report exactly the work it did.
+    let session = tiny(AlgorithmKind::A2dwb)
+        .duration(60.0)
+        .compute_time(0.002)
+        .executor(ExecutorSpec::Threads { workers: 2 })
+        .sample_cadence(SampleCadence::WallClockMillis(10))
+        .build()
+        .unwrap();
+    let cfg = session.config().clone();
+    let budget = (cfg.duration / cfg.activation_interval).round() as u64
+        * cfg.nodes as u64;
+    let cancel = session.cancel_token();
+    let mut samples = 0u32;
+    let report = session
+        .run_with(&mut |ev: &RunEvent| {
+            if let RunEvent::MetricSample { .. } = ev {
+                samples += 1;
+                if samples == 5 {
+                    cancel.cancel();
+                }
+            }
+        })
+        .unwrap();
+    assert_well_formed_partial(&report, budget);
+}
+
+#[test]
+fn threaded_dcwb_cancel_settles_the_barrier_protocol() {
+    // DCWB workers owe each other two barrier phases per round; a
+    // cancelled worker must drain them (like a failed one does) or this
+    // test deadlocks instead of passing.
+    let session = tiny(AlgorithmKind::Dcwb)
+        .nodes(6)
+        .duration(60.0)
+        .compute_time(0.002)
+        .executor(ExecutorSpec::Threads { workers: 3 })
+        .sample_cadence(SampleCadence::WallClockMillis(10))
+        .build()
+        .unwrap();
+    let cfg = session.config().clone();
+    let budget = (cfg.duration / cfg.activation_interval).round() as u64
+        * cfg.nodes as u64;
+    let sweeps = (cfg.duration / cfg.activation_interval).round() as u64;
+    let cancel = session.cancel_token();
+    let mut samples = 0u32;
+    let report = session
+        .run_with(&mut |ev: &RunEvent| {
+            if let RunEvent::MetricSample { .. } = ev {
+                samples += 1;
+                if samples == 5 {
+                    cancel.cancel();
+                }
+            }
+        })
+        .unwrap();
+    assert_well_formed_partial(&report, budget);
+    assert!(report.rounds > 0 && report.rounds < sweeps, "rounds {}", report.rounds);
+}
+
+#[test]
+fn sim_run_cancels_between_events() {
+    let session = tiny(AlgorithmKind::A2dwb).duration(30.0).build().unwrap();
+    let cfg = session.config().clone();
+    let budget = (cfg.duration / cfg.activation_interval).round() as u64
+        * cfg.nodes as u64;
+    let cancel = session.cancel_token();
+    let mut samples = 0u32;
+    let report = session
+        .run_with(&mut |ev: &RunEvent| {
+            if let RunEvent::MetricSample { .. } = ev {
+                samples += 1;
+                if samples == 3 {
+                    cancel.cancel();
+                }
+            }
+        })
+        .unwrap();
+    assert_well_formed_partial(&report, budget);
+}
+
+#[test]
+fn cancel_before_run_still_yields_a_report() {
+    let session = tiny(AlgorithmKind::A2dwb).build().unwrap();
+    session.cancel_token().cancel();
+    let report = session.run().unwrap();
+    assert!(report.cancelled);
+    // nothing ran, but the report is still structurally sound: at
+    // minimum the final-state snapshot is present and finite
+    assert!(!report.dual_objective.is_empty());
+    assert_eq!(report.dual_objective.len(), report.dual_wall.len());
+    assert!(report.final_dual_objective().is_finite());
+    assert_eq!(report.activations, 0);
+}
