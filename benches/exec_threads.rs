@@ -1,6 +1,8 @@
 //! Threaded-executor bench: async (A²DWB) vs sync (DCWB) wall-clock at
-//! an equal iteration budget on 1/2/4/8 workers, a **cross-process**
-//! 2-shard datapoint over loopback TCP, plus the simulator reference
+//! an equal iteration budget on 1/2/4/8 workers, **cross-process**
+//! datapoints over loopback TCP — the classic 2-shard cell plus P×W
+//! mesh cells (2 shards × 2 workers, 4 shards × 1 worker) now that
+//! shards run in-shard worker pools — plus the simulator reference
 //! run. Emits `BENCH_exec.json` at the repository root to anchor the
 //! perf trajectory across PRs (schema documented in ARCHITECTURE.md).
 //!
@@ -16,9 +18,67 @@
 //! is a real OS process with its own address space and the gradients
 //! genuinely cross a socket.
 
-use a2dwb::exec::net::{self, Pacing};
+use a2dwb::exec::net::{self, MeshOpts};
 use a2dwb::graph::TopologySpec;
 use a2dwb::prelude::*;
+
+struct MeshCell {
+    shards: usize,
+    workers: usize,
+    async_window: f64,
+    sync_window: f64,
+    async_wire: u64,
+    sync_wire: u64,
+    async_dual: f64,
+    sync_dual: f64,
+}
+
+/// Run the async-vs-sync pair on a P-shard × W-worker loopback mesh.
+fn mesh_pair(
+    base: &ExperimentConfig,
+    exe: &std::path::Path,
+    shards: usize,
+    workers: usize,
+) -> MeshCell {
+    let mut pair = Vec::new();
+    for alg in [AlgorithmKind::A2dwb, AlgorithmKind::Dcwb] {
+        let cfg = ExperimentConfig { algorithm: alg, ..base.clone() };
+        let r = net::run_mesh_processes(
+            &cfg,
+            exe,
+            &MeshOpts::new(shards).workers(workers),
+        )
+        .expect("cross-process mesh run");
+        println!(
+            "BENCH exec_net shards={shards} workers={workers} alg={} window={:.3}s \
+             messages={} wire_messages={} dual={:.6}",
+            alg.name(),
+            r.run_window_seconds(),
+            r.messages,
+            r.wire_messages,
+            r.final_dual_objective()
+        );
+        pair.push(r);
+    }
+    let (a, s) = (&pair[0], &pair[1]);
+    println!(
+        "BENCH exec_net shards={shards} workers={workers} speedup={:.2}x \
+         (async {:.3}s vs sync {:.3}s)",
+        s.run_window_seconds() / a.run_window_seconds().max(1e-12),
+        a.run_window_seconds(),
+        s.run_window_seconds()
+    );
+    MeshCell {
+        shards,
+        workers,
+        async_window: a.run_window_seconds(),
+        sync_window: s.run_window_seconds(),
+        async_wire: a.wire_messages,
+        sync_wire: s.wire_messages,
+        async_dual: a.final_dual_objective(),
+        sync_dual: s.final_dual_objective(),
+    }
+}
 
 struct Cell {
     workers: usize,
@@ -84,35 +144,17 @@ fn main() {
         });
     }
 
-    // Cross-process datapoint: the same pair on 2 shard processes
+    // Cross-process datapoints: the same pair on shard-process meshes
     // exchanging gradients over loopback TCP, free-running (no
     // cross-process barrier for the async side, round markers for
-    // DCWB).
+    // DCWB). The classic 2×1 cell anchors the old baseline; the P×W
+    // cells (2 shards × 2 workers, 4 shards × 1 worker — both 4
+    // workers total) show what the in-shard pool buys at equal
+    // parallelism.
     let exe = std::env::current_exe().expect("current_exe");
-    let shards = 2usize;
-    let mut net_pair = Vec::new();
-    for alg in [AlgorithmKind::A2dwb, AlgorithmKind::Dcwb] {
-        let cfg = ExperimentConfig { algorithm: alg, ..base.clone() };
-        let r = net::run_mesh_processes(&cfg, &exe, shards, Pacing::Free, false)
-            .expect("cross-process mesh run");
-        println!(
-            "BENCH exec_net shards={shards} alg={} window={:.3}s messages={} \
-             wire_messages={} dual={:.6}",
-            alg.name(),
-            r.run_window_seconds(),
-            r.messages,
-            r.wire_messages,
-            r.final_dual_objective()
-        );
-        net_pair.push(r);
-    }
-    let (na, ns) = (&net_pair[0], &net_pair[1]);
-    println!(
-        "BENCH exec_net shards={shards} speedup={:.2}x (async {:.3}s vs sync {:.3}s)",
-        ns.run_window_seconds() / na.run_window_seconds().max(1e-12),
-        na.run_window_seconds(),
-        ns.run_window_seconds()
-    );
+    let cross = mesh_pair(&base, &exe, 2, 1);
+    let mesh_cells: Vec<MeshCell> =
+        [(2usize, 2usize), (4, 1)].iter().map(|&(p, w)| mesh_pair(&base, &exe, p, w)).collect();
 
     // simulator reference (virtual time, no compute injection)
     let sim = ExperimentBuilder::from_config(base.clone())
@@ -157,18 +199,39 @@ fn main() {
     }
     json.push_str("  ],\n");
     json.push_str(&format!(
-        "  \"cross_process\": {{\"shards\": {shards}, \"transport\": \"tcp-loopback\", \
+        "  \"cross_process\": {{\"shards\": {}, \"transport\": \"tcp-loopback\", \
          \"async_window_s\": {:.6}, \"sync_window_s\": {:.6}, \"speedup\": {:.4}, \
          \"async_wire_messages\": {}, \"sync_wire_messages\": {}, \
-         \"async_final_dual\": {:.9}, \"sync_final_dual\": {:.9}}}\n",
-        na.run_window_seconds(),
-        ns.run_window_seconds(),
-        ns.run_window_seconds() / na.run_window_seconds().max(1e-12),
-        na.wire_messages,
-        ns.wire_messages,
-        na.final_dual_objective(),
-        ns.final_dual_objective()
+         \"async_final_dual\": {:.9}, \"sync_final_dual\": {:.9}}},\n",
+        cross.shards,
+        cross.async_window,
+        cross.sync_window,
+        cross.sync_window / cross.async_window.max(1e-12),
+        cross.async_wire,
+        cross.sync_wire,
+        cross.async_dual,
+        cross.sync_dual
     ));
+    json.push_str("  \"mesh_cells\": [\n");
+    for (idx, c) in mesh_cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"shards\": {}, \"workers\": {}, \"transport\": \"tcp-loopback\", \
+             \"async_window_s\": {:.6}, \"sync_window_s\": {:.6}, \"speedup\": {:.4}, \
+             \"async_wire_messages\": {}, \"sync_wire_messages\": {}, \
+             \"async_final_dual\": {:.9}, \"sync_final_dual\": {:.9}}}{}\n",
+            c.shards,
+            c.workers,
+            c.async_window,
+            c.sync_window,
+            c.sync_window / c.async_window.max(1e-12),
+            c.async_wire,
+            c.sync_wire,
+            c.async_dual,
+            c.sync_dual,
+            if idx + 1 == mesh_cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n");
     json.push_str("}\n");
     a2dwb::bench_util::write_root_json("BENCH_exec.json", &json);
 }

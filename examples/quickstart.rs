@@ -17,6 +17,9 @@ fn main() {
         .topology(TopologySpec::Cycle)
         .algorithm(AlgorithmKind::A2dwb)
         .duration(20.0)
+        // standalone Progress heartbeats every 400 activations —
+        // liveness without the cost of a metric evaluation
+        .progress_every(400)
         .build()
         .expect("valid experiment");
 
@@ -33,16 +36,20 @@ fn main() {
     // Metric samples stream while the run executes; print a sparse
     // live trace instead of waiting silently for the final report.
     let mut seen = 0u32;
+    let mut beats = 0u32;
     let report = session
-        .run_with(&mut |ev: &RunEvent| {
-            if let RunEvent::MetricSample { t, dual, .. } = ev {
+        .run_with(&mut |ev: &RunEvent| match ev {
+            RunEvent::MetricSample { t, dual, .. } => {
                 seen += 1;
                 if seen % 5 == 1 {
                     println!("  live: t={t:5.1}s dual={dual:+.6}");
                 }
             }
+            RunEvent::Progress { .. } => beats += 1,
+            _ => {}
         })
         .expect("experiment failed");
+    println!("  ({beats} progress heartbeats streamed alongside the samples)");
 
     println!("{}", report.summary());
     println!(

@@ -179,6 +179,13 @@ pub(super) fn run(
                 );
                 k_global += 1;
                 activations += 1;
+                if let Some(every) = cfg.progress_every {
+                    // decoupled heartbeat: a standalone Progress event
+                    // every k activations, no metric evaluation attached
+                    if activations % every == 0 {
+                        ctl.emit(RunEvent::Progress { activations, rounds: 0 });
+                    }
+                }
                 // schedule the next activation from the shared sequence
                 let (t, node) = schedule.next_activation();
                 if t <= cfg.duration {

@@ -86,6 +86,20 @@ pub struct ExperimentConfig {
     /// wall-clock (default) or every k-th activation (dense,
     /// deterministic at `workers = 1`).
     pub sample_cadence: SampleCadence,
+    /// Decoupled progress-heartbeat cadence: with `Some(k)` the run
+    /// emits a standalone [`RunEvent::Progress`] whenever the
+    /// activation counter crosses a multiple of k (driven by the
+    /// scheduler's claim-loop counter on the threaded executor, by the
+    /// event loop on the simulator) **without** an accompanying metric
+    /// evaluation — liveness for paper-scale runs at zero oracle cost.
+    /// Crossings are coalesced at the emitter's natural granularity:
+    /// the async simulator fires per activation (exactly one event per
+    /// multiple of k), the DCWB simulator per round, the threaded
+    /// monitor per polling tick — so with k smaller than the
+    /// granularity several crossings collapse into one event carrying
+    /// the current counters. `None` (default) preserves the original
+    /// behavior: progress events ride along with metric samples only.
+    pub progress_every: Option<u64>,
 }
 
 /// Network fault model: heterogeneous slow nodes + iid message loss.
@@ -163,6 +177,7 @@ impl ExperimentConfig {
             faults: FaultModel::default(),
             executor: ExecutorSpec::Sim,
             sample_cadence: SampleCadence::default(),
+            progress_every: None,
         }
     }
 
@@ -225,6 +240,7 @@ impl ExperimentConfig {
         "workers",
         "executor",
         "paper-literal-diag",
+        "progress-every",
         "mnist",
     ];
 
@@ -280,6 +296,12 @@ impl ExperimentConfig {
         if args.has_flag("paper-literal-diag") {
             cfg.diag = DiagCoef::PaperLiteral;
         }
+        if let Some(every) = args.get_opt("progress-every") {
+            let every: u64 = every
+                .parse()
+                .map_err(|e| format!("--progress-every: {e}"))?;
+            cfg.progress_every = Some(every);
+        }
         Ok(cfg)
     }
 
@@ -302,6 +324,9 @@ impl ExperimentConfig {
         self.faults.validate()?;
         self.executor.validate()?;
         self.sample_cadence.validate()?;
+        if self.progress_every == Some(0) {
+            return Err("progress_every needs k >= 1 (or None to disable)".into());
+        }
         Ok(())
     }
 }

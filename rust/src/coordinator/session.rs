@@ -134,7 +134,12 @@ pub enum RunEvent {
     /// points of `dual_objective` / `consensus` / `primal_spread` /
     /// `dual_wall` in the assembled report, in stream order.
     MetricSample { t: f64, wall: f64, dual: f64, consensus: f64, spread: f64 },
-    /// Counter heartbeat (monotone, emitted alongside metric samples).
+    /// Counter heartbeat. Emitted alongside every metric sample, and —
+    /// with [`ExperimentBuilder::progress_every`] set — standalone
+    /// every k activations, decoupled from metric evaluation entirely.
+    /// Counters are monotone per source; a heartbeat (which reads the
+    /// live counter) can briefly run ahead of a sample evaluated from
+    /// an earlier queued snapshot.
     Progress { activations: u64, rounds: u64 },
     /// A sharded run's per-sweep state block arrived at the aggregator
     /// (mesh backends only; the evaluated sample follows as its own
@@ -434,6 +439,18 @@ impl ExperimentBuilder {
 
     pub fn sample_cadence(mut self, c: SampleCadence) -> Self {
         self.cfg.sample_cadence = c;
+        self
+    }
+
+    /// Emit a standalone [`RunEvent::Progress`] heartbeat every `k`
+    /// activations, decoupled from metric samples (k ≥ 1 — validated
+    /// at [`ExperimentBuilder::build`]; crossings are coalesced at the
+    /// emitter's granularity, see
+    /// [`ExperimentConfig::progress_every`]). Without this, progress
+    /// events ride along with metric samples only (the original
+    /// behavior).
+    pub fn progress_every(mut self, k: u64) -> Self {
+        self.cfg.progress_every = Some(k);
         self
     }
 

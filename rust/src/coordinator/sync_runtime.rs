@@ -170,6 +170,14 @@ pub(super) fn run(
         }
         r += 1;
         rounds += 1;
+        if let Some(every) = cfg.progress_every {
+            // decoupled heartbeat: one standalone Progress event per
+            // round that crosses another multiple of k activations
+            let acts = rounds * m as u64;
+            if acts / every > (acts - m as u64) / every {
+                ctl.emit(RunEvent::Progress { activations: acts, rounds });
+            }
+        }
 
         let t_new = now + round_time;
         // metric grid points crossed by this round

@@ -28,6 +28,13 @@
 //! threaded executor reuses the same straggler factors as real
 //! `thread::sleep` compute-time injection.
 //!
+//! Both real-hardware backends run their nodes on the shared
+//! scheduling core of [`sched`]: a [`NodeScheduler`] worker pool over
+//! an arbitrary node range, fenced by a pluggable [`RoundGate`]
+//! (in-process barrier locally; barrier composed with cross-shard
+//! round markers on a mesh) — the machinery exists once, so the
+//! threaded executor and the sharded runner cannot drift apart.
+//!
 //! Past one process, [`net`] shards the node set across OS processes:
 //! intra-shard edges keep the mailbox fast path, cross-shard edges
 //! travel as stamped frames over TCP, and freshest-wins continues to
@@ -36,11 +43,16 @@
 //! --processes P`).
 
 pub mod net;
+pub mod sched;
 pub mod threaded;
 pub mod transport;
 
 use std::sync::Arc;
 
+pub use sched::{
+    ClaimOrder, FailPoint, FreeGate, GateLedger, LocalGate, NodeScheduler, NoHooks,
+    PhaseBarrier, RoundGate, SchedOutcome, SchedTransport, SchedulerSpec, SweepHooks,
+};
 pub use transport::{FreshestSlot, MailboxGrid, ThreadedTransport, Transport};
 
 use crate::algo::wbp::{DiagCoef, WbpNode};

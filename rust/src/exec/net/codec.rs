@@ -47,7 +47,16 @@
 //! * [`WireMsg::Report`] — a shard's end-of-run [`ShardReport`] (final
 //!   dual iterates and counters — the trajectory itself travels
 //!   incrementally as `Snapshot` frames), shipped on the same stream
-//!   after the last snapshot.
+//!   after the last snapshot. Since protocol v3 it carries the sweeps
+//!   the shard actually completed and a `cancelled` flag, so a
+//!   cooperatively stopped shard reports a well-formed partial.
+//! * [`WireMsg::Cancel`] — cooperative stop request, sent by the
+//!   aggregating collector **down** the report connection (the only
+//!   frame that travels in that direction). The shard trips its
+//!   [`CancelToken`](crate::coordinator::CancelToken), its workers
+//!   stop claiming iterations, drain whatever pacing phases they still
+//!   owe their peers, and the stream ends with a partial `Report` —
+//!   remote cancellation without tearing a single connection down.
 //!
 //! Decoding is strict: unknown kinds, short/trailing payload bytes,
 //! oversized frames ([`MAX_FRAME_BYTES`]), and bad magic/version are
@@ -64,7 +73,10 @@ pub const MAGIC: u32 = 0x4132_5742;
 /// Bump on any incompatible frame-layout change.
 /// v2: `Report` lost its embedded per-sweep trajectory; trajectories
 /// now stream incrementally as `Snapshot` frames.
-pub const PROTOCOL_VERSION: u8 = 2;
+/// v3: new `Cancel` frame (collector → shard cooperative stop);
+/// `Report` gained `sweeps_done` + `cancelled` so a stopped shard
+/// reports a well-formed partial.
+pub const PROTOCOL_VERSION: u8 = 3;
 /// Hard upper bound on one frame (64 MiB): a length prefix beyond this
 /// is treated as stream corruption, not an allocation request.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
@@ -75,6 +87,7 @@ const KIND_DONE: u8 = 3;
 const KIND_BYE: u8 = 4;
 const KIND_REPORT: u8 = 5;
 const KIND_SNAPSHOT: u8 = 6;
+const KIND_CANCEL: u8 = 7;
 
 /// Which fence a [`WireMsg::Done`] marker announces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -172,10 +185,22 @@ pub struct ShardReport {
     pub wire_messages: u64,
     /// DCWB rounds completed (0 for the async pair).
     pub rounds: u64,
+    /// Sweeps every local worker completed (equals the budget on
+    /// uncancelled runs; the honest partial count after a `Cancel`).
+    pub sweeps_done: u64,
+    /// True when the shard stopped early on a [`WireMsg::Cancel`] (or
+    /// a locally tripped token): the counters and `final_etas` then
+    /// reflect the work actually performed, not the configured budget.
+    pub cancelled: bool,
     /// Wall-clock seconds between sweep 0 and the last local activation.
     pub window_secs: f64,
     /// Local nodes' dual iterates η̄ at the common final θ index,
-    /// row-major (local node order).
+    /// row-major (local node order). On a cancelled run the index is
+    /// this shard's own `sweeps_done` — shards cannot coordinate a
+    /// network-wide common index mid-cancel, so the aggregator's
+    /// stitched final sample is the honest per-shard state at stop
+    /// time, not a synchronized algorithm iterate (the in-process
+    /// executors, which see all workers, do clamp to a common index).
     pub final_etas: Vec<f64>,
 }
 
@@ -190,6 +215,10 @@ pub enum WireMsg {
     /// right after sweep `sweep` (row-major over its local nodes).
     Snapshot { shard: u32, sweep: u64, etas: Vec<f64> },
     Report(ShardReport),
+    /// Cooperative stop request (collector → shard, on the report
+    /// stream): finish the activation in flight, settle the pacing
+    /// protocol, reply with a partial [`WireMsg::Report`].
+    Cancel,
 }
 
 // ---------------------------------------------------------------- encode
@@ -268,15 +297,22 @@ pub fn encode_bye(shard: u32) -> Vec<u8> {
 }
 
 pub fn encode_report(r: &ShardReport) -> Vec<u8> {
-    let mut b = frame_start(KIND_REPORT, 64 + 8 * r.final_etas.len());
+    let mut b = frame_start(KIND_REPORT, 80 + 8 * r.final_etas.len());
     put_u32(&mut b, r.shard as u32);
     put_u64(&mut b, r.activations);
     put_u64(&mut b, r.messages);
     put_u64(&mut b, r.wire_messages);
     put_u64(&mut b, r.rounds);
+    put_u64(&mut b, r.sweeps_done);
+    b.push(u8::from(r.cancelled));
     put_f64(&mut b, r.window_secs);
     put_f64s(&mut b, &r.final_etas);
     frame_finish(b)
+}
+
+/// Encode the cooperative stop request (kind byte only).
+pub fn encode_cancel() -> Vec<u8> {
+    frame_finish(frame_start(KIND_CANCEL, 0))
 }
 
 /// Encode one streamed trajectory block (the shard's local η̄ state
@@ -401,9 +437,12 @@ pub fn decode(body: &[u8]) -> Result<WireMsg, String> {
             messages: c.take_u64()?,
             wire_messages: c.take_u64()?,
             rounds: c.take_u64()?,
+            sweeps_done: c.take_u64()?,
+            cancelled: c.take_u8()? != 0,
             window_secs: c.take_f64()?,
             final_etas: c.take_f64s()?,
         }),
+        KIND_CANCEL => WireMsg::Cancel,
         other => return Err(format!("unknown frame kind {other}")),
     };
     c.finish()?;
@@ -439,6 +478,12 @@ pub struct FrameReader<R: Read> {
 impl<R: Read> FrameReader<R> {
     pub fn new(r: R) -> Self {
         Self { r, buf: Vec::with_capacity(16 << 10), pos: 0 }
+    }
+
+    /// The underlying stream (e.g. to write a [`WireMsg::Cancel`] back
+    /// down a duplex report connection while reads continue).
+    pub fn get_ref(&self) -> &R {
+        &self.r
     }
 
     fn buffered(&self) -> usize {
@@ -597,6 +642,8 @@ mod tests {
             messages: 160,
             wire_messages: 20,
             rounds: 0,
+            sweeps_done: 20,
+            cancelled: false,
             window_secs: 0.125,
             final_etas: vec![1.0, 2.0, 3.0],
         };
@@ -604,6 +651,24 @@ mod tests {
             WireMsg::Report(got) => assert_eq!(got, r),
             other => panic!("{other:?}"),
         }
+        // a cancelled partial survives the wire with its flag intact
+        let partial = ShardReport { sweeps_done: 7, cancelled: true, ..r };
+        match roundtrip(encode_report(&partial)) {
+            WireMsg::Report(got) => assert_eq!(got, partial),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_roundtrip() {
+        match roundtrip(encode_cancel()) {
+            WireMsg::Cancel => {}
+            other => panic!("{other:?}"),
+        }
+        // trailing payload bytes on a Cancel are stream corruption
+        let mut bad = encode_cancel();
+        bad.push(0);
+        assert!(decode(&bad[4..]).is_err());
     }
 
     #[test]

@@ -53,12 +53,15 @@
 //! * [`Pacing::Lockstep`] — the validation mode. Shards take turns in
 //!   shard order, one sweep at a time, fenced by `Done` markers that
 //!   travel on the same TCP streams as the gradients they fence (FIFO
-//!   ⇒ marker seen means gradients seen). With one worker per shard
-//!   this makes the full distributed run a **bit-for-bit replay** of
-//!   the single-process `Threads { workers: 1 }` run — same activation
-//!   order, same θ indices, same mailbox contents, same dual
-//!   trajectory — which is how `rust/tests/exec_net.rs` proves the
-//!   wire layer moves gradients without perturbing a single bit.
+//!   ⇒ marker seen means gradients seen). Inside a shard the worker
+//!   pool runs **serially** under the scheduler's
+//!   [`ClaimOrder::Serial`](crate::exec::sched::ClaimOrder) baton, so
+//!   at *any* `P × W` split the full distributed run is a
+//!   **bit-for-bit replay** of the single-process
+//!   `Threads { workers: 1 }` run — same activation order, same θ
+//!   indices, same mailbox contents, same dual trajectory — which is
+//!   how `rust/tests/exec_net.rs` proves the wire layer (and the
+//!   worker pool) move gradients without perturbing a single bit.
 //!
 //! DCWB is always round-fenced: the two `std::sync::Barrier` waits per
 //! round become two marker exchanges per round
@@ -77,6 +80,26 @@
 //! (like the multi-worker threaded executor) but every individual
 //! exchange is still stamp-ordered.
 //!
+//! ## In-shard worker pools
+//!
+//! Each shard runs its local nodes on the shared
+//! [`NodeScheduler`](crate::exec::sched::NodeScheduler) — `--workers W`
+//! gives it a W-thread pool, so `speedup --processes P --workers W`
+//! scales P×W. DCWB's two in-process barriers compose with the two
+//! cross-shard marker exchanges through the `MeshGate` (barrier →
+//! leader exchanges markers → barrier); the asynchronous algorithms
+//! stay barrier-free end to end.
+//!
+//! ## Cancellation (protocol v3)
+//!
+//! The aggregating collector can stop a running mesh cooperatively: a
+//! [`WireMsg::Cancel`] frame travels *down* each report stream, the
+//! shard trips its [`CancelToken`](crate::coordinator::CancelToken),
+//! workers stop claiming at the next claim point and drain the pacing
+//! phases they still owe, and the stream ends with a well-formed
+//! partial [`ShardReport`] (`cancelled = true`, honest counters) — no
+//! connection is ever torn down to stop a run.
+//!
 //! ## Teardown
 //!
 //! Shards announce shutdown with a `Bye` frame and half-close the
@@ -92,7 +115,7 @@ pub use codec::{HelloFrame, MarkerPhase, ShardReport, WireMsg, MAX_FRAME_BYTES, 
 pub use shard::{
     aggregate_reports, collect_shard_streams, config_digest, experiment_args,
     run_mesh_processes, run_mesh_processes_with, run_mesh_threads, run_mesh_threads_with,
-    run_shard, serve_main, ShardRunOpts, ShardedMailboxGrid, ShardedTransport,
+    run_shard, serve_main, MeshOpts, ShardRunOpts, ShardedMailboxGrid, ShardedTransport,
     StreamAggregator, SERVE_FLAGS,
 };
 

@@ -3,8 +3,12 @@
 //! One **shard** = one process (or, in the in-process harness
 //! [`run_mesh_threads`], one thread with its own TCP sockets) owning a
 //! contiguous block of network nodes. The shard runs its local nodes
-//! through the same [`activate_node`](crate::exec::activate_node) body
-//! as every other backend; only the transport differs:
+//! on the shared scheduling core
+//! ([`NodeScheduler`](crate::exec::sched::NodeScheduler) over
+//! `plan.local()`, with a `workers`-wide in-shard pool — `--processes
+//! P --workers W` scales P×W); the node body is the same
+//! [`activate_node`](crate::exec::activate_node) as every other
+//! backend, and only the transport and the round gate differ:
 //!
 //! * **intra-shard** edges use the lock-based freshest-wins slots of a
 //!   local [`MailboxGrid`] replica, exactly like the threaded executor;
@@ -37,10 +41,15 @@ use super::{Pacing, ShardPlan};
 use crate::algo::wbp::WbpNode;
 use crate::algo::{AlgorithmKind, ThetaSeq};
 use crate::coordinator::{
-    ExperimentConfig, ExperimentReport, MetricsEvaluator, RunEvent, RunObserver,
+    CancelToken, ExperimentConfig, ExperimentReport, MetricsEvaluator, RunEvent,
+    RunObserver,
+};
+use crate::exec::sched::{
+    ClaimOrder, FailPoint, FreeGate, LocalGate, NodeScheduler, PhaseBarrier, RoundGate,
+    SchedTransport, SchedulerSpec, SweepHooks,
 };
 use crate::exec::transport::MailboxGrid;
-use crate::exec::{activate_node, StepCtx, Transport};
+use crate::exec::Transport;
 use crate::graph::Graph;
 use crate::measures::{MeasureSpec, NodeMeasure, Samples};
 use crate::metrics::Series;
@@ -216,6 +225,12 @@ impl Transport for ShardedTransport<'_> {
 
     fn collect(&mut self, dst: usize, node: &mut WbpNode) {
         self.sgrid.grid.collect(dst, node);
+    }
+}
+
+impl SchedTransport for ShardedTransport<'_> {
+    fn counters(&self) -> (u64, u64) {
+        (self.messages, self.wire_messages)
     }
 }
 
@@ -509,6 +524,138 @@ impl Mesh {
     }
 }
 
+// ------------------------------------------------------------ scheduler glue
+
+/// DCWB's composed round gate on a mesh: in-process barrier →
+/// cross-shard round-marker exchange (run by the fence leader while
+/// every local worker is parked) → in-process barrier. The two
+/// `std::sync::Barrier` waits of the threaded executor become two
+/// marker exchanges per round, and the in-shard worker pool composes
+/// with them transparently. A mesh failure (or a failed leader ship)
+/// poisons the fence, so every local worker fails loudly instead of
+/// waiting forever, and a draining worker that happens to win the
+/// leader election still performs the marker exchange — the
+/// cross-shard protocol survives local failures.
+struct MeshGate<'a> {
+    fence: PhaseBarrier,
+    mesh: &'a Mesh,
+    sweeps: usize,
+    wait_budget: Duration,
+}
+
+impl RoundGate for MeshGate<'_> {
+    fn phases(&self) -> usize {
+        2 * self.sweeps
+    }
+
+    fn serve(
+        &self,
+        idx: usize,
+        on_leader: &dyn Fn() -> Result<(), String>,
+    ) -> Result<(), String> {
+        let r = (idx / 2) as u64;
+        let publish = idx % 2 == 0;
+        let me = self.mesh.shard;
+        let leader = self.fence.wait()?;
+        if leader {
+            let exchange = || -> Result<(), String> {
+                // leader work (snapshot ship) precedes the marker so
+                // FIFO on the report stream keeps Report-after-Snapshot
+                on_leader()?;
+                let (phase, what) = if publish {
+                    (MarkerPhase::RoundPublished, "round publish fence")
+                } else {
+                    (MarkerPhase::RoundCollected, "round collect fence")
+                };
+                self.mesh.broadcast_marker(phase, r);
+                self.mesh.board.wait_until(self.wait_budget, what, |s| {
+                    let col = if publish { &s.published } else { &s.collected };
+                    col.iter().enumerate().all(|(t, &v)| t == me || v >= r + 1)
+                })
+            };
+            if let Err(e) = exchange() {
+                self.fence.poison(e.clone());
+                return Err(e);
+            }
+        }
+        self.fence.wait()?;
+        Ok(())
+    }
+
+    fn poisoned(&self) -> bool {
+        self.fence.is_poisoned()
+    }
+}
+
+/// Sweep-boundary hooks of a shard run: stream the local η̄ block to
+/// the aggregator ([`WireMsg::Snapshot`]) and exchange lockstep
+/// markers. `sweep_complete` is always invoked by exactly one worker
+/// at a time (a fence leader or the serial baton holder), so the
+/// report stream sees frames whole and in order.
+struct ShardSweepHooks<'a> {
+    mesh: &'a Mesh,
+    shard: u32,
+    /// Effective pacing for marker purposes (`Free` for DCWB, whose
+    /// fences live in [`MeshGate`]).
+    pacing: Pacing,
+    record: bool,
+    report: Option<&'a TcpStream>,
+    sweeps: u64,
+    wait_budget: Duration,
+}
+
+impl SweepHooks for ShardSweepHooks<'_> {
+    fn wants_blocks(&self) -> bool {
+        self.record
+    }
+
+    fn sweep_start(&self, r: usize) -> Result<(), String> {
+        if self.pacing != Pacing::Lockstep {
+            return Ok(());
+        }
+        // my turn once every lower shard finished sweep r and every
+        // higher shard finished sweep r−1
+        let me = self.shard as usize;
+        let r = r as u64;
+        self.mesh.board.wait_until(self.wait_budget, "lockstep turn", |s| {
+            s.sweeps.iter().enumerate().all(|(t, &done)| {
+                if t == me {
+                    true
+                } else if t < me {
+                    done >= r + 1
+                } else {
+                    done >= r
+                }
+            })
+        })
+    }
+
+    fn sweep_complete(&self, r: usize, block: &[f64]) -> Result<(), String> {
+        if self.record {
+            let mut w = self.report.expect("record_sweeps requires a report stream");
+            codec::write_all(
+                &mut w,
+                &codec::encode_snapshot(self.shard, r as u64, block),
+            )?;
+        }
+        if self.pacing == Pacing::Lockstep {
+            self.mesh.broadcast_marker(MarkerPhase::SweepDone, r as u64);
+        }
+        Ok(())
+    }
+
+    fn drain(&self) {
+        // A cancelled or failed shard releases peers still waiting on
+        // its sweep markers: the board keeps per-shard maxima, so the
+        // terminal marker alone satisfies every remaining lockstep
+        // turn. (DCWB's round markers are drained phase by phase by
+        // each worker's gate ledger instead.)
+        if self.pacing == Pacing::Lockstep && self.sweeps > 0 {
+            self.mesh.broadcast_marker(MarkerPhase::SweepDone, self.sweeps - 1);
+        }
+    }
+}
+
 fn writer_loop(
     stream: TcpStream,
     rx: mpsc::Receiver<Arc<Vec<u8>>>,
@@ -608,6 +755,10 @@ fn reader_loop(
 pub struct ShardRunOpts {
     pub plan: ShardPlan,
     pub pacing: Pacing,
+    /// In-shard worker pool size W (clamped to the local node count):
+    /// the shard's local nodes run on W threads of the shared
+    /// [`NodeScheduler`], so `--processes P --workers W` scales P×W.
+    pub workers: usize,
     /// Stream the local η̄ block to the aggregator after every sweep
     /// (as incremental [`WireMsg::Snapshot`] frames on the `report`
     /// stream) so it can evaluate the full metric trajectory while the
@@ -619,9 +770,19 @@ pub struct ShardRunOpts {
     pub peer_addrs: Vec<String>,
     /// Already-connected stream to the aggregating process: per-sweep
     /// [`WireMsg::Snapshot`] frames travel on it during the run, the
-    /// final [`WireMsg::Report`] closes it. `None` for a shard nobody
-    /// aggregates (manual `serve` without `--report`).
+    /// final [`WireMsg::Report`] closes it — and [`WireMsg::Cancel`]
+    /// frames travel **down** it, tripping `cancel` mid-run. `None`
+    /// for a shard nobody aggregates (manual `serve` without
+    /// `--report`).
     pub report: Option<TcpStream>,
+    /// Cooperative stop handle: trip it locally, or let a collector
+    /// trip it remotely via a [`WireMsg::Cancel`] frame on `report`.
+    /// The shard winds down through the normal join path and replies
+    /// with a well-formed partial [`ShardReport`].
+    pub cancel: CancelToken,
+    /// Test instrumentation (worker panic injection, forwarded to the
+    /// scheduler) — `None` on every production path.
+    pub fault_injection: Option<FailPoint>,
 }
 
 /// Run this shard's slice of the experiment against the live mesh.
@@ -633,7 +794,20 @@ pub struct ShardRunOpts {
 /// on top.
 pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardReport, String> {
     cfg.validate()?;
-    let ShardRunOpts { plan, pacing, record_sweeps, listener, peer_addrs, report } = opts;
+    let ShardRunOpts {
+        plan,
+        pacing,
+        workers,
+        record_sweeps,
+        listener,
+        peer_addrs,
+        report,
+        cancel,
+        fault_injection,
+    } = opts;
+    if workers == 0 {
+        return Err("shard worker pool needs workers >= 1".into());
+    }
     if record_sweeps && report.is_none() {
         return Err(
             "record_sweeps streams per-sweep Snapshot frames and therefore \
@@ -666,23 +840,20 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
     let m_theta = if sync { 1 } else { m };
     let sweeps = ((cfg.duration / cfg.activation_interval).round() as usize).max(1);
     let local = plan.local();
+    let workers = workers.min(local.len());
 
     let measures = cfg.measure.build_network(m, cfg.seed);
+    // Prevalidate the oracle backend on this thread (the worker pool
+    // must not fail after the mesh is committed); this instance also
+    // computes the initial exchange below.
     let mut oracle = cfg.backend.build(cfg.samples_per_activation, n)?;
     let lambda_max = graph.lambda_max();
     let gamma = cfg.gamma_scale / (lambda_max / cfg.beta);
-    let ctx = StepCtx {
-        beta: cfg.beta,
-        gamma,
-        batch: cfg.samples_per_activation,
-        m_theta,
-        diag: cfg.diag,
-    };
 
     // Node state + RNG streams: derived for the whole network exactly
     // as the threaded executor derives them, then only the local block
     // is used — so node i's draws are identical no matter which shard
-    // (or thread) hosts it.
+    // (or worker thread) hosts it.
     let mut root = Rng64::new(cfg.seed ^ 0x5254_4E44);
     let mut node_rngs: Vec<Rng64> = (0..m).map(|i| root.split(i as u64)).collect();
     let node_factors = cfg.faults.node_factors(m, cfg.seed);
@@ -714,159 +885,214 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         wait_budget,
     )?;
 
-    let mut transport = ShardedTransport::new(&sgrid, &mesh.senders);
-    let mut theta = ThetaSeq::new(m_theta);
-    let mut samples = Samples::empty();
-    let mut point = vec![0.0; n];
-    let mut jitter = Rng64::new(cfg.seed ^ 0x4A54_5452 ^ plan.shard as u64);
-    let mut block = vec![0.0; local.len() * n];
-    // Stream one Snapshot frame per recorded sweep: the aggregator
-    // evaluates it while we keep sweeping — nothing accumulates here.
-    let ship_snapshot = |sweep: u64, block: &[f64]| -> Result<(), String> {
-        if !record_sweeps {
-            return Ok(());
+    // Cancel listener: the only frames that travel *down* the report
+    // stream are Cancel requests from the collector — a tiny reader
+    // thread trips the shared token and the workers notice it at their
+    // next claim point.
+    let stop_listener = Arc::new(AtomicBool::new(false));
+    let cancel_listener = match &report {
+        Some(stream) => {
+            stream
+                .set_read_timeout(Some(READ_POLL))
+                .map_err(|e| format!("report read timeout: {e}"))?;
+            let clone = stream.try_clone().map_err(|e| format!("report clone: {e}"))?;
+            let token = cancel.clone();
+            let stop = stop_listener.clone();
+            Some(std::thread::spawn(move || {
+                let mut fr = FrameReader::new(clone);
+                loop {
+                    match fr.next_frame() {
+                        Ok(ReadEvent::Msg(WireMsg::Cancel)) => token.cancel(),
+                        Ok(ReadEvent::Timeout) => {
+                            if stop.load(Ordering::Acquire) {
+                                return;
+                            }
+                        }
+                        // EOF, unexpected frames, or read errors: the
+                        // collector is gone or confused — nothing more
+                        // to listen for (a dead collector surfaces as
+                        // a write error on the snapshot path instead).
+                        _ => return,
+                    }
+                }
+            }))
         }
-        let mut w = report.as_ref().expect("checked above");
-        codec::write_all(&mut w, &codec::encode_snapshot(plan.shard as u32, sweep, block))
+        None => None,
+    };
+    let stop_listening = |handle: Option<std::thread::JoinHandle<()>>| {
+        stop_listener.store(true, Ordering::Release);
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
     };
 
     let t0 = Instant::now();
 
+    let mut init_messages = 0u64;
+    let mut init_wire = 0u64;
     if !sync {
         // Algorithm 3 line 1 for the local nodes (same draws, in node
         // order, as `exec::initial_exchange` makes over the full set).
+        let mut transport = ShardedTransport::new(&sgrid, &mesh.senders);
+        let mut theta0 = ThetaSeq::new(m_theta);
+        let mut samples = Samples::empty();
+        let mut point = vec![0.0; n];
         for (li, i) in local.clone().enumerate() {
             let node = &mut nodes[li];
-            node.eval_point(&mut theta, 0, true, &mut point);
-            measures[i].draw_samples_into(&mut node_rngs[i], ctx.batch, &mut samples);
+            node.eval_point(&mut theta0, 0, true, &mut point);
+            measures[i].draw_samples_into(
+                &mut node_rngs[i],
+                cfg.samples_per_activation,
+                &mut samples,
+            );
             let rows = measures[i].cost_rows(&samples);
-            oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
+            oracle.eval(&point, &rows, cfg.beta, &mut node.own_grad);
             transport.broadcast(i, 0, Arc::new(node.own_grad.clone()));
         }
+        init_messages = transport.messages;
+        init_wire = transport.wire_messages;
     }
     // Init marker: fences the initial gradients (FIFO) and holds every
     // shard at the start line until the whole mesh is up.
     mesh.broadcast_marker(MarkerPhase::Init, 0);
     let me = plan.shard;
-    mesh.board.wait_until(wait_budget, "initial exchange", |s| {
+    if let Err(e) = mesh.board.wait_until(wait_budget, "initial exchange", |s| {
         s.init.iter().enumerate().all(|(t, &ok)| t == me || ok)
-    })?;
-
-    if sync {
-        // DCWB: the two in-process barriers per round become two
-        // marker exchanges per round — the coordinator round-token.
-        for r in 0..sweeps {
-            for (li, i) in local.clone().enumerate() {
-                let node = &mut nodes[li];
-                sleep_compute(cfg, &node_factors, i, &mut jitter);
-                node.eval_point(&mut theta, r, true, &mut point);
-                measures[i].draw_samples_into(&mut node_rngs[i], ctx.batch, &mut samples);
-                let rows = measures[i].cost_rows(&samples);
-                oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
-                transport.broadcast(i, r as u64 + 1, Arc::new(node.own_grad.clone()));
-            }
-            mesh.broadcast_marker(MarkerPhase::RoundPublished, r as u64);
-            mesh.board.wait_until(wait_budget, "round publish fence", |s| {
-                s.published.iter().enumerate().all(|(t, &p)| t == me || p >= r as u64 + 1)
-            })?;
-            for (li, i) in local.clone().enumerate() {
-                let node = &mut nodes[li];
-                transport.collect(i, node);
-                node.apply_update(&mut theta, r, ctx.m_theta, ctx.gamma, graph.degree(i), ctx.diag);
-                node.eta(&mut theta, r + 1, &mut point);
-                block[li * n..(li + 1) * n].copy_from_slice(&point);
-            }
-            ship_snapshot(r as u64, &block)?;
-            mesh.broadcast_marker(MarkerPhase::RoundCollected, r as u64);
-            mesh.board.wait_until(wait_budget, "round collect fence", |s| {
-                s.collected.iter().enumerate().all(|(t, &c)| t == me || c >= r as u64 + 1)
-            })?;
-        }
-    } else {
-        for r in 0..sweeps {
-            if pacing == Pacing::Lockstep {
-                // my turn once every lower shard finished sweep r and
-                // every higher shard finished sweep r−1
-                mesh.board.wait_until(wait_budget, "lockstep turn", |s| {
-                    s.sweeps.iter().enumerate().all(|(t, &done)| {
-                        if t == me {
-                            true
-                        } else if t < me {
-                            done >= r as u64 + 1
-                        } else {
-                            done >= r as u64
-                        }
-                    })
-                })?;
-            }
-            for (li, i) in local.clone().enumerate() {
-                let node = &mut nodes[li];
-                let k = r * m + i;
-                sleep_compute(cfg, &node_factors, i, &mut jitter);
-                activate_node(
-                    node,
-                    i,
-                    k,
-                    compensated,
-                    &mut theta,
-                    &ctx,
-                    graph.degree(i),
-                    measures[i].as_ref(),
-                    &mut node_rngs[i],
-                    &mut samples,
-                    &mut point,
-                    oracle.as_mut(),
-                    &mut transport,
-                );
-                node.eta(&mut theta, k + 1, &mut point);
-                block[li * n..(li + 1) * n].copy_from_slice(&point);
-            }
-            ship_snapshot(r as u64, &block)?;
-            if pacing == Pacing::Lockstep {
-                mesh.broadcast_marker(MarkerPhase::SweepDone, r as u64);
-            }
-        }
+    }) {
+        stop_listening(cancel_listener);
+        return Err(e);
     }
+
+    // Hand the local range to the shared scheduler: deterministic
+    // iteration claims (k = sweep·m + node — no cross-process counter
+    // to race on), the lockstep validation mode running serially
+    // across the worker pool (bit parity at any P×W split), and DCWB
+    // fenced by the composed MeshGate.
+    let order = if !sync && pacing == Pacing::Lockstep {
+        ClaimOrder::Serial
+    } else {
+        ClaimOrder::Deterministic
+    };
+    let sched = NodeScheduler::new(SchedulerSpec {
+        cfg,
+        graph: &graph,
+        measures: &measures,
+        range: local.clone(),
+        workers,
+        sweeps,
+        gamma,
+        m_theta,
+        sync,
+        compensated,
+        node_factors: &node_factors,
+        cancel: cancel.clone(),
+        order,
+        cadence_snapshots: false,
+        jitter_salt: plan.shard as u64,
+        fault_injection,
+    });
+    let hooks = ShardSweepHooks {
+        mesh: &mesh,
+        shard: plan.shard as u32,
+        pacing: if sync { Pacing::Free } else { pacing },
+        record: record_sweeps,
+        report: report.as_ref(),
+        sweeps: sweeps as u64,
+        wait_budget,
+    };
+    let mesh_gate;
+    let local_gate;
+    let free_gate;
+    let gate: &dyn RoundGate = if sync {
+        mesh_gate = MeshGate {
+            fence: PhaseBarrier::new(workers),
+            mesh: &mesh,
+            sweeps,
+            wait_budget,
+        };
+        &mesh_gate
+    } else if record_sweeps && order == ClaimOrder::Deterministic {
+        // recorded free-pacing runs fence their sweeps locally so the
+        // shipped block is a consistent state
+        local_gate = LocalGate::new(workers, sweeps);
+        &local_gate
+    } else {
+        // barrier-free end to end; lockstep ships from the serial
+        // baton and needs no fence either
+        free_gate = FreeGate;
+        &free_gate
+    };
+
+    let dealt: Vec<(usize, WbpNode, Rng64)> = {
+        let mut rng_slots: Vec<Option<Rng64>> =
+            node_rngs.into_iter().map(Some).collect();
+        local
+            .clone()
+            .zip(nodes)
+            .map(|(i, node)| (i, node, rng_slots[i].take().expect("rng taken once")))
+            .collect()
+    };
+    let per_worker = NodeScheduler::deal_round_robin(dealt, workers);
+    let outcome = match sched.run(
+        per_worker,
+        &|_w| ShardedTransport::new(&sgrid, &mesh.senders),
+        gate,
+        &hooks,
+        &mut || {},
+    ) {
+        Ok(o) => o,
+        Err(e) => {
+            stop_listening(cancel_listener);
+            return Err(e);
+        }
+    };
     let window_secs = t0.elapsed().as_secs_f64();
 
-    // Final η̄ at the common θ index every backend reports at.
-    let k_final = if sync { sweeps } else { sweeps * m };
+    // Final η̄ at the common θ index every backend reports at — the
+    // minimum sweep any worker completed (the full budget unless
+    // cancelled).
+    let cancelled = cancel.is_cancelled();
+    let sweeps_done = outcome.sweeps_done_min;
+    let k_final = if sync { sweeps_done } else { sweeps_done * m };
     let mut theta_final = ThetaSeq::new(m_theta);
+    let mut point = vec![0.0; n];
     let mut final_etas = vec![0.0; local.len() * n];
-    for (li, node) in nodes.iter().enumerate() {
+    for (li, (_, node)) in outcome.nodes.iter().enumerate() {
         node.eta(&mut theta_final, k_final.max(1), &mut point);
         final_etas[li * n..(li + 1) * n].copy_from_slice(&point);
     }
 
-    let (messages, wire_messages) = (transport.messages, transport.wire_messages);
-    mesh.shutdown()?;
+    let messages = init_messages + outcome.messages;
+    let wire_messages = init_wire + outcome.wire_messages;
+    if let Err(e) = mesh.shutdown() {
+        stop_listening(cancel_listener);
+        return Err(e);
+    }
     let shard_report = ShardReport {
         shard: plan.shard,
-        activations: (local.len() * sweeps) as u64,
+        activations: outcome.activations,
         messages,
         wire_messages,
-        rounds: if sync { sweeps as u64 } else { 0 },
+        rounds: if sync { sweeps_done as u64 } else { 0 },
+        sweeps_done: sweeps_done as u64,
+        cancelled,
         window_secs,
         final_etas,
     };
     // The final Report frame travels on the same stream, after every
     // streamed Snapshot (FIFO: the aggregator is guaranteed to have
     // seen the whole trajectory once it reads the Report).
+    let mut send_res = Ok(());
     if let Some(stream) = &report {
         let mut w = stream;
-        codec::write_all(&mut w, &codec::encode_report(&shard_report))?;
-        let _ = stream.shutdown(Shutdown::Write);
+        send_res = codec::write_all(&mut w, &codec::encode_report(&shard_report));
+        if send_res.is_ok() {
+            let _ = stream.shutdown(Shutdown::Write);
+        }
     }
+    stop_listening(cancel_listener);
+    send_res?;
     Ok(shard_report)
-}
-
-fn sleep_compute(
-    cfg: &ExperimentConfig,
-    node_factors: &[f64],
-    i: usize,
-    jitter: &mut Rng64,
-) {
-    crate::exec::sleep_compute(cfg.compute_time, node_factors[i], jitter);
 }
 
 // ------------------------------------------------------------ aggregation
@@ -1043,7 +1269,15 @@ impl StreamAggregator {
 
     /// Stitch the end-of-run reports into the final
     /// [`ExperimentReport`]. Fails if any streamed trajectory is
-    /// incomplete (a shard recorded sweeps the others never delivered).
+    /// incomplete (a shard recorded sweeps the others never delivered)
+    /// — unless the run was cancelled, in which case the partial
+    /// trajectory is honest by construction: the series covers the
+    /// sweeps every shard delivered, the final point sits at the
+    /// virtual time of the least-advanced shard, and
+    /// [`ExperimentReport::cancelled`] is set. That final point
+    /// stitches each shard's state at its *own* stop index (see
+    /// [`ShardReport::final_etas`]) — a true snapshot of where the
+    /// network halted, not a synchronized iterate.
     pub fn finish(mut self, mut reports: Vec<ShardReport>) -> Result<ExperimentReport, String> {
         let shards = self.plan.shards;
         let n = self.cfg.support_size();
@@ -1063,7 +1297,11 @@ impl StreamAggregator {
                 ));
             }
         }
-        if self.saw_snapshot && (self.next_sweep < self.sweeps_total || !self.pending.is_empty()) {
+        let cancelled = reports.iter().any(|r| r.cancelled);
+        if self.saw_snapshot
+            && !cancelled
+            && (self.next_sweep < self.sweeps_total || !self.pending.is_empty())
+        {
             return Err(format!(
                 "sweep {} missing from some shard's trajectory stream",
                 self.next_sweep
@@ -1075,14 +1313,34 @@ impl StreamAggregator {
             self.etas[range.start * n..range.end * n].copy_from_slice(&r.final_etas);
         }
         let (d, c, sp) = self.evaluator.evaluate(&self.etas, &self.measures);
-        self.dual_series.push(self.cfg.duration, d);
-        self.consensus_series.push(self.cfg.duration, c);
-        self.spread_series.push(self.cfg.duration, sp);
+        // Uncancelled runs report their final state at the horizon;
+        // cancelled ones at the virtual time of the least-advanced
+        // shard, which is ≥ the last evaluated sweep's timestamp (only
+        // fully delivered sweeps are evaluated), so the partial series
+        // stays monotone.
+        let min_sweeps = reports.iter().map(|r| r.sweeps_done).min().unwrap_or(0);
+        let t_end = if cancelled {
+            (min_sweeps as f64 * self.cfg.activation_interval).min(self.cfg.duration)
+        } else {
+            self.cfg.duration
+        };
+        self.dual_series.push(t_end, d);
+        self.consensus_series.push(t_end, c);
+        self.spread_series.push(t_end, sp);
         let window = reports.iter().map(|r| r.window_secs).fold(0.0, f64::max);
         self.dual_wall.push(window, d);
 
         let sync = self.cfg.algorithm == AlgorithmKind::Dcwb;
         let budget: u64 = reports.iter().map(|r| r.activations).sum();
+        let rounds = if sync {
+            if cancelled {
+                min_sweeps
+            } else {
+                self.sweeps_total
+            }
+        } else {
+            0
+        };
         Ok(ExperimentReport {
             tag: mesh_tag(&self.cfg, shards),
             algorithm: self.cfg.algorithm,
@@ -1091,14 +1349,14 @@ impl StreamAggregator {
             primal_spread: self.spread_series,
             dual_wall: self.dual_wall,
             activations: budget,
-            rounds: if sync { self.sweeps_total } else { 0 },
+            rounds,
             messages: reports.iter().map(|r| r.messages).sum(),
             wire_messages: reports.iter().map(|r| r.wire_messages).sum(),
             events: budget,
             lambda_max: self.graph.lambda_max(),
             wall_seconds: 0.0,
             barycenter: self.evaluator.barycenter(),
-            cancelled: false,
+            cancelled,
         })
     }
 }
@@ -1183,19 +1441,68 @@ pub fn aggregate_reports(
 
 // ------------------------------------------------------------ mesh runners
 
+/// Shape of a mesh run: shard count P, per-shard worker pool W,
+/// pacing, trajectory recording, and a cooperative stop handle. Built
+/// fluently: `MeshOpts::new(2).workers(2).pacing(Pacing::Lockstep)`.
+#[derive(Clone)]
+pub struct MeshOpts {
+    /// Shard (process) count P.
+    pub shards: usize,
+    /// In-shard worker pool size W — the mesh runs P×W workers total.
+    pub workers: usize,
+    pub pacing: Pacing,
+    pub record_sweeps: bool,
+    /// Trip it (from an observer callback or any thread) to stop the
+    /// whole mesh cooperatively: the collector sends a
+    /// [`WireMsg::Cancel`] frame down every shard's report stream and
+    /// the run returns a well-formed partial report with
+    /// [`ExperimentReport::cancelled`] set.
+    pub cancel: CancelToken,
+}
+
+impl MeshOpts {
+    pub fn new(shards: usize) -> Self {
+        Self {
+            shards,
+            workers: 1,
+            pacing: Pacing::Free,
+            record_sweeps: false,
+            cancel: CancelToken::new(),
+        }
+    }
+
+    pub fn workers(mut self, w: usize) -> Self {
+        self.workers = w;
+        self
+    }
+
+    pub fn pacing(mut self, p: Pacing) -> Self {
+        self.pacing = p;
+        self
+    }
+
+    pub fn record_sweeps(mut self, record: bool) -> Self {
+        self.record_sweeps = record;
+        self
+    }
+
+    pub fn cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = token;
+        self
+    }
+}
+
 /// Run a full sharded experiment **in one process**: every shard on
 /// its own thread, but with its own sockets — the complete wire path
-/// (codec, reader/writer threads, markers, streamed Snapshot frames)
-/// minus process isolation. This is the harness the integration tests
-/// and benches use; the CLI's `speedup --processes` uses
-/// [`run_mesh_processes`] for the real thing.
+/// (codec, reader/writer threads, markers, streamed Snapshot frames,
+/// Cancel frames) minus process isolation. This is the harness the
+/// integration tests and benches use; the CLI's `speedup --processes`
+/// uses [`run_mesh_processes`] for the real thing.
 pub fn run_mesh_threads(
     cfg: &ExperimentConfig,
-    shards: usize,
-    pacing: Pacing,
-    record_sweeps: bool,
+    opts: &MeshOpts,
 ) -> Result<ExperimentReport, String> {
-    run_mesh_threads_with(cfg, shards, pacing, record_sweeps, &mut |_: &RunEvent| {})
+    run_mesh_threads_with(cfg, opts, &mut |_: &RunEvent| {})
 }
 
 /// [`run_mesh_threads`] with a live [`RunObserver`]: shard snapshot
@@ -1203,12 +1510,11 @@ pub fn run_mesh_threads(
 /// `observer` while the mesh runs.
 pub fn run_mesh_threads_with(
     cfg: &ExperimentConfig,
-    shards: usize,
-    pacing: Pacing,
-    record_sweeps: bool,
+    opts: &MeshOpts,
     observer: &mut dyn RunObserver,
 ) -> Result<ExperimentReport, String> {
     let t_all = Instant::now();
+    let shards = opts.shards;
     let _ = ShardPlan::new(0, shards, cfg.nodes)?;
     let mut agg = StreamAggregator::new(cfg, shards)?;
     emit_started(cfg, shards, &agg, observer);
@@ -1240,6 +1546,7 @@ pub fn run_mesh_threads_with(
             let addrs = addrs.clone();
             let report_addr = report_addr.clone();
             let plan = ShardPlan { shard: s, shards, nodes: cfg.nodes };
+            let opts = opts.clone();
             handles.push(scope.spawn(move || -> Result<ShardReport, String> {
                 // connect the report stream before running, so a shard
                 // that fails is seen as an EOF by the collector instead
@@ -1250,11 +1557,17 @@ pub fn run_mesh_threads_with(
                     cfg,
                     ShardRunOpts {
                         plan,
-                        pacing,
-                        record_sweeps,
+                        pacing: opts.pacing,
+                        workers: opts.workers,
+                        record_sweeps: opts.record_sweeps,
                         listener,
                         peer_addrs: addrs,
                         report: Some(report),
+                        // each shard gets its own token: cancellation
+                        // reaches it through the Cancel frame, exactly
+                        // like a real multi-process mesh
+                        cancel: CancelToken::new(),
+                        fault_injection: None,
                     },
                 )
             }));
@@ -1266,6 +1579,7 @@ pub fn run_mesh_threads_with(
             deadline,
             &mut || Ok(()),
             observer,
+            &opts.cancel,
         );
         let shard_results: Vec<Result<ShardReport, String>> = handles
             .into_iter()
@@ -1354,11 +1668,9 @@ pub fn experiment_args(cfg: &ExperimentConfig) -> Result<Vec<String>, String> {
 pub fn run_mesh_processes(
     cfg: &ExperimentConfig,
     exe: &Path,
-    shards: usize,
-    pacing: Pacing,
-    record_sweeps: bool,
+    opts: &MeshOpts,
 ) -> Result<ExperimentReport, String> {
-    run_mesh_processes_with(cfg, exe, shards, pacing, record_sweeps, &mut |_: &RunEvent| {})
+    run_mesh_processes_with(cfg, exe, opts, &mut |_: &RunEvent| {})
 }
 
 /// [`run_mesh_processes`] with a live [`RunObserver`] fed from the
@@ -1367,12 +1679,11 @@ pub fn run_mesh_processes(
 pub fn run_mesh_processes_with(
     cfg: &ExperimentConfig,
     exe: &Path,
-    shards: usize,
-    pacing: Pacing,
-    record_sweeps: bool,
+    opts: &MeshOpts,
     observer: &mut dyn RunObserver,
 ) -> Result<ExperimentReport, String> {
     let t_all = Instant::now();
+    let shards = opts.shards;
     let _ = ShardPlan::new(0, shards, cfg.nodes)?;
     let base_args = experiment_args(cfg)?;
     let mut agg = StreamAggregator::new(cfg, shards)?;
@@ -1408,10 +1719,12 @@ pub fn run_mesh_processes_with(
             .arg("--peers")
             .arg(addrs.join(","))
             .arg("--pacing")
-            .arg(pacing.name())
+            .arg(opts.pacing.name())
+            .arg("--workers")
+            .arg(opts.workers.to_string())
             .arg("--report")
             .arg(&report_addr);
-        if record_sweeps {
+        if opts.record_sweeps {
             cmd.arg("--record-sweeps");
         }
         cmd.args(&base_args).stdin(std::process::Stdio::null());
@@ -1435,16 +1748,24 @@ pub fn run_mesh_processes_with(
     let collected = {
         // fail fast if any child dies before reporting
         let children = &mut children;
-        collect_shard_streams(&report_listener, shards, &mut agg, deadline, &mut || {
-            for (s, c) in children.iter_mut().enumerate() {
-                if let Ok(Some(status)) = c.try_wait() {
-                    if !status.success() {
-                        return Err(format!("shard {s} exited with {status}"));
+        collect_shard_streams(
+            &report_listener,
+            shards,
+            &mut agg,
+            deadline,
+            &mut || {
+                for (s, c) in children.iter_mut().enumerate() {
+                    if let Ok(Some(status)) = c.try_wait() {
+                        if !status.success() {
+                            return Err(format!("shard {s} exited with {status}"));
+                        }
                     }
                 }
-            }
-            Ok(())
-        }, observer)
+                Ok(())
+            },
+            observer,
+            &opts.cancel,
+        )
     };
     let reports = match collected {
         Ok(r) => r,
@@ -1466,16 +1787,43 @@ pub fn run_mesh_processes_with(
     Ok(report)
 }
 
+/// Resumable non-blocking frame write: push as many of
+/// `frame[progress..]` bytes as the socket accepts right now and
+/// return the new progress. Never blocks and never restarts from the
+/// beginning — a partially sent frame must be *continued*, not resent,
+/// or the receiver's framing desyncs. On a fatal error the frame is
+/// abandoned (progress jumps to `frame.len()`): the stream is broken
+/// anyway and the caller's collection loop surfaces that separately.
+fn push_frame_bytes(stream: &TcpStream, frame: &[u8], progress: usize) -> usize {
+    use std::io::Write;
+    let mut sent = progress;
+    let mut w = stream;
+    while sent < frame.len() {
+        match w.write(&frame[sent..]) {
+            Ok(0) => return frame.len(), // closed: give up
+            Ok(k) => sent += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return sent,
+            Err(_) => return frame.len(), // broken stream: give up
+        }
+    }
+    sent
+}
+
 /// Accept `shards` report-stream connections on `listener` and
 /// multiplex them until every shard has delivered its terminal
 /// [`WireMsg::Report`]: interleaved [`WireMsg::Snapshot`] frames are
 /// fed to `agg` **as they arrive** (each completed sweep is evaluated
 /// and its blocks dropped on the spot — nothing is rebuilt at the
 /// end), with arrival/sample events streamed to `observer`. `poll`
-/// runs on every idle tick so callers can watch for dead children or
-/// other abort conditions. Shared by [`run_mesh_threads_with`],
-/// [`run_mesh_processes_with`], and the `a2dwb join` subcommand
-/// (manual multi-box orchestration).
+/// runs on every pass (busy or idle) so callers can watch for dead
+/// children or trip time-based aborts. When `cancel` trips, one
+/// [`WireMsg::Cancel`] frame is written down every live stream (and
+/// any stream accepted later) — the cooperative stop that retires the
+/// old collector-teardown-only cancellation — and collection continues
+/// until every shard delivers its partial Report. Shared by
+/// [`run_mesh_threads_with`], [`run_mesh_processes_with`], and the
+/// `a2dwb join` subcommand (manual multi-box orchestration).
 pub fn collect_shard_streams(
     listener: &TcpListener,
     shards: usize,
@@ -1483,41 +1831,67 @@ pub fn collect_shard_streams(
     deadline: Instant,
     poll: &mut dyn FnMut() -> Result<(), String>,
     observer: &mut dyn RunObserver,
+    cancel: &CancelToken,
 ) -> Result<Vec<ShardReport>, String> {
     listener
         .set_nonblocking(true)
         .map_err(|e| format!("report socket nonblocking: {e}"))?;
-    // (reader, report-received, observed shard id) per accepted stream;
-    // non-blocking reads keep every stream draining concurrently, so a
-    // shard's snapshot backlog can never stall a peer behind a full
-    // socket buffer — except when that shard runs MAX_SNAPSHOT_LEAD
-    // sweeps ahead of the slowest one, where we deliberately stop
-    // reading it (TCP backpressure then paces the shard) so `pending`
-    // stays bounded under free-pacing skew.
-    let mut streams: Vec<(FrameReader<TcpStream>, bool, Option<usize>)> =
+    // (reader, report-received, observed shard id, cancel-frame send
+    // progress) per accepted stream; non-blocking reads keep every
+    // stream draining concurrently, so a shard's snapshot backlog can
+    // never stall a peer behind a full socket buffer — except when
+    // that shard runs MAX_SNAPSHOT_LEAD sweeps ahead of the slowest
+    // one, where we deliberately stop reading it (TCP backpressure
+    // then paces the shard) so `pending` stays bounded under
+    // free-pacing skew.
+    let mut streams: Vec<(FrameReader<TcpStream>, bool, Option<usize>, Option<usize>)> =
         Vec::with_capacity(shards);
     let mut reports: Vec<ShardReport> = Vec::with_capacity(shards);
+    let cancel_frame = codec::encode_cancel();
     while reports.len() < shards {
         let mut advanced = false;
+        // poll runs on EVERY pass, not just idle ones: it is how
+        // callers watch dead children and trip time-based cancellation
+        // (`join --cancel-after`), and a mesh streaming snapshots
+        // steadily would otherwise starve it indefinitely
+        poll()?;
         if streams.len() < shards {
             match listener.accept() {
                 Ok((stream, _)) => {
                     stream
                         .set_nonblocking(true)
                         .map_err(|e| format!("report stream: {e}"))?;
-                    streams.push((FrameReader::new(stream), false, None));
+                    streams.push((FrameReader::new(stream), false, None, None));
                     advanced = true;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
                 Err(e) => return Err(format!("report accept: {e}")),
             }
         }
-        for (fr, done, conn_shard) in streams.iter_mut() {
+        if cancel.is_cancelled() {
+            // Push the Cancel frame down every live stream, resuming
+            // partial writes across passes (a half-sent frame must be
+            // continued, never restarted, or the shard's reader
+            // desyncs). A shard that is already reporting needs none.
+            for (fr, done, _, cancel_progress) in streams.iter_mut() {
+                let sent = cancel_progress.unwrap_or(0);
+                if !*done && sent < cancel_frame.len() {
+                    *cancel_progress =
+                        Some(push_frame_bytes(fr.get_ref(), &cancel_frame, sent));
+                }
+            }
+        }
+        // The lead throttle bounds memory while the mesh runs; once a
+        // cancel is in flight it must lift — a cancelled straggler will
+        // never complete the sweeps the fast shard is ahead by, so a
+        // still-throttled stream would starve its own Report forever.
+        let throttled = |lead: u64| !cancel.is_cancelled() && lead >= MAX_SNAPSHOT_LEAD;
+        for (fr, done, conn_shard, _) in streams.iter_mut() {
             if *done {
                 continue;
             }
             if let Some(s) = *conn_shard {
-                if agg.lead(s) >= MAX_SNAPSHOT_LEAD {
+                if throttled(agg.lead(s)) {
                     continue; // throttled: let the slowest shard catch up
                 }
             }
@@ -1527,7 +1901,7 @@ pub fn collect_shard_streams(
                         *conn_shard = Some(shard as usize);
                         agg.on_snapshot(shard as usize, sweep, etas, observer)?;
                         advanced = true;
-                        if agg.lead(shard as usize) >= MAX_SNAPSHOT_LEAD {
+                        if throttled(agg.lead(shard as usize)) {
                             break;
                         }
                     }
@@ -1553,7 +1927,6 @@ pub fn collect_shard_streams(
             }
         }
         if !advanced {
-            poll()?;
             if Instant::now() >= deadline {
                 return Err(format!(
                     "timed out waiting for shard reports ({}/{shards})",
@@ -1604,6 +1977,9 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
         peer_addrs = vec![own_addr.clone()];
     }
     let pacing = Pacing::parse(&args.get_str("pacing", "free"))?;
+    // In-shard worker pool size: `--workers W` (the same flag the
+    // threaded executor uses; `--processes P --workers W` runs P×W).
+    let workers = args.get("workers", 1usize)?;
     // Dial the aggregator with retry: operators may start the `serve`
     // shards before `a2dwb join` is listening (a valid order when the
     // report connection was only opened at end-of-run), so keep trying
@@ -1620,10 +1996,11 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
         None => None,
     };
     eprintln!(
-        "shard {}/{} listening on {own_addr} ({} pacing, {} on {})",
+        "shard {}/{} listening on {own_addr} ({} pacing, {} workers, {} on {})",
         plan.shard,
         plan.shards,
         pacing.name(),
+        workers,
         cfg.algorithm.name(),
         cfg.topology.name(),
     );
@@ -1632,20 +2009,24 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
         ShardRunOpts {
             plan,
             pacing,
+            workers,
             record_sweeps: args.has_flag("record-sweeps"),
             listener,
             peer_addrs,
             report: report_stream,
+            cancel: CancelToken::new(),
+            fault_injection: None,
         },
     )?;
     println!(
-        "SHARD {}/{} activations={} messages={} wire_messages={} window={:.3}s",
+        "SHARD {}/{} activations={} messages={} wire_messages={} window={:.3}s{}",
         report.shard,
         plan.shards,
         report.activations,
         report.messages,
         report.wire_messages,
-        report.window_secs
+        report.window_secs,
+        if report.cancelled { " cancelled=true" } else { "" },
     );
     Ok(())
 }

@@ -1,0 +1,1123 @@
+//! The shared node-scheduling core — one worker pool for every backend.
+//!
+//! Before this layer existed the repo had two hand-rolled copies of the
+//! same machinery: [`crate::exec::threaded`] ran all m nodes on W
+//! worker threads (atomic iteration claiming, a barrier ledger for
+//! DCWB, `catch_unwind` containment), while
+//! [`crate::exec::net::shard`] ran a shard's contiguous node range on
+//! **one** thread with its own round-marker pacing. [`NodeScheduler`]
+//! is the extraction: it owns W workers over an arbitrary node range
+//! and composes with the outside world through two seams:
+//!
+//! * [`RoundGate`] — the round fence. The local executor plugs in an
+//!   in-process [`LocalGate`] (a poisonable [`PhaseBarrier`]); a DCWB
+//!   shard plugs in a composed gate (in-process barrier → cross-shard
+//!   round-marker exchange → in-process barrier, see
+//!   `exec::net::shard`); the barrier-free asynchronous algorithms run
+//!   with no phases at all. Every worker serves the gate through a
+//!   [`GateLedger`], so a worker that panics, errors, or observes
+//!   cancellation can [`GateLedger::drain`] the phases it still owes
+//!   and no peer is ever stranded at a fence.
+//! * [`SweepHooks`] — the sweep boundary. Sharded runs ship their
+//!   per-sweep η̄ block and lockstep markers from here; the local
+//!   executor uses [`NoHooks`].
+//!
+//! Iteration indices are claimed per [`ClaimOrder`]:
+//!
+//! * [`ClaimOrder::AtomicRace`] — the threaded executor's honest global
+//!   iteration counter (workers race; at `workers = 1` it degenerates
+//!   to `k = sweep·m + i`, which is why single-worker runs are exactly
+//!   reproducible);
+//! * [`ClaimOrder::Deterministic`] — `k = sweep·m + node`, the
+//!   schedule-pure assignment sharded runs need (no cross-process
+//!   counter to race on);
+//! * [`ClaimOrder::Serial`] — deterministic claims **plus** a strict
+//!   global node order enforced by an internal turn board: node `i` of
+//!   sweep `r` runs only after node `i − 1`, whichever worker owns it.
+//!   This is what makes a lockstep mesh at any `P × W` split replay the
+//!   single-process `workers = 1` trajectory bit for bit — the workers
+//!   pass a baton instead of racing, so parallel validation runs and
+//!   serial reference runs are the same schedule.
+//!
+//! Cancellation ([`CancelToken`]) is checked at every claim point;
+//! cancelled workers settle their gate ledger (or cancel the turn
+//! board) and return partial counters, so the caller can always emit a
+//! well-formed partial report. Worker panics are contained with
+//! `catch_unwind`, drain the ledger the same way, and surface as an
+//! `Err` from [`NodeScheduler::run`] — never as a wedged barrier.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::transport::{ThreadedTransport, Transport};
+use super::{activate_node, SampleCadence, StepCtx};
+use crate::algo::wbp::WbpNode;
+use crate::algo::ThetaSeq;
+use crate::coordinator::{CancelToken, ExperimentConfig};
+use crate::graph::Graph;
+use crate::measures::{NodeMeasure, Samples};
+use crate::rng::Rng64;
+
+/// Memory-safety valve for the activation-paced snapshot queue: when
+/// the evaluating thread falls behind by this many **bytes** of queued
+/// snapshots, workers shed further ones (counted and reported) instead
+/// of ballooning RSS. Sized in bytes so paper-scale instances stay
+/// bounded at the same memory as tiny ones.
+const SNAP_QUEUE_BYTES: usize = 256 << 20;
+
+// ------------------------------------------------------------ barrier
+
+/// A reusable counting barrier with **leader election** and
+/// **poisoning** — the primitive every [`RoundGate`] is built from.
+///
+/// Unlike [`std::sync::Barrier`], a poisoned `PhaseBarrier` releases
+/// every current and future waiter with the poisoning error, so a
+/// terminal failure (a dead mesh peer, a failed snapshot ship) can
+/// never leave a worker parked forever.
+pub struct PhaseBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    parties: usize,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    poison: Option<String>,
+}
+
+impl PhaseBarrier {
+    pub fn new(parties: usize) -> Self {
+        assert!(parties >= 1, "a barrier needs at least one party");
+        Self {
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0, poison: None }),
+            cv: Condvar::new(),
+            parties,
+        }
+    }
+
+    /// Block until all parties arrive. Returns `Ok(true)` for exactly
+    /// one waiter per generation (the leader — the last to arrive),
+    /// `Ok(false)` for the rest, `Err` if the barrier is poisoned.
+    pub fn wait(&self) -> Result<bool, String> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(e) = &s.poison {
+            return Err(e.clone());
+        }
+        s.arrived += 1;
+        if s.arrived == self.parties {
+            s.arrived = 0;
+            s.generation += 1;
+            drop(s);
+            self.cv.notify_all();
+            return Ok(true);
+        }
+        let gen = s.generation;
+        loop {
+            s = self.cv.wait(s).unwrap();
+            if let Some(e) = &s.poison {
+                return Err(e.clone());
+            }
+            if s.generation != gen {
+                return Ok(false);
+            }
+        }
+    }
+
+    /// Fail the barrier terminally: every current and future
+    /// [`PhaseBarrier::wait`] returns this error (first poison wins).
+    pub fn poison(&self, err: String) {
+        let mut s = self.state.lock().unwrap();
+        if s.poison.is_none() {
+            s.poison = Some(err);
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.state.lock().unwrap().poison.is_some()
+    }
+}
+
+// ------------------------------------------------------------ gate
+
+/// The pluggable round fence of a [`NodeScheduler`] run.
+///
+/// A gate exposes a fixed number of fence phases (2 per DCWB round; 1
+/// per recorded sweep for fenced asynchronous runs; 0 for barrier-free
+/// ones) that **every** worker serves in order through its
+/// [`GateLedger`]. `serve` blocks until the whole gate has passed the
+/// phase — for composed gates that includes remote shards — and runs
+/// `on_leader` exactly once per phase, on one worker, while all local
+/// workers are parked inside the fence (the scheduler uses it to
+/// assemble and ship per-sweep state blocks).
+pub trait RoundGate: Sync {
+    /// Fence phases each worker owes over the whole run (the drain
+    /// ledger's budget).
+    fn phases(&self) -> usize;
+
+    /// Serve fence phase `idx` (strictly increasing per worker).
+    fn serve(
+        &self,
+        idx: usize,
+        on_leader: &dyn Fn() -> Result<(), String>,
+    ) -> Result<(), String>;
+
+    /// True once the gate failed terminally — serving stops, nobody
+    /// blocks, and [`GateLedger::drain`] becomes a no-op.
+    fn poisoned(&self) -> bool {
+        false
+    }
+}
+
+/// In-process gate: the threaded executor's DCWB barrier, and the
+/// in-shard sweep fence of recorded free-pacing runs. Each phase is an
+/// enter-barrier / leader-work / exit-barrier triple, so `on_leader`
+/// runs while every worker is quiescent; a leader error poisons the
+/// fence and releases everyone loudly.
+pub struct LocalGate {
+    fence: PhaseBarrier,
+    phases: usize,
+}
+
+impl LocalGate {
+    pub fn new(workers: usize, phases: usize) -> Self {
+        Self { fence: PhaseBarrier::new(workers), phases }
+    }
+}
+
+impl RoundGate for LocalGate {
+    fn phases(&self) -> usize {
+        self.phases
+    }
+
+    fn serve(
+        &self,
+        _idx: usize,
+        on_leader: &dyn Fn() -> Result<(), String>,
+    ) -> Result<(), String> {
+        let leader = self.fence.wait()?;
+        if leader {
+            if let Err(e) = on_leader() {
+                self.fence.poison(e.clone());
+                return Err(e);
+            }
+        }
+        self.fence.wait()?;
+        Ok(())
+    }
+
+    fn poisoned(&self) -> bool {
+        self.fence.is_poisoned()
+    }
+}
+
+/// The no-phase gate of barrier-free runs.
+pub struct FreeGate;
+
+impl RoundGate for FreeGate {
+    fn phases(&self) -> usize {
+        0
+    }
+
+    fn serve(
+        &self,
+        _idx: usize,
+        _on_leader: &dyn Fn() -> Result<(), String>,
+    ) -> Result<(), String> {
+        Err("FreeGate has no phases to serve".into())
+    }
+}
+
+/// Ledger of one worker's progress through its gate's fence phases
+/// (the generalization of the old threaded-executor `SyncPacer`).
+///
+/// Every fence goes through [`GateLedger::wait`], so on any early exit
+/// — an error return, an observed cancellation, or a panic caught by
+/// the scheduler — [`GateLedger::drain`] can stand in for the phases
+/// still owed and no healthy peer is ever stranded at a fence. A
+/// poisoned gate stops the drain immediately: once poisoned, nobody
+/// blocks, so there is nothing left to settle.
+pub struct GateLedger<'a> {
+    gate: &'a dyn RoundGate,
+    served: Cell<usize>,
+}
+
+impl<'a> GateLedger<'a> {
+    pub fn new(gate: &'a dyn RoundGate) -> Self {
+        Self { gate, served: Cell::new(0) }
+    }
+
+    pub fn phases(&self) -> usize {
+        self.gate.phases()
+    }
+
+    pub fn served(&self) -> usize {
+        self.served.get()
+    }
+
+    /// Serve the next phase with no leader work.
+    pub fn wait(&self) -> Result<(), String> {
+        self.wait_with(&|| Ok(()))
+    }
+
+    /// Serve the next phase; `on_leader` runs on exactly one worker.
+    pub fn wait_with(
+        &self,
+        on_leader: &dyn Fn() -> Result<(), String>,
+    ) -> Result<(), String> {
+        let idx = self.served.get();
+        self.served.set(idx + 1);
+        self.gate.serve(idx, on_leader)
+    }
+
+    /// Serve every remaining phase without doing any work (no-op
+    /// leader). Best-effort: stops early if the gate is poisoned, in
+    /// which case no peer can be blocked on it anyway.
+    pub fn drain(&self) {
+        while self.served.get() < self.gate.phases() && !self.gate.poisoned() {
+            if self.wait().is_err() {
+                break;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ hooks
+
+/// Sweep-boundary hooks — how a sharded run ships trajectory blocks
+/// and pacing markers from inside the scheduler. All methods default
+/// to no-ops ([`NoHooks`] is the local executor's instantiation).
+pub trait SweepHooks: Sync {
+    /// Whether [`SweepHooks::sweep_complete`] wants the stacked η̄
+    /// block (assembling it costs a range-sized copy, so the scheduler
+    /// skips it when nobody records).
+    fn wants_blocks(&self) -> bool {
+        false
+    }
+
+    /// Block until the scheduler may start sweep `r` (the cross-shard
+    /// lockstep turn). Called once per sweep, by the worker about to
+    /// run the range's first node, only under [`ClaimOrder::Serial`].
+    fn sweep_start(&self, r: usize) -> Result<(), String> {
+        let _ = r;
+        Ok(())
+    }
+
+    /// Called exactly once after every owned node finished sweep `r`.
+    /// `block` is the stacked local η̄ state (empty when
+    /// [`SweepHooks::wants_blocks`] is false).
+    fn sweep_complete(&self, r: usize, block: &[f64]) -> Result<(), String> {
+        let _ = (r, block);
+        Ok(())
+    }
+
+    /// Called once by the scheduler when the run exits early (error or
+    /// cancellation): release any remote peer still waiting on this
+    /// range's sweep markers (e.g. broadcast a terminal marker).
+    fn drain(&self) {}
+}
+
+/// The local executor's hooks: nothing to ship, nothing to pace.
+pub struct NoHooks;
+
+impl SweepHooks for NoHooks {}
+
+// ------------------------------------------------------------ claiming
+
+/// How workers claim global iteration indices (see the
+/// [module docs](self)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClaimOrder {
+    /// Racing atomic counter — the threaded executor's global k.
+    AtomicRace,
+    /// `k = sweep·m + node` — schedule-pure, no shared counter.
+    Deterministic,
+    /// Deterministic claims plus strict global node order (baton
+    /// passing) — the lockstep validation schedule at any worker count.
+    Serial,
+}
+
+/// Transport with message counters, as the scheduler needs to total
+/// them at join time: `(messages, wire_messages)` — directed-edge
+/// deliveries and TCP frames respectively (0 wire for in-process).
+pub trait SchedTransport: Transport {
+    fn counters(&self) -> (u64, u64);
+}
+
+impl SchedTransport for ThreadedTransport<'_> {
+    fn counters(&self) -> (u64, u64) {
+        (self.messages, 0)
+    }
+}
+
+/// Test instrumentation: worker `worker` panics at the top of sweep
+/// (or DCWB round) `sweep`, letting integration tests prove the drain
+/// machinery settles live protocols. `None` on every production path.
+#[derive(Clone, Copy, Debug)]
+pub struct FailPoint {
+    pub worker: usize,
+    pub sweep: usize,
+}
+
+// ------------------------------------------------------------ turn board
+
+enum Turn {
+    Proceed,
+    Cancelled,
+}
+
+#[derive(Clone)]
+enum Halt {
+    Run,
+    Cancelled,
+    Failed(String),
+}
+
+/// Baton for [`ClaimOrder::Serial`]: `(sweep, next local index)` under
+/// a condvar. Cancellation and failure release every waiter.
+struct TurnBoard {
+    state: Mutex<TurnState>,
+    cv: Condvar,
+}
+
+struct TurnState {
+    sweep: usize,
+    next: usize,
+    halt: Halt,
+}
+
+impl TurnBoard {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(TurnState { sweep: 0, next: 0, halt: Halt::Run }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn acquire(&self, sweep: usize, li: usize) -> Result<Turn, String> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            match &s.halt {
+                Halt::Failed(e) => return Err(e.clone()),
+                Halt::Cancelled => return Ok(Turn::Cancelled),
+                Halt::Run => {}
+            }
+            if s.sweep == sweep && s.next == li {
+                return Ok(Turn::Proceed);
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    fn advance(&self, len: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.next += 1;
+        if s.next == len {
+            s.next = 0;
+            s.sweep += 1;
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    fn cancel(&self) {
+        let mut s = self.state.lock().unwrap();
+        if matches!(s.halt, Halt::Run) {
+            s.halt = Halt::Cancelled;
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    fn fail(&self, err: String) {
+        let mut s = self.state.lock().unwrap();
+        if !matches!(s.halt, Halt::Failed(_)) {
+            s.halt = Halt::Failed(err);
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+}
+
+// ------------------------------------------------------------ scheduler
+
+/// Everything a [`NodeScheduler`] needs to know about the run. The
+/// caller keeps ownership of the instance data (config, graph,
+/// measures, fault factors) and hands in references.
+pub struct SchedulerSpec<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub graph: &'a Graph,
+    pub measures: &'a [Box<dyn NodeMeasure>],
+    /// Node range this scheduler owns: the whole network for the local
+    /// executor, `plan.local()` for a shard.
+    pub range: Range<usize>,
+    /// Worker pool size W (callers clamp to the range length).
+    pub workers: usize,
+    /// Sweep budget (`⌈duration/interval⌉`).
+    pub sweeps: usize,
+    pub gamma: f64,
+    pub m_theta: usize,
+    /// DCWB (round-fenced) vs the barrier-free asynchronous pair.
+    pub sync: bool,
+    pub compensated: bool,
+    /// Per-node straggler factors, indexed by **global** node id.
+    pub node_factors: &'a [f64],
+    pub cancel: CancelToken,
+    pub order: ClaimOrder,
+    /// Queue whole-range [`SampleCadence::Activations`] snapshots for
+    /// the caller to drain (the threaded executor's metric path; off
+    /// for shards, whose trajectory ships through [`SweepHooks`]).
+    pub cadence_snapshots: bool,
+    /// Namespace for per-worker jitter RNG seeds (timing-only).
+    pub jitter_salt: u64,
+    /// Panic injection for drain tests; `None` in production.
+    pub fault_injection: Option<FailPoint>,
+}
+
+/// One queued activation-paced snapshot:
+/// `(activations, wall seconds at capture, stacked η̄ over the range)`.
+pub type QueuedSnapshot = (u64, f64, Vec<f64>);
+
+/// What a completed (or cancelled) scheduler run hands back.
+pub struct SchedOutcome {
+    /// Every owned node, in node-index order (for the caller's final
+    /// metric snapshot).
+    pub nodes: Vec<(usize, WbpNode)>,
+    pub messages: u64,
+    pub wire_messages: u64,
+    /// Total activations performed (the progress counter).
+    pub activations: u64,
+    /// Final value of the racing claim counter
+    /// ([`ClaimOrder::AtomicRace`] only; 0 otherwise).
+    pub k_claimed: usize,
+    /// Minimum sweep count any worker completed (equals the budget on
+    /// uncancelled runs; the honest common θ index under cancellation).
+    pub sweeps_done_min: usize,
+}
+
+type WorkerOut = (Vec<(usize, WbpNode)>, u64, u64, usize);
+
+/// The shared worker-pool core. See the [module docs](self) for the
+/// composition story; [`crate::exec::threaded`] and
+/// [`crate::exec::net::shard`] are its two instantiations.
+pub struct NodeScheduler<'a> {
+    spec: SchedulerSpec<'a>,
+    /// One freshest-η̄ slot per owned node (local index).
+    eta_snaps: Vec<Mutex<Vec<f64>>>,
+    progress: AtomicU64,
+    k_counter: AtomicUsize,
+    live: AtomicUsize,
+    /// Snapshots queued by workers under
+    /// [`SampleCadence::Activations`].
+    snap_queue: Mutex<Vec<QueuedSnapshot>>,
+    snap_cap: usize,
+    snap_dropped: AtomicU64,
+    t0: Instant,
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+impl<'a> NodeScheduler<'a> {
+    /// Build the scheduler and start its wall clock (construct it right
+    /// before [`NodeScheduler::run`] so `dual_wall` measures execution,
+    /// not setup).
+    pub fn new(spec: SchedulerSpec<'a>) -> Self {
+        let n = spec.cfg.support_size();
+        let len = spec.range.len();
+        let eta_snaps = (0..len).map(|_| Mutex::new(vec![0.0; n])).collect();
+        let snap_cap = (SNAP_QUEUE_BYTES / (len * n * 8).max(1)).max(16);
+        Self {
+            spec,
+            eta_snaps,
+            progress: AtomicU64::new(0),
+            k_counter: AtomicUsize::new(0),
+            live: AtomicUsize::new(0),
+            snap_queue: Mutex::new(Vec::new()),
+            snap_cap,
+            snap_dropped: AtomicU64::new(0),
+            t0: Instant::now(),
+        }
+    }
+
+    /// Deal node states round-robin onto `workers` buckets, preserving
+    /// list order within each bucket (position `p` goes to bucket
+    /// `p % workers` — the dealing both executors always used).
+    pub fn deal_round_robin(
+        nodes: Vec<(usize, WbpNode, Rng64)>,
+        workers: usize,
+    ) -> Vec<Vec<(usize, WbpNode, Rng64)>> {
+        let mut per_worker: Vec<Vec<(usize, WbpNode, Rng64)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (pos, item) in nodes.into_iter().enumerate() {
+            per_worker[pos % workers].push(item);
+        }
+        per_worker
+    }
+
+    /// Workers still running (the monitor loop's liveness probe).
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+
+    /// Activations completed so far (claim-loop counter — this is what
+    /// drives decoupled progress heartbeats).
+    pub fn progress(&self) -> u64 {
+        self.progress.load(Ordering::Relaxed)
+    }
+
+    /// When the scheduler's wall clock started.
+    pub fn started_at(&self) -> Instant {
+        self.t0
+    }
+
+    /// Copy the current η̄ state of every owned node into `out`
+    /// (row-major by local index; `out.len() == range.len() · n`).
+    pub fn stack_etas(&self, out: &mut [f64]) {
+        let n = self.spec.cfg.support_size();
+        for (j, slot) in self.eta_snaps.iter().enumerate() {
+            out[j * n..(j + 1) * n].copy_from_slice(&slot.lock().unwrap());
+        }
+    }
+
+    fn stack_etas_vec(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.spec.range.len() * self.spec.cfg.support_size()];
+        self.stack_etas(&mut out);
+        out
+    }
+
+    /// Drain the queued activation-paced snapshots (the caller
+    /// evaluates them; see [`SampleCadence::Activations`]).
+    pub fn take_snapshots(&self) -> Vec<QueuedSnapshot> {
+        std::mem::take(&mut *self.snap_queue.lock().unwrap())
+    }
+
+    /// Snapshots shed past the queue cap (reported after the run).
+    pub fn snapshots_dropped(&self) -> u64 {
+        self.snap_dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot_cap(&self) -> usize {
+        self.snap_cap
+    }
+
+    /// Run the pool to completion (or cancellation): spawn W workers
+    /// over the dealt node states, call `monitor` once on the driving
+    /// thread while they run (capture the scheduler and loop on
+    /// [`NodeScheduler::live_workers`] to sample mid-run state), join,
+    /// and total the counters. Any worker error — including a
+    /// contained panic — surfaces as `Err` after every other worker
+    /// has been joined and, on early exit, [`SweepHooks::drain`] has
+    /// released remote peers.
+    pub fn run<T, F>(
+        &self,
+        per_worker: Vec<Vec<(usize, WbpNode, Rng64)>>,
+        make_transport: &F,
+        gate: &dyn RoundGate,
+        hooks: &dyn SweepHooks,
+        monitor: &mut dyn FnMut(),
+    ) -> Result<SchedOutcome, String>
+    where
+        T: SchedTransport,
+        F: Fn(usize) -> T + Sync,
+    {
+        let spec = &self.spec;
+        if per_worker.len() != spec.workers {
+            return Err(format!(
+                "scheduler dealt {} buckets for {} workers",
+                per_worker.len(),
+                spec.workers
+            ));
+        }
+        let turn = match spec.order {
+            ClaimOrder::Serial if !spec.sync => Some(TurnBoard::new()),
+            _ => None,
+        };
+        self.live.store(spec.workers, Ordering::Release);
+
+        let mut nodes: Vec<(usize, WbpNode)> = Vec::with_capacity(spec.range.len());
+        let mut messages = 0u64;
+        let mut wire_messages = 0u64;
+        let mut sweeps_done_min = spec.sweeps;
+        let run_res: Result<(), String> = std::thread::scope(|s| {
+            let turn = turn.as_ref();
+            let mut handles = Vec::with_capacity(spec.workers);
+            for (w, mine) in per_worker.into_iter().enumerate() {
+                handles.push(s.spawn(move || {
+                    self.worker_loop(w, mine, make_transport(w), gate, hooks, turn)
+                }));
+            }
+            monitor();
+            let mut first_err: Option<String> = None;
+            for h in handles {
+                match h.join() {
+                    Err(_) => {
+                        first_err
+                            .get_or_insert_with(|| "scheduler worker died unrecoverably".into());
+                    }
+                    Ok(Err(e)) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    Ok(Ok((mine, msgs, wires, done))) => {
+                        messages += msgs;
+                        wire_messages += wires;
+                        sweeps_done_min = sweeps_done_min.min(done);
+                        nodes.extend(mine);
+                    }
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        });
+        if run_res.is_err() || spec.cancel.is_cancelled() {
+            // release any remote peer still waiting on this range's
+            // markers before reporting the outcome
+            hooks.drain();
+        }
+        run_res?;
+        nodes.sort_by_key(|&(i, _)| i);
+        Ok(SchedOutcome {
+            nodes,
+            messages,
+            wire_messages,
+            activations: self.progress(),
+            k_claimed: self.k_counter.load(Ordering::Relaxed),
+            sweeps_done_min,
+        })
+    }
+
+    /// One worker thread: runs [`NodeScheduler::worker_body`] with
+    /// panic containment. Whatever goes wrong, the worker first honors
+    /// every gate phase it still owes (and poisons the turn board so
+    /// serial peers fail loudly instead of waiting forever), then
+    /// reports the failure.
+    fn worker_loop<T: SchedTransport>(
+        &self,
+        w: usize,
+        mine: Vec<(usize, WbpNode, Rng64)>,
+        transport: T,
+        gate: &dyn RoundGate,
+        hooks: &dyn SweepHooks,
+        turn: Option<&TurnBoard>,
+    ) -> Result<WorkerOut, String> {
+        let ledger = GateLedger::new(gate);
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.worker_body(w, mine, transport, &ledger, hooks, turn)
+        }))
+        .unwrap_or_else(|payload| {
+            Err(format!("worker {w} panicked: {}", panic_message(payload.as_ref())))
+        });
+        if let Err(e) = &out {
+            if let Some(t) = turn {
+                t.fail(e.clone());
+            }
+            ledger.drain();
+        }
+        self.live.fetch_sub(1, Ordering::Release);
+        out
+    }
+
+    fn sleep_compute(&self, i: usize, jitter: &mut Rng64) {
+        super::sleep_compute(self.spec.cfg.compute_time, self.spec.node_factors[i], jitter);
+    }
+
+    fn maybe_fail(&self, w: usize, sweep: usize) {
+        if let Some(fp) = self.spec.fault_injection {
+            if fp.worker == w && fp.sweep == sweep {
+                panic!("injected fault: worker {w} at sweep {sweep}");
+            }
+        }
+    }
+
+    /// Count one finished activation; under activation-paced sampling
+    /// the worker crossing a multiple of k snapshots the whole owned
+    /// range (its own node's fresh η̄ is already in `eta_snaps`).
+    fn bump_progress(&self) {
+        let acts = self.progress.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.spec.cadence_snapshots {
+            return;
+        }
+        if let SampleCadence::Activations(k) = self.spec.cfg.sample_cadence {
+            if acts % k == 0 {
+                // cheap early check so shedding skips the capture cost
+                // entirely in the overload regime…
+                if self.snap_queue.lock().unwrap().len() >= self.snap_cap {
+                    self.snap_dropped.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                let snap = self.stack_etas_vec();
+                let wall = self.t0.elapsed().as_secs_f64();
+                // …and a re-check under the push lock keeps the cap
+                // exact when several workers race past the early check.
+                let mut queue = self.snap_queue.lock().unwrap();
+                if queue.len() >= self.snap_cap {
+                    drop(queue);
+                    self.snap_dropped.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    queue.push((acts, wall, snap));
+                }
+            }
+        }
+    }
+
+    /// Assemble the owned η̄ block (if anyone records) and hand it to
+    /// the hooks — the body of every sweep-completion leader section.
+    ///
+    /// Skipped entirely once cancellation is observed: a peer worker
+    /// may have reached this fence through its ledger *drain* without
+    /// finishing the sweep, so the stacked block could mix sweep
+    /// states — and a sweep shipped past the eventual `sweeps_done`
+    /// minimum would also un-sort the aggregator's partial series.
+    /// The check is race-free: a drain-arrival implies the token was
+    /// set before the fence completed, and the leader section runs
+    /// after every worker has arrived. (Any remote peer waiting on
+    /// the skipped marker is released by [`SweepHooks::drain`].)
+    fn sweep_complete(&self, hooks: &dyn SweepHooks, r: usize) -> Result<(), String> {
+        if self.spec.cancel.is_cancelled() {
+            return Ok(());
+        }
+        if hooks.wants_blocks() {
+            let block = self.stack_etas_vec();
+            hooks.sweep_complete(r, &block)
+        } else {
+            hooks.sweep_complete(r, &[])
+        }
+    }
+
+    /// The worker's actual run. Returns its nodes (for the caller's
+    /// final metric snapshot), its transport counters, and how many
+    /// sweeps it completed (shorter than the budget only under
+    /// cancellation). All fence traffic goes through `ledger` so
+    /// [`NodeScheduler::worker_loop`] (or the cancellation path) can
+    /// settle the protocol on early exit.
+    fn worker_body<T: SchedTransport>(
+        &self,
+        w: usize,
+        mut mine: Vec<(usize, WbpNode, Rng64)>,
+        mut transport: T,
+        ledger: &GateLedger<'_>,
+        hooks: &dyn SweepHooks,
+        turn: Option<&TurnBoard>,
+    ) -> Result<WorkerOut, String> {
+        let spec = &self.spec;
+        let cfg = spec.cfg;
+        let n = cfg.support_size();
+        let m = cfg.nodes;
+        let start = spec.range.start;
+        let range_len = spec.range.len();
+        let mut oracle = cfg
+            .backend
+            .build(cfg.samples_per_activation, n)
+            .map_err(|e| format!("worker {w}: oracle build failed: {e}"))?;
+        let mut theta = ThetaSeq::new(spec.m_theta);
+        let mut samples = Samples::empty();
+        let mut point = vec![0.0; n];
+        // Mix the salt so worker streams are disjoint ACROSS schedulers
+        // too (shard s / worker w must not collide with shard s+1 /
+        // worker w-1, or cross-shard compute jitter would correlate);
+        // at salt 0 this reduces to the classic `seed ^ JTTR ^ w`.
+        let mut jitter = Rng64::new(
+            cfg.seed
+                ^ 0x4A54_5452
+                ^ (spec.jitter_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ w as u64),
+        );
+        let ctx = StepCtx {
+            beta: cfg.beta,
+            gamma: spec.gamma,
+            batch: cfg.samples_per_activation,
+            m_theta: spec.m_theta,
+            diag: cfg.diag,
+        };
+
+        let mut sweeps_done = 0usize;
+        if spec.sync {
+            // DCWB: two gate phases per round — broadcasts of round r+1
+            // must not overtake a slow peer still collecting round r.
+            for r in 0..spec.sweeps {
+                self.maybe_fail(w, r);
+                if spec.cancel.is_cancelled() {
+                    // settle the remaining fence phases (peers may
+                    // notice the flag a round later — the drain keeps
+                    // them paced, exactly like a failed worker)
+                    ledger.drain();
+                    break;
+                }
+                for (i, node, rng) in mine.iter_mut() {
+                    let i = *i;
+                    self.sleep_compute(i, &mut jitter);
+                    node.eval_point(&mut theta, r, true, &mut point);
+                    spec.measures[i].draw_samples_into(rng, ctx.batch, &mut samples);
+                    let rows = spec.measures[i].cost_rows(&samples);
+                    oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
+                    transport.broadcast(i, r as u64 + 1, Arc::new(node.own_grad.clone()));
+                }
+                ledger.wait()?;
+                for (i, node, _) in mine.iter_mut() {
+                    let i = *i;
+                    transport.collect(i, node);
+                    node.apply_update(
+                        &mut theta,
+                        r,
+                        ctx.m_theta,
+                        ctx.gamma,
+                        spec.graph.degree(i),
+                        ctx.diag,
+                    );
+                    node.eta(&mut theta, r + 1, &mut point);
+                    self.eta_snaps[i - start].lock().unwrap().copy_from_slice(&point);
+                    self.bump_progress();
+                }
+                ledger.wait_with(&|| self.sweep_complete(hooks, r))?;
+                sweeps_done = r + 1;
+            }
+        } else if let Some(turn) = turn {
+            // Serial (lockstep validation): strict global node order —
+            // the baton makes a P × W split the same schedule as the
+            // single-worker reference run.
+            'serial: for sweep in 0..spec.sweeps {
+                self.maybe_fail(w, sweep);
+                for (i, node, rng) in mine.iter_mut() {
+                    let i = *i;
+                    let li = i - start;
+                    match turn.acquire(sweep, li)? {
+                        Turn::Cancelled => break 'serial,
+                        Turn::Proceed => {}
+                    }
+                    if spec.cancel.is_cancelled() {
+                        turn.cancel();
+                        break 'serial;
+                    }
+                    if li == 0 {
+                        if let Err(e) = hooks.sweep_start(sweep) {
+                            turn.fail(e.clone());
+                            return Err(e);
+                        }
+                    }
+                    let k = sweep * m + i;
+                    self.sleep_compute(i, &mut jitter);
+                    activate_node(
+                        node,
+                        i,
+                        k,
+                        spec.compensated,
+                        &mut theta,
+                        &ctx,
+                        spec.graph.degree(i),
+                        spec.measures[i].as_ref(),
+                        rng,
+                        &mut samples,
+                        &mut point,
+                        oracle.as_mut(),
+                        &mut transport,
+                    );
+                    node.eta(&mut theta, k + 1, &mut point);
+                    self.eta_snaps[li].lock().unwrap().copy_from_slice(&point);
+                    self.bump_progress();
+                    if li == range_len - 1 {
+                        if let Err(e) = self.sweep_complete(hooks, sweep) {
+                            turn.fail(e.clone());
+                            return Err(e);
+                        }
+                    }
+                    turn.advance(range_len);
+                }
+                sweeps_done = sweep + 1;
+            }
+        } else {
+            // A²DWB / A²DWBN: barrier-free. Claim an iteration index,
+            // activate, publish, move on. (With a recording sweep
+            // fence, the leader ships the block at each sweep edge.)
+            'sweeps: for sweep in 0..spec.sweeps {
+                self.maybe_fail(w, sweep);
+                for (i, node, rng) in mine.iter_mut() {
+                    if spec.cancel.is_cancelled() {
+                        ledger.drain();
+                        break 'sweeps;
+                    }
+                    let i = *i;
+                    let k = match spec.order {
+                        ClaimOrder::AtomicRace => {
+                            self.k_counter.fetch_add(1, Ordering::Relaxed)
+                        }
+                        _ => sweep * m + i,
+                    };
+                    self.sleep_compute(i, &mut jitter);
+                    activate_node(
+                        node,
+                        i,
+                        k,
+                        spec.compensated,
+                        &mut theta,
+                        &ctx,
+                        spec.graph.degree(i),
+                        spec.measures[i].as_ref(),
+                        rng,
+                        &mut samples,
+                        &mut point,
+                        oracle.as_mut(),
+                        &mut transport,
+                    );
+                    node.eta(&mut theta, k + 1, &mut point);
+                    self.eta_snaps[i - start].lock().unwrap().copy_from_slice(&point);
+                    self.bump_progress();
+                }
+                if ledger.phases() > 0 {
+                    ledger.wait_with(&|| self.sweep_complete(hooks, sweep))?;
+                }
+                sweeps_done = sweep + 1;
+            }
+        }
+
+        let (messages, wire_messages) = transport.counters();
+        Ok((
+            mine.into_iter().map(|(i, node, _)| (i, node)).collect(),
+            messages,
+            wire_messages,
+            sweeps_done,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn phase_barrier_elects_exactly_one_leader_per_generation() {
+        let b = PhaseBarrier::new(2);
+        let leaders = AtomicU32::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    for _ in 0..3 {
+                        if b.wait().unwrap() {
+                            leaders.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn phase_barrier_poison_releases_current_and_future_waiters() {
+        let b = PhaseBarrier::new(2);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| b.wait());
+            // give the waiter a moment to park, then poison
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            b.poison("boom".into());
+            let err = h.join().unwrap().unwrap_err();
+            assert!(err.contains("boom"));
+        });
+        // poisoned barriers never block again
+        assert!(b.wait().unwrap_err().contains("boom"));
+        assert!(b.is_poisoned());
+    }
+
+    #[test]
+    fn gate_ledger_drain_settles_the_protocol_for_a_failed_worker() {
+        // One worker does a single phase of real work then "fails"; its
+        // drain must keep serving fence phases so the healthy worker
+        // (which owes 4) is never stranded. A regression here deadlocks
+        // the test rather than passing silently.
+        let gate = LocalGate::new(2, 4);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let ledger = GateLedger::new(&gate);
+                ledger.wait().unwrap();
+                ledger.drain();
+                assert_eq!(ledger.served(), 4);
+            });
+            s.spawn(|| {
+                let ledger = GateLedger::new(&gate);
+                for _ in 0..4 {
+                    ledger.wait().unwrap();
+                }
+                ledger.drain(); // completed worker: drain is a no-op
+                assert_eq!(ledger.served(), 4);
+            });
+        });
+    }
+
+    #[test]
+    fn local_gate_leader_error_poisons_the_fence() {
+        let gate = LocalGate::new(2, 2);
+        let (r1, r2) = std::thread::scope(|s| {
+            let h1 = s.spawn(|| gate.serve(0, &|| Err("ship failed".into())));
+            let h2 = s.spawn(|| gate.serve(0, &|| Err("ship failed".into())));
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        // exactly one closure ran (the leader's); both workers err out
+        assert!(r1.is_err() && r2.is_err());
+        assert!(gate.poisoned());
+        // drains against a poisoned gate terminate immediately
+        let ledger = GateLedger::new(&gate);
+        ledger.drain();
+        assert_eq!(ledger.served(), 0);
+    }
+
+    #[test]
+    fn turn_board_serializes_the_global_node_order() {
+        // worker A owns positions {0, 2}, worker B owns {1, 3}; over
+        // two sweeps the observed order must be 0,1,2,3,0,1,2,3.
+        let board = TurnBoard::new();
+        let log: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            let (board, log) = (&board, &log);
+            for owned in [[0usize, 2], [1, 3]] {
+                s.spawn(move || {
+                    for sweep in 0..2 {
+                        for li in owned {
+                            match board.acquire(sweep, li).unwrap() {
+                                Turn::Proceed => {}
+                                Turn::Cancelled => return,
+                            }
+                            log.lock().unwrap().push((sweep, li));
+                            board.advance(4);
+                        }
+                    }
+                });
+            }
+        });
+        let got = log.into_inner().unwrap();
+        let want: Vec<(usize, usize)> =
+            (0..2).flat_map(|r| (0..4).map(move |i| (r, i))).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn turn_board_cancel_releases_waiters() {
+        let board = TurnBoard::new();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| board.acquire(0, 3));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            board.cancel();
+            assert!(matches!(h.join().unwrap().unwrap(), Turn::Cancelled));
+        });
+    }
+
+    #[test]
+    fn free_gate_has_no_phases_and_drain_is_a_noop() {
+        let gate = FreeGate;
+        let ledger = GateLedger::new(&gate);
+        ledger.drain();
+        assert_eq!(ledger.served(), 0);
+    }
+}

@@ -1,19 +1,28 @@
 //! Real-thread wall-clock executor — the paper's claim on actual cores.
 //!
-//! The m nodes are dealt round-robin onto `workers` OS threads. Each
+//! The m nodes are dealt round-robin onto `workers` OS threads by the
+//! shared scheduling core ([`crate::exec::sched::NodeScheduler`] over
+//! the full node range `0..m`); this module keeps only what is
+//! specific to the single-process backend — the metric monitor, the
+//! final common-θ snapshot, and the [`RunEvent`] bookkeeping. Each
 //! worker owns its nodes' `(ū, v̄)` state, its own θ-table, RNG streams
 //! and oracle; gradients travel through the shared freshest-wins
 //! [`MailboxGrid`] (one slot per directed edge — the concurrent
 //! analogue of the simulator's keep-freshest mailbox).
 //!
 //! * **A²DWB / A²DWBN** run barrier-free: a worker claims the next
-//!   global iteration index from an atomic counter, activates, publishes
-//!   and immediately moves on — no thread ever waits for another, which
-//!   is precisely the waiting overhead the paper removes.
-//! * **DCWB** runs with a [`std::sync::Barrier`] per round phase
-//!   (compute/publish, then collect/update), so every round is paced by
-//!   the slowest worker — the synchronous baseline's cost, now made of
-//!   real wall-clock waiting instead of simulated delay maxima.
+//!   global iteration index from an atomic counter
+//!   ([`ClaimOrder::AtomicRace`]), activates, publishes and immediately
+//!   moves on — no thread ever waits for another, which is precisely
+//!   the waiting overhead the paper removes.
+//! * **DCWB** runs against an in-process [`LocalGate`] with two fence
+//!   phases per round (compute/publish, then collect/update), so every
+//!   round is paced by the slowest worker — the synchronous baseline's
+//!   cost, now made of real wall-clock waiting instead of simulated
+//!   delay maxima. A panicking, failing, or cancelled worker settles
+//!   the phases it still owes through the scheduler's
+//!   [`GateLedger`](crate::exec::sched::GateLedger) drain, so no peer
+//!   is ever stranded at a fence.
 //!
 //! Both modes execute the same **iteration budget** the simulator would
 //! issue in `duration` virtual seconds (`⌈duration/interval⌉` sweeps of
@@ -43,287 +52,35 @@
 //! virtual-equivalent timestamp of a sample is `activations/m ·
 //! interval` so threaded and simulated curves share an x-axis, and
 //! `dual_wall` carries the honest wall-clock axis.
+//!
+//! Progress heartbeats: with
+//! [`progress_every`](crate::coordinator::ExperimentConfig::progress_every)
+//! set, the monitor emits a standalone [`RunEvent::Progress`] every
+//! time the scheduler's claim-loop counter crosses another multiple of
+//! k — decoupled from metric evaluation, so a service can watch a
+//! paper-scale run's liveness without paying for a single oracle pass.
+//! Unset (the default), progress events ride along with metric samples
+//! exactly as before.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Barrier, Mutex};
 use std::time::{Duration, Instant};
 
+use super::sched::{
+    ClaimOrder, FreeGate, LocalGate, NoHooks, NodeScheduler, RoundGate, SchedulerSpec,
+};
 use super::transport::{MailboxGrid, ThreadedTransport};
-use super::{activate_node, initial_exchange, SampleCadence, StepCtx};
+use super::{initial_exchange, SampleCadence};
 use crate::algo::wbp::WbpNode;
 use crate::algo::{AlgorithmKind, ThetaSeq};
 use crate::coordinator::session::{RunCtl, RunEvent, RunTotals};
-use crate::coordinator::{CancelToken, ExperimentConfig, MetricsEvaluator};
+use crate::coordinator::{ExperimentConfig, MetricsEvaluator};
 use crate::graph::Graph;
-use crate::measures::{NodeMeasure, Samples};
+use crate::measures::Samples;
 use crate::rng::Rng64;
 
-/// Read-only run context shared by every worker thread.
-#[derive(Clone, Copy)]
-struct Shared<'a> {
-    cfg: &'a ExperimentConfig,
-    graph: &'a Graph,
-    measures: &'a [Box<dyn NodeMeasure>],
-    grid: &'a MailboxGrid,
-    eta_snaps: &'a [Mutex<Vec<f64>>],
-    /// (activations, wall seconds, stacked η̄) snapshots queued by
-    /// workers under [`SampleCadence::Activations`]; drained and
-    /// evaluated by the spawning thread.
-    snap_queue: &'a Mutex<Vec<(u64, f64, Vec<f64>)>>,
-    /// Snapshot-count cap derived from [`SNAP_QUEUE_BYTES`] and the
-    /// instance size m·n.
-    snap_cap: usize,
-    /// Snapshots shed past the cap (reported after the run).
-    snap_dropped: &'a AtomicU64,
-    /// Run start — workers stamp snapshots against it so `dual_wall`
-    /// carries capture time, not evaluation time.
-    t0: Instant,
-    k_counter: &'a AtomicUsize,
-    progress: &'a AtomicU64,
-    /// Cooperative early-stop flag (the session's
-    /// [`CancelToken`]): workers poll it at activation/round
-    /// granularity and wind down through the normal join path.
-    cancel: &'a CancelToken,
-    barrier: &'a Barrier,
-    node_factors: &'a [f64],
-    gamma: f64,
-    m_theta: usize,
-    sweeps: usize,
-    sync: bool,
-    compensated: bool,
-}
-
-/// Memory-safety valve for the activation-paced snapshot queue: when
-/// the evaluating thread falls behind by this many **bytes** of queued
-/// snapshots (each m·n f64), workers shed further ones (counted and
-/// reported) instead of ballooning RSS — never reached at test scales,
-/// only by `Activations(small k)` × huge-budget runs. Sized in bytes so
-/// paper-scale instances (m=500, n=784 ⇒ ~3 MB per snapshot) stay
-/// bounded at the same memory as tiny ones.
-const SNAP_QUEUE_BYTES: usize = 256 << 20;
-
-/// Count one finished activation; under activation-paced sampling the
-/// worker crossing a multiple of k snapshots the whole network state
-/// (its own node's fresh η̄ is already in `eta_snaps`).
-fn bump_progress(sh: &Shared<'_>, n: usize) {
-    let acts = sh.progress.fetch_add(1, Ordering::Relaxed) + 1;
-    if let SampleCadence::Activations(k) = sh.cfg.sample_cadence {
-        if acts % k == 0 {
-            // cheap early check so shedding skips the m·n capture cost
-            // entirely in the overload regime…
-            if sh.snap_queue.lock().unwrap().len() >= sh.snap_cap {
-                sh.snap_dropped.fetch_add(1, Ordering::Relaxed);
-                return;
-            }
-            let m = sh.cfg.nodes;
-            let mut snap = vec![0.0; m * n];
-            for (j, slot) in sh.eta_snaps.iter().enumerate() {
-                snap[j * n..(j + 1) * n].copy_from_slice(&slot.lock().unwrap());
-            }
-            let wall = sh.t0.elapsed().as_secs_f64();
-            // …and a re-check under the push lock keeps the cap exact
-            // when several workers race past the early check at once.
-            let mut queue = sh.snap_queue.lock().unwrap();
-            if queue.len() >= sh.snap_cap {
-                drop(queue);
-                sh.snap_dropped.fetch_add(1, Ordering::Relaxed);
-            } else {
-                queue.push((acts, wall, snap));
-            }
-        }
-    }
-}
-
-/// Simulated compute cost of one activation — delegates to the
-/// backend-shared [`super::sleep_compute`] (one jitter/straggler
-/// formula for the threaded and sharded executors).
-fn sleep_compute(sh: &Shared<'_>, i: usize, jitter: &mut Rng64) {
-    super::sleep_compute(sh.cfg.compute_time, sh.node_factors[i], jitter);
-}
-
-/// Ledger of this worker's progress through the DCWB barrier
-/// protocol: every wait goes through [`SyncPacer::wait`], so on any
-/// early exit — an error return or a panic caught by [`worker_loop`]
-/// — [`SyncPacer::drain`] can stand in for the remaining phases and
-/// no peer is ever stranded at a [`Barrier::wait`] (std barriers have
-/// no poisoning). Async runs have `total = 0` and drain is a no-op.
-struct SyncPacer<'a> {
-    barrier: &'a Barrier,
-    /// Waits this worker owes over the whole run (2 per DCWB round).
-    total: usize,
-    waited: std::cell::Cell<usize>,
-}
-
-impl<'a> SyncPacer<'a> {
-    fn new(barrier: &'a Barrier, total: usize) -> Self {
-        Self { barrier, total, waited: std::cell::Cell::new(0) }
-    }
-
-    fn wait(&self) {
-        self.waited.set(self.waited.get() + 1);
-        self.barrier.wait();
-    }
-
-    /// Serve every remaining barrier phase without doing any work.
-    fn drain(&self) {
-        while self.waited.get() < self.total {
-            self.wait();
-        }
-    }
-}
-
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
-    payload
-        .downcast_ref::<&str>()
-        .copied()
-        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
-        .unwrap_or("non-string panic payload")
-}
-
-/// One worker thread: runs [`worker_body`] with panic containment.
-/// Whatever goes wrong — an error return (oracle build failure) or a
-/// panic anywhere in the activation path — the worker first honors
-/// every barrier phase it still owes its DCWB peers, then reports the
-/// failure; the monitor loop sees every handle finish and `run`
-/// returns the error instead of spinning on a wedged barrier forever.
-fn worker_loop(
-    sh: Shared<'_>,
-    worker_id: usize,
-    mine: Vec<(usize, WbpNode, Rng64)>,
-) -> Result<(Vec<(usize, WbpNode)>, u64, usize), String> {
-    let pacer =
-        SyncPacer::new(sh.barrier, if sh.sync { 2 * sh.sweeps } else { 0 });
-    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        worker_body(&sh, worker_id, mine, &pacer)
-    }))
-    .unwrap_or_else(|payload| {
-        Err(format!("worker {worker_id} panicked: {}", panic_message(payload.as_ref())))
-    });
-    if out.is_err() {
-        pacer.drain();
-    }
-    out
-}
-
-/// The worker's actual run. Returns its nodes (for the final metric
-/// snapshot), the number of messages it published, and how many sweeps
-/// it completed (shorter than the budget only under cancellation). All
-/// barrier traffic goes through `pacer` so [`worker_loop`] (or the
-/// cancellation path, which drains the remaining DCWB phases exactly
-/// like a failed worker would) can settle the protocol on early exit.
-fn worker_body(
-    sh: &Shared<'_>,
-    worker_id: usize,
-    mut mine: Vec<(usize, WbpNode, Rng64)>,
-    pacer: &SyncPacer<'_>,
-) -> Result<(Vec<(usize, WbpNode)>, u64, usize), String> {
-    let n = sh.cfg.support_size();
-    let mut oracle = sh
-        .cfg
-        .backend
-        .build(sh.cfg.samples_per_activation, n)
-        .map_err(|e| format!("worker {worker_id}: oracle build failed: {e}"))?;
-    let mut theta = ThetaSeq::new(sh.m_theta);
-    let mut samples = Samples::empty();
-    let mut point = vec![0.0; n];
-    let mut transport = ThreadedTransport::new(sh.grid);
-    let mut jitter = Rng64::new(sh.cfg.seed ^ 0x4A54_5452 ^ worker_id as u64);
-    let ctx = StepCtx {
-        beta: sh.cfg.beta,
-        gamma: sh.gamma,
-        batch: sh.cfg.samples_per_activation,
-        m_theta: sh.m_theta,
-        diag: sh.cfg.diag,
-    };
-
-    let mut sweeps_done = 0usize;
-    if sh.sync {
-        // DCWB: two barriers per round — broadcasts of round r+1 must
-        // not overtake a slow neighbor still collecting round r.
-        for r in 0..sh.sweeps {
-            if sh.cancel.is_cancelled() {
-                // settle the remaining barrier phases (peers may notice
-                // the flag a round later — drain keeps them paced, the
-                // exact mechanism a failed worker uses)
-                pacer.drain();
-                break;
-            }
-            for (i, node, rng) in mine.iter_mut() {
-                let i = *i;
-                sleep_compute(sh, i, &mut jitter);
-                node.eval_point(&mut theta, r, true, &mut point);
-                sh.measures[i].draw_samples_into(rng, ctx.batch, &mut samples);
-                let rows = sh.measures[i].cost_rows(&samples);
-                oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
-                transport.broadcast(
-                    i,
-                    r as u64 + 1,
-                    std::sync::Arc::new(node.own_grad.clone()),
-                );
-            }
-            pacer.wait();
-            for (i, node, _) in mine.iter_mut() {
-                let i = *i;
-                transport.collect(i, node);
-                node.apply_update(
-                    &mut theta,
-                    r,
-                    ctx.m_theta,
-                    ctx.gamma,
-                    sh.graph.degree(i),
-                    ctx.diag,
-                );
-                node.eta(&mut theta, r + 1, &mut point);
-                sh.eta_snaps[i].lock().unwrap().copy_from_slice(&point);
-                bump_progress(sh, n);
-            }
-            pacer.wait();
-            sweeps_done = r + 1;
-        }
-    } else {
-        // A²DWB / A²DWBN: barrier-free. Claim a global iteration index,
-        // activate, publish, move on.
-        'sweeps: for sweep in 0..sh.sweeps {
-            for (i, node, rng) in mine.iter_mut() {
-                if sh.cancel.is_cancelled() {
-                    break 'sweeps;
-                }
-                let i = *i;
-                let k = sh.k_counter.fetch_add(1, Ordering::Relaxed);
-                sleep_compute(sh, i, &mut jitter);
-                activate_node(
-                    node,
-                    i,
-                    k,
-                    sh.compensated,
-                    &mut theta,
-                    &ctx,
-                    sh.graph.degree(i),
-                    sh.measures[i].as_ref(),
-                    rng,
-                    &mut samples,
-                    &mut point,
-                    oracle.as_mut(),
-                    &mut transport,
-                );
-                node.eta(&mut theta, k + 1, &mut point);
-                sh.eta_snaps[i].lock().unwrap().copy_from_slice(&point);
-                bump_progress(sh, n);
-            }
-            sweeps_done = sweep + 1;
-        }
-    }
-
-    Ok((
-        mine.into_iter().map(|(i, node, _)| (i, node)).collect(),
-        transport.messages,
-        sweeps_done,
-    ))
-}
-
 /// Run one experiment on the threaded executor, streaming progress
-/// through `ctl` (metric samples from the monitor thread, a terminal
-/// [`RunEvent::Finished`]) and honoring its cancel flag.
+/// through `ctl` (metric samples from the monitor thread, decoupled
+/// heartbeats when configured, a terminal [`RunEvent::Finished`]) and
+/// honoring its cancel flag.
 pub(crate) fn run(
     cfg: &ExperimentConfig,
     graph: &Graph,
@@ -348,7 +105,7 @@ pub(crate) fn run(
     let workers = workers.min(m);
     let measures = cfg.measure.build_network(m, cfg.seed);
     // Prevalidate the oracle backend here so worker threads cannot fail
-    // after the barrier topology is committed.
+    // after the gate topology is committed.
     let mut init_oracle = cfg.backend.build(cfg.samples_per_activation, n)?;
     let lambda_max = graph.lambda_max();
     let gamma = cfg.gamma_scale / (lambda_max / cfg.beta);
@@ -374,7 +131,7 @@ pub(crate) fn run(
 
     if !sync {
         // Algorithm 3 line 1. (DCWB has no initial exchange: its first
-        // round computes and delivers fresh gradients behind a barrier,
+        // round computes and delivers fresh gradients behind a fence,
         // exactly like the simulated baseline.)
         let mut theta0 = ThetaSeq::new(m_theta);
         let mut transport = ThreadedTransport::new(&grid);
@@ -393,22 +150,15 @@ pub(crate) fn run(
         messages += transport.messages;
     }
 
-    // Deal nodes round-robin onto workers.
-    let mut per_worker: Vec<Vec<(usize, WbpNode, Rng64)>> =
-        (0..workers).map(|_| Vec::new()).collect();
-    for (i, (node, rng)) in nodes.into_iter().zip(node_rngs).enumerate() {
-        per_worker[i % workers].push((i, node, rng));
-    }
+    let dealt: Vec<(usize, WbpNode, Rng64)> = nodes
+        .into_iter()
+        .zip(node_rngs)
+        .enumerate()
+        .map(|(i, (node, rng))| (i, node, rng))
+        .collect();
+    let per_worker = NodeScheduler::deal_round_robin(dealt, workers);
 
-    let k_counter = AtomicUsize::new(0);
-    let progress = AtomicU64::new(0);
-    let barrier = Barrier::new(workers);
-    let eta_snaps: Vec<Mutex<Vec<f64>>> =
-        (0..m).map(|_| Mutex::new(vec![0.0; n])).collect();
-    let snap_queue: Mutex<Vec<(u64, f64, Vec<f64>)>> = Mutex::new(Vec::new());
-    let snap_dropped = AtomicU64::new(0);
     let cancel_token = ctl.token();
-
     let mut evaluator =
         MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
     let mut etas = vec![0.0; m * n];
@@ -419,34 +169,42 @@ pub(crate) fn run(
         ctl.sample(0.0, 0.0, dual, consensus, spread, 0, 0);
     }
 
-    // The wall clock starts after metric setup and the t=0 evaluation —
-    // dual_wall must measure experiment runtime, not evaluator
-    // construction (which at paper scale does a full m-node oracle pass).
-    let wall_t0 = Instant::now();
-    let shared = Shared {
+    // The scheduler's wall clock starts at construction — after metric
+    // setup and the t=0 evaluation — so dual_wall measures experiment
+    // runtime, not evaluator construction (which at paper scale does a
+    // full m-node oracle pass).
+    let sched = NodeScheduler::new(SchedulerSpec {
         cfg,
         graph,
         measures: &measures,
-        grid: &grid,
-        eta_snaps: &eta_snaps,
-        snap_queue: &snap_queue,
-        snap_cap: (SNAP_QUEUE_BYTES / (m * n * 8)).max(16),
-        snap_dropped: &snap_dropped,
-        t0: wall_t0,
-        k_counter: &k_counter,
-        progress: &progress,
-        cancel: &cancel_token,
-        barrier: &barrier,
-        node_factors: &node_factors,
+        range: 0..m,
+        workers,
+        sweeps,
         gamma,
         m_theta,
-        sweeps,
         sync,
         compensated,
+        node_factors: &node_factors,
+        cancel: cancel_token.clone(),
+        order: ClaimOrder::AtomicRace,
+        cadence_snapshots: true,
+        jitter_salt: 0,
+        fault_injection: None,
+    });
+    // DCWB pays two in-process fence phases per round; the barrier-free
+    // pair runs against the (phase-less) FreeGate.
+    let local_gate;
+    let free_gate;
+    let gate: &dyn RoundGate = if sync {
+        local_gate = LocalGate::new(workers, 2 * sweeps);
+        &local_gate
+    } else {
+        free_gate = FreeGate;
+        &free_gate
     };
+    let wall_t0 = sched.started_at();
 
-    let mut nodes_back: Vec<Option<WbpNode>> = (0..m).map(|_| None).collect();
-
+    let rounds_of = |acts: u64| if sync { acts / m as u64 } else { 0 };
     // Drain and evaluate worker-queued activation-paced snapshots.
     // Each batch is sorted by activation count, and snapshots at or
     // below the last evaluated count are dropped: with several workers
@@ -458,12 +216,11 @@ pub(crate) fn run(
     // walls can still interleave slightly, hence the `last_wall` clamp.
     // `dual_wall` uses the worker-side capture time, not the (possibly
     // much later) evaluation time.
-    let rounds_of = |acts: u64| if sync { acts / m as u64 } else { 0 };
     let drain_snaps = |evaluator: &mut MetricsEvaluator,
                        ctl: &mut RunCtl<'_>,
                        last_acts: &mut u64,
                        last_wall: &mut f64| {
-        let mut batch = std::mem::take(&mut *snap_queue.lock().unwrap());
+        let mut batch = sched.take_snapshots();
         batch.sort_by_key(|&(acts, _, _)| acts);
         for (acts, wall, snap) in batch {
             if acts <= *last_acts {
@@ -480,22 +237,33 @@ pub(crate) fn run(
     };
     let mut cadence_last_acts = 0u64;
     let mut cadence_last_wall = 0.0f64;
-    let mut sweeps_done_min = sweeps;
 
-    std::thread::scope(|s| -> Result<(), String> {
-        let mut handles = Vec::with_capacity(workers);
-        for (w, mine) in per_worker.into_iter().enumerate() {
-            handles.push(s.spawn(move || worker_loop(shared, w, mine)));
-        }
-
-        // Metric sampling while the workers run, paced per the cadence.
+    // Metric sampling (and decoupled heartbeats) while the workers run
+    // (captures `sched` — the scheduler calls this once, on the
+    // spawning thread, while the pool executes).
+    let sched_ref = &sched;
+    let mut monitor = || {
+        let sched = sched_ref;
         let wall_every = match cfg.sample_cadence {
             SampleCadence::WallClockMillis(ms) => Some(Duration::from_millis(ms)),
             SampleCadence::Activations(_) => None,
         };
         let mut last_sample = Instant::now();
-        while handles.iter().any(|h| !h.is_finished()) {
+        let mut heartbeat_marks = 0u64;
+        while sched.live_workers() > 0 {
             std::thread::sleep(Duration::from_millis(2));
+            if let Some(every) = cfg.progress_every {
+                // decoupled heartbeat: one Progress event per crossing
+                // of the claim-loop counter (collapsed per tick)
+                let acts = sched.progress();
+                if acts / every > heartbeat_marks {
+                    heartbeat_marks = acts / every;
+                    ctl.emit(RunEvent::Progress {
+                        activations: acts,
+                        rounds: rounds_of(acts),
+                    });
+                }
+            }
             let Some(sample_every) = wall_every else {
                 drain_snaps(
                     &mut evaluator,
@@ -509,11 +277,9 @@ pub(crate) fn run(
                 continue;
             }
             last_sample = Instant::now();
-            for (i, snap) in eta_snaps.iter().enumerate() {
-                etas[i * n..(i + 1) * n].copy_from_slice(&snap.lock().unwrap());
-            }
+            sched.stack_etas(&mut etas);
             let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
-            let acts = progress.load(Ordering::Relaxed);
+            let acts = sched.progress();
             // clamp to the horizon: `sweeps` rounds `duration/interval`,
             // so the raw product can overshoot and un-sort the series
             let t_equiv =
@@ -528,21 +294,16 @@ pub(crate) fn run(
                 rounds_of(acts),
             );
         }
+    };
 
-        for h in handles {
-            // worker panics are caught inside worker_loop (after the
-            // barrier ledger is settled) and surface as Err here
-            let joined =
-                h.join().map_err(|_| "threaded worker died unrecoverably".to_string())?;
-            let (mine, msgs, sweeps_done) = joined?;
-            messages += msgs;
-            sweeps_done_min = sweeps_done_min.min(sweeps_done);
-            for (i, node) in mine {
-                nodes_back[i] = Some(node);
-            }
-        }
-        Ok(())
-    })?;
+    let outcome = sched.run(
+        per_worker,
+        &|_w| ThreadedTransport::new(&grid),
+        gate,
+        &NoHooks,
+        &mut monitor,
+    )?;
+    messages += outcome.messages;
     // The run window closes when the last worker finishes — recorded
     // before the final metric evaluation below so `dual_wall` (and the
     // speedup ratios derived from its last timestamp) measure the
@@ -552,13 +313,13 @@ pub(crate) fn run(
     // Snapshots queued after the monitor's last pass (all of them, when
     // workers outpace the 2 ms drain tick) land before the horizon point.
     drain_snaps(&mut evaluator, ctl, &mut cadence_last_acts, &mut cadence_last_wall);
-    let dropped = snap_dropped.load(Ordering::Relaxed);
+    let dropped = sched.snapshots_dropped();
     if dropped > 0 {
         eprintln!(
             "warn: activation-paced sampling shed {dropped} snapshots \
              (queue cap {} for this m·n); increase \
              SampleCadence::Activations(k) for this budget",
-            shared.snap_cap
+            sched.snapshot_cap()
         );
     }
 
@@ -567,11 +328,11 @@ pub(crate) fn run(
     // reflect the work actually completed (the minimum sweep any worker
     // reached keeps the index common across nodes).
     let cancelled = cancel_token.is_cancelled();
-    let acts_done = progress.load(Ordering::Relaxed);
+    let acts_done = outcome.activations;
     let k_final = if sync {
-        sweeps_done_min
+        outcome.sweeps_done_min
     } else {
-        k_counter.load(Ordering::Relaxed).min(acts_done as usize)
+        outcome.k_claimed.min(acts_done as usize)
     };
     let t_end = if cancelled {
         (acts_done as f64 / m as f64 * cfg.activation_interval).min(cfg.duration)
@@ -579,13 +340,12 @@ pub(crate) fn run(
         cfg.duration
     };
     let mut theta_final = ThetaSeq::new(m_theta);
-    for (i, slot) in nodes_back.iter().enumerate() {
-        let node = slot.as_ref().expect("worker returned every node");
+    for &(i, ref node) in &outcome.nodes {
         node.eta(&mut theta_final, k_final.max(1), &mut point);
         etas[i * n..(i + 1) * n].copy_from_slice(&point);
     }
     let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
-    let rounds_done = if sync { sweeps_done_min as u64 } else { 0 };
+    let rounds_done = if sync { outcome.sweeps_done_min as u64 } else { 0 };
     ctl.sample(t_end, run_window, dual, consensus, spread, acts_done, rounds_done);
 
     ctl.emit(RunEvent::Finished(RunTotals {
@@ -602,34 +362,4 @@ pub(crate) fn run(
     }));
     debug_assert!(cancelled || acts_done == budget as u64);
     Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn sync_pacer_drain_settles_the_protocol_for_a_failed_worker() {
-        // One worker does a single round of real work then "fails";
-        // its drain must keep serving barrier phases so the healthy
-        // worker (which owes 4 waits) is never stranded. A regression
-        // here deadlocks the test rather than passing silently.
-        let barrier = Barrier::new(2);
-        std::thread::scope(|s| {
-            s.spawn(|| {
-                let p = SyncPacer::new(&barrier, 4);
-                p.wait();
-                p.drain();
-                assert_eq!(p.waited.get(), 4);
-            });
-            s.spawn(|| {
-                let p = SyncPacer::new(&barrier, 4);
-                for _ in 0..4 {
-                    p.wait();
-                }
-                p.drain(); // completed worker: drain is a no-op
-                assert_eq!(p.waited.get(), 4);
-            });
-        });
-    }
 }

@@ -42,11 +42,15 @@
 //!   actual hardware (`a2dwb speedup`, `benches/exec_threads.rs`).
 //!
 //! Both drive the same node-local state machine (`algo::wbp`) through
-//! the same [`exec::Transport`] seam, so the algorithms exist once.
+//! the same [`exec::Transport`] seam, so the algorithms exist once —
+//! and every real-hardware worker pool is one implementation too: the
+//! [`exec::sched`] scheduling core (worker pools over node ranges,
+//! pluggable round gates with a drain ledger, serial lockstep batons).
 //!
 //! Past one process, [`exec::net`] shards the network across OS
 //! processes connected by TCP (`a2dwb serve` / `a2dwb speedup
-//! --processes P`): intra-shard edges stay on the in-process mailbox
+//! --processes P --workers W`, scaling P×W): intra-shard edges stay on
+//! the in-process mailbox
 //! fast path, cross-shard gradients travel as stamped wire frames, and
 //! the freshest-wins invariant — receivers keep only the highest
 //! iteration stamp per directed edge, making delivery idempotent and

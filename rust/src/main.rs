@@ -20,8 +20,8 @@
 //! is in flight. Unknown flags are rejected loudly.
 
 use a2dwb::cli::Args;
-use a2dwb::coordinator::session::{RunEvent, RunObserver};
-use a2dwb::exec::net::{self, Pacing, StreamAggregator};
+use a2dwb::coordinator::session::{CancelToken, RunEvent, RunObserver};
+use a2dwb::exec::net::{self, MeshOpts, Pacing, StreamAggregator};
 use a2dwb::exec::{ExecutorSpec, SampleCadence};
 use a2dwb::graph::{Graph, TopologySpec};
 use a2dwb::metrics::{ascii_summary, write_csv};
@@ -59,9 +59,9 @@ fn main() {
             eprintln!("  --progress  (stream metric samples while the run executes; also join)");
             eprintln!("  --out results/run.csv  (CSV of the metric series)");
             eprintln!("multi-process (see ARCHITECTURE.md):");
-            eprintln!("  speedup --processes P          spawn P shard processes over loopback TCP");
-            eprintln!("  serve --shard i/of --listen A --peers A0,..,Ap [--report ADDR]");
-            eprintln!("  join  --listen A --shards P    stream shard snapshots + aggregate");
+            eprintln!("  speedup --processes P --workers W   P shard processes x W-thread pools (PxW)");
+            eprintln!("  serve --shard i/of --listen A --peers A0,..,Ap [--workers W] [--report ADDR]");
+            eprintln!("  join  --listen A --shards P [--cancel-after S]  stream, aggregate, cancel");
             2
         }
     };
@@ -131,7 +131,11 @@ fn cmd_speedup(args: &Args) -> i32 {
         cfg.compute_time = 0.0005;
     }
     if processes >= 2 {
-        return cmd_speedup_processes(&cfg, processes);
+        // in-shard pool width: explicit --workers W only (the threads
+        // path's default of 4 would silently turn P shards into P×4)
+        let mesh_workers =
+            if args.get_opt("workers").is_some() { workers_arg.max(1) } else { 1 };
+        return cmd_speedup_processes(&cfg, processes, mesh_workers);
     }
     let workers = match cfg.executor {
         ExecutorSpec::Threads { workers } => workers,
@@ -176,14 +180,15 @@ fn cmd_speedup(args: &Args) -> i32 {
     0
 }
 
-/// `speedup --processes P`: spawn P shard child processes (`serve`)
-/// exchanging gradients over loopback TCP, run the async-vs-sync pair
-/// free-running, then demonstrate the wire layer's fidelity: a
-/// lockstep 2+-shard mesh must reproduce the single-process
+/// `speedup --processes P --workers W`: spawn P shard child processes
+/// (`serve`), each running its local nodes on a W-thread worker pool
+/// (P×W workers total) over loopback TCP; run the async-vs-sync pair
+/// free-running, then demonstrate the layer's fidelity: a lockstep
+/// P-shard × W-worker mesh must reproduce the single-process
 /// `workers = 1` A²DWB dual trajectory **bit-for-bit** — with the
 /// trajectory streamed as incremental Snapshot frames while the mesh
 /// runs.
-fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
+fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize, workers: usize) -> i32 {
     let exe = match std::env::current_exe() {
         Ok(p) => p,
         Err(e) => {
@@ -193,14 +198,15 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
     };
     println!(
         "== cross-process speedup: a2dwb vs dcwb, {} nodes on {processes} shard \
-         processes (loopback TCP), equal budget ==",
+         processes x {workers} workers (loopback TCP), equal budget ==",
         cfg.nodes
     );
     let mut pair = Vec::new();
     for alg in [AlgorithmKind::A2dwb, AlgorithmKind::Dcwb] {
         let mut c = cfg.clone();
         c.algorithm = alg;
-        match net::run_mesh_processes(&c, &exe, processes, Pacing::Free, false) {
+        match net::run_mesh_processes(&c, &exe, &MeshOpts::new(processes).workers(workers))
+        {
             Ok(r) => {
                 println!("{}", r.summary());
                 pair.push(r);
@@ -213,8 +219,8 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
     }
     let (a, s) = (&pair[0], &pair[1]);
     println!(
-        "SPEEDUP processes shards={processes} a2dwb={:.3}s dcwb={:.3}s -> {:.2}x \
-         (run window; wire frames: a2dwb {} dcwb {})",
+        "SPEEDUP processes shards={processes} workers={workers} a2dwb={:.3}s \
+         dcwb={:.3}s -> {:.2}x (run window; wire frames: a2dwb {} dcwb {})",
         a.run_window_seconds(),
         s.run_window_seconds(),
         s.run_window_seconds() / a.run_window_seconds().max(1e-12),
@@ -222,7 +228,7 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
         s.wire_messages,
     );
 
-    // Fidelity check: lockstep mesh vs single-process single-worker.
+    // Fidelity check: lockstep P×W mesh vs single-process single-worker.
     let mut pcfg = cfg.clone();
     pcfg.algorithm = AlgorithmKind::A2dwb;
     let mut snapshots_seen = 0u64;
@@ -234,9 +240,10 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
     let mesh = match net::run_mesh_processes_with(
         &pcfg,
         &exe,
-        processes,
-        Pacing::Lockstep,
-        true,
+        &MeshOpts::new(processes)
+            .workers(workers)
+            .pacing(Pacing::Lockstep)
+            .record_sweeps(true),
         &mut count_snaps,
     ) {
         Ok(r) => r,
@@ -259,7 +266,7 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize) -> i32 {
         && series_bits_equal(&mesh.consensus, &reference.consensus)
         && series_bits_equal(&mesh.primal_spread, &reference.primal_spread);
     println!(
-        "PARITY lockstep shards={processes} vs threads:1 -> {} \
+        "PARITY lockstep shards={processes} workers={workers} vs threads:1 -> {} \
          ({} trajectory points from {snapshots_seen} streamed snapshot frames, \
          final dual {:.9} vs {:.9})",
         if ok { "bit-identical" } else { "MISMATCH" },
@@ -302,13 +309,26 @@ fn cmd_serve(args: &Args) -> i32 {
 /// hand (potentially on other machines).
 fn cmd_join(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
-        args.reject_unknown(&known_flags(&["shards", "listen", "timeout", "progress"]))?;
+        args.reject_unknown(&known_flags(&[
+            "shards",
+            "listen",
+            "timeout",
+            "progress",
+            "cancel-after",
+        ]))?;
         let cfg = ExperimentBuilder::from_cli_args(args, args.has_flag("mnist"))?.config()?;
         let shards = args.get("shards", 2usize)?;
         let listen = args.get_str("listen", "127.0.0.1:7700");
         let listener = std::net::TcpListener::bind(&listen)
             .map_err(|e| format!("binding {listen}: {e}"))?;
         let timeout = args.get("timeout", 600.0)?;
+        // --cancel-after SECS: cooperative mesh stop — a Cancel frame
+        // goes down every shard's report stream and the shards reply
+        // with well-formed partial reports (protocol v3).
+        let cancel_after: Option<f64> = match args.get_opt("cancel-after") {
+            Some(s) => Some(s.parse().map_err(|e| format!("--cancel-after: {e}"))?),
+            None => None,
+        };
         println!(
             "join: streaming {shards} shard reports on {} (timeout {timeout}s)",
             listener.local_addr().map_err(|e| e.to_string())?
@@ -321,13 +341,23 @@ fn cmd_join(args: &Args) -> i32 {
         } else {
             Box::new(|_: &RunEvent| {})
         };
+        let cancel = CancelToken::new();
+        let poll_token = cancel.clone();
         let reports = net::collect_shard_streams(
             &listener,
             shards,
             &mut agg,
             deadline,
-            &mut || Ok(()),
+            &mut || {
+                if let Some(secs) = cancel_after {
+                    if t0.elapsed().as_secs_f64() >= secs {
+                        poll_token.cancel();
+                    }
+                }
+                Ok(())
+            },
             observer.as_mut(),
+            &cancel,
         )?;
         let mut report = agg.finish(reports)?;
         report.wall_seconds = t0.elapsed().as_secs_f64();

@@ -1,20 +1,27 @@
 //! The socket-transport contract of `a2dwb::exec::net`:
 //!
-//! * the wire layer must move gradients **without perturbing a bit** —
-//!   a lockstep 2-shard (and 3-shard) loopback-TCP mesh at one worker
-//!   per shard replays the single-process `Threads { workers: 1 }`
-//!   A²DWB run bit-for-bit, trajectory included;
-//! * DCWB's cross-process round token preserves the barrier semantics
-//!   exactly, so its result is bit-identical at *any* pacing;
+//! * the wire layer (and the in-shard worker pool) must move gradients
+//!   **without perturbing a bit** — a lockstep loopback-TCP mesh at
+//!   any P×W split (2×1, 3×1, 2×2 below) replays the single-process
+//!   `Threads { workers: 1 }` A²DWB run bit-for-bit, trajectory
+//!   included;
+//! * DCWB's cross-process round token — now the composed
+//!   barrier→marker→barrier `MeshGate` over the worker pool —
+//!   preserves the barrier semantics exactly, so its result is
+//!   bit-identical at *any* pacing and worker count, and an in-shard
+//!   worker panic drains the ledger instead of wedging the mesh;
 //! * free-running meshes (the production mode) converge to the same
 //!   destination as the simulator within the racy-schedule tolerance
 //!   the threaded executor is held to;
+//! * a `Cancel` frame down the report stream stops a running mesh
+//!   cooperatively with a well-formed partial report (protocol v3);
 //! * a mesh whose shards disagree on the experiment must die loudly in
 //!   the handshake, not corrupt each other's mailboxes.
 
 use std::net::TcpListener;
 
-use a2dwb::exec::net::{self, Pacing, ShardPlan, ShardRunOpts};
+use a2dwb::exec::net::{self, MeshOpts, Pacing, ShardPlan, ShardRunOpts};
+use a2dwb::exec::FailPoint;
 use a2dwb::prelude::*;
 
 fn tiny(alg: AlgorithmKind) -> ExperimentConfig {
@@ -47,7 +54,11 @@ fn lockstep_two_shard_mesh_is_bit_identical_to_single_process() {
         ..cfg.clone()
     })
     .unwrap();
-    let mesh = net::run_mesh_threads(&cfg, 2, Pacing::Lockstep, true).unwrap();
+    let mesh = net::run_mesh_threads(
+        &cfg,
+        &MeshOpts::new(2).pacing(Pacing::Lockstep).record_sweeps(true),
+    )
+    .unwrap();
 
     assert_eq!(
         series_bits(&mesh.dual_objective),
@@ -86,7 +97,11 @@ fn lockstep_three_shard_mesh_is_bit_identical_to_single_process() {
         ..cfg.clone()
     })
     .unwrap();
-    let mesh = net::run_mesh_threads(&cfg, 3, Pacing::Lockstep, true).unwrap();
+    let mesh = net::run_mesh_threads(
+        &cfg,
+        &MeshOpts::new(3).pacing(Pacing::Lockstep).record_sweeps(true),
+    )
+    .unwrap();
     assert_eq!(series_bits(&mesh.dual_objective), series_bits(&single.dual_objective));
     assert_eq!(mesh.barycenter, single.barycenter);
     assert_eq!(mesh.messages, single.messages);
@@ -94,17 +109,52 @@ fn lockstep_three_shard_mesh_is_bit_identical_to_single_process() {
 }
 
 #[test]
+fn lockstep_two_shard_two_worker_mesh_is_bit_identical_to_single_process() {
+    // THE P×W invariant (acceptance criterion of the scheduler
+    // refactor): under lockstep pacing the in-shard pool passes a
+    // serial baton, so 2 shards × 2 workers is the same schedule — and
+    // therefore the same bits, full dual trajectory included — as the
+    // single-process workers=1 reference.
+    let cfg = tiny(AlgorithmKind::A2dwb);
+    let single = run_experiment(&ExperimentConfig {
+        executor: ExecutorSpec::Threads { workers: 1 },
+        sample_cadence: SampleCadence::Activations(cfg.nodes as u64),
+        ..cfg.clone()
+    })
+    .unwrap();
+    let mesh = net::run_mesh_threads(
+        &cfg,
+        &MeshOpts::new(2)
+            .workers(2)
+            .pacing(Pacing::Lockstep)
+            .record_sweeps(true),
+    )
+    .unwrap();
+    assert_eq!(
+        series_bits(&mesh.dual_objective),
+        series_bits(&single.dual_objective),
+        "P×W lockstep dual trajectory must replay workers=1 bit-for-bit"
+    );
+    assert_eq!(series_bits(&mesh.consensus), series_bits(&single.consensus));
+    assert_eq!(series_bits(&mesh.primal_spread), series_bits(&single.primal_spread));
+    assert_eq!(mesh.barycenter, single.barycenter);
+    assert_eq!(mesh.messages, single.messages);
+    assert_eq!(mesh.activations, single.activations);
+}
+
+#[test]
 fn dcwb_round_token_matches_in_process_barriers_bit_for_bit() {
     // DCWB is fully fenced, so unlike the async pair its destination
-    // is schedule-independent: the mesh (any pacing) must equal the
-    // single-process run exactly.
+    // is schedule-independent: the mesh — here with a 2-wide in-shard
+    // worker pool behind the composed MeshGate — must equal the
+    // single-process run exactly at any pacing and worker count.
     let cfg = tiny(AlgorithmKind::Dcwb);
     let single = run_experiment(&ExperimentConfig {
         executor: ExecutorSpec::Threads { workers: 1 },
         ..cfg.clone()
     })
     .unwrap();
-    let mesh = net::run_mesh_threads(&cfg, 2, Pacing::Free, false).unwrap();
+    let mesh = net::run_mesh_threads(&cfg, &MeshOpts::new(2).workers(2)).unwrap();
     assert_eq!(
         mesh.final_dual_objective().to_bits(),
         single.final_dual_objective().to_bits()
@@ -118,9 +168,10 @@ fn dcwb_round_token_matches_in_process_barriers_bit_for_bit() {
 
 #[test]
 fn free_running_mesh_converges_like_the_simulator() {
+    // the production mode at P×W: 2 shards × 2 racing workers each
     let cfg = tiny(AlgorithmKind::A2dwb);
     let sim = run_experiment(&cfg).unwrap();
-    let mesh = net::run_mesh_threads(&cfg, 2, Pacing::Free, false).unwrap();
+    let mesh = net::run_mesh_threads(&cfg, &MeshOpts::new(2).workers(2)).unwrap();
 
     let sim_first = sim.dual_objective.first_value().unwrap();
     let sim_final = sim.final_dual_objective();
@@ -169,10 +220,13 @@ fn mismatched_shard_configs_fail_the_handshake() {
                 ShardRunOpts {
                     plan: ShardPlan::new(0, 2, cfg0.nodes).unwrap(),
                     pacing: Pacing::Free,
+                    workers: 1,
                     record_sweeps: false,
                     listener: l0,
                     peer_addrs: a0,
                     report: None,
+                    cancel: CancelToken::new(),
+                    fault_injection: None,
                 },
             )
         });
@@ -182,10 +236,13 @@ fn mismatched_shard_configs_fail_the_handshake() {
                 ShardRunOpts {
                     plan: ShardPlan::new(1, 2, cfg1.nodes).unwrap(),
                     pacing: Pacing::Free,
+                    workers: 1,
                     record_sweeps: false,
                     listener: l1,
                     peer_addrs: a1,
                     report: None,
+                    cancel: CancelToken::new(),
+                    fault_injection: None,
                 },
             )
         });
@@ -195,6 +252,109 @@ fn mismatched_shard_configs_fail_the_handshake() {
     assert!(r1.is_err(), "shard 1 accepted a mismatched peer: {r1:?}");
     let msg = format!("{} / {}", r0.unwrap_err(), r1.unwrap_err());
     assert!(msg.contains("mismatch"), "unexpected errors: {msg}");
+}
+
+#[test]
+fn dcwb_in_shard_worker_panic_drains_the_mesh_ledger() {
+    // Shard 0's worker 1 panics at the top of round 1. Its gate ledger
+    // must keep serving the composed MeshGate — marker exchanges
+    // included — so shard 1 finishes every round and returns cleanly,
+    // while shard 0 surfaces the contained panic as an error. A
+    // regression wedges the mesh (and then fails on the board's
+    // timeout) instead of passing silently.
+    let cfg = tiny(AlgorithmKind::Dcwb);
+    let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addrs =
+        vec![l0.local_addr().unwrap().to_string(), l1.local_addr().unwrap().to_string()];
+    let (r0, r1) = std::thread::scope(|s| {
+        let a0 = addrs.clone();
+        let a1 = addrs.clone();
+        let cfg0 = cfg.clone();
+        let cfg1 = cfg.clone();
+        let h0 = s.spawn(move || {
+            net::run_shard(
+                &cfg0,
+                ShardRunOpts {
+                    plan: ShardPlan::new(0, 2, cfg0.nodes).unwrap(),
+                    pacing: Pacing::Free,
+                    workers: 2,
+                    record_sweeps: false,
+                    listener: l0,
+                    peer_addrs: a0,
+                    report: None,
+                    cancel: CancelToken::new(),
+                    fault_injection: Some(FailPoint { worker: 1, sweep: 1 }),
+                },
+            )
+        });
+        let h1 = s.spawn(move || {
+            net::run_shard(
+                &cfg1,
+                ShardRunOpts {
+                    plan: ShardPlan::new(1, 2, cfg1.nodes).unwrap(),
+                    pacing: Pacing::Free,
+                    workers: 2,
+                    record_sweeps: false,
+                    listener: l1,
+                    peer_addrs: a1,
+                    report: None,
+                    cancel: CancelToken::new(),
+                    fault_injection: None,
+                },
+            )
+        });
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let err = r0.unwrap_err();
+    assert!(err.contains("panicked"), "unexpected shard-0 error: {err}");
+    let healthy = r1.expect("healthy shard must not be stranded by a peer's drain");
+    let sweeps = (cfg.duration / cfg.activation_interval).round() as u64;
+    assert_eq!(healthy.rounds, sweeps, "healthy shard must finish every round");
+    assert!(!healthy.cancelled);
+}
+
+#[test]
+fn cancel_frame_stops_a_running_mesh_with_a_well_formed_partial() {
+    // ~2.4 s of simulated compute at full budget; the observer trips
+    // the token after a few streamed sweeps, the collector turns it
+    // into a Cancel frame down each shard's report stream (protocol
+    // v3), and the shards reply with honest partial reports instead of
+    // being torn down.
+    let mut cfg = tiny(AlgorithmKind::A2dwb);
+    cfg.duration = 60.0;
+    cfg.compute_time = 0.002;
+    let budget =
+        (cfg.duration / cfg.activation_interval).round() as u64 * cfg.nodes as u64;
+    let cancel = CancelToken::new();
+    let trip = cancel.clone();
+    let mut samples = 0u32;
+    let report = net::run_mesh_threads_with(
+        &cfg,
+        &MeshOpts::new(2).workers(2).record_sweeps(true).cancel(cancel),
+        &mut |ev: &RunEvent| {
+            if matches!(ev, RunEvent::MetricSample { .. }) {
+                samples += 1;
+                if samples == 4 {
+                    trip.cancel();
+                }
+            }
+        },
+    )
+    .unwrap();
+    assert!(report.cancelled, "report must be marked cancelled");
+    assert!(report.activations > 0, "cancel landed before any work");
+    assert!(
+        report.activations < budget,
+        "cancel had no effect: {} of {budget} activations ran",
+        report.activations
+    );
+    for w in report.dual_objective.points.windows(2) {
+        assert!(w[1].0 >= w[0].0, "non-monotone partial series: {:?} {:?}", w[0], w[1]);
+    }
+    assert!(report.final_dual_objective().is_finite());
+    let s: f64 = report.barycenter.iter().sum();
+    assert!((s - 1.0).abs() < 1e-6, "partial barycenter sum {s}");
 }
 
 #[test]
@@ -220,9 +380,7 @@ fn streamed_snapshot_frames_feed_the_observer_and_match_the_report() {
     let mut finished = 0u32;
     let report = net::run_mesh_threads_with(
         &cfg,
-        shards,
-        Pacing::Lockstep,
-        true,
+        &MeshOpts::new(shards).pacing(Pacing::Lockstep).record_sweeps(true),
         &mut |ev: &RunEvent| match ev {
             RunEvent::Started { .. } => started += 1,
             RunEvent::ShardSnapshot { shard, sweep } => snapshots.push((*shard, *sweep)),

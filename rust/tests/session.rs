@@ -58,6 +58,7 @@ fn every_cli_flag_round_trips_through_the_builder() {
         "--backend", "native",
         "--executor", "threads:3",
         "--paper-literal-diag",
+        "--progress-every", "25",
     ]);
     let from_cli = ExperimentConfig::from_cli_args(&args, false).unwrap();
     let from_builder = ExperimentBuilder::gaussian()
@@ -82,6 +83,7 @@ fn every_cli_flag_round_trips_through_the_builder() {
         .backend(OracleBackendSpec::Native)
         .executor(ExecutorSpec::Threads { workers: 3 })
         .diag(DiagCoef::PaperLiteral)
+        .progress_every(25)
         .config()
         .unwrap();
     assert_eq!(format!("{from_cli:?}"), format!("{from_builder:?}"));
@@ -164,9 +166,18 @@ fn unknown_flags_are_rejected_by_the_shared_accept_list() {
         "--workers", "2",
         "--executor", "threads",
         "--paper-literal-diag",
+        "--progress-every", "10",
     ]);
     args.reject_unknown(ExperimentConfig::CLI_FLAGS).unwrap();
     ExperimentConfig::from_cli_args(&args, false).unwrap();
+}
+
+#[test]
+fn progress_every_zero_is_rejected() {
+    assert!(tiny(AlgorithmKind::A2dwb).progress_every(0).build().is_err());
+    let args = parse(&["gaussian", "--progress-every", "0"]);
+    let cfg = ExperimentConfig::from_cli_args(&args, false).unwrap();
+    assert!(run_experiment(&cfg).is_err());
 }
 
 // ------------------------------------------------------- validation
@@ -230,6 +241,75 @@ fn observer_sees_the_exact_series_the_report_carries() {
         .unwrap();
     assert_eq!((started, finished), (1, 1));
     assert_eq!(streamed.points, report.dual_objective.points);
+}
+
+// ------------------------------------------------------- heartbeats
+
+#[test]
+fn progress_heartbeats_are_decoupled_from_metric_samples() {
+    // Baseline (progress_every unset): progress events ride along with
+    // metric samples only — exactly one Progress per MetricSample.
+    let mut base_samples = 0u64;
+    let mut base_progress = 0u64;
+    tiny(AlgorithmKind::A2dwb)
+        .build()
+        .unwrap()
+        .run_with(&mut |ev: &RunEvent| match ev {
+            RunEvent::MetricSample { .. } => base_samples += 1,
+            RunEvent::Progress { .. } => base_progress += 1,
+            _ => {}
+        })
+        .unwrap();
+    assert_eq!(base_progress, base_samples, "default: one Progress per sample");
+
+    // With progress_every(k) on the deterministic simulator: exactly
+    // one extra standalone heartbeat per k activations, and not a
+    // single additional metric evaluation.
+    let every = 50u64;
+    let mut samples = 0u64;
+    let mut progress = 0u64;
+    let report = tiny(AlgorithmKind::A2dwb)
+        .progress_every(every)
+        .build()
+        .unwrap()
+        .run_with(&mut |ev: &RunEvent| match ev {
+            RunEvent::MetricSample { .. } => samples += 1,
+            RunEvent::Progress { .. } => progress += 1,
+            _ => {}
+        })
+        .unwrap();
+    assert_eq!(samples, base_samples, "heartbeats must not change sampling");
+    assert_eq!(
+        progress,
+        samples + report.activations / every,
+        "one standalone heartbeat per {every} activations \
+         ({} activations total)",
+        report.activations
+    );
+}
+
+#[test]
+fn threaded_runs_emit_heartbeats_between_samples() {
+    // Wall-clock timing makes the exact count machine-dependent; the
+    // contract is that heartbeats only ever add Progress events and
+    // the run itself is untouched.
+    let mut samples = 0u64;
+    let mut progress = 0u64;
+    let report = tiny(AlgorithmKind::A2dwb)
+        .executor(ExecutorSpec::Threads { workers: 2 })
+        .duration(4.0)
+        .progress_every(4)
+        .build()
+        .unwrap()
+        .run_with(&mut |ev: &RunEvent| match ev {
+            RunEvent::MetricSample { .. } => samples += 1,
+            RunEvent::Progress { .. } => progress += 1,
+            _ => {}
+        })
+        .unwrap();
+    assert!(!report.cancelled);
+    assert!(progress >= samples, "heartbeats only add Progress events");
+    assert!(report.final_dual_objective().is_finite());
 }
 
 // ------------------------------------------------------- cancellation
