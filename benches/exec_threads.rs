@@ -29,6 +29,8 @@ struct MeshCell {
     sync_window: f64,
     async_wire: u64,
     sync_wire: u64,
+    async_wire_bytes: u64,
+    sync_wire_bytes: u64,
     async_dual: f64,
     sync_dual: f64,
 }
@@ -55,7 +57,7 @@ fn mesh_pair(
             alg.name(),
             r.run_window_seconds(),
             r.messages,
-            r.wire_messages,
+            r.wire_messages(),
             r.final_dual_objective()
         );
         pair.push(r);
@@ -73,8 +75,10 @@ fn mesh_pair(
         workers,
         async_window: a.run_window_seconds(),
         sync_window: s.run_window_seconds(),
-        async_wire: a.wire_messages,
-        sync_wire: s.wire_messages,
+        async_wire: a.wire_messages(),
+        sync_wire: s.wire_messages(),
+        async_wire_bytes: a.telemetry.wire_bytes_sent(),
+        sync_wire_bytes: s.telemetry.wire_bytes_sent(),
         async_dual: a.final_dual_objective(),
         sync_dual: s.final_dual_objective(),
     }
@@ -86,6 +90,11 @@ struct Cell {
     sync_window: f64,
     async_wall: f64,
     sync_wall: f64,
+    /// Seconds blocked on round fences (telemetry rides along on every
+    /// run — only tracing is opt-in — so the benches carry the paper's
+    /// waiting-overhead split for free).
+    async_gate_wait: f64,
+    sync_gate_wait: f64,
     async_dual: f64,
     sync_dual: f64,
 }
@@ -139,6 +148,8 @@ fn main() {
             sync_window: s.run_window_seconds(),
             async_wall: a.wall_seconds,
             sync_wall: s.wall_seconds,
+            async_gate_wait: a.telemetry.gate_wait_secs(),
+            sync_gate_wait: s.telemetry.gate_wait_secs(),
             async_dual: a.final_dual_objective(),
             sync_dual: s.final_dual_objective(),
         });
@@ -185,6 +196,7 @@ fn main() {
         json.push_str(&format!(
             "    {{\"workers\": {}, \"async_window_s\": {:.6}, \"sync_window_s\": {:.6}, \
              \"speedup\": {:.4}, \"async_wall_s\": {:.6}, \"sync_wall_s\": {:.6}, \
+             \"async_gate_wait_s\": {:.6}, \"sync_gate_wait_s\": {:.6}, \
              \"async_final_dual\": {:.9}, \"sync_final_dual\": {:.9}}}{}\n",
             c.workers,
             c.async_window,
@@ -192,6 +204,8 @@ fn main() {
             c.sync_window / c.async_window.max(1e-12),
             c.async_wall,
             c.sync_wall,
+            c.async_gate_wait,
+            c.sync_gate_wait,
             c.async_dual,
             c.sync_dual,
             if idx + 1 == cells.len() { "" } else { "," }
@@ -202,6 +216,7 @@ fn main() {
         "  \"cross_process\": {{\"shards\": {}, \"transport\": \"tcp-loopback\", \
          \"async_window_s\": {:.6}, \"sync_window_s\": {:.6}, \"speedup\": {:.4}, \
          \"async_wire_messages\": {}, \"sync_wire_messages\": {}, \
+         \"async_wire_bytes\": {}, \"sync_wire_bytes\": {}, \
          \"async_final_dual\": {:.9}, \"sync_final_dual\": {:.9}}},\n",
         cross.shards,
         cross.async_window,
@@ -209,6 +224,8 @@ fn main() {
         cross.sync_window / cross.async_window.max(1e-12),
         cross.async_wire,
         cross.sync_wire,
+        cross.async_wire_bytes,
+        cross.sync_wire_bytes,
         cross.async_dual,
         cross.sync_dual
     ));
@@ -218,6 +235,7 @@ fn main() {
             "    {{\"shards\": {}, \"workers\": {}, \"transport\": \"tcp-loopback\", \
              \"async_window_s\": {:.6}, \"sync_window_s\": {:.6}, \"speedup\": {:.4}, \
              \"async_wire_messages\": {}, \"sync_wire_messages\": {}, \
+             \"async_wire_bytes\": {}, \"sync_wire_bytes\": {}, \
              \"async_final_dual\": {:.9}, \"sync_final_dual\": {:.9}}}{}\n",
             c.shards,
             c.workers,
@@ -226,6 +244,8 @@ fn main() {
             c.sync_window / c.async_window.max(1e-12),
             c.async_wire,
             c.sync_wire,
+            c.async_wire_bytes,
+            c.sync_wire_bytes,
             c.async_dual,
             c.sync_dual,
             if idx + 1 == mesh_cells.len() { "" } else { "," }

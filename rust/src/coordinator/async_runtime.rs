@@ -31,6 +31,7 @@ use crate::algo::ThetaSeq;
 use crate::exec::{activate_node, initial_exchange, NetModel, StepCtx, Transport};
 use crate::graph::Graph;
 use crate::measures::Samples;
+use crate::obs::{Counter, HistKind, Telemetry};
 use crate::sim::{ActivationSchedule, EventQueue};
 
 enum Event {
@@ -50,6 +51,7 @@ struct SimTransport<'a> {
     queue: EventQueue<Event>,
     compute_time: f64,
     messages: u64,
+    obs: Arc<Telemetry>,
 }
 
 impl Transport for SimTransport<'_> {
@@ -71,8 +73,15 @@ impl Transport for SimTransport<'_> {
         }
     }
 
-    fn collect(&mut self, _dst: usize, _node: &mut WbpNode) {
-        // push-based: the event loop delivers into mailboxes directly
+    fn collect(&mut self, _dst: usize, node: &mut WbpNode, reader_stamp: u64) {
+        // push-based: the event loop delivers into mailboxes directly.
+        // Telemetry still observes the read: one staleness sample per
+        // neighbor slot, lag in activation stamps — same definition the
+        // threaded MailboxGrid records, so sim and threads histograms
+        // are directly comparable.
+        for &(stamp, _) in node.mailbox.iter() {
+            self.obs.record(HistKind::StampLag, reader_stamp.saturating_sub(stamp));
+        }
     }
 }
 
@@ -84,11 +93,13 @@ pub(super) fn run(
 ) -> Result<(), String> {
     let m = cfg.nodes;
     let n = cfg.support_size();
+    let obs = ctl.obs();
     let measures = cfg.measure.build_network(m, cfg.seed);
     let mut oracle = cfg
         .backend
         .build(cfg.samples_per_activation, n)
         .map_err(|e| e.to_string())?;
+    oracle.attach_obs(obs.clone());
     let lambda_max = graph.lambda_max();
     let smoothness = lambda_max / cfg.beta;
     let gamma = cfg.gamma_scale / smoothness;
@@ -110,6 +121,7 @@ pub(super) fn run(
         queue: EventQueue::new(),
         compute_time: cfg.compute_time,
         messages: 0,
+        obs: obs.clone(),
     };
     let mut schedule = ActivationSchedule::new(m, cfg.activation_interval, cfg.seed);
     let mut evaluator =
@@ -161,6 +173,12 @@ pub(super) fn run(
         match ev.payload {
             Event::Activate(i) => {
                 let k = k_global;
+                obs.node_activation(i);
+                if obs.tracing() {
+                    // virtual timestamp: event-queue now, in ns
+                    let t_ns = (transport.queue.now() * 1e9) as u64;
+                    obs.trace_at(t_ns, "activate", i as u64, k as u64);
+                }
                 // Algorithm 3 lines 5–8 over the Transport seam
                 activate_node(
                     &mut nodes[i],
@@ -194,6 +212,17 @@ pub(super) fn run(
                 }
             }
             Event::Deliver { dst, slot, computed_at, grad } => {
+                // classify against the slot the way FreshestSlot does,
+                // so sim and threaded mailbox counters line up
+                let have = nodes[dst].mailbox[slot].0;
+                if computed_at < have {
+                    obs.bump(Counter::MailboxStaleDrops);
+                } else {
+                    obs.bump(Counter::MailboxPublishes);
+                    if have > 0 {
+                        obs.bump(Counter::MailboxOverwrites);
+                    }
+                }
                 nodes[dst].deliver(slot, computed_at, &grad);
             }
             Event::Metric => {
@@ -243,17 +272,18 @@ pub(super) fn run(
         0,
     );
 
+    obs.add(Counter::Messages, transport.messages);
     ctl.emit(RunEvent::Finished(RunTotals {
         tag: cfg.tag(),
         algorithm: cfg.algorithm,
         activations,
         rounds: 0,
         messages: transport.messages,
-        wire_messages: 0,
         events: transport.queue.processed(),
         lambda_max,
         barycenter: evaluator.barycenter(),
         cancelled,
+        telemetry: obs.snapshot(),
     }));
     Ok(())
 }

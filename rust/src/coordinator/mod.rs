@@ -358,16 +358,16 @@ pub struct ExperimentReport {
     pub activations: u64,
     pub rounds: u64,
     pub messages: u64,
-    /// TCP frames actually sent by a sharded (multi-process) run — one
-    /// per (broadcast, peer shard), so `wire_messages < messages` is
-    /// the fan-out dedup the socket transport buys. 0 for in-process
-    /// backends, which have no wire.
-    pub wire_messages: u64,
     pub events: u64,
     /// λ_max(W̄) of the topology actually built.
     pub lambda_max: f64,
     /// Wall-clock seconds the simulation took (perf accounting).
     pub wall_seconds: f64,
+    /// End-of-run telemetry snapshot (network-wide merge for mesh
+    /// runs): counters, staleness/wait histograms, per-kind wire
+    /// frames and bytes, per-node activations, per-worker claims. See
+    /// [`crate::obs`] for the registry design.
+    pub telemetry: crate::obs::TelemetrySnapshot,
     /// The final barycenter estimate (network average of primal blocks).
     pub barycenter: Vec<f64>,
     /// True when the run was stopped early through a
@@ -401,10 +401,21 @@ impl ExperimentReport {
             .unwrap_or(self.wall_seconds)
     }
 
+    /// TCP gradient frames actually sent by a sharded (multi-process)
+    /// run — one per (broadcast, peer shard), so `wire_messages() <
+    /// messages` is the fan-out dedup the socket transport buys. 0 for
+    /// in-process backends, which have no wire.
+    ///
+    /// Compat accessor over the one counting path: the telemetry
+    /// registry's per-kind wire table (grad frames = codec kind 2).
+    pub fn wire_messages(&self) -> u64 {
+        self.telemetry.wire_grad_frames()
+    }
+
     /// One-line summary for bench output.
     pub fn summary(&self) -> String {
-        let wire = if self.wire_messages > 0 {
-            format!(" wire={}", self.wire_messages)
+        let wire = if self.wire_messages() > 0 {
+            format!(" wire={}", self.wire_messages())
         } else {
             String::new()
         };

@@ -68,6 +68,7 @@ use crate::exec::{ExecutorSpec, SampleCadence};
 use crate::graph::{Graph, TopologySpec};
 use crate::measures::MeasureSpec;
 use crate::metrics::Series;
+use crate::obs::{Telemetry, TelemetrySnapshot};
 use crate::ot::OracleBackendSpec;
 
 // ------------------------------------------------------------ cancel
@@ -92,6 +93,77 @@ impl CancelToken {
     pub fn is_cancelled(&self) -> bool {
         self.0.load(Ordering::Acquire)
     }
+
+    /// Cancel this token when the process receives SIGINT (Ctrl-C), so
+    /// interactive runs wind down through the same cooperative path as
+    /// `--cancel-after` (partial report, settled protocols) instead of
+    /// dying mid-protocol.
+    ///
+    /// `libc`-crate-free: the handler is installed through the C
+    /// `signal` symbol the platform libc already exports, and does
+    /// nothing but store a `true` into a process-wide atomic flag
+    /// (async-signal-safe). A detached watcher thread polls the flag
+    /// and forwards it to the token — tokens themselves never race with
+    /// signal context. Unix-only; a no-op elsewhere. Installing twice
+    /// (or for two tokens) is fine: every registered token gets
+    /// cancelled on the first SIGINT.
+    pub fn cancel_on_sigint(&self) {
+        sigint::register(self.clone());
+    }
+}
+
+/// SIGINT → [`CancelToken`] plumbing (see
+/// [`CancelToken::cancel_on_sigint`]).
+mod sigint {
+    use super::CancelToken;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Mutex, OnceLock};
+
+    /// Set from signal context; nothing else happens in the handler.
+    static SIGINT_HIT: AtomicBool = AtomicBool::new(false);
+    /// Tokens to cancel when the flag flips (normal-context only).
+    static TOKENS: Mutex<Vec<CancelToken>> = Mutex::new(Vec::new());
+    static INSTALL: OnceLock<()> = OnceLock::new();
+
+    #[cfg(unix)]
+    extern "C" fn on_sigint(_sig: i32) {
+        // async-signal-safe: one relaxed atomic store, nothing else
+        SIGINT_HIT.store(true, Ordering::Relaxed);
+    }
+
+    #[cfg(unix)]
+    fn install_handler() {
+        // SIGINT = 2 on every Unix; bind the libc `signal` symbol
+        // directly rather than pulling in a crate for one call.
+        extern "C" {
+            fn signal(
+                signum: i32,
+                handler: extern "C" fn(i32),
+            ) -> Option<extern "C" fn(i32)>;
+        }
+        unsafe {
+            signal(2, on_sigint);
+        }
+    }
+
+    #[cfg(not(unix))]
+    fn install_handler() {}
+
+    pub(super) fn register(token: CancelToken) {
+        TOKENS.lock().unwrap().push(token);
+        INSTALL.get_or_init(|| {
+            install_handler();
+            std::thread::spawn(|| loop {
+                if SIGINT_HIT.load(Ordering::Relaxed) {
+                    for t in TOKENS.lock().unwrap().drain(..) {
+                        t.cancel();
+                    }
+                    SIGINT_HIT.store(false, Ordering::Relaxed);
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            });
+        });
+    }
 }
 
 // ------------------------------------------------------------ events
@@ -107,9 +179,14 @@ pub struct RunTotals {
     pub activations: u64,
     pub rounds: u64,
     pub messages: u64,
-    pub wire_messages: u64,
     pub events: u64,
     pub lambda_max: f64,
+    /// End-of-run snapshot of the backend's [`Telemetry`] registry
+    /// (mesh runs carry the network-wide merge of every shard's
+    /// snapshot). Wire counts — including the legacy `wire_messages`
+    /// gradient-frame total — now live here; see
+    /// [`ExperimentReport::wire_messages`].
+    pub telemetry: TelemetrySnapshot,
     /// Final barycenter estimate (network mean of the primal blocks).
     pub barycenter: Vec<f64>,
     /// True when the run stopped on a [`CancelToken`] before reaching
@@ -214,10 +291,10 @@ impl TrajectorySink {
             activations: totals.activations,
             rounds: totals.rounds,
             messages: totals.messages,
-            wire_messages: totals.wire_messages,
             events: totals.events,
             lambda_max: totals.lambda_max,
             wall_seconds: 0.0,
+            telemetry: totals.telemetry,
             barycenter: totals.barycenter,
             cancelled: totals.cancelled,
         })
@@ -259,11 +336,22 @@ impl RunObserver for Tee<'_, '_> {
 pub(crate) struct RunCtl<'a> {
     pub(crate) observer: &'a mut dyn RunObserver,
     cancel: CancelToken,
+    obs: Arc<Telemetry>,
 }
 
 impl<'a> RunCtl<'a> {
-    pub(crate) fn new(observer: &'a mut dyn RunObserver, cancel: CancelToken) -> Self {
-        Self { observer, cancel }
+    pub(crate) fn new(
+        observer: &'a mut dyn RunObserver,
+        cancel: CancelToken,
+        obs: Arc<Telemetry>,
+    ) -> Self {
+        Self { observer, cancel, obs }
+    }
+
+    /// The run's telemetry registry (backends clone the handle into
+    /// their workers/transports and snapshot it at `Finished` time).
+    pub(crate) fn obs(&self) -> Arc<Telemetry> {
+        Arc::clone(&self.obs)
     }
 
     pub(crate) fn emit(&mut self, event: RunEvent) {
@@ -493,7 +581,8 @@ impl ExperimentBuilder {
         if !graph.is_connected() {
             return Err("topology must be connected".into());
         }
-        Ok(Session { cfg: self.cfg, graph, cancel: CancelToken::new() })
+        let obs = Telemetry::shared(self.cfg.nodes);
+        Ok(Session { cfg: self.cfg, graph, cancel: CancelToken::new(), obs })
     }
 }
 
@@ -508,6 +597,7 @@ pub struct Session {
     cfg: ExperimentConfig,
     graph: Graph,
     cancel: CancelToken,
+    obs: Arc<Telemetry>,
 }
 
 impl Session {
@@ -532,6 +622,16 @@ impl Session {
         self.cancel.clone()
     }
 
+    /// The run's live [`Telemetry`] registry. Clone the handle out
+    /// before running to enable tracing
+    /// ([`Telemetry::set_trace_capacity`]) or to inspect counters
+    /// mid-run from an observer; the end-of-run snapshot also arrives
+    /// on [`ExperimentReport::telemetry`]
+    /// (via [`RunTotals`]).
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        Arc::clone(&self.obs)
+    }
+
     /// Run to completion (or cancellation) and return the assembled
     /// report — the exact behavior of the old `run_experiment` monolith.
     pub fn run(self) -> Result<ExperimentReport, String> {
@@ -542,12 +642,12 @@ impl Session {
     /// assembled from an internal [`TrajectorySink`] fed by the same
     /// stream, so observing costs nothing in fidelity.
     pub fn run_with(self, observer: &mut dyn RunObserver) -> Result<ExperimentReport, String> {
-        let Session { cfg, graph, cancel } = self;
+        let Session { cfg, graph, cancel, obs } = self;
         let mut sink = TrajectorySink::new();
         let t0 = std::time::Instant::now();
         {
             let mut tee = Tee { user: observer, sink: &mut sink };
-            let mut ctl = RunCtl::new(&mut tee, cancel);
+            let mut ctl = RunCtl::new(&mut tee, cancel, obs);
             ctl.emit(RunEvent::Started {
                 tag: cfg.tag(),
                 algorithm: cfg.algorithm,
@@ -652,7 +752,7 @@ mod tests {
             activations: 7,
             rounds: 0,
             messages: 9,
-            wire_messages: 0,
+            telemetry: TelemetrySnapshot::default(),
             events: 11,
             lambda_max: 2.0,
             barycenter: vec![1.0],

@@ -27,6 +27,7 @@ use crate::algo::ThetaSeq;
 use crate::exec::{NetModel, Transport};
 use crate::graph::Graph;
 use crate::measures::Samples;
+use crate::obs::{Counter, HistKind};
 
 /// Barrier-mode [`Transport`]: a broadcast parks the sender's gradient
 /// in its outbox; `collect` reads every neighbor's outbox — the
@@ -58,7 +59,10 @@ impl Transport for BarrierTransport<'_> {
         self.outbox[src] = (stamp, grad);
     }
 
-    fn collect(&mut self, dst: usize, node: &mut WbpNode) {
+    fn collect(&mut self, dst: usize, node: &mut WbpNode, _reader_stamp: u64) {
+        // all-fresh by construction: every outbox stamp equals the
+        // reader's round, so the staleness lag is identically zero and
+        // recording it would only pad the histogram's 0-bucket.
         for (slot, &j) in self.graph.neighbors(dst).iter().enumerate() {
             let (stamp, grad) = &self.outbox[j];
             node.deliver(slot, *stamp, grad);
@@ -73,11 +77,13 @@ pub(super) fn run(
 ) -> Result<(), String> {
     let m = cfg.nodes;
     let n = cfg.support_size();
+    let obs = ctl.obs();
     let measures = cfg.measure.build_network(m, cfg.seed);
     let mut oracle = cfg
         .backend
         .build(cfg.samples_per_activation, n)
         .map_err(|e| e.to_string())?;
+    oracle.attach_obs(obs.clone());
     let lambda_max = graph.lambda_max();
     let smoothness = lambda_max / cfg.beta;
     let gamma = cfg.gamma_scale / smoothness;
@@ -156,6 +162,16 @@ pub(super) fn run(
                 round_time = round_time.max(t);
             }
         }
+        // The barrier's price this round: virtual seconds spent waiting
+        // on the slowest edge. Same histogram the threaded executor
+        // fills from wall-clock fence waits, so the `speedup` contrast
+        // (DCWB waits, A²DWB doesn't) reads off one metric.
+        obs.bump(Counter::GateWaits);
+        obs.record_secs(HistKind::GateWaitNs, round_time);
+        if obs.tracing() {
+            let t_ns = (now * 1e9) as u64;
+            obs.trace_at(t_ns, "round_wait", r as u64, (round_time * 1e9) as u64);
+        }
         round_time += cfg.compute_time;
         // deliver everything (fresh info: the whole point of the barrier)
         for i in 0..m {
@@ -164,7 +180,8 @@ pub(super) fn run(
         }
         // ---- update phase: single-block accelerated step
         for i in 0..m {
-            transport.collect(i, &mut nodes[i]);
+            obs.node_activation(i);
+            transport.collect(i, &mut nodes[i], r as u64 + 1);
             let deg = graph.degree(i);
             nodes[i].apply_update(&mut theta, r, 1, gamma, deg, cfg.diag);
         }
@@ -203,17 +220,18 @@ pub(super) fn run(
         wall_t0.elapsed().as_secs_f64(), &mut etas, &mut point,
     );
 
+    obs.add(Counter::Messages, messages);
     ctl.emit(RunEvent::Finished(RunTotals {
         tag: cfg.tag(),
         algorithm: cfg.algorithm,
         activations: rounds * m as u64,
         rounds,
         messages,
-        wire_messages: 0,
         events: rounds,
         lambda_max,
         barycenter: evaluator.barycenter(),
         cancelled,
+        telemetry: obs.snapshot(),
     }));
     Ok(())
 }

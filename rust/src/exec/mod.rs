@@ -53,7 +53,9 @@ pub use sched::{
     ClaimOrder, FailPoint, FreeGate, GateLedger, LocalGate, NodeScheduler, NoHooks,
     PhaseBarrier, RoundGate, SchedOutcome, SchedTransport, SchedulerSpec, SweepHooks,
 };
-pub use transport::{FreshestSlot, MailboxGrid, ThreadedTransport, Transport};
+pub use transport::{
+    FreshestSlot, MailboxGrid, PublishOutcome, ThreadedTransport, Transport,
+};
 
 use crate::algo::wbp::{DiagCoef, WbpNode};
 use crate::algo::ThetaSeq;
@@ -236,7 +238,7 @@ pub fn activate_node(
     // broadcast g_i to neighbors; one shared Arc payload per broadcast
     transport.broadcast(i, k as u64 + 1, Arc::new(node.own_grad.clone()));
     // lines 7–8: combine with whatever the mailbox holds + update (u, v)
-    transport.collect(i, node);
+    transport.collect(i, node, k as u64 + 1);
     node.apply_update(theta, k, ctx.m_theta, ctx.gamma, degree, ctx.diag);
 }
 

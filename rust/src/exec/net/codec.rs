@@ -50,6 +50,13 @@
 //!   after the last snapshot. Since protocol v3 it carries the sweeps
 //!   the shard actually completed and a `cancelled` flag, so a
 //!   cooperatively stopped shard reports a well-formed partial.
+//! * [`WireMsg::Telemetry`] — a shard's end-of-run merged
+//!   [`TelemetrySnapshot`] (counters, histograms, per-kind wire
+//!   traffic, per-node activations, per-worker claims), shipped on the
+//!   report stream immediately before `Report`. The snapshot's own
+//!   byte format is versioned/self-describing (strict length checks in
+//!   [`TelemetrySnapshot::from_bytes`]), so the frame is just a
+//!   length-prefixed blob — new counters never need a protocol bump.
 //! * [`WireMsg::Cancel`] — cooperative stop request, sent by the
 //!   aggregating collector **down** the report connection (the only
 //!   frame that travels in that direction). The shard trips its
@@ -68,6 +75,8 @@
 
 use std::io::{Read, Write};
 
+use crate::obs::{Telemetry, TelemetrySnapshot};
+
 /// `b"A2WB"` — first four bytes of every handshake.
 pub const MAGIC: u32 = 0x4132_5742;
 /// Bump on any incompatible frame-layout change.
@@ -76,7 +85,11 @@ pub const MAGIC: u32 = 0x4132_5742;
 /// v3: new `Cancel` frame (collector → shard cooperative stop);
 /// `Report` gained `sweeps_done` + `cancelled` so a stopped shard
 /// reports a well-formed partial.
-pub const PROTOCOL_VERSION: u8 = 3;
+/// v4: new `Telemetry` frame — a shard's end-of-run
+/// [`TelemetrySnapshot`] (self-describing length-prefixed blob), sent
+/// on the report stream right before `Report` so the aggregator can
+/// merge mesh-wide observability without changing any other frame.
+pub const PROTOCOL_VERSION: u8 = 4;
 /// Hard upper bound on one frame (64 MiB): a length prefix beyond this
 /// is treated as stream corruption, not an allocation request.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
@@ -88,6 +101,7 @@ const KIND_BYE: u8 = 4;
 const KIND_REPORT: u8 = 5;
 const KIND_SNAPSHOT: u8 = 6;
 const KIND_CANCEL: u8 = 7;
+const KIND_TELEMETRY: u8 = 8;
 
 /// Which fence a [`WireMsg::Done`] marker announces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -219,6 +233,9 @@ pub enum WireMsg {
     /// stream): finish the activation in flight, settle the pacing
     /// protocol, reply with a partial [`WireMsg::Report`].
     Cancel,
+    /// A shard's end-of-run telemetry snapshot (protocol v4), sent on
+    /// the report stream right before its [`WireMsg::Report`].
+    Telemetry { shard: u32, snapshot: TelemetrySnapshot },
 }
 
 // ---------------------------------------------------------------- encode
@@ -322,6 +339,19 @@ pub fn encode_snapshot(shard: u32, sweep: u64, etas: &[f64]) -> Vec<u8> {
     put_u32(&mut b, shard);
     put_u64(&mut b, sweep);
     put_f64s(&mut b, etas);
+    frame_finish(b)
+}
+
+/// Encode a shard's end-of-run telemetry snapshot (protocol v4). The
+/// snapshot serializes itself ([`TelemetrySnapshot::to_bytes`]); the
+/// frame adds the shard id and a byte-count prefix so the decoder can
+/// hand `from_bytes` an exact slice.
+pub fn encode_telemetry(shard: u32, snapshot: &TelemetrySnapshot) -> Vec<u8> {
+    let blob = snapshot.to_bytes();
+    let mut b = frame_start(KIND_TELEMETRY, 8 + blob.len());
+    put_u32(&mut b, shard);
+    put_u32(&mut b, blob.len() as u32);
+    b.extend_from_slice(&blob);
     frame_finish(b)
 }
 
@@ -443,6 +473,16 @@ pub fn decode(body: &[u8]) -> Result<WireMsg, String> {
             final_etas: c.take_f64s()?,
         }),
         KIND_CANCEL => WireMsg::Cancel,
+        KIND_TELEMETRY => {
+            let shard = c.take_u32()?;
+            let blob_len = c.take_u32()? as usize;
+            let blob = c.take(blob_len)?;
+            WireMsg::Telemetry {
+                shard,
+                snapshot: TelemetrySnapshot::from_bytes(blob)
+                    .map_err(|e| format!("telemetry frame: {e}"))?,
+            }
+        }
         other => return Err(format!("unknown frame kind {other}")),
     };
     c.finish()?;
@@ -473,11 +513,19 @@ pub struct FrameReader<R: Read> {
     buf: Vec<u8>,
     /// Consumed prefix of `buf` (compacted opportunistically).
     pos: usize,
+    /// Receive-side wire accounting (frames + bytes per kind).
+    obs: Option<std::sync::Arc<Telemetry>>,
 }
 
 impl<R: Read> FrameReader<R> {
     pub fn new(r: R) -> Self {
-        Self { r, buf: Vec::with_capacity(16 << 10), pos: 0 }
+        Self { r, buf: Vec::with_capacity(16 << 10), pos: 0, obs: None }
+    }
+
+    /// Record every decoded frame (kind + total on-wire bytes,
+    /// length prefix included) into `obs`'s receive-side wire table.
+    pub fn attach_obs(&mut self, obs: std::sync::Arc<Telemetry>) {
+        self.obs = Some(obs);
     }
 
     /// The underlying stream (e.g. to write a [`WireMsg::Cancel`] back
@@ -534,6 +582,9 @@ impl<R: Read> FrameReader<R> {
                 }
                 if self.buffered() >= 4 + len {
                     let body = &self.buf[self.pos + 4..self.pos + 4 + len];
+                    if let Some(obs) = &self.obs {
+                        obs.wire_recv(body[0], 4 + len);
+                    }
                     let msg = decode(body)?;
                     self.pos += 4 + len;
                     return Ok(ReadEvent::Msg(msg));
@@ -566,6 +617,25 @@ enum ReadErr {
 /// Write one pre-encoded frame.
 pub fn write_all(w: &mut impl Write, frame: &[u8]) -> Result<(), String> {
     w.write_all(frame).map_err(|e| format!("socket write: {e}"))
+}
+
+/// Kind byte of a pre-encoded frame (byte 4, right after the length
+/// prefix); 0 for impossibly short buffers.
+pub fn frame_kind(frame: &[u8]) -> u8 {
+    frame.get(4).copied().unwrap_or(0)
+}
+
+/// [`write_all`] plus send-side wire accounting: one frame of
+/// [`frame_kind`] and `frame.len()` on-wire bytes into `obs`.
+pub fn write_frame(
+    w: &mut impl Write,
+    frame: &[u8],
+    obs: Option<&Telemetry>,
+) -> Result<(), String> {
+    if let Some(obs) = obs {
+        obs.wire_sent(frame_kind(frame), frame.len());
+    }
+    write_all(w, frame)
 }
 
 #[cfg(test)]
@@ -684,6 +754,64 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn telemetry_roundtrip_carries_every_table() {
+        use crate::obs::{Counter, HistKind};
+        let t = Telemetry::new(3);
+        t.node_activation(0);
+        t.node_activation(2);
+        t.add(Counter::Messages, 40);
+        t.record(HistKind::StampLag, 7);
+        t.record(HistKind::GateWaitNs, 1_000_000);
+        t.wire_sent(KIND_GRAD, 820);
+        t.wire_recv(KIND_DONE, 17);
+        t.add_worker_claims(&[5, 9]);
+        let snap = t.snapshot();
+        match roundtrip(encode_telemetry(2, &snap)) {
+            WireMsg::Telemetry { shard, snapshot } => {
+                assert_eq!(shard, 2);
+                assert_eq!(snapshot, snap);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn telemetry_truncation_and_trailing_bytes_are_rejected() {
+        let full = encode_telemetry(0, &Telemetry::new(2).snapshot());
+        // every strict prefix of the body must fail loudly
+        for cut in 1..full.len() - 4 {
+            assert!(
+                decode(&full[4..4 + cut]).is_err(),
+                "telemetry prefix of {cut} bytes decoded silently"
+            );
+        }
+        // bytes beyond the blob's declared length are stream corruption
+        let mut bad = full;
+        bad.push(0);
+        assert!(decode(&bad[4..]).is_err());
+    }
+
+    #[test]
+    fn write_frame_and_reader_account_wire_traffic() {
+        use std::sync::Arc;
+        let obs = Arc::new(Telemetry::new(0));
+        let frame = encode_grad(1, 9, &[1.0, 2.0, 3.0]);
+        assert_eq!(frame_kind(&frame), KIND_GRAD);
+        let mut wire: Vec<u8> = Vec::new();
+        write_frame(&mut wire, &frame, Some(&obs)).unwrap();
+        write_frame(&mut wire, &encode_bye(1), Some(&obs)).unwrap();
+        let mut reader = FrameReader::new(std::io::Cursor::new(wire.clone()));
+        reader.attach_obs(obs.clone());
+        while !matches!(reader.next_frame().unwrap(), ReadEvent::Eof) {}
+        let snap = obs.snapshot();
+        assert_eq!(snap.wire_kind_sent(KIND_GRAD), 1);
+        assert_eq!(snap.wire_kind_recv(KIND_GRAD), 1);
+        assert_eq!(snap.wire_kind_sent(KIND_BYE), 1);
+        assert_eq!(snap.wire_frames_sent(), 2);
+        assert_eq!(snap.wire_bytes_sent(), wire.len() as u64);
     }
 
     #[test]

@@ -53,6 +53,7 @@ use crate::exec::Transport;
 use crate::graph::Graph;
 use crate::measures::{MeasureSpec, NodeMeasure, Samples};
 use crate::metrics::Series;
+use crate::obs::{Counter, Telemetry, TelemetrySnapshot};
 use crate::ot::OracleBackendSpec;
 use crate::rng::Rng64;
 
@@ -172,6 +173,13 @@ impl ShardedMailboxGrid {
         &self.plan
     }
 
+    /// Route the local grid replica's mailbox telemetry (publishes,
+    /// freshest-wins overwrites, stale drops, stamp-lag reads) into
+    /// `obs`. Call before the grid is shared.
+    pub fn attach_obs(&mut self, obs: Arc<Telemetry>) {
+        self.grid.attach_obs(obs);
+    }
+
     /// The local grid replica (reader threads publish remote gradients
     /// here; workers collect from it).
     pub fn grid(&self) -> &MailboxGrid {
@@ -223,8 +231,8 @@ impl Transport for ShardedTransport<'_> {
         }
     }
 
-    fn collect(&mut self, dst: usize, node: &mut WbpNode) {
-        self.sgrid.grid.collect(dst, node);
+    fn collect(&mut self, dst: usize, node: &mut WbpNode, reader_stamp: u64) {
+        self.sgrid.grid.collect(dst, node, reader_stamp);
     }
 }
 
@@ -395,6 +403,7 @@ impl Mesh {
         sgrid: Arc<ShardedMailboxGrid>,
         n: usize,
         timeout: Duration,
+        obs: Arc<Telemetry>,
     ) -> Result<Mesh, String> {
         let shards = plan.shards;
         if peer_addrs.len() != shards {
@@ -415,9 +424,10 @@ impl Mesh {
             let addr = &peer_addrs[t];
             let stream = dial_retry(addr, deadline)?;
             prepare_stream(&stream)?;
-            codec::write_all(&mut (&stream), &codec::encode_hello(&hello))?;
+            codec::write_frame(&mut (&stream), &codec::encode_hello(&hello), Some(&obs))?;
             let clone = stream.try_clone().map_err(|e| format!("try_clone: {e}"))?;
             let mut fr = FrameReader::new(clone);
+            fr.attach_obs(obs.clone());
             let peer = handshake_read(&mut fr, deadline, addr)?;
             hello.check_compatible(&peer)?;
             if peer.shard as usize != t {
@@ -441,6 +451,7 @@ impl Mesh {
                     let clone =
                         stream.try_clone().map_err(|e| format!("try_clone: {e}"))?;
                     let mut fr = FrameReader::new(clone);
+                    fr.attach_obs(obs.clone());
                     let peer = handshake_read(&mut fr, deadline, &from.to_string())?;
                     hello.check_compatible(&peer)?;
                     let t = peer.shard as usize;
@@ -453,7 +464,11 @@ impl Mesh {
                     if conns[t].is_some() {
                         return Err(format!("duplicate connection from shard {t}"));
                     }
-                    codec::write_all(&mut (&stream), &codec::encode_hello(&hello))?;
+                    codec::write_frame(
+                        &mut (&stream),
+                        &codec::encode_hello(&hello),
+                        Some(&obs),
+                    )?;
                     conns[t] = Some((stream, fr));
                     accepted += 1;
                 }
@@ -481,9 +496,10 @@ impl Mesh {
             let (tx, rx) = mpsc::channel::<Arc<Vec<u8>>>();
             senders[t] = Some(tx);
             let wboard = board.clone();
+            let wobs = obs.clone();
             let own = plan.shard as u32;
             writers.push(std::thread::spawn(move || {
-                writer_loop(stream, rx, own, t, &wboard)
+                writer_loop(stream, rx, own, t, &wboard, &wobs)
             }));
             let rboard = board.clone();
             let rstop = stop.clone();
@@ -602,6 +618,7 @@ struct ShardSweepHooks<'a> {
     report: Option<&'a TcpStream>,
     sweeps: u64,
     wait_budget: Duration,
+    obs: Arc<Telemetry>,
 }
 
 impl SweepHooks for ShardSweepHooks<'_> {
@@ -633,9 +650,10 @@ impl SweepHooks for ShardSweepHooks<'_> {
     fn sweep_complete(&self, r: usize, block: &[f64]) -> Result<(), String> {
         if self.record {
             let mut w = self.report.expect("record_sweeps requires a report stream");
-            codec::write_all(
+            codec::write_frame(
                 &mut w,
                 &codec::encode_snapshot(self.shard, r as u64, block),
+                Some(&self.obs),
             )?;
         }
         if self.pacing == Pacing::Lockstep {
@@ -662,18 +680,19 @@ fn writer_loop(
     own_shard: u32,
     peer: usize,
     board: &Board,
+    obs: &Telemetry,
 ) {
     let mut w = &stream;
     loop {
         match rx.recv() {
             Ok(frame) => {
-                if let Err(e) = codec::write_all(&mut w, &frame) {
+                if let Err(e) = codec::write_frame(&mut w, &frame, Some(obs)) {
                     board.fail(format!("writer to shard {peer}: {e}"));
                     return;
                 }
                 // drain whatever else is queued before the next block
                 while let Ok(next) = rx.try_recv() {
-                    if let Err(e) = codec::write_all(&mut w, &next) {
+                    if let Err(e) = codec::write_frame(&mut w, &next, Some(obs)) {
                         board.fail(format!("writer to shard {peer}: {e}"));
                         return;
                     }
@@ -681,7 +700,7 @@ fn writer_loop(
             }
             Err(_) => {
                 // clean shutdown: all senders dropped
-                let _ = codec::write_all(&mut w, &codec::encode_bye(own_shard));
+                let _ = codec::write_frame(&mut w, &codec::encode_bye(own_shard), Some(obs));
                 let _ = stream.shutdown(Shutdown::Write);
                 return;
             }
@@ -842,11 +861,16 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
     let local = plan.local();
     let workers = workers.min(local.len());
 
+    // One registry per shard, keyed by *global* node ids (table sized
+    // m): the aggregator merges shard snapshots elementwise, so the
+    // disjoint local slices stitch into the full per-node table.
+    let obs = Telemetry::shared(m);
     let measures = cfg.measure.build_network(m, cfg.seed);
     // Prevalidate the oracle backend on this thread (the worker pool
     // must not fail after the mesh is committed); this instance also
     // computes the initial exchange below.
     let mut oracle = cfg.backend.build(cfg.samples_per_activation, n)?;
+    oracle.attach_obs(obs.clone());
     let lambda_max = graph.lambda_max();
     let gamma = cfg.gamma_scale / (lambda_max / cfg.beta);
 
@@ -860,7 +884,9 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
     let mut nodes: Vec<WbpNode> =
         local.clone().map(|i| WbpNode::new(n, graph.degree(i))).collect();
 
-    let sgrid = Arc::new(ShardedMailboxGrid::new(&graph, n, plan));
+    let mut sgrid = ShardedMailboxGrid::new(&graph, n, plan);
+    sgrid.attach_obs(obs.clone());
+    let sgrid = Arc::new(sgrid);
     let hello = HelloFrame {
         shard: plan.shard as u32,
         shards: plan.shards as u32,
@@ -883,6 +909,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         sgrid.clone(),
         n,
         wait_budget,
+        obs.clone(),
     )?;
 
     // Cancel listener: the only frames that travel *down* the report
@@ -898,8 +925,10 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
             let clone = stream.try_clone().map_err(|e| format!("report clone: {e}"))?;
             let token = cancel.clone();
             let stop = stop_listener.clone();
+            let lobs = obs.clone();
             Some(std::thread::spawn(move || {
                 let mut fr = FrameReader::new(clone);
+                fr.attach_obs(lobs);
                 loop {
                     match fr.next_frame() {
                         Ok(ReadEvent::Msg(WireMsg::Cancel)) => token.cancel(),
@@ -990,6 +1019,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         cadence_snapshots: false,
         jitter_salt: plan.shard as u64,
         fault_injection,
+        obs: Some(obs.clone()),
     });
     let hooks = ShardSweepHooks {
         mesh: &mesh,
@@ -999,6 +1029,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         report: report.as_ref(),
         sweeps: sweeps as u64,
         wait_budget,
+        obs: obs.clone(),
     };
     let mesh_gate;
     let local_gate;
@@ -1068,6 +1099,15 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         stop_listening(cancel_listener);
         return Err(e);
     }
+    obs.add(Counter::Messages, messages);
+    // Snapshot AFTER mesh shutdown: every queued gradient frame has
+    // been flushed (writers joined) and every peer's stream drained to
+    // its Bye (readers joined), so the per-kind wire tables are
+    // complete — `wire_kind_sent(Grad)` equals the legacy
+    // `wire_messages` tally exactly. Only the two terminal
+    // report-stream frames below post-date the snapshot, by
+    // construction.
+    let snapshot = obs.snapshot();
     let shard_report = ShardReport {
         shard: plan.shard,
         activations: outcome.activations,
@@ -1079,13 +1119,22 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         window_secs,
         final_etas,
     };
-    // The final Report frame travels on the same stream, after every
+    // The terminal frames travel on the same stream, after every
     // streamed Snapshot (FIFO: the aggregator is guaranteed to have
-    // seen the whole trajectory once it reads the Report).
+    // seen the whole trajectory once it reads the Report): first the
+    // shard's telemetry snapshot, then the Report that closes the
+    // stream.
     let mut send_res = Ok(());
     if let Some(stream) = &report {
         let mut w = stream;
-        send_res = codec::write_all(&mut w, &codec::encode_report(&shard_report));
+        send_res = codec::write_frame(
+            &mut w,
+            &codec::encode_telemetry(plan.shard as u32, &snapshot),
+            Some(&obs),
+        )
+        .and_then(|()| {
+            codec::write_frame(&mut w, &codec::encode_report(&shard_report), Some(&obs))
+        });
         if send_res.is_ok() {
             let _ = stream.shutdown(Shutdown::Write);
         }
@@ -1131,6 +1180,19 @@ pub struct StreamAggregator {
     /// so the series stays monotone even when shards skew).
     next_sweep: u64,
     saw_snapshot: bool,
+    /// Mesh-wide telemetry: elementwise merge of every shard's
+    /// end-of-run [`WireMsg::Telemetry`] snapshot. Shards key their
+    /// per-node tables by *global* node id (registries are sized m on
+    /// every shard), so the merge stitches disjoint slices exactly.
+    telemetry: TelemetrySnapshot,
+    saw_telemetry: bool,
+    /// Activations *delivered* so far (arrival side, not evaluation):
+    /// drives the decoupled `progress_every` heartbeat, which must not
+    /// stall behind a straggler shard the way the in-order evaluation
+    /// loop does.
+    acts_delivered: u64,
+    /// Multiples of `progress_every` already announced.
+    heartbeat_marks: u64,
     dual_series: Series,
     consensus_series: Series,
     spread_series: Series,
@@ -1173,6 +1235,10 @@ impl StreamAggregator {
             delivered_hi: vec![0; shards],
             next_sweep: 0,
             saw_snapshot: false,
+            telemetry: TelemetrySnapshot::default(),
+            saw_telemetry: false,
+            acts_delivered: 0,
+            heartbeat_marks: 0,
             dual_series,
             consensus_series,
             spread_series,
@@ -1222,6 +1288,21 @@ impl StreamAggregator {
         slots[shard] = Some(block);
         self.delivered_hi[shard] = self.delivered_hi[shard].max(sweep + 1);
 
+        // Arrival-side heartbeat: when `progress_every` is set, count
+        // activations as blocks *arrive* and announce each crossed
+        // multiple immediately — decoupled from the strictly-in-order
+        // evaluation loop below, which a single straggler shard stalls.
+        self.acts_delivered += self.plan.range(shard).len() as u64;
+        if let Some(every) = self.cfg.progress_every {
+            while (self.heartbeat_marks + 1) * every <= self.acts_delivered {
+                self.heartbeat_marks += 1;
+                observer.on_event(&RunEvent::Progress {
+                    activations: self.heartbeat_marks * every,
+                    rounds: 0,
+                });
+            }
+        }
+
         // Evaluate every now-complete sweep in order, dropping blocks.
         while let Some(slots) = self.pending.get(&self.next_sweep) {
             if slots.iter().any(|s| s.is_none()) {
@@ -1249,10 +1330,19 @@ impl StreamAggregator {
                 consensus: c,
                 spread: sp,
             });
-            observer.on_event(&RunEvent::Progress {
-                activations: acts,
-                rounds: if self.cfg.algorithm == AlgorithmKind::Dcwb { r + 1 } else { 0 },
-            });
+            // Eval-coupled progress only when no decoupled cadence was
+            // asked for — otherwise the arrival-side heartbeat above
+            // owns the Progress stream.
+            if self.cfg.progress_every.is_none() {
+                observer.on_event(&RunEvent::Progress {
+                    activations: acts,
+                    rounds: if self.cfg.algorithm == AlgorithmKind::Dcwb {
+                        r + 1
+                    } else {
+                        0
+                    },
+                });
+            }
             self.next_sweep += 1;
         }
         self.saw_snapshot = true;
@@ -1265,6 +1355,22 @@ impl StreamAggregator {
     /// the shard and keeping `pending` bounded under free-pacing skew.
     fn lead(&self, shard: usize) -> u64 {
         self.delivered_hi[shard].saturating_sub(self.next_sweep)
+    }
+
+    /// Merge one shard's end-of-run telemetry snapshot into the
+    /// mesh-wide tables. Counters and wire tallies add; per-node tables
+    /// stitch exactly because every shard keys them by global node id.
+    pub fn on_telemetry(
+        &mut self,
+        shard: usize,
+        snapshot: &TelemetrySnapshot,
+    ) -> Result<(), String> {
+        if shard >= self.plan.shards {
+            return Err(format!("telemetry from shard {shard} of {}", self.plan.shards));
+        }
+        self.telemetry.merge(snapshot);
+        self.saw_telemetry = true;
+        Ok(())
     }
 
     /// Stitch the end-of-run reports into the final
@@ -1332,6 +1438,19 @@ impl StreamAggregator {
 
         let sync = self.cfg.algorithm == AlgorithmKind::Dcwb;
         let budget: u64 = reports.iter().map(|r| r.activations).sum();
+        let telemetry = if self.saw_telemetry {
+            self.telemetry
+        } else {
+            // Compat path ([`aggregate_reports`]: end-of-run reports
+            // only, no streams and hence no Telemetry frames) —
+            // synthesize the one table downstream readers rely on,
+            // gradient frames sent (wire kind 2 = Grad), from the
+            // summed ShardReport tallies, so
+            // [`ExperimentReport::wire_messages`] stays exact.
+            let mut wire = vec![[0u64; 4]; crate::obs::WIRE_KINDS];
+            wire[2][0] = reports.iter().map(|r| r.wire_messages).sum();
+            TelemetrySnapshot { wire, ..TelemetrySnapshot::default() }
+        };
         let rounds = if sync {
             if cancelled {
                 min_sweeps
@@ -1351,7 +1470,7 @@ impl StreamAggregator {
             activations: budget,
             rounds,
             messages: reports.iter().map(|r| r.messages).sum(),
-            wire_messages: reports.iter().map(|r| r.wire_messages).sum(),
+            telemetry,
             events: budget,
             lambda_max: self.graph.lambda_max(),
             wall_seconds: 0.0,
@@ -1419,11 +1538,11 @@ fn emit_finished(
         activations: report.activations,
         rounds: report.rounds,
         messages: report.messages,
-        wire_messages: report.wire_messages,
         events: report.events,
         lambda_max: report.lambda_max,
         barycenter: report.barycenter.clone(),
         cancelled: report.cancelled,
+        telemetry: report.telemetry.clone(),
     }));
 }
 
@@ -1905,6 +2024,11 @@ pub fn collect_shard_streams(
                             break;
                         }
                     }
+                    Ok(ReadEvent::Msg(WireMsg::Telemetry { shard, snapshot })) => {
+                        *conn_shard = Some(shard as usize);
+                        agg.on_telemetry(shard as usize, &snapshot)?;
+                        advanced = true;
+                    }
                     Ok(ReadEvent::Msg(WireMsg::Report(r))) => {
                         reports.push(r);
                         *done = true;
@@ -1919,7 +2043,7 @@ pub fn collect_shard_streams(
                     }
                     Ok(ReadEvent::Msg(other)) => {
                         return Err(format!(
-                            "expected Snapshot/Report on the report stream, got {other:?}"
+                            "expected Snapshot/Telemetry/Report on the report stream, got {other:?}"
                         ))
                     }
                     Err(e) => return Err(format!("reading shard stream: {e}")),

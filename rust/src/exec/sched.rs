@@ -59,6 +59,7 @@ use crate::algo::ThetaSeq;
 use crate::coordinator::{CancelToken, ExperimentConfig};
 use crate::graph::Graph;
 use crate::measures::{NodeMeasure, Samples};
+use crate::obs::{Counter, HistKind, Telemetry};
 use crate::rng::Rng64;
 
 /// Memory-safety valve for the activation-paced snapshot queue: when
@@ -477,6 +478,10 @@ pub struct SchedulerSpec<'a> {
     pub jitter_salt: u64,
     /// Panic injection for drain tests; `None` in production.
     pub fault_injection: Option<FailPoint>,
+    /// Telemetry registry for this run (`None` records nothing).
+    /// Recording only ever touches relaxed atomics — no RNG stream,
+    /// claim order, or message content depends on it.
+    pub obs: Option<Arc<Telemetry>>,
 }
 
 /// One queued activation-paced snapshot:
@@ -725,10 +730,25 @@ impl<'a> NodeScheduler<'a> {
             if let Some(t) = turn {
                 t.fail(e.clone());
             }
-            ledger.drain();
+            self.drain_ledger(w, &ledger);
         }
         self.live.fetch_sub(1, Ordering::Release);
         out
+    }
+
+    /// [`GateLedger::drain`], with the settled phase count recorded as
+    /// one drain event (drains are rare — cancellation and failures —
+    /// so each is worth a counter bump and a trace line).
+    fn drain_ledger(&self, w: usize, ledger: &GateLedger<'_>) {
+        let before = ledger.served();
+        ledger.drain();
+        if let Some(obs) = &self.spec.obs {
+            let settled = (ledger.served() - before) as u64;
+            if settled > 0 {
+                obs.bump(Counter::GateDrains);
+                obs.trace("drain", w as u64, settled);
+            }
+        }
     }
 
     fn sleep_compute(&self, i: usize, jitter: &mut Rng64) {
@@ -823,6 +843,9 @@ impl<'a> NodeScheduler<'a> {
             .backend
             .build(cfg.samples_per_activation, n)
             .map_err(|e| format!("worker {w}: oracle build failed: {e}"))?;
+        if let Some(o) = &spec.obs {
+            oracle.attach_obs(Arc::clone(o));
+        }
         let mut theta = ThetaSeq::new(spec.m_theta);
         let mut samples = Samples::empty();
         let mut point = vec![0.0; n];
@@ -843,6 +866,8 @@ impl<'a> NodeScheduler<'a> {
             diag: cfg.diag,
         };
 
+        let obs = spec.obs.as_deref();
+        let mut claims = 0u64;
         let mut sweeps_done = 0usize;
         if spec.sync {
             // DCWB: two gate phases per round — broadcasts of round r+1
@@ -853,22 +878,31 @@ impl<'a> NodeScheduler<'a> {
                     // settle the remaining fence phases (peers may
                     // notice the flag a round later — the drain keeps
                     // them paced, exactly like a failed worker)
-                    ledger.drain();
+                    self.drain_ledger(w, ledger);
                     break;
                 }
                 for (i, node, rng) in mine.iter_mut() {
                     let i = *i;
                     self.sleep_compute(i, &mut jitter);
+                    let _act =
+                        obs.map(|o| o.timer(HistKind::ActivateNs, "activate", i as u64));
                     node.eval_point(&mut theta, r, true, &mut point);
                     spec.measures[i].draw_samples_into(rng, ctx.batch, &mut samples);
                     let rows = spec.measures[i].cost_rows(&samples);
                     oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
                     transport.broadcast(i, r as u64 + 1, Arc::new(node.own_grad.clone()));
                 }
-                ledger.wait()?;
+                {
+                    if let Some(o) = obs {
+                        o.bump(Counter::GateWaits);
+                    }
+                    let _gw =
+                        obs.map(|o| o.timer(HistKind::GateWaitNs, "gate_wait", w as u64));
+                    ledger.wait()?;
+                }
                 for (i, node, _) in mine.iter_mut() {
                     let i = *i;
-                    transport.collect(i, node);
+                    transport.collect(i, node, r as u64 + 1);
                     node.apply_update(
                         &mut theta,
                         r,
@@ -880,8 +914,19 @@ impl<'a> NodeScheduler<'a> {
                     node.eta(&mut theta, r + 1, &mut point);
                     self.eta_snaps[i - start].lock().unwrap().copy_from_slice(&point);
                     self.bump_progress();
+                    claims += 1;
+                    if let Some(o) = obs {
+                        o.node_activation(i);
+                    }
                 }
-                ledger.wait_with(&|| self.sweep_complete(hooks, r))?;
+                {
+                    if let Some(o) = obs {
+                        o.bump(Counter::GateWaits);
+                    }
+                    let _gw =
+                        obs.map(|o| o.timer(HistKind::GateWaitNs, "gate_wait", w as u64));
+                    ledger.wait_with(&|| self.sweep_complete(hooks, r))?;
+                }
                 sweeps_done = r + 1;
             }
         } else if let Some(turn) = turn {
@@ -909,24 +954,32 @@ impl<'a> NodeScheduler<'a> {
                     }
                     let k = sweep * m + i;
                     self.sleep_compute(i, &mut jitter);
-                    activate_node(
-                        node,
-                        i,
-                        k,
-                        spec.compensated,
-                        &mut theta,
-                        &ctx,
-                        spec.graph.degree(i),
-                        spec.measures[i].as_ref(),
-                        rng,
-                        &mut samples,
-                        &mut point,
-                        oracle.as_mut(),
-                        &mut transport,
-                    );
+                    {
+                        let _act = obs
+                            .map(|o| o.timer(HistKind::ActivateNs, "activate", i as u64));
+                        activate_node(
+                            node,
+                            i,
+                            k,
+                            spec.compensated,
+                            &mut theta,
+                            &ctx,
+                            spec.graph.degree(i),
+                            spec.measures[i].as_ref(),
+                            rng,
+                            &mut samples,
+                            &mut point,
+                            oracle.as_mut(),
+                            &mut transport,
+                        );
+                    }
                     node.eta(&mut theta, k + 1, &mut point);
                     self.eta_snaps[li].lock().unwrap().copy_from_slice(&point);
                     self.bump_progress();
+                    claims += 1;
+                    if let Some(o) = obs {
+                        o.node_activation(i);
+                    }
                     if li == range_len - 1 {
                         if let Err(e) = self.sweep_complete(hooks, sweep) {
                             turn.fail(e.clone());
@@ -945,7 +998,7 @@ impl<'a> NodeScheduler<'a> {
                 self.maybe_fail(w, sweep);
                 for (i, node, rng) in mine.iter_mut() {
                     if spec.cancel.is_cancelled() {
-                        ledger.drain();
+                        self.drain_ledger(w, ledger);
                         break 'sweeps;
                     }
                     let i = *i;
@@ -956,32 +1009,55 @@ impl<'a> NodeScheduler<'a> {
                         _ => sweep * m + i,
                     };
                     self.sleep_compute(i, &mut jitter);
-                    activate_node(
-                        node,
-                        i,
-                        k,
-                        spec.compensated,
-                        &mut theta,
-                        &ctx,
-                        spec.graph.degree(i),
-                        spec.measures[i].as_ref(),
-                        rng,
-                        &mut samples,
-                        &mut point,
-                        oracle.as_mut(),
-                        &mut transport,
-                    );
+                    {
+                        let _act = obs
+                            .map(|o| o.timer(HistKind::ActivateNs, "activate", i as u64));
+                        activate_node(
+                            node,
+                            i,
+                            k,
+                            spec.compensated,
+                            &mut theta,
+                            &ctx,
+                            spec.graph.degree(i),
+                            spec.measures[i].as_ref(),
+                            rng,
+                            &mut samples,
+                            &mut point,
+                            oracle.as_mut(),
+                            &mut transport,
+                        );
+                    }
                     node.eta(&mut theta, k + 1, &mut point);
                     self.eta_snaps[i - start].lock().unwrap().copy_from_slice(&point);
                     self.bump_progress();
+                    claims += 1;
+                    if let Some(o) = obs {
+                        o.node_activation(i);
+                    }
                 }
                 if ledger.phases() > 0 {
+                    if let Some(o) = obs {
+                        o.bump(Counter::GateWaits);
+                    }
+                    let _gw =
+                        obs.map(|o| o.timer(HistKind::GateWaitNs, "gate_wait", w as u64));
                     ledger.wait_with(&|| self.sweep_complete(hooks, sweep))?;
                 }
                 sweeps_done = sweep + 1;
             }
         }
 
+        if let Some(o) = obs {
+            if claims > 0 {
+                o.add(Counter::Claims, claims);
+                // fold this worker's claim total into its slot of the
+                // per-worker table (other slots untouched: zero delta)
+                let mut per_worker = vec![0u64; w + 1];
+                per_worker[w] = claims;
+                o.add_worker_claims(&per_worker);
+            }
+        }
         let (messages, wire_messages) = transport.counters();
         Ok((
             mine.into_iter().map(|(i, node, _)| (i, node)).collect(),

@@ -75,6 +75,7 @@ use crate::coordinator::session::{RunCtl, RunEvent, RunTotals};
 use crate::coordinator::{ExperimentConfig, MetricsEvaluator};
 use crate::graph::Graph;
 use crate::measures::Samples;
+use crate::obs::Counter;
 use crate::rng::Rng64;
 
 /// Run one experiment on the threaded executor, streaming progress
@@ -103,10 +104,12 @@ pub(crate) fn run(
         );
     }
     let workers = workers.min(m);
+    let obs = ctl.obs();
     let measures = cfg.measure.build_network(m, cfg.seed);
     // Prevalidate the oracle backend here so worker threads cannot fail
     // after the gate topology is committed.
     let mut init_oracle = cfg.backend.build(cfg.samples_per_activation, n)?;
+    init_oracle.attach_obs(obs.clone());
     let lambda_max = graph.lambda_max();
     let gamma = cfg.gamma_scale / (lambda_max / cfg.beta);
 
@@ -124,7 +127,8 @@ pub(crate) fn run(
     let mut node_rngs: Vec<Rng64> = (0..m).map(|i| root.split(i as u64)).collect();
     let node_factors = cfg.faults.node_factors(m, cfg.seed);
 
-    let grid = MailboxGrid::new(graph, n);
+    let mut grid = MailboxGrid::new(graph, n);
+    grid.attach_obs(obs.clone());
     let mut samples = Samples::empty();
     let mut point = vec![0.0; n];
     let mut messages: u64 = 0;
@@ -190,6 +194,7 @@ pub(crate) fn run(
         cadence_snapshots: true,
         jitter_salt: 0,
         fault_injection: None,
+        obs: Some(obs.clone()),
     });
     // DCWB pays two in-process fence phases per round; the barrier-free
     // pair runs against the (phase-less) FreeGate.
@@ -304,6 +309,9 @@ pub(crate) fn run(
         &mut monitor,
     )?;
     messages += outcome.messages;
+    // One shot at end-of-run, from the same total RunTotals reports, so
+    // the telemetry counter and the legacy field can never disagree.
+    obs.add(Counter::Messages, messages);
     // The run window closes when the last worker finishes — recorded
     // before the final metric evaluation below so `dual_wall` (and the
     // speedup ratios derived from its last timestamp) measure the
@@ -354,11 +362,11 @@ pub(crate) fn run(
         activations: acts_done,
         rounds: rounds_done,
         messages,
-        wire_messages: 0,
         events: acts_done,
         lambda_max,
         barycenter: evaluator.barycenter(),
         cancelled,
+        telemetry: obs.snapshot(),
     }));
     debug_assert!(cancelled || acts_done == budget as u64);
     Ok(())

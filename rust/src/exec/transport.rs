@@ -27,6 +27,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::algo::wbp::WbpNode;
 use crate::graph::Graph;
+use crate::obs::{Counter, HistKind, Telemetry};
 
 /// Backend-agnostic gradient exchange for one experiment run.
 ///
@@ -41,8 +42,25 @@ pub trait Transport {
     /// Fold pending neighbor gradients into `node`'s mailbox. Pull-based
     /// backends (threads) read their slots here; push-based backends
     /// (the event-driven simulator) deliver from their event loop and
-    /// treat this as a no-op.
-    fn collect(&mut self, dst: usize, node: &mut WbpNode);
+    /// treat this as a no-op. `reader_stamp` is the iteration stamp the
+    /// reader is about to publish (`k + 1`) — backends with a telemetry
+    /// registry attached record `reader_stamp − slot stamp` as the
+    /// observed staleness of every consumed gradient.
+    fn collect(&mut self, dst: usize, node: &mut WbpNode, reader_stamp: u64);
+}
+
+/// What a freshest-wins publish did to the slot it hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PublishOutcome {
+    /// The slot held only its zero-initialized (stamp-0) buffer; this
+    /// is the first real gradient it carries.
+    First,
+    /// Replaced an older (or equal-stamp) gradient — the freshest-wins
+    /// overwrite the paper's staleness model allows.
+    Overwrite,
+    /// Rejected: the slot already held a fresher stamp (an out-of-order
+    /// arrival absorbed by the invariant).
+    StaleDrop,
 }
 
 /// One freshest-wins mailbox slot for a single directed edge.
@@ -59,11 +77,21 @@ impl FreshestSlot {
         Self { inner: Mutex::new((0, Arc::new(vec![0.0; n]))) }
     }
 
-    /// Install `grad` if it is at least as fresh as the current content.
-    pub fn publish(&self, stamp: u64, grad: &Arc<Vec<f64>>) {
+    /// Install `grad` if it is at least as fresh as the current
+    /// content; reports what happened so callers can count
+    /// freshest-wins outcomes.
+    pub fn publish(&self, stamp: u64, grad: &Arc<Vec<f64>>) -> PublishOutcome {
         let mut slot = self.inner.lock().unwrap();
         if stamp >= slot.0 {
+            let outcome = if slot.0 == 0 {
+                PublishOutcome::First
+            } else {
+                PublishOutcome::Overwrite
+            };
             *slot = (stamp, grad.clone());
+            outcome
+        } else {
+            PublishOutcome::StaleDrop
         }
     }
 
@@ -89,6 +117,10 @@ pub struct MailboxGrid {
     /// For each source node, the flat slot indices of its outgoing
     /// per-neighbor slots (in neighbor order).
     out_routes: Vec<Vec<usize>>,
+    /// Optional telemetry registry: publish outcomes and read-side
+    /// stamp lag are recorded here when attached. Observation only —
+    /// no grid behavior depends on it.
+    obs: Option<Arc<Telemetry>>,
 }
 
 impl MailboxGrid {
@@ -139,24 +171,48 @@ impl MailboxGrid {
                     .collect()
             })
             .collect();
-        Self { slots, in_offset, out_routes }
+        Self { slots, in_offset, out_routes, obs: None }
+    }
+
+    /// Attach a telemetry registry; subsequent publishes and collects
+    /// record freshest-wins outcomes and stamp lag into it.
+    pub fn attach_obs(&mut self, obs: Arc<Telemetry>) {
+        self.obs = Some(obs);
     }
 
     /// Publish `grad` to every outgoing slot of `src`; returns the
     /// number of messages sent.
     pub fn publish(&self, src: usize, stamp: u64, grad: &Arc<Vec<f64>>) -> u64 {
+        let mut overwrites = 0u64;
+        let mut stale = 0u64;
         for &idx in &self.out_routes[src] {
-            self.slots[idx].publish(stamp, grad);
+            match self.slots[idx].publish(stamp, grad) {
+                PublishOutcome::Overwrite => overwrites += 1,
+                PublishOutcome::StaleDrop => stale += 1,
+                PublishOutcome::First => {}
+            }
         }
-        self.out_routes[src].len() as u64
+        let sent = self.out_routes[src].len() as u64;
+        if let Some(obs) = &self.obs {
+            obs.add(Counter::MailboxPublishes, sent);
+            obs.add(Counter::MailboxOverwrites, overwrites);
+            obs.add(Counter::MailboxStaleDrops, stale);
+        }
+        sent
     }
 
     /// Fold `dst`'s incoming slots into its node mailbox.
-    pub fn collect(&self, dst: usize, node: &mut WbpNode) {
+    /// `reader_stamp` is the stamp the reader is about to publish
+    /// (`k + 1`): with telemetry attached, `reader_stamp − slot stamp`
+    /// is recorded per slot as the observed staleness.
+    pub fn collect(&self, dst: usize, node: &mut WbpNode, reader_stamp: u64) {
         let lo = self.in_offset[dst];
         let hi = self.in_offset[dst + 1];
         for (s, slot) in self.slots[lo..hi].iter().enumerate() {
             let (stamp, grad) = slot.load();
+            if let Some(obs) = &self.obs {
+                obs.record(HistKind::StampLag, reader_stamp.saturating_sub(stamp));
+            }
             node.deliver(s, stamp, &grad);
         }
     }
@@ -186,8 +242,8 @@ impl Transport for ThreadedTransport<'_> {
         self.messages += self.grid.publish(src, stamp, &grad);
     }
 
-    fn collect(&mut self, dst: usize, node: &mut WbpNode) {
-        self.grid.collect(dst, node);
+    fn collect(&mut self, dst: usize, node: &mut WbpNode, reader_stamp: u64) {
+        self.grid.collect(dst, node, reader_stamp);
     }
 }
 
@@ -199,13 +255,49 @@ mod tests {
     #[test]
     fn slot_keeps_freshest() {
         let slot = FreshestSlot::new(2);
-        slot.publish(3, &Arc::new(vec![3.0, 3.0]));
-        slot.publish(1, &Arc::new(vec![1.0, 1.0])); // stale: ignored
+        assert_eq!(slot.publish(3, &Arc::new(vec![3.0, 3.0])), PublishOutcome::First);
+        // stale: ignored
+        assert_eq!(slot.publish(1, &Arc::new(vec![1.0, 1.0])), PublishOutcome::StaleDrop);
         let (stamp, g) = slot.load();
         assert_eq!(stamp, 3);
         assert_eq!(*g, vec![3.0, 3.0]);
-        slot.publish(3, &Arc::new(vec![9.0, 9.0])); // equal stamp: replaces
+        // equal stamp: replaces
+        assert_eq!(slot.publish(3, &Arc::new(vec![9.0, 9.0])), PublishOutcome::Overwrite);
         assert_eq!(*slot.load().1, vec![9.0, 9.0]);
+    }
+
+    #[test]
+    fn staleness_histogram_on_two_node_grid() {
+        use crate::obs::{Counter, HistKind, Telemetry};
+        // Two nodes on one edge: node 0 publishes stamps 1 then 3
+        // (overwriting the unread first), node 1 publishes 2, then a
+        // stale 1 arrives out of order and is dropped. Node 1 reads at
+        // stamp 4, node 0 at stamp 2 — the lag histogram must hold
+        // exactly {4−3, 2−2} = {1, 0}.
+        let graph = Graph::build(2, TopologySpec::Complete);
+        let obs = Telemetry::shared(2);
+        let mut grid = MailboxGrid::new(&graph, 1);
+        grid.attach_obs(obs.clone());
+        grid.publish(0, 1, &Arc::new(vec![1.0]));
+        grid.publish(0, 3, &Arc::new(vec![3.0])); // overwrite of stamp 1
+        grid.publish(1, 2, &Arc::new(vec![2.0]));
+        grid.publish(1, 1, &Arc::new(vec![0.5])); // out-of-order: dropped
+        let mut n1 = WbpNode::new(1, 1);
+        grid.collect(1, &mut n1, 4); // consumes stamp 3 → lag 1
+        let mut n0 = WbpNode::new(1, 1);
+        grid.collect(0, &mut n0, 2); // consumes stamp 2 → lag 0
+        let s = obs.snapshot();
+        assert_eq!(s.counter(Counter::MailboxPublishes), 4);
+        assert_eq!(s.counter(Counter::MailboxOverwrites), 1);
+        assert_eq!(s.counter(Counter::MailboxStaleDrops), 1);
+        let lag = s.hist(HistKind::StampLag).unwrap();
+        assert_eq!(lag.count, 2);
+        assert_eq!(lag.sum, 1);
+        assert_eq!(lag.max, 1);
+        assert_eq!(lag.buckets[0], 1); // the exact-zero (fresh) read
+        assert_eq!(lag.buckets[1], 1); // the lag-1 read
+        assert_eq!(n1.mailbox[0], (3, vec![3.0]));
+        assert_eq!(n0.mailbox[0], (2, vec![2.0]));
     }
 
     #[test]
@@ -219,7 +311,7 @@ mod tests {
         assert_eq!(grid.publish(0, 5, &g), 2);
         for &j in graph.neighbors(0) {
             let mut node = WbpNode::new(3, graph.degree(j));
-            grid.collect(j, &mut node);
+            grid.collect(j, &mut node, 6);
             let s = graph.neighbors(j).binary_search(&0).unwrap();
             assert_eq!(node.mailbox[s].0, 5);
             assert_eq!(node.mailbox[s].1, vec![7.0, 8.0, 9.0]);
@@ -235,7 +327,7 @@ mod tests {
         // is routing-only
         assert_eq!(grid.publish(1, 7, &g), 2);
         let mut node = WbpNode::new(3, graph.degree(0));
-        grid.collect(0, &mut node);
+        grid.collect(0, &mut node, 8);
         let s = graph.neighbors(0).binary_search(&1).unwrap();
         assert_eq!(node.mailbox[s], (7, vec![1.0, 2.0, 3.0]));
         // the routing-only slot swapped in the sender's Arc (pointer
@@ -256,7 +348,7 @@ mod tests {
         t.broadcast(2, 1, Arc::new(vec![2.0]));
         assert_eq!(t.messages, 6);
         let mut node = WbpNode::new(1, 3);
-        t.collect(1, &mut node);
+        t.collect(1, &mut node, 2);
         // neighbors of 1 are [0, 2, 3]; slots 0 and 1 carry gradients
         assert_eq!(node.mailbox[0].1, vec![1.0]);
         assert_eq!(node.mailbox[1].1, vec![2.0]);

@@ -41,6 +41,8 @@
 //! (emitted by `benches/oracle.rs`; schema in `ARCHITECTURE.md`).
 
 use crate::measures::CostRows;
+use crate::obs::{Counter, Telemetry};
+use std::sync::Arc;
 
 /// One cost row, as the kernel consumes it.
 ///
@@ -114,9 +116,25 @@ impl CostRowSource for CostRows {
 }
 
 /// Pooled scratch reused across activations (no hot-path allocation).
+///
+/// Optionally carries a [`Telemetry`] handle (see
+/// [`OracleScratch::attach_obs`]); when present, every
+/// [`dual_oracle`] call records one `oracle_passes` bump plus the
+/// borrowed/generated cost-row split. Recording happens *after* the
+/// numeric pass and touches only relaxed atomics, so attaching
+/// telemetry never changes a result bit.
 #[derive(Clone, Debug, Default)]
 pub struct OracleScratch {
     logits: Vec<f64>,
+    obs: Option<Arc<Telemetry>>,
+}
+
+impl OracleScratch {
+    /// Route per-pass counters into `obs` (oracle passes,
+    /// borrowed/generated cost rows).
+    pub fn attach_obs(&mut self, obs: Arc<Telemetry>) {
+        self.obs = Some(obs);
+    }
 }
 
 /// Stable log-sum-exp over a slice.
@@ -226,26 +244,36 @@ pub fn dual_oracle<S: CostRowSource + ?Sized>(
     let inv_beta = 1.0 / beta;
     grad.fill(0.0);
     let mut lse_sum = 0.0;
+    let (mut borrowed, mut generated) = (0u64, 0u64);
     for r in 0..m {
         let row = rows.cost_row(r);
         debug_assert_eq!(row.len(), n);
         let lse = match row {
             CostRow::Borrowed(c) => {
+                borrowed += 1;
                 softmax_lse_row(eta, c, inv_beta, &mut scratch.logits)
             }
-            CostRow::Quad1d { support, y, inv_scale } => softmax_lse_quad1d(
-                eta,
-                support,
-                y,
-                inv_scale,
-                inv_beta,
-                &mut scratch.logits,
-            ),
+            CostRow::Quad1d { support, y, inv_scale } => {
+                generated += 1;
+                softmax_lse_quad1d(
+                    eta,
+                    support,
+                    y,
+                    inv_scale,
+                    inv_beta,
+                    &mut scratch.logits,
+                )
+            }
         };
         lse_sum += lse;
         for (g, p) in grad.iter_mut().zip(&scratch.logits) {
             *g += p;
         }
+    }
+    if let Some(obs) = &scratch.obs {
+        obs.bump(Counter::OraclePasses);
+        obs.add(Counter::CostRowsBorrowed, borrowed);
+        obs.add(Counter::CostRowsGenerated, generated);
     }
     let inv_m = 1.0 / m as f64;
     for g in grad.iter_mut() {
@@ -383,6 +411,26 @@ mod tests {
             assert!(v.is_finite());
             assert!((grad.iter().sum::<f64>() - 1.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn attached_obs_counts_passes_and_row_kinds() {
+        let obs = Telemetry::shared(0);
+        let mut scratch = OracleScratch::default();
+        scratch.attach_obs(Arc::clone(&obs));
+        let src = QuadSource {
+            support: vec![0.0, 1.0, 2.0],
+            ys: vec![0.5, 1.5],
+            inv_scale: 1.0,
+        };
+        let eta = vec![0.0; 3];
+        let mut grad = vec![0.0; 3];
+        dual_oracle(&eta, &src, 0.1, &mut grad, &mut scratch);
+        let mat = materialize(&src);
+        dual_oracle(&eta, &mat, 0.1, &mut grad, &mut scratch);
+        assert_eq!(obs.counter(Counter::OraclePasses), 2);
+        assert_eq!(obs.counter(Counter::CostRowsGenerated), 2);
+        assert_eq!(obs.counter(Counter::CostRowsBorrowed), 2);
     }
 
     #[test]

@@ -102,6 +102,7 @@ pub mod kernel;
 pub mod linalg;
 pub mod measures;
 pub mod metrics;
+pub mod obs;
 pub mod ot;
 pub mod problems;
 pub mod proptest_util;
@@ -121,6 +122,7 @@ pub mod prelude {
     pub use crate::graph::{Graph, TopologySpec};
     pub use crate::measures::MeasureSpec;
     pub use crate::metrics::Series;
+    pub use crate::obs::{Telemetry, TelemetrySnapshot};
     pub use crate::ot::OracleBackendSpec;
     pub use crate::rng::Rng64;
 }

@@ -57,6 +57,8 @@ fn main() {
             eprintln!("  --executor sim|threads --workers W  (execution backend)");
             eprintln!("gaussian|mnist only:");
             eprintln!("  --progress  (stream metric samples while the run executes; also join)");
+            eprintln!("  --telemetry (print the end-of-run telemetry table; also join)");
+            eprintln!("  --trace-out trace.jsonl  (dump the event trace; scripts/trace_summarize)");
             eprintln!("  --out results/run.csv  (CSV of the metric series)");
             eprintln!("multi-process (see ARCHITECTURE.md):");
             eprintln!("  speedup --processes P --workers W   P shard processes x W-thread pools (PxW)");
@@ -224,8 +226,14 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize, workers: usiz
         a.run_window_seconds(),
         s.run_window_seconds(),
         s.run_window_seconds() / a.run_window_seconds().max(1e-12),
-        a.wire_messages,
-        s.wire_messages,
+        a.wire_messages(),
+        s.wire_messages(),
+    );
+    println!(
+        "GATEWAIT processes a2dwb={:.3}s dcwb={:.3}s (total seconds blocked on \
+         round fences -- the waiting overhead the async algorithm removes)",
+        a.telemetry.gate_wait_secs(),
+        s.telemetry.gate_wait_secs(),
     );
 
     // Fidelity check: lockstep P×W mesh vs single-process single-worker.
@@ -315,6 +323,7 @@ fn cmd_join(args: &Args) -> i32 {
             "timeout",
             "progress",
             "cancel-after",
+            "telemetry",
         ]))?;
         let cfg = ExperimentBuilder::from_cli_args(args, args.has_flag("mnist"))?.config()?;
         let shards = args.get("shards", 2usize)?;
@@ -342,6 +351,10 @@ fn cmd_join(args: &Args) -> i32 {
             Box::new(|_: &RunEvent| {})
         };
         let cancel = CancelToken::new();
+        // Ctrl-C stops the mesh cooperatively: a Cancel frame goes down
+        // every shard stream and the aggregate is a well-formed partial
+        // report instead of a torn-down connection.
+        cancel.cancel_on_sigint();
         let poll_token = cancel.clone();
         let reports = net::collect_shard_streams(
             &listener,
@@ -362,6 +375,10 @@ fn cmd_join(args: &Args) -> i32 {
         let mut report = agg.finish(reports)?;
         report.wall_seconds = t0.elapsed().as_secs_f64();
         println!("{}", report.summary());
+        if args.has_flag("telemetry") {
+            // network-wide merge of every shard's end-of-run snapshot
+            print!("{}", report.telemetry.render_table());
+        }
         Ok(())
     };
     match run() {
@@ -375,7 +392,7 @@ fn cmd_join(args: &Args) -> i32 {
 
 fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
     let build = || -> Result<a2dwb::coordinator::Session, String> {
-        args.reject_unknown(&known_flags(&["out", "progress"]))?;
+        args.reject_unknown(&known_flags(&["out", "progress", "telemetry", "trace-out"]))?;
         ExperimentBuilder::from_cli_args(args, mnist)?.build()
     };
     let session = match build() {
@@ -385,6 +402,13 @@ fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
             return 2;
         }
     };
+    // Arm the trace ring before the run when asked for; tracing only
+    // observes (counters and the ring are outside every RNG stream), so
+    // the trajectory is bit-identical with or without it.
+    let obs = session.telemetry();
+    if args.get_opt("trace-out").is_some() {
+        obs.set_trace_capacity(1 << 16);
+    }
     let cfg = session.config();
     println!(
         "running {} on {} ({} nodes, {:.0}s virtual, backend {:?})",
@@ -404,6 +428,26 @@ fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
     match run() {
         Ok(report) => {
             println!("{}", report.summary());
+            if args.has_flag("telemetry") {
+                print!("{}", report.telemetry.render_table());
+            }
+            if let Some(path) = args.get_opt("trace-out") {
+                let write = std::fs::File::create(path)
+                    .map_err(|e| e.to_string())
+                    .and_then(|f| {
+                        let mut w = std::io::BufWriter::new(f);
+                        let n = obs.write_trace_jsonl(&mut w).map_err(|e| e.to_string())?;
+                        std::io::Write::flush(&mut w).map_err(|e| e.to_string())?;
+                        Ok(n)
+                    });
+                match write {
+                    Ok(n) => println!("wrote {n} trace events to {path}"),
+                    Err(e) => {
+                        eprintln!("error writing {path}: {e}");
+                        return 1;
+                    }
+                }
+            }
             println!(
                 "{}",
                 ascii_summary(

@@ -1,0 +1,932 @@
+//! Observability layer: run-scoped telemetry with zero dependencies.
+//!
+//! A [`Telemetry`] registry is created per run (by
+//! [`Session`](crate::coordinator::Session) for in-process backends, by
+//! the shard runner for mesh processes) and threaded through every
+//! layer that has something to measure:
+//!
+//! * the scheduler (`crate::exec::sched`) records per-worker claim
+//!   counts, gate-wait durations, and drain events;
+//! * the mailbox fabric (`crate::exec::transport`) records
+//!   freshest-wins publish outcomes and the **stamp lag** (staleness)
+//!   observed on every slot read — the paper's central quantity;
+//! * the wire codec (`crate::exec::net::codec`) records frames and
+//!   bytes sent/received per frame kind;
+//! * the kernel consumers (`crate::ot`) record oracle passes and
+//!   borrowed-vs-generated cost rows;
+//! * the simulator runtimes record **virtual-time equivalents** of the
+//!   wait metrics, so telemetry is deterministic and exactly testable.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Never perturb the run.** Recording touches only atomics (and,
+//!    for traces, a bounded mutex-guarded ring); no RNG stream, claim
+//!    order, or message content ever depends on telemetry state, so a
+//!    run with telemetry inspected is bit-identical to one without.
+//! 2. **Lock-free hot path.** Counters and histogram buckets are
+//!    `AtomicU64` bumped with `Relaxed` ordering; snapshots are taken
+//!    at quiescent points (after workers join), where relaxed counts
+//!    are exact.
+//! 3. **Mergeable.** [`TelemetrySnapshot`] is a plain value that
+//!    merges by elementwise addition (max for maxima), so a mesh
+//!    aggregator can fold per-shard snapshots into one network-wide
+//!    view; the wire form (see [`TelemetrySnapshot::to_bytes`]) follows
+//!    the codec's hand-rolled little-endian style.
+//!
+//! Histograms use fixed log₂ buckets: value `v` lands in bucket
+//! `64 − v.leading_zeros()` clamped to [`NUM_BUCKETS`] − 1 (bucket 0
+//! holds exact zeros), so durations spanning ns..minutes and lags
+//! spanning 0..millions need no configuration and merge bucket-wise.
+//!
+//! Durations are recorded in nanoseconds — real backends from
+//! [`Instant`] reads, simulator backends from virtual seconds via
+//! [`Telemetry::record_secs`] (rounded to whole virtual ns, hence
+//! deterministic). The bounded [`TraceEvent`] ring (off by default,
+//! enabled by [`Telemetry::set_trace_capacity`], surfaced by
+//! `--trace-out`) keeps the most recent events only; its JSONL dump
+//! format is one object per line:
+//! `{"t_ns":…,"ev":"gate_wait","who":…,"v":…}` (see
+//! `scripts/trace_summarize`).
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Log₂ histogram bucket count (bucket 0 = exact zero, bucket `b` ≥ 1
+/// covers values with `b` significant bits, i.e. `[2^(b−1), 2^b)`).
+pub const NUM_BUCKETS: usize = 32;
+
+/// Wire-kind table width: index 0 is "unknown", 1..=8 are the codec's
+/// frame kinds (hello, grad, done, bye, report, snapshot, cancel,
+/// telemetry).
+pub const WIRE_KINDS: usize = 9;
+
+/// Human names for the wire-kind table rows.
+pub const WIRE_KIND_NAMES: [&str; WIRE_KINDS] =
+    ["?", "hello", "grad", "done", "bye", "report", "snapshot", "cancel", "telemetry"];
+
+/// Number of registry counters ([`Counter::ALL`]).
+pub const NUM_COUNTERS: usize = 11;
+
+/// Number of registry histograms ([`HistKind::ALL`]).
+pub const NUM_HISTS: usize = 3;
+
+/// Registry counters. The enum order is the snapshot wire order — only
+/// append, never reorder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Node activations executed (Algorithm 3 iterations / DCWB
+    /// node-rounds).
+    Activations,
+    /// Directed-edge gradient messages sent (one per (src, neighbor)
+    /// pair per broadcast — the same granularity every backend counts).
+    Messages,
+    /// Freshest-wins slot publishes attempted.
+    MailboxPublishes,
+    /// Publishes that *replaced* an older nonzero-stamp gradient the
+    /// reader had not necessarily consumed — the freshest-wins
+    /// overwrite the paper's staleness model allows.
+    MailboxOverwrites,
+    /// Publishes rejected because the slot already held a fresher
+    /// stamp (out-of-order arrivals absorbed by the invariant).
+    MailboxStaleDrops,
+    /// Dual-oracle evaluations (one per activation / DCWB node-round).
+    OraclePasses,
+    /// Cost rows served zero-copy from a cached table
+    /// ([`CostRow::Borrowed`](crate::kernel::CostRow)).
+    CostRowsBorrowed,
+    /// Cost rows generated inside the kernel pass
+    /// ([`CostRow::Quad1d`](crate::kernel::CostRow)).
+    CostRowsGenerated,
+    /// Round-gate fence waits served (two per DCWB round per worker).
+    GateWaits,
+    /// Gate-ledger drain events (cancelled / failed workers settling
+    /// the fence phases they still owed).
+    GateDrains,
+    /// Scheduler iteration claims (all workers; per-worker split in
+    /// [`TelemetrySnapshot::worker_claims`]).
+    Claims,
+}
+
+impl Counter {
+    /// All counters in snapshot wire order.
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::Activations,
+        Counter::Messages,
+        Counter::MailboxPublishes,
+        Counter::MailboxOverwrites,
+        Counter::MailboxStaleDrops,
+        Counter::OraclePasses,
+        Counter::CostRowsBorrowed,
+        Counter::CostRowsGenerated,
+        Counter::GateWaits,
+        Counter::GateDrains,
+        Counter::Claims,
+    ];
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case name (trace/JSON/table key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Activations => "activations",
+            Counter::Messages => "messages",
+            Counter::MailboxPublishes => "mailbox_publishes",
+            Counter::MailboxOverwrites => "mailbox_overwrites",
+            Counter::MailboxStaleDrops => "mailbox_stale_drops",
+            Counter::OraclePasses => "oracle_passes",
+            Counter::CostRowsBorrowed => "cost_rows_borrowed",
+            Counter::CostRowsGenerated => "cost_rows_generated",
+            Counter::GateWaits => "gate_waits",
+            Counter::GateDrains => "gate_drains",
+            Counter::Claims => "claims",
+        }
+    }
+}
+
+/// Registry histograms. Enum order is the snapshot wire order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HistKind {
+    /// Time spent blocked on a round-gate fence, in ns (virtual ns on
+    /// the simulator: the round's slowest-edge barrier latency).
+    GateWaitNs,
+    /// Stamp lag observed on a mailbox slot read: reader's iteration
+    /// stamp minus the stamp of the gradient it consumed (0 = fresh).
+    StampLag,
+    /// Duration of one node activation (oracle + update + broadcast),
+    /// in ns (virtual compute time on the simulator).
+    ActivateNs,
+}
+
+impl HistKind {
+    /// All histograms in snapshot wire order.
+    pub const ALL: [HistKind; NUM_HISTS] =
+        [HistKind::GateWaitNs, HistKind::StampLag, HistKind::ActivateNs];
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            HistKind::GateWaitNs => "gate_wait_ns",
+            HistKind::StampLag => "stamp_lag",
+            HistKind::ActivateNs => "activate_ns",
+        }
+    }
+}
+
+fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+}
+
+/// Fixed-bucket log₂ histogram over `u64` values, lock-free.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One bounded trace record (see the module docs for the JSONL form).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Nanoseconds since the registry's epoch (virtual ns from
+    /// simulator backends).
+    pub t_ns: u64,
+    /// Event kind, e.g. `"gate_wait"`, `"activate"`, `"drain"`.
+    pub kind: &'static str,
+    /// Worker or node index, backend-defined.
+    pub who: u64,
+    /// Event payload (duration in ns, phase count, …).
+    pub value: u64,
+}
+
+#[derive(Debug, Default)]
+struct TraceRing {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Per-wire-kind cell: frames/bytes in each direction.
+#[derive(Debug, Default)]
+struct WireCell {
+    sent: AtomicU64,
+    sent_bytes: AtomicU64,
+    recv: AtomicU64,
+    recv_bytes: AtomicU64,
+}
+
+/// The run-scoped telemetry registry. Cheap to share (`Arc`), safe to
+/// bump from any worker thread, snapshotted at quiescent points.
+#[derive(Debug)]
+pub struct Telemetry {
+    epoch: Instant,
+    counters: [AtomicU64; NUM_COUNTERS],
+    hists: [Histogram; NUM_HISTS],
+    wire: [WireCell; WIRE_KINDS],
+    node_acts: Vec<AtomicU64>,
+    worker_claims: Mutex<Vec<u64>>,
+    trace_cap: AtomicUsize,
+    trace: Mutex<TraceRing>,
+}
+
+impl Telemetry {
+    /// A registry tracking `nodes` per-node activation counters (pass
+    /// the network size m; 0 is fine for contexts without nodes).
+    pub fn new(nodes: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| Histogram::default()),
+            wire: std::array::from_fn(|_| WireCell::default()),
+            node_acts: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            worker_claims: Mutex::new(Vec::new()),
+            trace_cap: AtomicUsize::new(0),
+            trace: Mutex::new(TraceRing::default()),
+        }
+    }
+
+    /// `Arc`-wrapped [`Telemetry::new`].
+    pub fn shared(nodes: usize) -> Arc<Self> {
+        Arc::new(Self::new(nodes))
+    }
+
+    // ------------------------------------------------------------ counters
+
+    /// Increment `c` by one.
+    #[inline]
+    pub fn bump(&self, c: Counter) {
+        self.counters[c.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment `c` by `n`.
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        if n != 0 {
+            self.counters[c.idx()].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value of `c` (exact at quiescent points).
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Record one activation of node `i` (ignored if `i` is outside
+    /// the registry's node table — e.g. a zero-node registry).
+    #[inline]
+    pub fn node_activation(&self, i: usize) {
+        self.bump(Counter::Activations);
+        if let Some(a) = self.node_acts.get(i) {
+            a.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold one worker pool's per-worker claim counts in (elementwise
+    /// add, growing the table to the widest pool seen).
+    pub fn add_worker_claims(&self, claims: &[u64]) {
+        let mut tbl = self.worker_claims.lock().unwrap();
+        if tbl.len() < claims.len() {
+            tbl.resize(claims.len(), 0);
+        }
+        for (t, &c) in tbl.iter_mut().zip(claims) {
+            *t += c;
+        }
+    }
+
+    // ---------------------------------------------------------- histograms
+
+    /// Record `v` into histogram `h`.
+    #[inline]
+    pub fn record(&self, h: HistKind, v: u64) {
+        self.hists[h.idx()].record(v);
+    }
+
+    /// Record a (virtual or real) duration in seconds, rounded to
+    /// whole nanoseconds — the deterministic path for simulator time.
+    #[inline]
+    pub fn record_secs(&self, h: HistKind, secs: f64) {
+        self.record(h, (secs.max(0.0) * 1e9).round() as u64);
+    }
+
+    /// Scoped timer: records the guard's lifetime into `h` (and traces
+    /// it as `kind` when tracing is on) when dropped.
+    pub fn timer(&self, h: HistKind, kind: &'static str, who: u64) -> Timer<'_> {
+        Timer { obs: self, hist: h, kind, who, t0: Instant::now() }
+    }
+
+    // --------------------------------------------------------------- wire
+
+    /// Record one outbound wire frame of `kind` and its total on-wire
+    /// size in bytes (length prefix included).
+    #[inline]
+    pub fn wire_sent(&self, kind: u8, bytes: usize) {
+        let cell = &self.wire[(kind as usize).min(WIRE_KINDS - 1)];
+        cell.sent.fetch_add(1, Ordering::Relaxed);
+        cell.sent_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record one inbound wire frame of `kind` and its on-wire size.
+    #[inline]
+    pub fn wire_recv(&self, kind: u8, bytes: usize) {
+        let cell = &self.wire[(kind as usize).min(WIRE_KINDS - 1)];
+        cell.recv.fetch_add(1, Ordering::Relaxed);
+        cell.recv_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    // -------------------------------------------------------------- trace
+
+    /// Enable the bounded trace ring (0 disables; the ring keeps the
+    /// most recent `cap` events and counts the rest as dropped).
+    pub fn set_trace_capacity(&self, cap: usize) {
+        self.trace_cap.store(cap, Ordering::Relaxed);
+    }
+
+    /// Whether trace events are currently being kept.
+    #[inline]
+    pub fn tracing(&self) -> bool {
+        self.trace_cap.load(Ordering::Relaxed) > 0
+    }
+
+    /// Append a trace event stamped with real elapsed time since the
+    /// registry epoch. No-op unless tracing is enabled.
+    #[inline]
+    pub fn trace(&self, kind: &'static str, who: u64, value: u64) {
+        if self.tracing() {
+            let t = self.epoch.elapsed().as_nanos() as u64;
+            self.trace_at(t, kind, who, value);
+        }
+    }
+
+    /// Append a trace event with an explicit timestamp (simulator
+    /// backends pass virtual ns). No-op unless tracing is enabled.
+    pub fn trace_at(&self, t_ns: u64, kind: &'static str, who: u64, value: u64) {
+        let cap = self.trace_cap.load(Ordering::Relaxed);
+        if cap == 0 {
+            return;
+        }
+        let mut ring = self.trace.lock().unwrap();
+        if ring.events.len() >= cap {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(TraceEvent { t_ns, kind, who, value });
+    }
+
+    /// Take the buffered trace events (oldest first), leaving the ring
+    /// empty. Returns `(events, dropped_count)`.
+    pub fn drain_trace(&self) -> (Vec<TraceEvent>, u64) {
+        let mut ring = self.trace.lock().unwrap();
+        let dropped = ring.dropped;
+        ring.dropped = 0;
+        (std::mem::take(&mut ring.events).into(), dropped)
+    }
+
+    /// Drain the trace ring as JSONL, one event object per line.
+    pub fn write_trace_jsonl(&self, w: &mut impl Write) -> std::io::Result<u64> {
+        let (events, dropped) = self.drain_trace();
+        for e in &events {
+            writeln!(
+                w,
+                "{{\"t_ns\":{},\"ev\":\"{}\",\"who\":{},\"v\":{}}}",
+                e.t_ns, e.kind, e.who, e.value
+            )?;
+        }
+        Ok(events.len() as u64 + dropped)
+    }
+
+    // ----------------------------------------------------------- snapshot
+
+    /// A plain-value snapshot of every counter, histogram, wire cell,
+    /// and table. Exact once the run's workers have joined.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            counters: Counter::ALL.iter().map(|&c| self.counter(c)).collect(),
+            hists: self.hists.iter().map(Histogram::snapshot).collect(),
+            wire: self
+                .wire
+                .iter()
+                .map(|c| {
+                    [
+                        c.sent.load(Ordering::Relaxed),
+                        c.sent_bytes.load(Ordering::Relaxed),
+                        c.recv.load(Ordering::Relaxed),
+                        c.recv_bytes.load(Ordering::Relaxed),
+                    ]
+                })
+                .collect(),
+            node_activations: self
+                .node_acts
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
+            worker_claims: self.worker_claims.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// Scoped wall-clock timer (see [`Telemetry::timer`]).
+pub struct Timer<'a> {
+    obs: &'a Telemetry,
+    hist: HistKind,
+    kind: &'static str,
+    who: u64,
+    t0: Instant,
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        let ns = self.t0.elapsed().as_nanos() as u64;
+        self.obs.record(self.hist, ns);
+        self.obs.trace(self.kind, self.who, ns);
+    }
+}
+
+/// Snapshot of one [`Histogram`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Log₂ bucket counts ([`NUM_BUCKETS`] entries).
+    pub buckets: Vec<u64>,
+    /// Total recorded values.
+    pub count: u64,
+    /// Sum of recorded values (ns for duration histograms).
+    pub sum: u64,
+    /// Largest recorded value.
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    /// Mean recorded value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    fn merge(&mut self, other: &HistSnapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (a, &b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Mergeable, wire-serializable snapshot of a [`Telemetry`] registry.
+///
+/// `Default` is the empty snapshot (all tables empty), which is also
+/// the merge identity — an aggregator can start from `default()` and
+/// fold shard snapshots in.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TelemetrySnapshot {
+    /// Counter values in [`Counter::ALL`] order.
+    pub counters: Vec<u64>,
+    /// Histograms in [`HistKind::ALL`] order.
+    pub hists: Vec<HistSnapshot>,
+    /// Per-wire-kind `[sent, sent_bytes, recv, recv_bytes]`
+    /// ([`WIRE_KINDS`] rows).
+    pub wire: Vec<[u64; 4]>,
+    /// Activations per network node (length m).
+    pub node_activations: Vec<u64>,
+    /// Claims per worker slot (pools merge elementwise).
+    pub worker_claims: Vec<u64>,
+}
+
+impl TelemetrySnapshot {
+    /// Value of counter `c` (0 when absent — e.g. the empty snapshot).
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters.get(c.idx()).copied().unwrap_or(0)
+    }
+
+    /// Histogram `h`, if recorded.
+    pub fn hist(&self, h: HistKind) -> Option<&HistSnapshot> {
+        self.hists.get(h.idx())
+    }
+
+    /// Total seconds spent blocked on round-gate fences (the paper's
+    /// waiting overhead; 0 for the barrier-free async algorithms).
+    pub fn gate_wait_secs(&self) -> f64 {
+        self.hist(HistKind::GateWaitNs).map_or(0.0, |h| h.sum as f64 / 1e9)
+    }
+
+    /// Mean stamp lag observed across all mailbox reads (iterations).
+    pub fn mean_stamp_lag(&self) -> f64 {
+        self.hist(HistKind::StampLag).map_or(0.0, HistSnapshot::mean)
+    }
+
+    /// Total frames sent across all wire kinds.
+    pub fn wire_frames_sent(&self) -> u64 {
+        self.wire.iter().map(|c| c[0]).sum()
+    }
+
+    /// Total bytes sent across all wire kinds.
+    pub fn wire_bytes_sent(&self) -> u64 {
+        self.wire.iter().map(|c| c[1]).sum()
+    }
+
+    /// Frames sent of one wire kind (codec kind byte).
+    pub fn wire_kind_sent(&self, kind: u8) -> u64 {
+        self.wire.get(kind as usize).map_or(0, |c| c[0])
+    }
+
+    /// Frames received of one wire kind (codec kind byte).
+    pub fn wire_kind_recv(&self, kind: u8) -> u64 {
+        self.wire.get(kind as usize).map_or(0, |c| c[2])
+    }
+
+    /// Gradient frames sent on the wire — the quantity the legacy
+    /// `wire_messages` report counter carried (kind 2 = Grad).
+    pub fn wire_grad_frames(&self) -> u64 {
+        self.wire_kind_sent(2)
+    }
+
+    /// Fold `other` into `self` (elementwise add; maxima take max;
+    /// tables grow to the larger operand).
+    pub fn merge(&mut self, other: &TelemetrySnapshot) {
+        merge_u64s(&mut self.counters, &other.counters);
+        if self.hists.len() < other.hists.len() {
+            self.hists.resize(other.hists.len(), HistSnapshot::default());
+        }
+        for (a, b) in self.hists.iter_mut().zip(&other.hists) {
+            a.merge(b);
+        }
+        if self.wire.len() < other.wire.len() {
+            self.wire.resize(other.wire.len(), [0; 4]);
+        }
+        for (a, b) in self.wire.iter_mut().zip(&other.wire) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        merge_u64s(&mut self.node_activations, &other.node_activations);
+        merge_u64s(&mut self.worker_claims, &other.worker_claims);
+    }
+
+    // ----------------------------------------------------------- wire form
+
+    /// Serialize in the codec's little-endian style: every table is a
+    /// `u32` count followed by `u64` values, so decoding is strict and
+    /// self-describing (see [`TelemetrySnapshot::from_bytes`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            8 * (self.counters.len()
+                + self.hists.len() * (NUM_BUCKETS + 3)
+                + self.wire.len() * 4
+                + self.node_activations.len()
+                + self.worker_claims.len())
+                + 64,
+        );
+        put_u64s(&mut b, &self.counters);
+        b.extend_from_slice(&(self.hists.len() as u32).to_le_bytes());
+        for h in &self.hists {
+            put_u64s(&mut b, &h.buckets);
+            b.extend_from_slice(&h.count.to_le_bytes());
+            b.extend_from_slice(&h.sum.to_le_bytes());
+            b.extend_from_slice(&h.max.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.wire.len() as u32).to_le_bytes());
+        for cell in &self.wire {
+            for v in cell {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        put_u64s(&mut b, &self.node_activations);
+        put_u64s(&mut b, &self.worker_claims);
+        b
+    }
+
+    /// Strict inverse of [`TelemetrySnapshot::to_bytes`]: underruns,
+    /// oversized counts, and trailing bytes are all hard errors.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, String> {
+        let mut c = Reader { buf, pos: 0 };
+        let counters = c.take_u64s()?;
+        let n_hists = c.take_count()?;
+        let mut hists = Vec::with_capacity(n_hists);
+        for _ in 0..n_hists {
+            hists.push(HistSnapshot {
+                buckets: c.take_u64s()?,
+                count: c.take_u64()?,
+                sum: c.take_u64()?,
+                max: c.take_u64()?,
+            });
+        }
+        let n_wire = c.take_count()?;
+        let mut wire = Vec::with_capacity(n_wire);
+        for _ in 0..n_wire {
+            wire.push([c.take_u64()?, c.take_u64()?, c.take_u64()?, c.take_u64()?]);
+        }
+        let node_activations = c.take_u64s()?;
+        let worker_claims = c.take_u64s()?;
+        if c.pos != buf.len() {
+            return Err(format!(
+                "{} trailing bytes after telemetry snapshot",
+                buf.len() - c.pos
+            ));
+        }
+        Ok(Self { counters, hists, wire, node_activations, worker_claims })
+    }
+
+    // ------------------------------------------------------------- display
+
+    /// Human summary table (the `--telemetry` CLI surface).
+    pub fn render_table(&self) -> String {
+        let mut s = String::new();
+        s.push_str("telemetry:\n");
+        for (i, &c) in Counter::ALL.iter().enumerate() {
+            let v = self.counters.get(i).copied().unwrap_or(0);
+            if v != 0 {
+                s.push_str(&format!("  {:<22} {v}\n", c.name()));
+            }
+        }
+        for (i, &h) in HistKind::ALL.iter().enumerate() {
+            if let Some(hs) = self.hists.get(i) {
+                if hs.count != 0 {
+                    s.push_str(&format!(
+                        "  {:<22} count={} mean={:.1} max={}\n",
+                        h.name(),
+                        hs.count,
+                        hs.mean(),
+                        hs.max
+                    ));
+                }
+            }
+        }
+        let mut wired = false;
+        for (k, cell) in self.wire.iter().enumerate() {
+            if cell.iter().all(|&v| v == 0) {
+                continue;
+            }
+            if !wired {
+                s.push_str("  wire (kind: sent frames/bytes, recv frames/bytes):\n");
+                wired = true;
+            }
+            s.push_str(&format!(
+                "    {:<10} {}/{} {}/{}\n",
+                WIRE_KIND_NAMES.get(k).copied().unwrap_or("?"),
+                cell[0],
+                cell[1],
+                cell[2],
+                cell[3]
+            ));
+        }
+        if !self.worker_claims.is_empty() {
+            s.push_str(&format!("  worker_claims          {:?}\n", self.worker_claims));
+        }
+        s
+    }
+}
+
+fn merge_u64s(a: &mut Vec<u64>, b: &[u64]) {
+    if a.len() < b.len() {
+        a.resize(b.len(), 0);
+    }
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+fn put_u64s(buf: &mut Vec<u8>, vs: &[u64]) {
+    buf.extend_from_slice(&(vs.len() as u32).to_le_bytes());
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated telemetry snapshot: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn take_count(&mut self) -> Result<usize, String> {
+        let n = u32::from_le_bytes(self.take(4)?.try_into().unwrap()) as usize;
+        if n * 8 > self.buf.len() - self.pos {
+            return Err(format!("telemetry snapshot count {n} overruns payload"));
+        }
+        Ok(n)
+    }
+
+    fn take_u64s(&mut self) -> Result<Vec<u64>, String> {
+        let n = self.take_count()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.take_u64()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn counters_and_hists_record_exactly() {
+        let t = Telemetry::new(3);
+        t.bump(Counter::Messages);
+        t.add(Counter::Messages, 4);
+        t.node_activation(2);
+        t.node_activation(2);
+        t.node_activation(0);
+        t.node_activation(99); // out of range: counted globally only
+        t.record(HistKind::StampLag, 0);
+        t.record(HistKind::StampLag, 3);
+        t.record_secs(HistKind::GateWaitNs, 1.5e-6);
+        let s = t.snapshot();
+        assert_eq!(s.counter(Counter::Messages), 5);
+        assert_eq!(s.counter(Counter::Activations), 4);
+        assert_eq!(s.node_activations, vec![1, 0, 2]);
+        let lag = s.hist(HistKind::StampLag).unwrap();
+        assert_eq!((lag.count, lag.sum, lag.max), (2, 3, 3));
+        assert_eq!(lag.buckets[0], 1); // the exact zero
+        assert_eq!(s.hist(HistKind::GateWaitNs).unwrap().sum, 1500);
+        assert!((s.gate_wait_secs() - 1.5e-6).abs() < 1e-15);
+        assert!((s.mean_stamp_lag() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_identity_on_default() {
+        let a = Telemetry::new(2);
+        a.bump(Counter::OraclePasses);
+        a.node_activation(0);
+        a.record(HistKind::StampLag, 7);
+        a.wire_sent(2, 100);
+        a.add_worker_claims(&[3, 1]);
+        let b = Telemetry::new(2);
+        b.add(Counter::OraclePasses, 2);
+        b.node_activation(1);
+        b.record(HistKind::StampLag, 1);
+        b.wire_recv(2, 100);
+        b.add_worker_claims(&[2]);
+
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let mut merged = TelemetrySnapshot::default();
+        merged.merge(&sa);
+        merged.merge(&sb);
+        assert_eq!(merged.counter(Counter::OraclePasses), 3);
+        assert_eq!(merged.node_activations, vec![1, 1]);
+        let lag = merged.hist(HistKind::StampLag).unwrap();
+        assert_eq!((lag.count, lag.sum, lag.max), (2, 8, 7));
+        assert_eq!(merged.wire_kind_sent(2), 1);
+        assert_eq!(merged.wire_kind_recv(2), 1);
+        assert_eq!(merged.wire[2][1], 100);
+        assert_eq!(merged.wire[2][3], 100);
+        assert_eq!(merged.worker_claims, vec![5, 1]);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_rejects_truncation() {
+        let t = Telemetry::new(4);
+        t.add(Counter::Claims, 17);
+        t.record(HistKind::GateWaitNs, 1_000_000);
+        t.wire_sent(6, 512);
+        t.node_activation(3);
+        t.add_worker_claims(&[9, 8]);
+        let s = t.snapshot();
+        let bytes = s.to_bytes();
+        assert_eq!(TelemetrySnapshot::from_bytes(&bytes).unwrap(), s);
+        // every strict prefix must fail, never silently decode
+        for cut in 0..bytes.len() {
+            assert!(
+                TelemetrySnapshot::from_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes decoded silently"
+            );
+        }
+        // trailing garbage is rejected too
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(TelemetrySnapshot::from_bytes(&long).is_err());
+        // the empty snapshot round-trips as the merge identity
+        let empty = TelemetrySnapshot::default();
+        assert_eq!(
+            TelemetrySnapshot::from_bytes(&empty.to_bytes()).unwrap(),
+            empty
+        );
+    }
+
+    #[test]
+    fn trace_ring_is_bounded_and_drains_in_order() {
+        let t = Telemetry::new(0);
+        t.trace("never", 0, 0); // tracing off: dropped silently
+        assert!(!t.tracing());
+        t.set_trace_capacity(3);
+        assert!(t.tracing());
+        for i in 0..5 {
+            t.trace_at(i, "ev", i, i * 10);
+        }
+        let (events, dropped) = t.drain_trace();
+        assert_eq!(dropped, 2);
+        assert_eq!(
+            events.iter().map(|e| e.t_ns).collect::<Vec<_>>(),
+            vec![2, 3, 4]
+        );
+        // drained: the ring is empty again
+        assert_eq!(t.drain_trace().0.len(), 0);
+    }
+
+    #[test]
+    fn trace_jsonl_shape() {
+        let t = Telemetry::new(0);
+        t.set_trace_capacity(8);
+        t.trace_at(42, "gate_wait", 1, 1000);
+        let mut out = Vec::new();
+        let total = t.write_trace_jsonl(&mut out).unwrap();
+        assert_eq!(total, 1);
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            "{\"t_ns\":42,\"ev\":\"gate_wait\",\"who\":1,\"v\":1000}\n"
+        );
+    }
+
+    #[test]
+    fn timer_records_into_hist() {
+        let t = Telemetry::new(0);
+        {
+            let _g = t.timer(HistKind::GateWaitNs, "gate_wait", 0);
+        }
+        let s = t.snapshot();
+        assert_eq!(s.hist(HistKind::GateWaitNs).unwrap().count, 1);
+    }
+
+    #[test]
+    fn render_table_mentions_nonzero_rows_only() {
+        let t = Telemetry::new(1);
+        t.add(Counter::Messages, 12);
+        t.wire_sent(2, 64);
+        let table = t.snapshot().render_table();
+        assert!(table.contains("messages"));
+        assert!(table.contains("grad"));
+        assert!(!table.contains("oracle_passes"));
+    }
+}

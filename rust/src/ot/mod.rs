@@ -73,6 +73,11 @@ pub trait DualOracle {
     ) -> f64;
 
     fn name(&self) -> &'static str;
+
+    /// Route per-pass telemetry (oracle passes, borrowed/generated cost
+    /// rows) into `obs`. Default: ignore — backends without kernel-side
+    /// counting (e.g. PJRT) simply don't report these counters.
+    fn attach_obs(&mut self, _obs: std::sync::Arc<crate::obs::Telemetry>) {}
 }
 
 /// f64 native backend — the kernel, directly.
@@ -94,6 +99,10 @@ impl DualOracle for NativeOracle {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn attach_obs(&mut self, obs: std::sync::Arc<crate::obs::Telemetry>) {
+        self.scratch.attach_obs(obs);
     }
 }
 

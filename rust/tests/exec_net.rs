@@ -76,8 +76,24 @@ fn lockstep_two_shard_mesh_is_bit_identical_to_single_process() {
     // touch the other shard, each broadcasting once in the initial
     // exchange and once per sweep.
     let sweeps = (cfg.duration / cfg.activation_interval).round() as u64;
-    assert_eq!(mesh.wire_messages, 4 * (sweeps + 1));
-    assert_eq!(single.wire_messages, 0);
+    assert_eq!(mesh.wire_messages(), 4 * (sweeps + 1));
+    assert_eq!(single.wire_messages(), 0);
+
+    // The merged telemetry snapshot must agree with the report exactly:
+    // grad frames ARE the wire_messages() accessor, per-node activation
+    // tables stitch by global node id (disjoint shard slices), and the
+    // mesh-wide Messages counter equals the edge-granularity total. A
+    // 2-shard mesh whose readers drain to Bye receives every grad frame
+    // its writers sent.
+    let t = &mesh.telemetry;
+    assert_eq!(t.wire_grad_frames(), mesh.wire_messages());
+    assert_eq!(t.wire_kind_recv(2), t.wire_kind_sent(2));
+    assert_eq!(t.counter(a2dwb::obs::Counter::Messages), mesh.messages);
+    assert_eq!(t.node_activations.len(), m);
+    assert_eq!(t.node_activations.iter().sum::<u64>(), mesh.activations);
+    for (i, &acts) in t.node_activations.iter().enumerate() {
+        assert_eq!(acts, sweeps, "node {i} activation count");
+    }
 }
 
 #[test]
@@ -105,7 +121,10 @@ fn lockstep_three_shard_mesh_is_bit_identical_to_single_process() {
     assert_eq!(series_bits(&mesh.dual_objective), series_bits(&single.dual_objective));
     assert_eq!(mesh.barycenter, single.barycenter);
     assert_eq!(mesh.messages, single.messages);
-    assert!(mesh.wire_messages > 0);
+    assert!(mesh.wire_messages() > 0);
+    // three shards' snapshots merge into one network-wide table whose
+    // activation total is the run's
+    assert_eq!(mesh.telemetry.node_activations.iter().sum::<u64>(), mesh.activations);
 }
 
 #[test]
@@ -194,7 +213,7 @@ fn free_running_mesh_converges_like_the_simulator() {
         mesh_first - mesh_final
     );
     assert_eq!(mesh.activations, sim.activations);
-    assert!(mesh.wire_messages > 0);
+    assert!(mesh.wire_messages() > 0);
     // run window recorded for the speedup ratios
     assert!(mesh.run_window_seconds() > 0.0);
 }
