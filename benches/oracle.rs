@@ -3,16 +3,23 @@
 //!
 //! * native Rust f64 oracle (production hot path)
 //! * materialized-vs-zero-copy comparison over the real measure
-//!   families at n ∈ {100, 784} — the kernel refactor's payoff, emitted
-//!   to `BENCH_kernel.json` to anchor the perf trajectory across PRs
+//!   families at n ∈ {100, 784} — the kernel refactor's payoff
+//! * scalar-vs-wide kernel comparison (the `--kernel wide` lane-array
+//!   path) at n ∈ {100, 784}
+//! * batched-vs-sequential oracle at B ∈ {1, 8, 32} — one cost-row
+//!   pass amortized over B η-vectors (`dual_oracle_batch`)
 //! * PJRT execution of the AOT JAX/Pallas artifact (three-layer proof;
 //!   skipped with a message if `make artifacts` has not run)
 //!
-//! Reports ns/call and the implied activations/second, plus the
-//! DESIGN.md §Perf roofline estimate (bytes touched per call).
+//! All kernel cells run in ONE process against ONE shared
+//! [`OracleScratch`] warmed before the first timed iteration, with
+//! fixed seeds — so the `BENCH_kernel.json` ratios compare kernels,
+//! not allocator or cache states. Reports ns/call and the implied
+//! activations/second, plus the DESIGN.md §Perf roofline estimate
+//! (bytes touched per call).
 
 use a2dwb::bench_util::{bench, black_box, fmt_ns};
-use a2dwb::kernel;
+use a2dwb::kernel::{self, KernelImpl};
 use a2dwb::measures::{CostRows, MeasureSpec, NodeMeasure};
 use a2dwb::ot::{dual_oracle_into, DualOracle, NativeOracle, OracleScratch};
 use a2dwb::rng::Rng64;
@@ -36,12 +43,33 @@ struct KernelCell {
     zero_copy_ns: f64,
 }
 
+struct WideCell {
+    measure: String,
+    m: usize,
+    n: usize,
+    scalar_ns: f64,
+    wide_ns: f64,
+}
+
+struct BatchCell {
+    b: usize,
+    m: usize,
+    n: usize,
+    sequential_ns: f64,
+    batch_ns: f64,
+}
+
 /// One materialized-vs-zero-copy cell: pre-draw a fixed sample batch,
 /// then time (a) the retired per-activation path — materialize the M×n
 /// cost rows, run the oracle over the buffer — against (b) the kernel
 /// path reading the same rows zero-copy. Identical outputs (asserted),
 /// different memory traffic.
-fn kernel_cell(spec: &MeasureSpec, m: usize, seed: u64) -> KernelCell {
+fn kernel_cell(
+    spec: &MeasureSpec,
+    m: usize,
+    seed: u64,
+    scratch: &mut OracleScratch,
+) -> KernelCell {
     let n = spec.support_size();
     let network = spec.build_network(1, seed);
     let measure = &network[0];
@@ -52,17 +80,16 @@ fn kernel_cell(spec: &MeasureSpec, m: usize, seed: u64) -> KernelCell {
 
     let mut grad_a = vec![0.0; n];
     let mut grad_b = vec![0.0; n];
-    let mut scratch = OracleScratch::default();
     let mut cost = CostRows::new(m, n);
 
     let name = spec.name();
     let mat = bench(&format!("materialized_{name}_m{m}"), 10, 200, 7, |_| {
         cost.fill_from(&measure.cost_rows(&samples));
-        black_box(dual_oracle_into(&eta, &cost, beta, &mut grad_a, &mut scratch))
+        black_box(dual_oracle_into(&eta, &cost, beta, &mut grad_a, scratch))
     });
     let zc = bench(&format!("zero_copy_{name}_m{m}"), 10, 200, 7, |_| {
         let rows = measure.cost_rows(&samples);
-        black_box(kernel::dual_oracle(&eta, &rows, beta, &mut grad_b, &mut scratch))
+        black_box(kernel::dual_oracle(&eta, &rows, beta, &mut grad_b, scratch))
     });
     assert_eq!(grad_a, grad_b, "paths must agree bitwise");
     println!(
@@ -80,7 +107,114 @@ fn kernel_cell(spec: &MeasureSpec, m: usize, seed: u64) -> KernelCell {
     }
 }
 
-fn emit_kernel_json(cells: &[KernelCell]) {
+/// One scalar-vs-wide cell over the zero-copy Gaussian binding: same
+/// measure, same frozen samples, same η — only the lane width of the
+/// row kernels changes (wide must land within 1e-12 per gradient
+/// entry; asserted, not just trusted to the test suite).
+fn wide_cell(
+    spec: &MeasureSpec,
+    m: usize,
+    seed: u64,
+    scratch: &mut OracleScratch,
+) -> WideCell {
+    let n = spec.support_size();
+    let network = spec.build_network(1, seed);
+    let measure = &network[0];
+    let mut rng = Rng64::new(seed ^ 0x57_4944);
+    let eta: Vec<f64> = (0..n).map(|_| 0.2 * rng.normal()).collect();
+    let samples = measure.draw_samples(&mut rng, m);
+    let beta = 0.02;
+
+    let mut grad_s = vec![0.0; n];
+    let mut grad_w = vec![0.0; n];
+    let name = spec.name();
+    scratch.set_kernel(KernelImpl::Scalar);
+    let sc = bench(&format!("scalar_{name}_n{n}"), 10, 200, 7, |_| {
+        let rows = measure.cost_rows(&samples);
+        black_box(kernel::dual_oracle(&eta, &rows, beta, &mut grad_s, scratch))
+    });
+    scratch.set_kernel(KernelImpl::Wide);
+    let wd = bench(&format!("wide_{name}_n{n}"), 10, 200, 7, |_| {
+        let rows = measure.cost_rows(&samples);
+        black_box(kernel::dual_oracle(&eta, &rows, beta, &mut grad_w, scratch))
+    });
+    scratch.set_kernel(KernelImpl::Scalar);
+    for (l, (s, w)) in grad_s.iter().zip(&grad_w).enumerate() {
+        assert!((s - w).abs() <= 1e-12, "grad[{l}]: {s} vs {w}");
+    }
+    println!(
+        "{}\n{}  → wide speedup {:.2}x",
+        sc.report(),
+        wd.report(),
+        sc.median_ns / wd.median_ns
+    );
+    WideCell { measure: name, m, n, scalar_ns: sc.median_ns, wide_ns: wd.median_ns }
+}
+
+/// One batched-vs-sequential cell on the digits distance table (the
+/// borrowed-row measure — exactly the rows `evaluate_many` amortizes):
+/// B independent η blocks against one frozen sample batch, timed as B
+/// sequential `dual_oracle` calls vs one `dual_oracle_batch` pass.
+/// Outputs must agree bitwise under the scalar kernel (asserted — the
+/// batch parity contract).
+fn batch_cell(b: usize, m: usize, seed: u64, scratch: &mut OracleScratch) -> BatchCell {
+    let spec = MeasureSpec::Digits { digit: 3, side: 28, idx_path: None };
+    let n = spec.support_size();
+    let network = spec.build_network(1, seed);
+    let measure = &network[0];
+    let mut rng = Rng64::new(seed ^ 0x42_4154);
+    let etas: Vec<f64> = (0..b * n).map(|_| 0.2 * rng.normal()).collect();
+    let samples = measure.draw_samples(&mut rng, m);
+    let beta = 0.02;
+
+    let mut grads_seq = vec![0.0; b * n];
+    let mut vals_seq = vec![0.0; b];
+    let mut grads_bat = vec![0.0; b * n];
+    let mut vals_bat = vec![0.0; b];
+
+    let seq = bench(&format!("sequential_b{b}_m{m}"), 10, 100, 7, |_| {
+        let rows = measure.cost_rows(&samples);
+        for bi in 0..b {
+            vals_seq[bi] = kernel::dual_oracle(
+                &etas[bi * n..(bi + 1) * n],
+                &rows,
+                beta,
+                &mut grads_seq[bi * n..(bi + 1) * n],
+                scratch,
+            );
+        }
+        black_box(vals_seq[b - 1])
+    });
+    let bat = bench(&format!("batch_b{b}_m{m}"), 10, 100, 7, |_| {
+        let rows = measure.cost_rows(&samples);
+        kernel::dual_oracle_batch(
+            &etas,
+            &rows,
+            beta,
+            &mut grads_bat,
+            &mut vals_bat,
+            scratch,
+        );
+        black_box(vals_bat[b - 1])
+    });
+    for bi in 0..b {
+        assert_eq!(
+            vals_seq[bi].to_bits(),
+            vals_bat[bi].to_bits(),
+            "val[{bi}] must match bitwise"
+        );
+    }
+    assert_eq!(grads_seq, grads_bat, "batch grads must match bitwise");
+    println!(
+        "{}\n{}  → batch speedup {:.2}x",
+        seq.report(),
+        bat.report(),
+        seq.median_ns / bat.median_ns
+    );
+    BatchCell { b, m, n, sequential_ns: seq.median_ns, batch_ns: bat.median_ns }
+}
+
+fn emit_kernel_json(cells: &[KernelCell], wide: &[WideCell], batch: &[BatchCell]) {
     // hand-rolled JSON (the crate is dependency-free by design)
     let mut json = String::from("{\n  \"bench\": \"kernel_oracle\",\n");
     json.push_str("  \"compares\": \"materialized CostRows vs zero-copy CostRowSource\",\n");
@@ -99,35 +233,89 @@ fn emit_kernel_json(cells: &[KernelCell]) {
             if idx + 1 == cells.len() { "" } else { "," }
         ));
     }
+    json.push_str("  ],\n  \"wide_cells\": [\n");
+    for (idx, c) in wide.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"measure\": \"{}\", \"m\": {}, \"n\": {}, \
+             \"scalar_ns\": {:.1}, \"wide_ns\": {:.1}, \
+             \"speedup\": {:.4}}}{}\n",
+            c.measure,
+            c.m,
+            c.n,
+            c.scalar_ns,
+            c.wide_ns,
+            c.scalar_ns / c.wide_ns,
+            if idx + 1 == wide.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"batch_cells\": [\n");
+    for (idx, c) in batch.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"b\": {}, \"m\": {}, \"n\": {}, \
+             \"sequential_ns\": {:.1}, \"batch_ns\": {:.1}, \
+             \"speedup\": {:.4}}}{}\n",
+            c.b,
+            c.m,
+            c.n,
+            c.sequential_ns,
+            c.batch_ns,
+            c.sequential_ns / c.batch_ns,
+            if idx + 1 == batch.len() { "" } else { "," }
+        ));
+    }
     json.push_str("  ]\n}\n");
     a2dwb::bench_util::write_root_json("BENCH_kernel.json", &json);
 }
 
 fn main() {
+    // One scratch for every kernel cell in this process, warmed once so
+    // the first timed cell does not pay the logit-buffer allocation.
+    let mut scratch = OracleScratch::default();
+    {
+        let (eta, cost) = case(99, 32, 784);
+        let mut grad = vec![0.0; 784];
+        black_box(dual_oracle_into(&eta, &cost, 0.02, &mut grad, &mut scratch));
+    }
+
     println!("== kernel seam: materialized vs zero-copy oracle ==");
     let m = 32;
     let cells = vec![
-        kernel_cell(&MeasureSpec::Gaussian { n: 100 }, m, 1),
-        kernel_cell(&MeasureSpec::Gaussian { n: 784 }, m, 2),
+        kernel_cell(&MeasureSpec::Gaussian { n: 100 }, m, 1, &mut scratch),
+        kernel_cell(&MeasureSpec::Gaussian { n: 784 }, m, 2, &mut scratch),
         kernel_cell(
             &MeasureSpec::Digits { digit: 3, side: 10, idx_path: None },
             m,
             3,
+            &mut scratch,
         ),
         kernel_cell(
             &MeasureSpec::Digits { digit: 3, side: 28, idx_path: None },
             m,
             4,
+            &mut scratch,
         ),
     ];
-    emit_kernel_json(&cells);
+
+    println!("\n== kernel lanes: scalar vs wide (f64x4) ==");
+    let wide_cells = vec![
+        wide_cell(&MeasureSpec::Gaussian { n: 100 }, m, 5, &mut scratch),
+        wide_cell(&MeasureSpec::Gaussian { n: 784 }, m, 6, &mut scratch),
+    ];
+
+    println!("\n== batched oracle: B sequential passes vs one blocked pass ==");
+    let batch_cells = vec![
+        batch_cell(1, m, 7, &mut scratch),
+        batch_cell(8, m, 8, &mut scratch),
+        batch_cell(32, m, 9, &mut scratch),
+    ];
+    emit_kernel_json(&cells, &wide_cells, &batch_cells);
+
     println!();
     let shapes = [(8usize, 100usize), (32, 100), (128, 100), (32, 784), (128, 784)];
     println!("== dual-oracle hot path: native backend ==");
     for (m, n) in shapes {
         let (eta, cost) = case(1, m, n);
         let mut grad = vec![0.0; n];
-        let mut scratch = OracleScratch::default();
         let stats = bench(&format!("native_m{m}_n{n}"), 10, 200, 7, |_| {
             black_box(dual_oracle_into(&eta, &cost, 0.02, &mut grad, &mut scratch))
         });

@@ -100,6 +100,7 @@ pub(super) fn run(
         .build(cfg.samples_per_activation, n)
         .map_err(|e| e.to_string())?;
     oracle.attach_obs(obs.clone());
+    oracle.set_kernel(cfg.kernel);
     let lambda_max = graph.lambda_max();
     let smoothness = lambda_max / cfg.beta;
     let gamma = cfg.gamma_scale / smoothness;
@@ -109,6 +110,7 @@ pub(super) fn run(
         batch: cfg.samples_per_activation,
         m_theta: m,
         diag: cfg.diag,
+        kernel: cfg.kernel,
     };
 
     let mut theta = ThetaSeq::new(m);
@@ -126,6 +128,7 @@ pub(super) fn run(
     let mut schedule = ActivationSchedule::new(m, cfg.activation_interval, cfg.seed);
     let mut evaluator =
         MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
+    evaluator.set_kernel(cfg.kernel);
 
     // per-node sampling streams (split off the master seed)
     let mut root = crate::rng::Rng64::new(cfg.seed ^ 0x5254_4E44);

@@ -9,7 +9,7 @@
 //! the shared-seed activation scheme of §3.3 enables.
 
 use crate::graph::Graph;
-use crate::kernel;
+use crate::kernel::{self, KernelImpl};
 use crate::linalg::CsrMatrix;
 use crate::measures::{NodeMeasure, Samples};
 use crate::ot::OracleScratch;
@@ -25,9 +25,14 @@ pub struct MetricsEvaluator {
     laplacian: CsrMatrix,
     // scratch
     scratch: OracleScratch,
-    grad: Vec<f64>,
-    /// Stacked primal blocks (m·n), reused.
+    /// Stacked primal blocks (m·n) of the last evaluated snapshot.
     primal: Vec<f64>,
+    // Batched-evaluation staging (see [`Self::evaluate_many`]): B η̄/∇
+    // blocks of n, B values, and B stacked primals — all reused.
+    batch_etas: Vec<f64>,
+    batch_grads: Vec<f64>,
+    batch_vals: Vec<f64>,
+    batch_primal: Vec<f64>,
 }
 
 impl MetricsEvaluator {
@@ -52,9 +57,18 @@ impl MetricsEvaluator {
             samples,
             laplacian: graph.laplacian_csr(),
             scratch: OracleScratch::default(),
-            grad: vec![0.0; n],
             primal: vec![0.0; m * n],
+            batch_etas: Vec::new(),
+            batch_grads: Vec::new(),
+            batch_vals: Vec::new(),
+            batch_primal: Vec::new(),
         }
+    }
+
+    /// Lane width for every metric oracle pass (default
+    /// [`KernelImpl::Scalar`] — the golden-stable metric path).
+    pub fn set_kernel(&mut self, kernel: KernelImpl) {
+        self.scratch.set_kernel(kernel);
     }
 
     /// Entry-wise mean of the m primal blocks — the one definition of
@@ -85,32 +99,77 @@ impl MetricsEvaluator {
         etas: &[f64],
         measures: &[Box<dyn NodeMeasure>],
     ) -> (f64, f64, f64) {
+        self.evaluate_many(&[etas], measures)[0]
+    }
+
+    /// Evaluate B stacked dual snapshots in one batched oracle sweep:
+    /// each node's cost rows are bound **once** and applied to all B
+    /// snapshots' η̄_i blocks via [`kernel::dual_oracle_batch`] — the
+    /// digits table streams through cache once per node instead of once
+    /// per (node, snapshot).
+    ///
+    /// Per snapshot, the returned `(dual, consensus, spread)` triple is
+    /// bitwise-identical to a sequential [`Self::evaluate`] loop under
+    /// the scalar kernel (the batch oracle's parity contract); the last
+    /// snapshot's primal blocks are left in place, so
+    /// [`Self::barycenter`] refers to it exactly as after a sequential
+    /// loop. Returns one triple per snapshot; empty input is fine.
+    pub fn evaluate_many(
+        &mut self,
+        snaps: &[&[f64]],
+        measures: &[Box<dyn NodeMeasure>],
+    ) -> Vec<(f64, f64, f64)> {
+        let b = snaps.len();
+        if b == 0 {
+            return Vec::new();
+        }
         let m = measures.len();
-        assert_eq!(etas.len(), m * self.n);
-        let mut dual = 0.0;
+        let n = self.n;
+        for snap in snaps {
+            assert_eq!(snap.len(), m * n);
+        }
+        self.batch_etas.resize(b * n, 0.0);
+        self.batch_grads.resize(b * n, 0.0);
+        self.batch_vals.resize(b, 0.0);
+        self.batch_primal.resize(b * m * n, 0.0);
+        let mut duals = vec![0.0; b];
         for i in 0..m {
+            for (bi, snap) in snaps.iter().enumerate() {
+                self.batch_etas[bi * n..(bi + 1) * n]
+                    .copy_from_slice(&snap[i * n..(i + 1) * n]);
+            }
             let rows = measures[i].cost_rows(&self.samples[i]);
-            let val = kernel::dual_oracle(
-                &etas[i * self.n..(i + 1) * self.n],
+            kernel::dual_oracle_batch(
+                &self.batch_etas,
                 &rows,
                 self.beta,
-                &mut self.grad,
+                &mut self.batch_grads,
+                &mut self.batch_vals,
                 &mut self.scratch,
             );
-            dual += val;
-            self.primal[i * self.n..(i + 1) * self.n].copy_from_slice(&self.grad);
-        }
-        let consensus = self.laplacian.block_quad_form(&self.primal, self.n);
-        // primal spread: mean L1 distance to the network mean
-        let mean = self.network_mean();
-        let mut spread = 0.0;
-        for i in 0..m {
-            for l in 0..self.n {
-                spread += (self.primal[i * self.n + l] - mean[l]).abs();
+            for bi in 0..b {
+                duals[bi] += self.batch_vals[bi];
+                self.batch_primal[(bi * m + i) * n..(bi * m + i + 1) * n]
+                    .copy_from_slice(&self.batch_grads[bi * n..(bi + 1) * n]);
             }
         }
-        spread /= m as f64;
-        (dual, consensus.max(0.0), spread)
+        let mut out = Vec::with_capacity(b);
+        for bi in 0..b {
+            self.primal
+                .copy_from_slice(&self.batch_primal[bi * m * n..(bi + 1) * m * n]);
+            let consensus = self.laplacian.block_quad_form(&self.primal, n);
+            // primal spread: mean L1 distance to the network mean
+            let mean = self.network_mean();
+            let mut spread = 0.0;
+            for i in 0..m {
+                for l in 0..n {
+                    spread += (self.primal[i * n + l] - mean[l]).abs();
+                }
+            }
+            spread /= m as f64;
+            out.push((duals[bi], consensus.max(0.0), spread));
+        }
+        out
     }
 
     /// The network-mean primal block from the last `evaluate` call —
@@ -171,6 +230,29 @@ mod tests {
         let (_, consensus, spread) = ev.evaluate(&etas, &ms);
         assert!(consensus < 1e-12, "consensus {consensus}");
         assert!(spread < 1e-12);
+    }
+
+    #[test]
+    fn evaluate_many_matches_sequential_evaluates_bitwise() {
+        let (_, ms, mut ev) = setup();
+        let mut rng = crate::rng::Rng64::new(99);
+        let snaps: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..5 * 12).map(|_| 0.2 * rng.normal()).collect())
+            .collect();
+        let seq: Vec<(f64, f64, f64)> =
+            snaps.iter().map(|s| ev.evaluate(s, &ms)).collect();
+        let bary_seq = ev.barycenter();
+        let views: Vec<&[f64]> = snaps.iter().map(|s| s.as_slice()).collect();
+        let many = ev.evaluate_many(&views, &ms);
+        for (k, ((d1, c1, s1), (d2, c2, s2))) in seq.iter().zip(&many).enumerate()
+        {
+            assert_eq!(d1.to_bits(), d2.to_bits(), "dual, snapshot {k}");
+            assert_eq!(c1.to_bits(), c2.to_bits(), "consensus, snapshot {k}");
+            assert_eq!(s1.to_bits(), s2.to_bits(), "spread, snapshot {k}");
+        }
+        // the batch leaves the last snapshot's primal in place
+        assert_eq!(ev.barycenter(), bary_seq);
+        assert!(ev.evaluate_many(&[], &ms).is_empty());
     }
 
     #[test]

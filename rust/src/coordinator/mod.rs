@@ -37,6 +37,7 @@ use crate::algo::wbp::DiagCoef;
 use crate::algo::AlgorithmKind;
 use crate::exec::{ExecutorSpec, SampleCadence};
 use crate::graph::TopologySpec;
+use crate::kernel::KernelImpl;
 use crate::measures::MeasureSpec;
 use crate::metrics::Series;
 use crate::ot::OracleBackendSpec;
@@ -100,6 +101,21 @@ pub struct ExperimentConfig {
     /// the current counters. `None` (default) preserves the original
     /// behavior: progress events ride along with metric samples only.
     pub progress_every: Option<u64>,
+    /// Lane width of the numeric row kernels
+    /// ([`KernelImpl`], CLI `--kernel scalar|wide`). The default
+    /// [`KernelImpl::Scalar`] keeps every golden, simulator trajectory,
+    /// and lockstep mesh run bit-identical; [`KernelImpl::Wide`] runs
+    /// the 4-lane kernels on the oracle and metric paths (agreement
+    /// with scalar ≤ 1e-12 per row, guarded by
+    /// `rust/tests/kernel_wide.rs`).
+    pub kernel: KernelImpl,
+    /// Event-trace ring capacity ([`crate::obs::Telemetry`]
+    /// `set_trace_capacity`; CLI `--trace-capacity`). `None` (default)
+    /// leaves tracing disarmed unless the caller arms the registry
+    /// directly; the `a2dwb` binary arms `Some(1 << 16)` when
+    /// `--trace-out` is given without an explicit capacity. Validated
+    /// ≥ 1: a zero-capacity ring would silently drop every event.
+    pub trace_capacity: Option<usize>,
 }
 
 /// Network fault model: heterogeneous slow nodes + iid message loss.
@@ -178,6 +194,8 @@ impl ExperimentConfig {
             executor: ExecutorSpec::Sim,
             sample_cadence: SampleCadence::default(),
             progress_every: None,
+            kernel: KernelImpl::Scalar,
+            trace_capacity: None,
         }
     }
 
@@ -241,6 +259,8 @@ impl ExperimentConfig {
         "executor",
         "paper-literal-diag",
         "progress-every",
+        "kernel",
+        "trace-capacity",
         "mnist",
     ];
 
@@ -302,6 +322,13 @@ impl ExperimentConfig {
                 .map_err(|e| format!("--progress-every: {e}"))?;
             cfg.progress_every = Some(every);
         }
+        cfg.kernel = KernelImpl::parse(&args.get_str("kernel", "scalar"))?;
+        if let Some(cap) = args.get_opt("trace-capacity") {
+            let cap: usize = cap
+                .parse()
+                .map_err(|e| format!("--trace-capacity: {e}"))?;
+            cfg.trace_capacity = Some(cap);
+        }
         Ok(cfg)
     }
 
@@ -326,6 +353,13 @@ impl ExperimentConfig {
         self.sample_cadence.validate()?;
         if self.progress_every == Some(0) {
             return Err("progress_every needs k >= 1 (or None to disable)".into());
+        }
+        if self.trace_capacity == Some(0) {
+            return Err(
+                "trace_capacity needs >= 1 event (or None to leave tracing \
+                 disarmed)"
+                    .into(),
+            );
         }
         Ok(())
     }

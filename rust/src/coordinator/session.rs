@@ -542,6 +542,23 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Lane width of the numeric row kernels (default
+    /// [`KernelImpl::Scalar`](crate::kernel::KernelImpl::Scalar) — the
+    /// bit-stable path; see [`ExperimentConfig::kernel`]).
+    pub fn kernel(mut self, k: crate::kernel::KernelImpl) -> Self {
+        self.cfg.kernel = k;
+        self
+    }
+
+    /// Arm the run's event-trace ring with capacity `cap` events
+    /// (cap ≥ 1 — validated at [`ExperimentBuilder::build`], which also
+    /// calls [`Telemetry::set_trace_capacity`] on the session's
+    /// registry; see [`ExperimentConfig::trace_capacity`]).
+    pub fn trace_capacity(mut self, cap: usize) -> Self {
+        self.cfg.trace_capacity = Some(cap);
+        self
+    }
+
     /// Validate and yield the bare config (for callers that feed
     /// config-taking entry points such as
     /// [`run_speedup_pair`](crate::exec::run_speedup_pair) or the mesh
@@ -582,6 +599,9 @@ impl ExperimentBuilder {
             return Err("topology must be connected".into());
         }
         let obs = Telemetry::shared(self.cfg.nodes);
+        if let Some(cap) = self.cfg.trace_capacity {
+            obs.set_trace_capacity(cap);
+        }
         Ok(Session { cfg: self.cfg, graph, cancel: CancelToken::new(), obs })
     }
 }

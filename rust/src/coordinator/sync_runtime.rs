@@ -84,6 +84,7 @@ pub(super) fn run(
         .build(cfg.samples_per_activation, n)
         .map_err(|e| e.to_string())?;
     oracle.attach_obs(obs.clone());
+    oracle.set_kernel(cfg.kernel);
     let lambda_max = graph.lambda_max();
     let smoothness = lambda_max / cfg.beta;
     let gamma = cfg.gamma_scale / smoothness;
@@ -99,6 +100,7 @@ pub(super) fn run(
     let mut transport = BarrierTransport::new(graph, n);
     let mut evaluator =
         MetricsEvaluator::new(graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
+    evaluator.set_kernel(cfg.kernel);
     let mut root = crate::rng::Rng64::new(cfg.seed ^ 0x5254_4E44);
     let mut node_rngs: Vec<crate::rng::Rng64> =
         (0..m).map(|i| root.split(i as u64)).collect();

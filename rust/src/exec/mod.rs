@@ -200,6 +200,10 @@ pub struct StepCtx {
     pub m_theta: usize,
     /// Own-gradient coefficient variant.
     pub diag: DiagCoef,
+    /// Lane width of the numeric row kernels; workers that build their
+    /// own oracle (the scheduler pool, shard serve loops) apply it via
+    /// [`DualOracle::set_kernel`] before the first activation.
+    pub kernel: crate::kernel::KernelImpl,
 }
 
 /// One activation of Algorithm 3 (lines 5–8) for node `i` at global

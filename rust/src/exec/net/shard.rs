@@ -110,7 +110,7 @@ fn mesh_tag(cfg: &ExperimentConfig, shards: usize) -> String {
 /// the bit-level parity contract.
 pub fn config_digest(cfg: &ExperimentConfig) -> u64 {
     let desc = format!(
-        "{:?}|{:?}|{:x}|{:x}|{}|{}|{:x}|{:x}|{:x}|{:?}|{:?}",
+        "{:?}|{:?}|{:x}|{:x}|{}|{}|{:x}|{:x}|{:x}|{:?}|{:?}|{:?}",
         cfg.measure,
         cfg.topology,
         cfg.beta.to_bits(),
@@ -122,6 +122,7 @@ pub fn config_digest(cfg: &ExperimentConfig) -> u64 {
         cfg.compute_time.to_bits(),
         cfg.faults,
         cfg.diag,
+        cfg.kernel,
     );
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in desc.bytes() {
@@ -865,12 +866,16 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
     // m): the aggregator merges shard snapshots elementwise, so the
     // disjoint local slices stitch into the full per-node table.
     let obs = Telemetry::shared(m);
+    if let Some(cap) = cfg.trace_capacity {
+        obs.set_trace_capacity(cap);
+    }
     let measures = cfg.measure.build_network(m, cfg.seed);
     // Prevalidate the oracle backend on this thread (the worker pool
     // must not fail after the mesh is committed); this instance also
     // computes the initial exchange below.
     let mut oracle = cfg.backend.build(cfg.samples_per_activation, n)?;
     oracle.attach_obs(obs.clone());
+    oracle.set_kernel(cfg.kernel);
     let lambda_max = graph.lambda_max();
     let gamma = cfg.gamma_scale / (lambda_max / cfg.beta);
 
@@ -1211,6 +1216,7 @@ impl StreamAggregator {
         let measures = cfg.measure.build_network(m, cfg.seed);
         let mut evaluator =
             MetricsEvaluator::new(&graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
+        evaluator.set_kernel(cfg.kernel);
 
         let mut dual_series = Series::new("dual_objective");
         let mut consensus_series = Series::new("consensus");
@@ -1772,6 +1778,12 @@ pub fn experiment_args(cfg: &ExperimentConfig) -> Result<Vec<String>, String> {
     if cfg.diag == crate::algo::wbp::DiagCoef::PaperLiteral {
         a.push("--paper-literal-diag".into());
     }
+    if cfg.kernel != crate::kernel::KernelImpl::Scalar {
+        push(&mut a, "kernel", cfg.kernel.name().to_string());
+    }
+    if let Some(cap) = cfg.trace_capacity {
+        push(&mut a, "trace-capacity", cap.to_string());
+    }
     Ok(a)
 }
 
@@ -2187,6 +2199,8 @@ mod tests {
         cfg.compute_time = 0.00025;
         cfg.faults.straggler_fraction = 0.25;
         cfg.faults.straggler_slowdown = 3.0;
+        cfg.kernel = crate::kernel::KernelImpl::Wide;
+        cfg.trace_capacity = Some(4096);
         let flags = experiment_args(&cfg).unwrap();
         let parsed = crate::cli::Args::parse(flags).unwrap();
         let back = ExperimentConfig::from_cli_args(&parsed, parsed.has_flag("mnist")).unwrap();
@@ -2219,6 +2233,9 @@ mod tests {
         let mut c = base.clone();
         c.faults.drop_prob = 0.05;
         assert_ne!(config_digest(&c), d0, "fault model must change the digest");
+        let mut c = base.clone();
+        c.kernel = crate::kernel::KernelImpl::Wide;
+        assert_ne!(config_digest(&c), d0, "kernel lane width must change the digest");
     }
 
     #[test]

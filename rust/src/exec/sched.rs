@@ -864,7 +864,9 @@ impl<'a> NodeScheduler<'a> {
             batch: cfg.samples_per_activation,
             m_theta: spec.m_theta,
             diag: cfg.diag,
+            kernel: cfg.kernel,
         };
+        oracle.set_kernel(ctx.kernel);
 
         let obs = spec.obs.as_deref();
         let mut claims = 0u64;

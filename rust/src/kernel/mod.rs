@@ -39,10 +39,91 @@
 //! threads, and the multi-process mesh ([`crate::exec::net`]). The
 //! zero-copy performance numbers are tracked in `BENCH_kernel.json`
 //! (emitted by `benches/oracle.rs`; schema in `ARCHITECTURE.md`).
+//!
+//! ## Kernel dispatch ([`KernelImpl`])
+//!
+//! Two lane widths implement every row kernel:
+//!
+//! * [`KernelImpl::Scalar`] (the default) — the reference path above,
+//!   **bit-stable**: sim goldens, RNG draw orders, and lockstep mesh
+//!   parity are all defined against it.
+//! * [`KernelImpl::Wide`] — [`WIDE_LANES`]-wide lane-array kernels
+//!   ([`softmax_lse_row_wide`], [`softmax_lse_quad1d_wide`],
+//!   [`logsumexp_wide`]). Lane accumulation **reassociates** the exp
+//!   sums, so results agree with Scalar to ≤1e-12 (tolerance-gated in
+//!   `rust/tests/kernel_wide.rs`) rather than bitwise; the row max is
+//!   still bitwise-exact (max is associative). With the `simd` cargo
+//!   feature the lane arrays are lowered through `std::simd` with the
+//!   same lane count and the same sequential horizontal folds, so the
+//!   two wide variants agree bitwise with each other.
+//!
+//! The knob rides on [`OracleScratch`] (see
+//! [`OracleScratch::set_kernel`]) so the oracle entry points keep
+//! their signatures; `ExperimentConfig`/`--kernel wide` thread it to
+//! every backend.
+//!
+//! ## Batched oracle ([`dual_oracle_batch`])
+//!
+//! Evaluates B independent η̄-vectors against one [`CostRowSource`] in
+//! a single pass: rows are served in blocks of [`ORACLE_BLOCK_ROWS`]
+//! through [`CostRowSource::cost_rows_block`] and each block is applied
+//! to all B logit buffers while its cost data is cache-hot — the digits
+//! experiment's shared n×n distance table is streamed once per block
+//! instead of once per (node, snapshot). Under `Scalar` the batch path
+//! is **bitwise identical** to a sequential [`dual_oracle`] loop (each
+//! η̄'s per-row FP sequence and r-ascending accumulation order are
+//! unchanged; only memory traffic reorders) — tested in
+//! `rust/tests/kernel_wide.rs`.
 
 use crate::measures::CostRows;
 use crate::obs::{Counter, Telemetry};
+use std::ops::Range;
 use std::sync::Arc;
+
+/// Lane width of the wide kernels: f64×4 (one AVX2 register, half an
+/// AVX-512 one). The `simd` feature's `std::simd` lowering uses the
+/// same width and the same sequential horizontal folds, so both wide
+/// variants produce identical bits.
+pub const WIDE_LANES: usize = 4;
+
+/// Row-block size of [`dual_oracle_batch`]: rows are fetched
+/// [`ORACLE_BLOCK_ROWS`] at a time and applied to every η̄ in the batch
+/// while their cost data is cache-hot.
+pub const ORACLE_BLOCK_ROWS: usize = 8;
+
+/// Which lane width the row kernels run at.
+///
+/// `Scalar` is the default and the **bit-parity contract**: goldens,
+/// sim trajectories, and lockstep mesh replays are defined against it.
+/// `Wide` reassociates the exp-sum reductions and is gated by ≤1e-12
+/// scalar-equivalence tests instead (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelImpl {
+    /// Scalar reference kernels — bit-stable across all backends.
+    #[default]
+    Scalar,
+    /// [`WIDE_LANES`]-wide lane-array kernels (≤1e-12 vs `Scalar`).
+    Wide,
+}
+
+impl KernelImpl {
+    /// Parse a CLI token (`"scalar"` | `"wide"`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "scalar" => Ok(Self::Scalar),
+            "wide" => Ok(Self::Wide),
+            other => Err(format!("unknown kernel '{other}' (expected scalar|wide)")),
+        }
+    }
+
+    /// The CLI token this variant parses from.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Wide => "wide",
+        }
+    }
+}
 
 /// One cost row, as the kernel consumes it.
 ///
@@ -99,6 +180,15 @@ pub trait CostRowSource {
     fn n(&self) -> usize;
     /// Row `r`, zero-copy.
     fn cost_row(&self, r: usize) -> CostRow<'_>;
+
+    /// Collect rows `range` into `out` (cleared first) — the batched
+    /// oracle's cache-blocking access ([`dual_oracle_batch`]). The
+    /// default loops [`CostRowSource::cost_row`]; sources whose rows
+    /// share one backing table override it to skip per-row dispatch.
+    fn cost_rows_block<'s>(&'s self, range: Range<usize>, out: &mut Vec<CostRow<'s>>) {
+        out.clear();
+        out.extend(range.map(|r| self.cost_row(r)));
+    }
 }
 
 impl CostRowSource for CostRows {
@@ -112,6 +202,12 @@ impl CostRowSource for CostRows {
 
     fn cost_row(&self, r: usize) -> CostRow<'_> {
         CostRow::Borrowed(self.row(r))
+    }
+
+    fn cost_rows_block<'s>(&'s self, range: Range<usize>, out: &mut Vec<CostRow<'s>>) {
+        out.clear();
+        let rows = &self.data[range.start * self.n..range.end * self.n];
+        out.extend(rows.chunks_exact(self.n).map(CostRow::Borrowed));
     }
 }
 
@@ -127,13 +223,25 @@ impl CostRowSource for CostRows {
 pub struct OracleScratch {
     logits: Vec<f64>,
     obs: Option<Arc<Telemetry>>,
+    kernel: KernelImpl,
 }
 
 impl OracleScratch {
     /// Route per-pass counters into `obs` (oracle passes,
-    /// borrowed/generated cost rows).
+    /// borrowed/generated cost rows, per-[`KernelImpl`] row counts).
     pub fn attach_obs(&mut self, obs: Arc<Telemetry>) {
         self.obs = Some(obs);
+    }
+
+    /// Select the lane width every oracle pass through this scratch
+    /// runs at (default [`KernelImpl::Scalar`]).
+    pub fn set_kernel(&mut self, kernel: KernelImpl) {
+        self.kernel = kernel;
+    }
+
+    /// The currently selected lane width.
+    pub fn kernel(&self) -> KernelImpl {
+        self.kernel
     }
 }
 
@@ -222,6 +330,317 @@ pub fn softmax_lse_quad1d(
     exp_normalize(probs, smax)
 }
 
+// --------------------------------------------------------- wide kernels
+//
+// Each wide kernel exists twice: a manual lane-array form (stable Rust;
+// the accumulator arrays below are exactly what the autovectorizer
+// lowers to packed f64×4 ops) and a `std::simd` form behind the `simd`
+// cargo feature (nightly; `#![feature(portable_simd)]` is gated in
+// lib.rs). Both use WIDE_LANES lanes and fold lane accumulators
+// sequentially (lane 0 first), so the two forms agree bitwise; `exp`
+// itself stays scalar libm per element in both.
+
+/// Sequential (lane-0-first) horizontal fold — the one reduction order
+/// shared by the manual and `std::simd` wide paths.
+#[inline]
+fn fold_lanes_sum(lanes: [f64; WIDE_LANES]) -> f64 {
+    let mut z = 0.0;
+    for &l in &lanes {
+        z += l;
+    }
+    z
+}
+
+#[inline]
+fn fold_lanes_max(lanes: [f64; WIDE_LANES]) -> f64 {
+    let mut smax = f64::NEG_INFINITY;
+    for &l in &lanes {
+        if l > smax {
+            smax = l;
+        }
+    }
+    smax
+}
+
+/// Wide-lane [`logsumexp`]: lane-array max scan (bitwise equal to the
+/// scalar max) followed by a lane-accumulated exp sum (reassociated —
+/// ≤1e-12 vs scalar). Same `−∞`/empty semantics as [`logsumexp`].
+#[cfg(not(feature = "simd"))]
+pub fn logsumexp_wide(xs: &[f64]) -> f64 {
+    let mut maxes = [f64::NEG_INFINITY; WIDE_LANES];
+    let mut it = xs.chunks_exact(WIDE_LANES);
+    for c in &mut it {
+        for (m, &x) in maxes.iter_mut().zip(c) {
+            if x > *m {
+                *m = x;
+            }
+        }
+    }
+    let mut smax = fold_lanes_max(maxes);
+    for &x in it.remainder() {
+        if x > smax {
+            smax = x;
+        }
+    }
+    if smax == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let mut acc = [0.0; WIDE_LANES];
+    let mut it = xs.chunks_exact(WIDE_LANES);
+    for c in &mut it {
+        for (a, &x) in acc.iter_mut().zip(c) {
+            *a += (x - smax).exp();
+        }
+    }
+    let mut z = fold_lanes_sum(acc);
+    for &x in it.remainder() {
+        z += (x - smax).exp();
+    }
+    smax + z.ln()
+}
+
+/// Wide-lane [`logsumexp`] (`std::simd` lowering — same lanes, same
+/// fold order, same bits as the manual lane-array form).
+#[cfg(feature = "simd")]
+pub fn logsumexp_wide(xs: &[f64]) -> f64 {
+    use std::simd::prelude::*;
+    let mut vmax = Simd::<f64, WIDE_LANES>::splat(f64::NEG_INFINITY);
+    let mut it = xs.chunks_exact(WIDE_LANES);
+    for c in &mut it {
+        vmax = vmax.simd_max(Simd::from_slice(c));
+    }
+    let mut smax = fold_lanes_max(vmax.to_array());
+    for &x in it.remainder() {
+        if x > smax {
+            smax = x;
+        }
+    }
+    if smax == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let vm = Simd::<f64, WIDE_LANES>::splat(smax);
+    let mut vacc = Simd::<f64, WIDE_LANES>::splat(0.0);
+    let mut it = xs.chunks_exact(WIDE_LANES);
+    for c in &mut it {
+        let mut e = (Simd::from_slice(c) - vm).to_array();
+        for v in &mut e {
+            *v = v.exp();
+        }
+        vacc += Simd::from_array(e);
+    }
+    let mut z = fold_lanes_sum(vacc.to_array());
+    for &x in it.remainder() {
+        z += (x - smax).exp();
+    }
+    smax + z.ln()
+}
+
+/// Wide tail shared by the wide row kernels: exponentiate the
+/// max-subtracted logits with lane-array accumulation, normalize,
+/// return the row lse.
+fn exp_normalize_wide(probs: &mut [f64], smax: f64) -> f64 {
+    let mut acc = [0.0; WIDE_LANES];
+    let mut it = probs.chunks_exact_mut(WIDE_LANES);
+    for c in &mut it {
+        for (a, p) in acc.iter_mut().zip(c.iter_mut()) {
+            *p = (*p - smax).exp();
+            *a += *p;
+        }
+    }
+    let mut z = fold_lanes_sum(acc);
+    for p in it.into_remainder() {
+        *p = (*p - smax).exp();
+        z += *p;
+    }
+    let inv_z = 1.0 / z;
+    for p in probs.iter_mut() {
+        *p *= inv_z;
+    }
+    smax + z.ln()
+}
+
+/// Wide-lane [`softmax_lse_row`]: the logit pass tracks one running
+/// max per lane (folded to the bitwise-scalar max), the exp/normalize
+/// tail accumulates per lane (≤1e-12 vs scalar).
+#[cfg(not(feature = "simd"))]
+pub fn softmax_lse_row_wide(
+    eta: &[f64],
+    cost: &[f64],
+    inv_beta: f64,
+    probs: &mut [f64],
+) -> f64 {
+    let n = probs.len();
+    let mut maxes = [f64::NEG_INFINITY; WIDE_LANES];
+    let mut i = 0;
+    while i + WIDE_LANES <= n {
+        for l in 0..WIDE_LANES {
+            let s = (eta[i + l] - cost[i + l]) * inv_beta;
+            probs[i + l] = s;
+            if s > maxes[l] {
+                maxes[l] = s;
+            }
+        }
+        i += WIDE_LANES;
+    }
+    let mut smax = fold_lanes_max(maxes);
+    while i < n {
+        let s = (eta[i] - cost[i]) * inv_beta;
+        probs[i] = s;
+        if s > smax {
+            smax = s;
+        }
+        i += 1;
+    }
+    exp_normalize_wide(probs, smax)
+}
+
+/// Wide-lane [`softmax_lse_row`] (`std::simd` lowering).
+#[cfg(feature = "simd")]
+pub fn softmax_lse_row_wide(
+    eta: &[f64],
+    cost: &[f64],
+    inv_beta: f64,
+    probs: &mut [f64],
+) -> f64 {
+    use std::simd::prelude::*;
+    let n = probs.len();
+    let vib = Simd::<f64, WIDE_LANES>::splat(inv_beta);
+    let mut vmax = Simd::<f64, WIDE_LANES>::splat(f64::NEG_INFINITY);
+    let mut i = 0;
+    while i + WIDE_LANES <= n {
+        let s = (Simd::from_slice(&eta[i..]) - Simd::from_slice(&cost[i..])) * vib;
+        s.copy_to_slice(&mut probs[i..i + WIDE_LANES]);
+        vmax = vmax.simd_max(s);
+        i += WIDE_LANES;
+    }
+    let mut smax = fold_lanes_max(vmax.to_array());
+    while i < n {
+        let s = (eta[i] - cost[i]) * inv_beta;
+        probs[i] = s;
+        if s > smax {
+            smax = s;
+        }
+        i += 1;
+    }
+    exp_normalize_wide(probs, smax)
+}
+
+/// Wide-lane [`softmax_lse_quad1d`]: the quadratic cost is still
+/// generated inside the logit loop (never written to memory), lanes
+/// and folds as in [`softmax_lse_row_wide`].
+#[cfg(not(feature = "simd"))]
+pub fn softmax_lse_quad1d_wide(
+    eta: &[f64],
+    support: &[f64],
+    y: f64,
+    inv_scale: f64,
+    inv_beta: f64,
+    probs: &mut [f64],
+) -> f64 {
+    let n = probs.len();
+    let mut maxes = [f64::NEG_INFINITY; WIDE_LANES];
+    let mut i = 0;
+    while i + WIDE_LANES <= n {
+        for l in 0..WIDE_LANES {
+            let d = support[i + l] - y;
+            let c = d * d * inv_scale;
+            let s = (eta[i + l] - c) * inv_beta;
+            probs[i + l] = s;
+            if s > maxes[l] {
+                maxes[l] = s;
+            }
+        }
+        i += WIDE_LANES;
+    }
+    let mut smax = fold_lanes_max(maxes);
+    while i < n {
+        let d = support[i] - y;
+        let c = d * d * inv_scale;
+        let s = (eta[i] - c) * inv_beta;
+        probs[i] = s;
+        if s > smax {
+            smax = s;
+        }
+        i += 1;
+    }
+    exp_normalize_wide(probs, smax)
+}
+
+/// Wide-lane [`softmax_lse_quad1d`] (`std::simd` lowering).
+#[cfg(feature = "simd")]
+pub fn softmax_lse_quad1d_wide(
+    eta: &[f64],
+    support: &[f64],
+    y: f64,
+    inv_scale: f64,
+    inv_beta: f64,
+    probs: &mut [f64],
+) -> f64 {
+    use std::simd::prelude::*;
+    let n = probs.len();
+    let vy = Simd::<f64, WIDE_LANES>::splat(y);
+    let vis = Simd::<f64, WIDE_LANES>::splat(inv_scale);
+    let vib = Simd::<f64, WIDE_LANES>::splat(inv_beta);
+    let mut vmax = Simd::<f64, WIDE_LANES>::splat(f64::NEG_INFINITY);
+    let mut i = 0;
+    while i + WIDE_LANES <= n {
+        let d = Simd::from_slice(&support[i..]) - vy;
+        let c = d * d * vis;
+        let s = (Simd::from_slice(&eta[i..]) - c) * vib;
+        s.copy_to_slice(&mut probs[i..i + WIDE_LANES]);
+        vmax = vmax.simd_max(s);
+        i += WIDE_LANES;
+    }
+    let mut smax = fold_lanes_max(vmax.to_array());
+    while i < n {
+        let d = support[i] - y;
+        let c = d * d * inv_scale;
+        let s = (eta[i] - c) * inv_beta;
+        probs[i] = s;
+        if s > smax {
+            smax = s;
+        }
+        i += 1;
+    }
+    exp_normalize_wide(probs, smax)
+}
+
+/// [`logsumexp`] at an explicit lane width — the Sinkhorn inner loop's
+/// dispatch point.
+#[inline]
+pub fn logsumexp_impl(xs: &[f64], imp: KernelImpl) -> f64 {
+    match imp {
+        KernelImpl::Scalar => logsumexp(xs),
+        KernelImpl::Wide => logsumexp_wide(xs),
+    }
+}
+
+/// One row's softmax/lse at the scratch-selected lane width — the
+/// shared dispatch of [`dual_oracle`] and [`dual_oracle_batch`].
+#[inline]
+fn row_softmax_lse(
+    eta: &[f64],
+    row: CostRow<'_>,
+    inv_beta: f64,
+    probs: &mut [f64],
+    imp: KernelImpl,
+) -> f64 {
+    match (row, imp) {
+        (CostRow::Borrowed(c), KernelImpl::Scalar) => {
+            softmax_lse_row(eta, c, inv_beta, probs)
+        }
+        (CostRow::Borrowed(c), KernelImpl::Wide) => {
+            softmax_lse_row_wide(eta, c, inv_beta, probs)
+        }
+        (CostRow::Quad1d { support, y, inv_scale }, KernelImpl::Scalar) => {
+            softmax_lse_quad1d(eta, support, y, inv_scale, inv_beta, probs)
+        }
+        (CostRow::Quad1d { support, y, inv_scale }, KernelImpl::Wide) => {
+            softmax_lse_quad1d_wide(eta, support, y, inv_scale, inv_beta, probs)
+        }
+    }
+}
+
 /// The fused dual oracle (paper Lemma 1) over any [`CostRowSource`].
 ///
 /// `grad` (len n) receives `mean_r softmax((η̄ − C_r)/β)`; returns
@@ -248,23 +667,12 @@ pub fn dual_oracle<S: CostRowSource + ?Sized>(
     for r in 0..m {
         let row = rows.cost_row(r);
         debug_assert_eq!(row.len(), n);
-        let lse = match row {
-            CostRow::Borrowed(c) => {
-                borrowed += 1;
-                softmax_lse_row(eta, c, inv_beta, &mut scratch.logits)
-            }
-            CostRow::Quad1d { support, y, inv_scale } => {
-                generated += 1;
-                softmax_lse_quad1d(
-                    eta,
-                    support,
-                    y,
-                    inv_scale,
-                    inv_beta,
-                    &mut scratch.logits,
-                )
-            }
-        };
+        match row {
+            CostRow::Borrowed(_) => borrowed += 1,
+            CostRow::Quad1d { .. } => generated += 1,
+        }
+        let lse =
+            row_softmax_lse(eta, row, inv_beta, &mut scratch.logits, scratch.kernel);
         lse_sum += lse;
         for (g, p) in grad.iter_mut().zip(&scratch.logits) {
             *g += p;
@@ -274,12 +682,106 @@ pub fn dual_oracle<S: CostRowSource + ?Sized>(
         obs.bump(Counter::OraclePasses);
         obs.add(Counter::CostRowsBorrowed, borrowed);
         obs.add(Counter::CostRowsGenerated, generated);
+        record_kernel_rows(obs, scratch.kernel, borrowed + generated);
     }
     let inv_m = 1.0 / m as f64;
     for g in grad.iter_mut() {
         *g *= inv_m;
     }
     beta * lse_sum * inv_m
+}
+
+/// Row counts per [`KernelImpl`] — the `--telemetry` evidence of which
+/// kernel actually ran.
+fn record_kernel_rows(obs: &Telemetry, imp: KernelImpl, rows: u64) {
+    match imp {
+        KernelImpl::Scalar => obs.add(Counter::KernelScalarRows, rows),
+        KernelImpl::Wide => obs.add(Counter::KernelWideRows, rows),
+    }
+}
+
+/// The batched dual oracle: B independent η̄-vectors against one
+/// [`CostRowSource`] in a single pass.
+///
+/// `etas` and `grads` are B row-major blocks of n; `vals` (len B, which
+/// defines B) receives each block's dual value. Rows are fetched in
+/// blocks of [`ORACLE_BLOCK_ROWS`] via
+/// [`CostRowSource::cost_rows_block`] and applied to every η̄ while
+/// cache-hot, so a shared cost table is streamed once per block instead
+/// of once per η̄.
+///
+/// Contract: for every `b`, `(vals[b], grads[b·n..])` is **bitwise
+/// identical** to `dual_oracle(&etas[b·n..], rows, beta, ..)` with the
+/// same `scratch` — per-η̄ the per-row FP op sequence and r-ascending
+/// accumulation order are exactly the sequential ones; batching only
+/// reorders memory traffic. Telemetry counts B oracle passes and per-η̄
+/// row touches, matching B sequential calls.
+///
+/// Beyond the warmed `scratch`, the only allocation is one
+/// [`ORACLE_BLOCK_ROWS`]-slot row-descriptor buffer per call.
+pub fn dual_oracle_batch<S: CostRowSource + ?Sized>(
+    etas: &[f64],
+    rows: &S,
+    beta: f64,
+    grads: &mut [f64],
+    vals: &mut [f64],
+    scratch: &mut OracleScratch,
+) {
+    let n = rows.n();
+    let m = rows.m();
+    let b = vals.len();
+    assert_eq!(etas.len(), b * n);
+    assert_eq!(grads.len(), b * n);
+    assert!(beta > 0.0 && m > 0);
+    scratch.logits.resize(n, 0.0);
+    let inv_beta = 1.0 / beta;
+    grads.fill(0.0);
+    vals.fill(0.0);
+    let (mut borrowed, mut generated) = (0u64, 0u64);
+    let mut block: Vec<CostRow<'_>> = Vec::with_capacity(ORACLE_BLOCK_ROWS.min(m));
+    let mut start = 0;
+    while start < m {
+        let end = (start + ORACLE_BLOCK_ROWS).min(m);
+        rows.cost_rows_block(start..end, &mut block);
+        debug_assert_eq!(block.len(), end - start);
+        for bi in 0..b {
+            let eta = &etas[bi * n..(bi + 1) * n];
+            let grad = &mut grads[bi * n..(bi + 1) * n];
+            for &row in &block {
+                debug_assert_eq!(row.len(), n);
+                match row {
+                    CostRow::Borrowed(_) => borrowed += 1,
+                    CostRow::Quad1d { .. } => generated += 1,
+                }
+                let lse = row_softmax_lse(
+                    eta,
+                    row,
+                    inv_beta,
+                    &mut scratch.logits,
+                    scratch.kernel,
+                );
+                vals[bi] += lse;
+                for (g, p) in grad.iter_mut().zip(&scratch.logits) {
+                    *g += p;
+                }
+            }
+        }
+        start = end;
+    }
+    if let Some(obs) = &scratch.obs {
+        obs.add(Counter::OraclePasses, b as u64);
+        obs.add(Counter::CostRowsBorrowed, borrowed);
+        obs.add(Counter::CostRowsGenerated, generated);
+        record_kernel_rows(obs, scratch.kernel, borrowed + generated);
+    }
+    let inv_m = 1.0 / m as f64;
+    for g in grads.iter_mut() {
+        *g *= inv_m;
+    }
+    for v in vals.iter_mut() {
+        // same association as the sequential path: (β·Σlse)·m⁻¹
+        *v = beta * *v * inv_m;
+    }
 }
 
 #[cfg(test)]
@@ -431,6 +933,54 @@ mod tests {
         assert_eq!(obs.counter(Counter::OraclePasses), 2);
         assert_eq!(obs.counter(Counter::CostRowsGenerated), 2);
         assert_eq!(obs.counter(Counter::CostRowsBorrowed), 2);
+    }
+
+    #[test]
+    fn kernel_impl_parses_its_own_names() {
+        for imp in [KernelImpl::Scalar, KernelImpl::Wide] {
+            assert_eq!(KernelImpl::parse(imp.name()), Ok(imp));
+        }
+        assert_eq!(KernelImpl::default(), KernelImpl::Scalar);
+        assert!(KernelImpl::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn wide_logsumexp_keeps_mask_semantics_and_tolerance() {
+        assert_eq!(logsumexp_wide(&[]), f64::NEG_INFINITY);
+        assert_eq!(
+            logsumexp_wide(&[f64::NEG_INFINITY; 9]),
+            f64::NEG_INFINITY
+        );
+        let mut rng = Rng64::new(17);
+        for n in [1usize, 3, 4, 7, 100, 784] {
+            let xs: Vec<f64> = (0..n).map(|_| 3.0 * rng.normal()).collect();
+            let (s, w) = (logsumexp(&xs), logsumexp_wide(&xs));
+            assert!((s - w).abs() <= 1e-12, "n={n}: {s} vs {w}");
+        }
+    }
+
+    #[test]
+    fn default_block_access_matches_per_row_dispatch() {
+        let src = QuadSource {
+            support: (0..11).map(|i| i as f64).collect(),
+            ys: (0..5).map(|i| i as f64 * 0.3).collect(),
+            inv_scale: 0.5,
+        };
+        let mut block = Vec::new();
+        src.cost_rows_block(1..4, &mut block);
+        assert_eq!(block.len(), 3);
+        for (k, row) in block.iter().enumerate() {
+            match (row, src.cost_row(1 + k)) {
+                (
+                    CostRow::Quad1d { y: a, .. },
+                    CostRow::Quad1d { y: b, .. },
+                ) => assert_eq!(a.to_bits(), b.to_bits()),
+                _ => panic!("variant changed through the block API"),
+            }
+        }
+        // the buffer is cleared on reuse
+        src.cost_rows_block(0..2, &mut block);
+        assert_eq!(block.len(), 2);
     }
 
     #[test]

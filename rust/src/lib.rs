@@ -1,3 +1,7 @@
+// `std::simd` is nightly-only; the optional `simd` cargo feature swaps
+// the manual lane-array wide kernels for `Simd<f64, 4>` (same fold
+// order, bitwise-identical results — see `kernel`'s module docs).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # A²DWB — Asynchronous Decentralized Wasserstein Barycenter
 //!
 //! Production-grade reproduction of *“An Asynchronous Decentralized
@@ -120,6 +124,7 @@ pub mod prelude {
     };
     pub use crate::exec::{ExecutorSpec, SampleCadence};
     pub use crate::graph::{Graph, TopologySpec};
+    pub use crate::kernel::KernelImpl;
     pub use crate::measures::MeasureSpec;
     pub use crate::metrics::Series;
     pub use crate::obs::{Telemetry, TelemetrySnapshot};

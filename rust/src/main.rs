@@ -55,10 +55,12 @@ fn main() {
             eprintln!("  --nodes N --topology T --algorithm A --duration S --seed K");
             eprintln!("  --beta B --gamma-scale G --samples M --backend native|pjrt");
             eprintln!("  --executor sim|threads --workers W  (execution backend)");
+            eprintln!("  --kernel scalar|wide  (lane width of the numeric core; scalar = bit-stable)");
             eprintln!("gaussian|mnist only:");
             eprintln!("  --progress  (stream metric samples while the run executes; also join)");
             eprintln!("  --telemetry (print the end-of-run telemetry table; also join)");
             eprintln!("  --trace-out trace.jsonl  (dump the event trace; scripts/trace_summarize)");
+            eprintln!("  --trace-capacity N  (trace ring size in events; default 65536 with --trace-out)");
             eprintln!("  --out results/run.csv  (CSV of the metric series)");
             eprintln!("multi-process (see ARCHITECTURE.md):");
             eprintln!("  speedup --processes P --workers W   P shard processes x W-thread pools (PxW)");
@@ -393,6 +395,13 @@ fn cmd_join(args: &Args) -> i32 {
 fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
     let build = || -> Result<a2dwb::coordinator::Session, String> {
         args.reject_unknown(&known_flags(&["out", "progress", "telemetry", "trace-out"]))?;
+        if args.get_opt("trace-capacity").is_some() && args.get_opt("trace-out").is_none() {
+            return Err(
+                "--trace-capacity sizes the ring --trace-out dumps; \
+                 pass --trace-out as well"
+                    .into(),
+            );
+        }
         ExperimentBuilder::from_cli_args(args, mnist)?.build()
     };
     let session = match build() {
@@ -404,9 +413,11 @@ fn cmd_experiment(args: &Args, mnist: bool) -> i32 {
     };
     // Arm the trace ring before the run when asked for; tracing only
     // observes (counters and the ring are outside every RNG stream), so
-    // the trajectory is bit-identical with or without it.
+    // the trajectory is bit-identical with or without it. An explicit
+    // --trace-capacity was already armed by the builder at build();
+    // a bare --trace-out falls back to the historical 1<<16 ring.
     let obs = session.telemetry();
-    if args.get_opt("trace-out").is_some() {
+    if args.get_opt("trace-out").is_some() && session.config().trace_capacity.is_none() {
         obs.set_trace_capacity(1 << 16);
     }
     let cfg = session.config();

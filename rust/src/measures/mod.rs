@@ -150,6 +150,31 @@ impl CostRowSource for MeasureRows<'_> {
             }
         }
     }
+
+    /// Block access without per-row variant dispatch: the match runs
+    /// once per block, and each arm serves its whole range from the
+    /// shared backing (table slices / the one support slice).
+    fn cost_rows_block<'s>(
+        &'s self,
+        range: std::ops::Range<usize>,
+        out: &mut Vec<CostRow<'s>>,
+    ) {
+        out.clear();
+        match *self {
+            MeasureRows::Table { table, n, pixels } => {
+                out.extend(pixels[range].iter().map(|&p| {
+                    CostRow::Borrowed(&table[p * n..(p + 1) * n])
+                }));
+            }
+            MeasureRows::Quad1d { support, ys, inv_scale } => {
+                out.extend(
+                    ys[range]
+                        .iter()
+                        .map(|&y| CostRow::Quad1d { support, y, inv_scale }),
+                );
+            }
+        }
+    }
 }
 
 /// A node's private measure: the sampling oracle of the paper.

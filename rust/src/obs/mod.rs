@@ -68,7 +68,7 @@ pub const WIRE_KIND_NAMES: [&str; WIRE_KINDS] =
     ["?", "hello", "grad", "done", "bye", "report", "snapshot", "cancel", "telemetry"];
 
 /// Number of registry counters ([`Counter::ALL`]).
-pub const NUM_COUNTERS: usize = 11;
+pub const NUM_COUNTERS: usize = 13;
 
 /// Number of registry histograms ([`HistKind::ALL`]).
 pub const NUM_HISTS: usize = 3;
@@ -108,6 +108,13 @@ pub enum Counter {
     /// Scheduler iteration claims (all workers; per-worker split in
     /// [`TelemetrySnapshot::worker_claims`]).
     Claims,
+    /// Oracle cost rows processed by the scalar (bit-stable) kernels
+    /// ([`KernelImpl::Scalar`](crate::kernel::KernelImpl)).
+    KernelScalarRows,
+    /// Oracle cost rows processed by the wide-lane kernels
+    /// ([`KernelImpl::Wide`](crate::kernel::KernelImpl)) — nonzero iff
+    /// `--kernel wide` actually ran.
+    KernelWideRows,
 }
 
 impl Counter {
@@ -124,6 +131,8 @@ impl Counter {
         Counter::GateWaits,
         Counter::GateDrains,
         Counter::Claims,
+        Counter::KernelScalarRows,
+        Counter::KernelWideRows,
     ];
 
     fn idx(self) -> usize {
@@ -144,6 +153,8 @@ impl Counter {
             Counter::GateWaits => "gate_waits",
             Counter::GateDrains => "gate_drains",
             Counter::Claims => "claims",
+            Counter::KernelScalarRows => "kernel_scalar_rows",
+            Counter::KernelWideRows => "kernel_wide_rows",
         }
     }
 }
@@ -419,6 +430,13 @@ impl Telemetry {
     }
 
     /// Drain the trace ring as JSONL, one event object per line.
+    ///
+    /// When the ring overflowed its capacity (`--trace-capacity N`),
+    /// a final **dropped-events trailer** line `{"dropped":K}` records
+    /// how many oldest events were evicted, so a truncated trace file
+    /// self-reports instead of silently looking complete
+    /// (`scripts/trace_summarize` surfaces it). Returns the total
+    /// event count including the dropped ones.
     pub fn write_trace_jsonl(&self, w: &mut impl Write) -> std::io::Result<u64> {
         let (events, dropped) = self.drain_trace();
         for e in &events {
@@ -427,6 +445,9 @@ impl Telemetry {
                 "{{\"t_ns\":{},\"ev\":\"{}\",\"who\":{},\"v\":{}}}",
                 e.t_ns, e.kind, e.who, e.value
             )?;
+        }
+        if dropped > 0 {
+            writeln!(w, "{{\"dropped\":{dropped}}}")?;
         }
         Ok(events.len() as u64 + dropped)
     }
@@ -906,6 +927,17 @@ mod tests {
         assert_eq!(
             String::from_utf8(out).unwrap(),
             "{\"t_ns\":42,\"ev\":\"gate_wait\",\"who\":1,\"v\":1000}\n"
+        );
+        // overflow self-reports through the dropped-events trailer
+        t.set_trace_capacity(1);
+        t.trace_at(1, "activate", 0, 10);
+        t.trace_at(2, "activate", 0, 11);
+        let mut out = Vec::new();
+        let total = t.write_trace_jsonl(&mut out).unwrap();
+        assert_eq!(total, 2);
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            "{\"t_ns\":2,\"ev\":\"activate\",\"who\":0,\"v\":11}\n{\"dropped\":1}\n"
         );
     }
 

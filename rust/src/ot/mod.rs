@@ -78,6 +78,41 @@ pub trait DualOracle {
     /// rows) into `obs`. Default: ignore — backends without kernel-side
     /// counting (e.g. PJRT) simply don't report these counters.
     fn attach_obs(&mut self, _obs: std::sync::Arc<crate::obs::Telemetry>) {}
+
+    /// Select the lane width of the row kernels
+    /// ([`KernelImpl`](crate::kernel::KernelImpl)). Default: ignore —
+    /// backends that don't run the native kernels (e.g. PJRT executes
+    /// the AOT artifact) have no lane-width knob.
+    fn set_kernel(&mut self, _kernel: crate::kernel::KernelImpl) {}
+
+    /// Evaluate B independent η̄ blocks (`etas`/`grads` are B row-major
+    /// blocks of n; `vals` has len B) against one cost source.
+    ///
+    /// The default is the literal sequential loop — the bitwise
+    /// baseline any batched override must reproduce under the scalar
+    /// kernel. [`NativeOracle`] overrides it with the cache-blocked
+    /// [`kernel::dual_oracle_batch`] single pass.
+    fn eval_batch(
+        &mut self,
+        etas: &[f64],
+        cost: &dyn CostRowSource,
+        beta: f64,
+        grads: &mut [f64],
+        vals: &mut [f64],
+    ) {
+        let n = cost.n();
+        let b = vals.len();
+        assert_eq!(etas.len(), b * n);
+        assert_eq!(grads.len(), b * n);
+        for bi in 0..b {
+            vals[bi] = self.eval(
+                &etas[bi * n..(bi + 1) * n],
+                cost,
+                beta,
+                &mut grads[bi * n..(bi + 1) * n],
+            );
+        }
+    }
 }
 
 /// f64 native backend — the kernel, directly.
@@ -103,6 +138,21 @@ impl DualOracle for NativeOracle {
 
     fn attach_obs(&mut self, obs: std::sync::Arc<crate::obs::Telemetry>) {
         self.scratch.attach_obs(obs);
+    }
+
+    fn set_kernel(&mut self, kernel: crate::kernel::KernelImpl) {
+        self.scratch.set_kernel(kernel);
+    }
+
+    fn eval_batch(
+        &mut self,
+        etas: &[f64],
+        cost: &dyn CostRowSource,
+        beta: f64,
+        grads: &mut [f64],
+        vals: &mut [f64],
+    ) {
+        kernel::dual_oracle_batch(etas, cost, beta, grads, vals, &mut self.scratch);
     }
 }
 

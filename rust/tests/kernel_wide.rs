@@ -1,0 +1,275 @@
+//! Kernel-lane and batched-oracle contracts (integration surface).
+//!
+//! Two promises from `kernel`'s module docs are enforced here, across
+//! both production [`MeasureRows`] variants and the materialized
+//! [`CostRows`] form:
+//!
+//! 1. **Wide ≤1e-12** — [`KernelImpl::Wide`] reassociates exp-sum
+//!    reductions, so it is gated by tolerance (not bits) against the
+//!    scalar reference, over randomized shapes including the paper's
+//!    n=784 digit width and −∞-masked inputs.
+//! 2. **Batch is bitwise** — [`dual_oracle_batch`] must reproduce a
+//!    sequential [`dual_oracle`] loop bit-for-bit *under either lane
+//!    width*: batching reorders memory traffic, never FP operations.
+
+use a2dwb::kernel::{
+    dual_oracle, dual_oracle_batch, logsumexp, logsumexp_wide, CostRowSource,
+    KernelImpl, OracleScratch,
+};
+use a2dwb::measures::{CostRows, MeasureRows};
+use a2dwb::obs::{Counter, Telemetry};
+use a2dwb::proptest_util::{gen_f64, gen_usize, gen_vec_normal, PropCheck};
+use a2dwb::rng::Rng64;
+use std::sync::Arc;
+
+/// Owned storage for a randomly generated `MeasureRows::Table` source
+/// (the digit experiment's shape: shared distance table + pixel
+/// indices).
+struct TableCase {
+    table: Vec<f64>,
+    pixels: Vec<usize>,
+    n: usize,
+}
+
+impl TableCase {
+    fn gen(rng: &mut Rng64, m: usize, n: usize) -> Self {
+        let npix = gen_usize(rng, 1, 16);
+        let table = gen_vec_normal(rng, npix * n, 2.0)
+            .into_iter()
+            .map(f64::abs)
+            .collect();
+        let pixels = (0..m).map(|_| gen_usize(rng, 0, npix - 1)).collect();
+        TableCase { table, pixels, n }
+    }
+
+    fn rows(&self) -> MeasureRows<'_> {
+        MeasureRows::Table { table: &self.table, n: self.n, pixels: &self.pixels }
+    }
+}
+
+/// Owned storage for a random `MeasureRows::Quad1d` source (the
+/// Gaussian experiment's generator form).
+struct QuadCase {
+    support: Vec<f64>,
+    ys: Vec<f64>,
+    inv_scale: f64,
+}
+
+impl QuadCase {
+    fn gen(rng: &mut Rng64, m: usize, n: usize) -> Self {
+        QuadCase {
+            support: gen_vec_normal(rng, n, 3.0),
+            ys: gen_vec_normal(rng, m, 1.0),
+            inv_scale: gen_f64(rng, 0.02, 2.0),
+        }
+    }
+
+    fn rows(&self) -> MeasureRows<'_> {
+        MeasureRows::Quad1d {
+            support: &self.support,
+            ys: &self.ys,
+            inv_scale: self.inv_scale,
+        }
+    }
+}
+
+/// Evaluate one source under a given lane width.
+fn eval(
+    eta: &[f64],
+    rows: &dyn CostRowSource,
+    beta: f64,
+    kernel: KernelImpl,
+) -> (f64, Vec<f64>) {
+    let mut scratch = OracleScratch::default();
+    scratch.set_kernel(kernel);
+    let mut grad = vec![0.0; rows.n()];
+    let val = dual_oracle(eta, rows, beta, &mut grad, &mut scratch);
+    (val, grad)
+}
+
+fn assert_close(
+    (sv, sg): &(f64, Vec<f64>),
+    (wv, wg): &(f64, Vec<f64>),
+    what: &str,
+) -> Result<(), String> {
+    if (sv - wv).abs() > 1e-12 {
+        return Err(format!("{what}: val {sv} vs {wv}"));
+    }
+    for (l, (a, b)) in sg.iter().zip(wg).enumerate() {
+        if (a - b).abs() > 1e-12 {
+            return Err(format!("{what}: grad[{l}] {a} vs {b}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn wide_oracle_matches_scalar_within_1e12_on_random_shapes() {
+    PropCheck::new("wide_vs_scalar_oracle", 0xA2D_0001, 64).run(|rng| {
+        let m = gen_usize(rng, 1, 40);
+        let n = gen_usize(rng, 1, 200);
+        let beta = gen_f64(rng, 0.02, 1.0);
+        let eta = gen_vec_normal(rng, n, 0.5);
+        let quad = QuadCase::gen(rng, m, n);
+        assert_close(
+            &eval(&eta, &quad.rows(), beta, KernelImpl::Scalar),
+            &eval(&eta, &quad.rows(), beta, KernelImpl::Wide),
+            &format!("quad1d m={m} n={n}"),
+        )?;
+        let table = TableCase::gen(rng, m, n);
+        assert_close(
+            &eval(&eta, &table.rows(), beta, KernelImpl::Scalar),
+            &eval(&eta, &table.rows(), beta, KernelImpl::Wide),
+            &format!("table m={m} n={n}"),
+        )
+    });
+}
+
+#[test]
+fn wide_oracle_matches_scalar_at_paper_widths() {
+    // The two widths the experiments actually run: n=100 (Gaussian
+    // grid) and n=784 (28×28 digit raster).
+    let mut rng = Rng64::new(42);
+    for n in [100usize, 784] {
+        let eta = gen_vec_normal(&mut rng, n, 0.3);
+        let quad = QuadCase::gen(&mut rng, 24, n);
+        assert_close(
+            &eval(&eta, &quad.rows(), 0.05, KernelImpl::Scalar),
+            &eval(&eta, &quad.rows(), 0.05, KernelImpl::Wide),
+            &format!("paper width n={n}"),
+        )
+        .unwrap();
+    }
+}
+
+#[test]
+fn wide_logsumexp_handles_masks_like_scalar() {
+    // Masked (−∞) entries are the Sinkhorn solver's restriction
+    // semantics; the wide path must ignore them identically, in every
+    // lane position and in the scalar remainder tail.
+    PropCheck::new("wide_lse_masks", 0xA2D_0002, 64).run(|rng| {
+        let n = gen_usize(rng, 1, 64);
+        let mut xs = gen_vec_normal(rng, n, 4.0);
+        for x in xs.iter_mut() {
+            if gen_f64(rng, 0.0, 1.0) < 0.3 {
+                *x = f64::NEG_INFINITY;
+            }
+        }
+        let (s, w) = (logsumexp(&xs), logsumexp_wide(&xs));
+        if s == f64::NEG_INFINITY || w == f64::NEG_INFINITY {
+            if s != w {
+                return Err(format!("mask collapse diverged: {s} vs {w}"));
+            }
+            return Ok(());
+        }
+        if (s - w).abs() > 1e-12 {
+            return Err(format!("n={n}: {s} vs {w}"));
+        }
+        Ok(())
+    });
+}
+
+/// Run B sequential oracle calls and one batched call on the same
+/// source+scratch; return both (vals, grads) pairs.
+#[allow(clippy::type_complexity)]
+fn batch_vs_sequential(
+    rng: &mut Rng64,
+    rows: &dyn CostRowSource,
+    b: usize,
+    beta: f64,
+    kernel: KernelImpl,
+) -> ((Vec<f64>, Vec<f64>), (Vec<f64>, Vec<f64>)) {
+    let n = rows.n();
+    let etas = gen_vec_normal(rng, b * n, 0.5);
+    let mut scratch = OracleScratch::default();
+    scratch.set_kernel(kernel);
+    let mut seq_vals = vec![0.0; b];
+    let mut seq_grads = vec![0.0; b * n];
+    for bi in 0..b {
+        seq_vals[bi] = dual_oracle(
+            &etas[bi * n..(bi + 1) * n],
+            rows,
+            beta,
+            &mut seq_grads[bi * n..(bi + 1) * n],
+            &mut scratch,
+        );
+    }
+    let mut bat_vals = vec![0.0; b];
+    let mut bat_grads = vec![0.0; b * n];
+    dual_oracle_batch(&etas, rows, beta, &mut bat_grads, &mut bat_vals, &mut scratch);
+    ((seq_vals, seq_grads), (bat_vals, bat_grads))
+}
+
+fn assert_bitwise(
+    (sv, sg): &(Vec<f64>, Vec<f64>),
+    (bv, bg): &(Vec<f64>, Vec<f64>),
+    what: &str,
+) -> Result<(), String> {
+    for (bi, (a, b)) in sv.iter().zip(bv).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("{what}: vals[{bi}] {a} vs {b}"));
+        }
+    }
+    for (l, (a, b)) in sg.iter().zip(bg).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("{what}: grads[{l}] {a} vs {b}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn batched_oracle_is_bitwise_sequential_under_both_kernels() {
+    // The batch API's core contract: cache-blocking the cost-row
+    // traffic reorders *memory* access only — each η̄'s FP sequence is
+    // exactly the sequential one, so results match to the bit. That
+    // must hold under Wide too (the batch path dispatches the same row
+    // kernel), across both production variants and materialized rows.
+    PropCheck::new("batch_bitwise", 0xA2D_0003, 48).run(|rng| {
+        let m = gen_usize(rng, 1, 40);
+        let n = gen_usize(rng, 1, 96);
+        let b = gen_usize(rng, 1, 9);
+        let beta = gen_f64(rng, 0.05, 0.8);
+        let quad = QuadCase::gen(rng, m, n);
+        let table = TableCase::gen(rng, m, n);
+        let mut mat = CostRows::new(m, n);
+        mat.fill_from(&table.rows());
+        for kernel in [KernelImpl::Scalar, KernelImpl::Wide] {
+            let (seq, bat) = batch_vs_sequential(rng, &quad.rows(), b, beta, kernel);
+            assert_bitwise(&seq, &bat, &format!("quad1d {kernel:?} b={b}"))?;
+            let (seq, bat) =
+                batch_vs_sequential(rng, &table.rows(), b, beta, kernel);
+            assert_bitwise(&seq, &bat, &format!("table {kernel:?} b={b}"))?;
+            let (seq, bat) = batch_vs_sequential(rng, &mat, b, beta, kernel);
+            assert_bitwise(&seq, &bat, &format!("materialized {kernel:?} b={b}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kernel_row_counters_split_by_lane_width() {
+    // `--telemetry` evidence of which kernel ran: every oracle pass
+    // books its row count under the selected lane width's counter, for
+    // both the single and the batched entry points.
+    let obs = Telemetry::shared(0);
+    let mut scratch = OracleScratch::default();
+    scratch.attach_obs(Arc::clone(&obs));
+    let mut rng = Rng64::new(7);
+    let (m, n, b) = (6usize, 10usize, 3usize);
+    let quad = QuadCase::gen(&mut rng, m, n);
+    let eta = gen_vec_normal(&mut rng, n, 0.5);
+    let etas = gen_vec_normal(&mut rng, b * n, 0.5);
+    let mut grad = vec![0.0; n];
+    let mut grads = vec![0.0; b * n];
+    let mut vals = vec![0.0; b];
+
+    dual_oracle(&eta, &quad.rows(), 0.1, &mut grad, &mut scratch);
+    assert_eq!(obs.counter(Counter::KernelScalarRows), m as u64);
+    assert_eq!(obs.counter(Counter::KernelWideRows), 0);
+
+    scratch.set_kernel(KernelImpl::Wide);
+    dual_oracle_batch(&etas, &quad.rows(), 0.1, &mut grads, &mut vals, &mut scratch);
+    assert_eq!(obs.counter(Counter::KernelScalarRows), m as u64);
+    assert_eq!(obs.counter(Counter::KernelWideRows), (b * m) as u64);
+}

@@ -59,6 +59,8 @@ fn every_cli_flag_round_trips_through_the_builder() {
         "--executor", "threads:3",
         "--paper-literal-diag",
         "--progress-every", "25",
+        "--kernel", "wide",
+        "--trace-capacity", "4096",
     ]);
     let from_cli = ExperimentConfig::from_cli_args(&args, false).unwrap();
     let from_builder = ExperimentBuilder::gaussian()
@@ -84,6 +86,8 @@ fn every_cli_flag_round_trips_through_the_builder() {
         .executor(ExecutorSpec::Threads { workers: 3 })
         .diag(DiagCoef::PaperLiteral)
         .progress_every(25)
+        .kernel(KernelImpl::Wide)
+        .trace_capacity(4096)
         .config()
         .unwrap();
     assert_eq!(format!("{from_cli:?}"), format!("{from_builder:?}"));
@@ -167,6 +171,8 @@ fn unknown_flags_are_rejected_by_the_shared_accept_list() {
         "--executor", "threads",
         "--paper-literal-diag",
         "--progress-every", "10",
+        "--kernel", "scalar",
+        "--trace-capacity", "1024",
     ]);
     args.reject_unknown(ExperimentConfig::CLI_FLAGS).unwrap();
     ExperimentConfig::from_cli_args(&args, false).unwrap();
@@ -178,6 +184,27 @@ fn progress_every_zero_is_rejected() {
     let args = parse(&["gaussian", "--progress-every", "0"]);
     let cfg = ExperimentConfig::from_cli_args(&args, false).unwrap();
     assert!(run_experiment(&cfg).is_err());
+}
+
+#[test]
+fn trace_capacity_zero_is_rejected_and_build_arms_the_ring() {
+    assert!(tiny(AlgorithmKind::A2dwb).trace_capacity(0).build().is_err());
+    let args = parse(&["gaussian", "--trace-capacity", "0"]);
+    let cfg = ExperimentConfig::from_cli_args(&args, false).unwrap();
+    assert!(run_experiment(&cfg).is_err());
+    // a valid capacity arms the session's trace ring at build()
+    let session = tiny(AlgorithmKind::A2dwb).trace_capacity(64).build().unwrap();
+    assert!(session.telemetry().tracing(), "build() must arm the ring");
+    // and the default leaves tracing disarmed
+    let session = tiny(AlgorithmKind::A2dwb).build().unwrap();
+    assert!(!session.telemetry().tracing());
+}
+
+#[test]
+fn unknown_kernel_names_are_rejected() {
+    let args = parse(&["gaussian", "--kernel", "avx512"]);
+    let err = ExperimentConfig::from_cli_args(&args, false).unwrap_err();
+    assert!(err.contains("avx512"), "{err}");
 }
 
 // ------------------------------------------------------- validation
