@@ -18,7 +18,7 @@
 //! is a real OS process with its own address space and the gradients
 //! genuinely cross a socket.
 
-use a2dwb::exec::net::{self, MeshOpts};
+use a2dwb::exec::net::{self, MeshOpts, Pacing};
 use a2dwb::graph::TopologySpec;
 use a2dwb::prelude::*;
 
@@ -82,6 +82,32 @@ fn mesh_pair(
         async_dual: a.final_dual_objective(),
         sync_dual: s.final_dual_objective(),
     }
+}
+
+struct QuantCell {
+    bits: u8,
+    error_feedback: bool,
+    wire_bytes: u64,
+    /// Dense-gradient bytes over this cell's bytes — the wire-byte
+    /// reduction the quantizer buys (1.0 for the dense baseline).
+    wire_ratio: f64,
+    final_dual: f64,
+    dual_gap_vs_dense: f64,
+}
+
+/// Run one 2-shard lockstep thread-mesh with the given compression
+/// knob and return (wire bytes sent, final dual objective). Lockstep
+/// fixes the frame *count* across cells, so the byte ratio isolates
+/// per-frame compression.
+fn quant_run(base: &ExperimentConfig, compression: Compression) -> (u64, f64) {
+    let cfg = ExperimentConfig {
+        algorithm: AlgorithmKind::A2dwb,
+        compression,
+        ..base.clone()
+    };
+    let r = net::run_mesh_threads(&cfg, &MeshOpts::new(2).pacing(Pacing::Lockstep))
+        .expect("quantized mesh run");
+    (r.telemetry.wire_bytes_sent(), r.final_dual_objective())
 }
 
 struct Cell {
@@ -167,6 +193,40 @@ fn main() {
     let mesh_cells: Vec<MeshCell> =
         [(2usize, 2usize), (4, 1)].iter().map(|&(p, w)| mesh_pair(&base, &exe, p, w)).collect();
 
+    // Quantized-wire cells (protocol v5): the identical 2-shard
+    // lockstep mesh at dense f64 gradients vs block-quantized GradQ
+    // frames with error feedback (plus the naive 4-bit ablation).
+    // Lockstep keeps the frame schedule fixed, so `wire_ratio` is the
+    // per-frame byte reduction and `dual_gap_vs_dense` is the whole
+    // cost of quantization.
+    let (dense_bytes, dense_dual) = quant_run(&base, Compression::off());
+    let mut quant_cells = vec![QuantCell {
+        bits: 0,
+        error_feedback: false,
+        wire_bytes: dense_bytes,
+        wire_ratio: 1.0,
+        final_dual: dense_dual,
+        dual_gap_vs_dense: 0.0,
+    }];
+    for (bits, ef) in [(8u8, true), (4, true), (4, false)] {
+        let c = Compression { bits, error_feedback: ef };
+        let (bytes, dual) = quant_run(&base, c);
+        let cell = QuantCell {
+            bits,
+            error_feedback: ef,
+            wire_bytes: bytes,
+            wire_ratio: dense_bytes as f64 / bytes.max(1) as f64,
+            final_dual: dual,
+            dual_gap_vs_dense: (dual - dense_dual).abs(),
+        };
+        println!(
+            "BENCH exec_net quant bits={bits} ef={ef} wire_bytes={bytes} \
+             ratio={:.2}x dual_gap={:.6}",
+            cell.wire_ratio, cell.dual_gap_vs_dense
+        );
+        quant_cells.push(cell);
+    }
+
     // simulator reference (virtual time, no compute injection)
     let sim = ExperimentBuilder::from_config(base.clone())
         .compute_time(0.0)
@@ -249,6 +309,22 @@ fn main() {
             c.async_dual,
             c.sync_dual,
             if idx + 1 == mesh_cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"compression_cells\": [\n");
+    for (idx, c) in quant_cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"bits\": {}, \"error_feedback\": {}, \"transport\": \"tcp-loopback\", \
+             \"wire_bytes\": {}, \"wire_ratio\": {:.4}, \
+             \"final_dual\": {:.9}, \"dual_gap_vs_dense\": {:.9}}}{}\n",
+            c.bits,
+            c.error_feedback,
+            c.wire_bytes,
+            c.wire_ratio,
+            c.final_dual,
+            c.dual_gap_vs_dense,
+            if idx + 1 == quant_cells.len() { "" } else { "," }
         ));
     }
     json.push_str("  ]\n");

@@ -116,6 +116,70 @@ pub struct ExperimentConfig {
     /// `--trace-out` is given without an explicit capacity. Validated
     /// ≥ 1: a zero-capacity ring would silently drop every event.
     pub trace_capacity: Option<usize>,
+    /// Cross-shard gradient compression (protocol v5 `GradQ` frames;
+    /// CLI `--compress-bits N`, `--quant-naive`). The default
+    /// ([`Compression::off`]) ships dense f64 `Grad` frames and keeps
+    /// every golden, lockstep parity run, and `config_digest`
+    /// handshake byte-identical; only the socket mesh consults this —
+    /// in-process backends have no wire to compress.
+    pub compression: Compression,
+    /// Peer-liveness heartbeat interval on mesh gradient streams, in
+    /// milliseconds (CLI `--heartbeat-ms`). A writer idle for this
+    /// long emits a `Heartbeat` frame; a reader silent for 4× this is
+    /// treated as a dead link (reconnect path, then freshest-wins
+    /// staleness) instead of failing the mesh. `None` (default)
+    /// disables both sides. Excluded from the handshake digest — it
+    /// never affects the algorithm's dynamics.
+    pub heartbeat_ms: Option<u64>,
+}
+
+/// Block-quantized gradient compression for the socket mesh
+/// (arXiv:2010.14325-style error feedback; see
+/// [`crate::exec::net::codec::quantize_blocks`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Compression {
+    /// Bits per gradient value on cross-shard frames, `1..=16`;
+    /// `0` disables compression (dense `Grad` frames, the default).
+    pub bits: u8,
+    /// Fold each send's quantization residual into the next send so
+    /// lost precision is deferred, never dropped — the invariant the
+    /// convergence guarantee rests on. `false` is the naive-quantizer
+    /// ablation (CLI `--quant-naive`), kept only to demonstrate why
+    /// feedback matters.
+    pub error_feedback: bool,
+}
+
+impl Default for Compression {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl Compression {
+    /// No compression: dense f64 `Grad` frames (the default).
+    pub const fn off() -> Self {
+        Self { bits: 0, error_feedback: true }
+    }
+
+    /// Error-feedback quantization at `bits` bits per value.
+    pub const fn quantized(bits: u8) -> Self {
+        Self { bits, error_feedback: true }
+    }
+
+    /// Whether cross-shard gradients are quantized at all.
+    pub fn is_on(&self) -> bool {
+        self.bits > 0
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.bits != 0 && !(1..=16).contains(&self.bits) {
+            return Err(format!(
+                "compression bits {} out of range (0 = off, 1..=16)",
+                self.bits
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Network fault model: heterogeneous slow nodes + iid message loss.
@@ -196,6 +260,8 @@ impl ExperimentConfig {
             progress_every: None,
             kernel: KernelImpl::Scalar,
             trace_capacity: None,
+            compression: Compression::off(),
+            heartbeat_ms: None,
         }
     }
 
@@ -261,6 +327,9 @@ impl ExperimentConfig {
         "progress-every",
         "kernel",
         "trace-capacity",
+        "compress-bits",
+        "quant-naive",
+        "heartbeat-ms",
         "mnist",
     ];
 
@@ -329,6 +398,14 @@ impl ExperimentConfig {
                 .map_err(|e| format!("--trace-capacity: {e}"))?;
             cfg.trace_capacity = Some(cap);
         }
+        cfg.compression.bits = args.get("compress-bits", cfg.compression.bits)?;
+        if args.has_flag("quant-naive") {
+            cfg.compression.error_feedback = false;
+        }
+        if let Some(ms) = args.get_opt("heartbeat-ms") {
+            let ms: u64 = ms.parse().map_err(|e| format!("--heartbeat-ms: {e}"))?;
+            cfg.heartbeat_ms = Some(ms);
+        }
         Ok(cfg)
     }
 
@@ -358,6 +435,14 @@ impl ExperimentConfig {
             return Err(
                 "trace_capacity needs >= 1 event (or None to leave tracing \
                  disarmed)"
+                    .into(),
+            );
+        }
+        self.compression.validate()?;
+        if self.heartbeat_ms == Some(0) {
+            return Err(
+                "heartbeat_ms needs >= 1 ms (or None to disable liveness \
+                 heartbeats)"
                     .into(),
             );
         }

@@ -559,6 +559,23 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Cross-shard gradient compression for mesh runs (default
+    /// [`Compression::off`](crate::coordinator::Compression::off) —
+    /// dense f64 frames; see [`ExperimentConfig::compression`]).
+    /// In-process backends ignore it: there is no wire to compress.
+    pub fn compression(mut self, c: crate::coordinator::Compression) -> Self {
+        self.cfg.compression = c;
+        self
+    }
+
+    /// Peer-liveness heartbeat interval for mesh gradient streams, in
+    /// milliseconds (ms ≥ 1 — validated at [`ExperimentBuilder::build`];
+    /// see [`ExperimentConfig::heartbeat_ms`]).
+    pub fn heartbeat_ms(mut self, ms: u64) -> Self {
+        self.cfg.heartbeat_ms = Some(ms);
+        self
+    }
+
     /// Validate and yield the bare config (for callers that feed
     /// config-taking entry points such as
     /// [`run_speedup_pair`](crate::exec::run_speedup_pair) or the mesh

@@ -300,6 +300,51 @@ pub fn run_speedup_pair(
     Ok((a, s))
 }
 
+/// One injected link fault for resilience testing: the undirected edge
+/// `(a, b)` goes dark from sweep `at_sweep` (inclusive) for `down_for`
+/// sweeps — `None` means permanently.
+///
+/// Two consumers share this one description of "a link died":
+///
+/// * [`NetModel::add_link_fault`] — the simulator drops every message
+///   crossing the dark edge, so the receiving mailbox keeps its stale
+///   gradient (exactly the staleness A²DWB tolerates by design);
+/// * [`ShardRunOpts`](net::ShardRunOpts) `link_fault` — the socket
+///   mesh *actually severs* the TCP stream to peer shard `b` when
+///   shard `a`'s workers reach `at_sweep`, exercising the reconnect /
+///   liveness machinery end to end (`down_for: None` re-severs on
+///   every reconnect, the permanent-loss path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkFault {
+    /// One endpoint (node index in the simulator, shard index on the
+    /// mesh).
+    pub a: usize,
+    /// The other endpoint.
+    pub b: usize,
+    /// First sweep the edge is dark.
+    pub at_sweep: u64,
+    /// Sweeps the edge stays dark; `None` = never comes back.
+    pub down_for: Option<u64>,
+}
+
+impl LinkFault {
+    /// A permanent cut of edge `(a, b)` starting at `at_sweep`.
+    pub const fn cut(a: usize, b: usize, at_sweep: u64) -> Self {
+        Self { a, b, at_sweep, down_for: None }
+    }
+
+    /// Whether the fault covers `sweep`.
+    pub fn active_at(&self, sweep: u64) -> bool {
+        sweep >= self.at_sweep
+            && self.down_for.is_none_or(|d| sweep < self.at_sweep + d)
+    }
+
+    /// Whether the (unordered) edge src—dst is the faulted one.
+    pub fn covers(&self, src: usize, dst: usize) -> bool {
+        (self.a, self.b) == (src, dst) || (self.a, self.b) == (dst, src)
+    }
+}
+
 /// Simulator-side message-fate model: per-link categorical delay draws,
 /// straggler slow-down factors, and iid message drops — the §4 network
 /// law plus the [`FaultModel`] extension, with one RNG stream layout so
@@ -310,6 +355,12 @@ pub struct NetModel {
     drop_rng: Rng64,
     node_factors: Vec<f64>,
     drop_prob: f64,
+    /// Injected dead edges ([`NetModel::add_link_fault`]); empty by
+    /// default, so the legacy RNG stream layout is untouched unless a
+    /// fault is both registered *and* active.
+    link_faults: Vec<LinkFault>,
+    /// Current sweep for fault-window checks ([`NetModel::set_sweep`]).
+    sweep: u64,
 }
 
 impl NetModel {
@@ -321,7 +372,32 @@ impl NetModel {
             drop_rng: Rng64::new(seed ^ 0x4452_4F50),
             node_factors: faults.node_factors(m, seed),
             drop_prob: faults.drop_prob,
+            link_faults: Vec::new(),
+            sweep: 0,
         }
+    }
+
+    /// Register an injected link fault (testing / resilience studies).
+    /// Messages crossing a dark edge are lost — [`NetModel::async_fate`]
+    /// returns `None` **without consuming any RNG draw**, so runs
+    /// differing only in registered-but-never-active faults are
+    /// bit-identical.
+    pub fn add_link_fault(&mut self, f: LinkFault) {
+        self.link_faults.push(f);
+    }
+
+    /// Advance the fault clock: subsequent fates are judged against
+    /// sweep `k`'s fault windows. No-op when no faults are registered.
+    pub fn set_sweep(&mut self, k: u64) {
+        self.sweep = k;
+    }
+
+    /// Whether the edge src—dst is currently dark under an injected
+    /// fault.
+    pub fn link_down(&self, src: usize, dst: usize) -> bool {
+        self.link_faults
+            .iter()
+            .any(|f| f.active_at(self.sweep) && f.covers(src, dst))
     }
 
     /// Straggler delay multiplier of node `i`.
@@ -331,8 +407,13 @@ impl NetModel {
 
     /// Fate of one asynchronous transmission src → dst: `None` if the
     /// message is lost on the wire (the mailbox keeps the previous
-    /// gradient), otherwise the effective link delay.
+    /// gradient), otherwise the effective link delay. A dark edge
+    /// ([`NetModel::add_link_fault`]) loses the message before any
+    /// drop/delay draw — a dead link is silence, not noise.
     pub fn async_fate(&mut self, src: usize, dst: usize) -> Option<f64> {
+        if !self.link_faults.is_empty() && self.link_down(src, dst) {
+            return None;
+        }
         if self.drop_prob > 0.0 && self.drop_rng.uniform() < self.drop_prob {
             return None;
         }
@@ -425,6 +506,47 @@ mod tests {
             total_tx += tx;
         }
         assert!(total_tx > 250, "retransmissions expected, got {total_tx}");
+    }
+
+    #[test]
+    fn link_fault_silences_only_its_edge_and_window() {
+        let faults = FaultModel::default();
+        let mut net = NetModel::paper_default(4, 11, &faults);
+        net.add_link_fault(LinkFault { a: 0, b: 1, at_sweep: 2, down_for: Some(3) });
+        // before the window: both directions deliver
+        assert!(net.async_fate(0, 1).is_some());
+        assert!(net.async_fate(1, 0).is_some());
+        // inside the window: the faulted edge is dark in both
+        // directions, other edges are untouched
+        net.set_sweep(2);
+        assert!(net.async_fate(0, 1).is_none());
+        assert!(net.async_fate(1, 0).is_none());
+        assert!(net.async_fate(0, 2).is_some());
+        assert!(net.async_fate(2, 3).is_some());
+        net.set_sweep(4);
+        assert!(net.async_fate(0, 1).is_none());
+        // past the window: the edge recovers
+        net.set_sweep(5);
+        assert!(net.async_fate(0, 1).is_some());
+        // a permanent cut never recovers
+        let mut net = NetModel::paper_default(4, 11, &faults);
+        net.add_link_fault(LinkFault::cut(2, 3, 0));
+        net.set_sweep(1_000_000);
+        assert!(net.async_fate(3, 2).is_none());
+    }
+
+    #[test]
+    fn inactive_link_fault_preserves_the_rng_stream() {
+        // registering a fault that never activates must not shift any
+        // delay/drop draw relative to the fault-free model
+        let faults =
+            FaultModel { straggler_fraction: 0.0, straggler_slowdown: 1.0, drop_prob: 0.3 };
+        let mut plain = NetModel::paper_default(4, 5, &faults);
+        let mut faulted = NetModel::paper_default(4, 5, &faults);
+        faulted.add_link_fault(LinkFault { a: 0, b: 1, at_sweep: 1 << 40, down_for: None });
+        for (src, dst) in [(0usize, 1usize), (1, 2), (0, 1), (3, 0), (2, 3), (0, 1)] {
+            assert_eq!(plain.async_fate(src, dst), faulted.async_fate(src, dst));
+        }
     }
 
     #[test]

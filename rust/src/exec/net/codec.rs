@@ -57,6 +57,21 @@
 //!   byte format is versioned/self-describing (strict length checks in
 //!   [`TelemetrySnapshot::from_bytes`]), so the frame is just a
 //!   length-prefixed blob — new counters never need a protocol bump.
+//! * [`WireMsg::GradQ`] — a **block-quantized** gradient broadcast
+//!   (protocol v5): same `(src, stamp)` identity as `Grad`, but the
+//!   n-vector payload is compressed to `bits` bits per value with a
+//!   per-block `(offset, scale)` pair ([`QUANT_BLOCK`] values per
+//!   block). The decoder dequantizes inline, so receivers publish a
+//!   plain f64 vector into the same freshest-wins slots — compression
+//!   is invisible past the codec. Senders keep the quantization
+//!   residual in a per-edge error-feedback accumulator
+//!   ([`ShardedMailboxGrid`](crate::exec::net::ShardedMailboxGrid)) so
+//!   lost precision is re-sent, not lost.
+//! * [`WireMsg::Heartbeat`] — peer-liveness keepalive (protocol v5).
+//!   Writers emit one after `--heartbeat-ms` of send-side idleness;
+//!   readers treat *any* frame as proof of life and a silent deadline
+//!   (4× the interval) as a dead link, which routes through the
+//!   reconnect path instead of failing the mesh.
 //! * [`WireMsg::Cancel`] — cooperative stop request, sent by the
 //!   aggregating collector **down** the report connection (the only
 //!   frame that travels in that direction). The shard trips its
@@ -89,7 +104,11 @@ pub const MAGIC: u32 = 0x4132_5742;
 /// [`TelemetrySnapshot`] (self-describing length-prefixed blob), sent
 /// on the report stream right before `Report` so the aggregator can
 /// merge mesh-wide observability without changing any other frame.
-pub const PROTOCOL_VERSION: u8 = 4;
+/// v5: new `GradQ` frame (block-quantized gradient broadcast with
+/// per-block offset/scale and configurable bits-per-value) and new
+/// `Heartbeat` frame (peer-liveness keepalive on idle gradient
+/// streams). Uncompressed `Grad` is unchanged and remains the default.
+pub const PROTOCOL_VERSION: u8 = 5;
 /// Hard upper bound on one frame (64 MiB): a length prefix beyond this
 /// is treated as stream corruption, not an allocation request.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
@@ -102,6 +121,8 @@ const KIND_REPORT: u8 = 5;
 const KIND_SNAPSHOT: u8 = 6;
 const KIND_CANCEL: u8 = 7;
 const KIND_TELEMETRY: u8 = 8;
+const KIND_GRADQ: u8 = 9;
+const KIND_HEARTBEAT: u8 = 10;
 
 /// Which fence a [`WireMsg::Done`] marker announces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -236,6 +257,131 @@ pub enum WireMsg {
     /// A shard's end-of-run telemetry snapshot (protocol v4), sent on
     /// the report stream right before its [`WireMsg::Report`].
     Telemetry { shard: u32, snapshot: TelemetrySnapshot },
+    /// A block-quantized gradient broadcast (protocol v5). The decoder
+    /// dequantizes inline: `grad` holds the *reconstructed* values
+    /// (`offset + code · scale` per element), so the receive path is
+    /// identical to [`WireMsg::Grad`] past this point. Lossy by
+    /// construction — the sender folds the residual into its next send
+    /// via the per-edge error-feedback accumulator.
+    GradQ { src: u32, stamp: u64, grad: Vec<f64> },
+    /// Peer-liveness keepalive (protocol v5): proves the sending
+    /// shard's writer thread is alive while it has nothing to say.
+    Heartbeat { shard: u32 },
+}
+
+// ----------------------------------------------------------- quantizer
+
+/// Values per quantization block: each block of a [`WireMsg::GradQ`]
+/// payload carries its own `(offset, scale)` pair, so one outlier only
+/// degrades the resolution of its own 256 neighbours.
+pub const QUANT_BLOCK: usize = 256;
+
+/// A gradient vector in block-quantized form: per-block affine
+/// parameters plus LSB-first bit-packed codes. Produced by
+/// [`quantize_blocks`], shipped by [`encode_gradq`], reconstructed by
+/// [`dequantize_blocks`] (which both the decoder and the sender-side
+/// error-feedback path use, so sender and receiver agree bit-for-bit
+/// on what was actually transmitted).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedGrad {
+    /// Bits per value, `1..=16`.
+    pub bits: u8,
+    /// Original element count n.
+    pub len: usize,
+    /// Per-block minimum (the affine offset), `⌈len / QUANT_BLOCK⌉` entries.
+    pub offsets: Vec<f64>,
+    /// Per-block step `(max − min) / (2^bits − 1)`; `0.0` for a
+    /// constant block (every code is then 0).
+    pub scales: Vec<f64>,
+    /// LSB-first bit-packed codes, exactly `⌈len · bits / 8⌉` bytes.
+    pub packed: Vec<u8>,
+}
+
+fn quant_blocks_for(len: usize) -> usize {
+    len.div_ceil(QUANT_BLOCK)
+}
+
+fn quant_packed_bytes(len: usize, bits: u8) -> usize {
+    (len * bits as usize).div_ceil(8)
+}
+
+/// Block-quantize `v` to `bits` bits per value (`1..=16`).
+///
+/// Each [`QUANT_BLOCK`]-sized block is mapped affinely onto the code
+/// range `0..2^bits` via its own min/max; codes are `round((x − min) /
+/// scale)`. The mapping is value-preserving at the block extremes and
+/// has worst-case per-element error `scale / 2` — the quantity the
+/// error-feedback accumulator carries forward.
+///
+/// # Panics
+/// If `bits` is outside `1..=16` (caller bug, validated at config
+/// parse time).
+pub fn quantize_blocks(v: &[f64], bits: u8) -> QuantizedGrad {
+    assert!((1..=16).contains(&bits), "quantizer bits {bits} outside 1..=16");
+    let levels = ((1u32 << bits) - 1) as f64;
+    let nblocks = quant_blocks_for(v.len());
+    let mut offsets = Vec::with_capacity(nblocks);
+    let mut scales = Vec::with_capacity(nblocks);
+    let mut packed = vec![0u8; quant_packed_bytes(v.len(), bits)];
+    let mut bitpos = 0usize;
+    for block in v.chunks(QUANT_BLOCK) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &x in block {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let scale = if hi > lo { (hi - lo) / levels } else { 0.0 };
+        offsets.push(lo);
+        scales.push(scale);
+        for &x in block {
+            let code = if scale > 0.0 {
+                (((x - lo) / scale).round()).clamp(0.0, levels) as u32
+            } else {
+                0
+            };
+            // LSB-first across byte boundaries
+            let mut c = code;
+            let mut left = bits as usize;
+            while left > 0 {
+                let byte = bitpos / 8;
+                let off = bitpos % 8;
+                let room = 8 - off;
+                let take = room.min(left);
+                packed[byte] |= ((c & ((1u32 << take) - 1)) as u8) << off;
+                c >>= take;
+                bitpos += take;
+                left -= take;
+            }
+        }
+    }
+    QuantizedGrad { bits, len: v.len(), offsets, scales, packed }
+}
+
+/// Reconstruct the transmitted values of a [`QuantizedGrad`]:
+/// `offset + code · scale` per element. Both the wire decoder and the
+/// sender's error-feedback path call this, so the residual the sender
+/// carries is exactly the error the receiver observed.
+pub fn dequantize_blocks(q: &QuantizedGrad) -> Vec<f64> {
+    let mut out = Vec::with_capacity(q.len);
+    let mut bitpos = 0usize;
+    for i in 0..q.len {
+        let block = i / QUANT_BLOCK;
+        let mut code = 0u32;
+        let mut got = 0usize;
+        while got < q.bits as usize {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let room = 8 - off;
+            let take = room.min(q.bits as usize - got);
+            let chunk = (q.packed[byte] >> off) as u32 & ((1u32 << take) - 1);
+            code |= chunk << got;
+            bitpos += take;
+            got += take;
+        }
+        out.push(q.offsets[block] + code as f64 * q.scales[block]);
+    }
+    out
 }
 
 // ---------------------------------------------------------------- encode
@@ -352,6 +498,41 @@ pub fn encode_telemetry(shard: u32, snapshot: &TelemetrySnapshot) -> Vec<u8> {
     put_u32(&mut b, shard);
     put_u32(&mut b, blob.len() as u32);
     b.extend_from_slice(&blob);
+    frame_finish(b)
+}
+
+/// Encode a block-quantized gradient broadcast (protocol v5). Layout:
+///
+/// ```text
+/// src: u32 | stamp: u64 | bits: u8 | len: u32
+/// | (offset: f64, scale: f64) × ⌈len / QUANT_BLOCK⌉
+/// | packed codes: ⌈len · bits / 8⌉ bytes (LSB-first)
+/// ```
+///
+/// The block count and packed-byte count are derived from `len` and
+/// `bits` on decode, so a frame whose tables disagree with its header
+/// is rejected as corrupt rather than reinterpreted.
+pub fn encode_gradq(src: u32, stamp: u64, q: &QuantizedGrad) -> Vec<u8> {
+    debug_assert_eq!(q.offsets.len(), quant_blocks_for(q.len));
+    debug_assert_eq!(q.scales.len(), quant_blocks_for(q.len));
+    debug_assert_eq!(q.packed.len(), quant_packed_bytes(q.len, q.bits));
+    let mut b = frame_start(KIND_GRADQ, 17 + 16 * q.offsets.len() + q.packed.len());
+    put_u32(&mut b, src);
+    put_u64(&mut b, stamp);
+    b.push(q.bits);
+    put_u32(&mut b, q.len as u32);
+    for (&o, &s) in q.offsets.iter().zip(&q.scales) {
+        put_f64(&mut b, o);
+        put_f64(&mut b, s);
+    }
+    b.extend_from_slice(&q.packed);
+    frame_finish(b)
+}
+
+/// Encode a peer-liveness keepalive (protocol v5).
+pub fn encode_heartbeat(shard: u32) -> Vec<u8> {
+    let mut b = frame_start(KIND_HEARTBEAT, 4);
+    put_u32(&mut b, shard);
     frame_finish(b)
 }
 
@@ -483,6 +664,30 @@ pub fn decode(body: &[u8]) -> Result<WireMsg, String> {
                     .map_err(|e| format!("telemetry frame: {e}"))?,
             }
         }
+        KIND_GRADQ => {
+            let src = c.take_u32()?;
+            let stamp = c.take_u64()?;
+            let bits = c.take_u8()?;
+            if !(1..=16).contains(&bits) {
+                return Err(format!("gradq bits {bits} outside 1..=16"));
+            }
+            let len = c.take_u32()? as usize;
+            let nblocks = quant_blocks_for(len);
+            // guard the allocation before trusting the declared length
+            if nblocks * 16 + quant_packed_bytes(len, bits) > c.buf.len() - c.pos {
+                return Err(format!("truncated frame: gradq tables for {len} values overrun payload"));
+            }
+            let mut offsets = Vec::with_capacity(nblocks);
+            let mut scales = Vec::with_capacity(nblocks);
+            for _ in 0..nblocks {
+                offsets.push(c.take_f64()?);
+                scales.push(c.take_f64()?);
+            }
+            let packed = c.take(quant_packed_bytes(len, bits))?.to_vec();
+            let q = QuantizedGrad { bits, len, offsets, scales, packed };
+            WireMsg::GradQ { src, stamp, grad: dequantize_blocks(&q) }
+        }
+        KIND_HEARTBEAT => WireMsg::Heartbeat { shard: c.take_u32()? },
         other => return Err(format!("unknown frame kind {other}")),
     };
     c.finish()?;
@@ -848,6 +1053,94 @@ mod tests {
         });
         hello[5] ^= 0xFF; // corrupt the magic
         assert!(decode(&hello[4..]).is_err());
+    }
+
+    #[test]
+    fn gradq_roundtrip_bounds_error_by_half_a_step() {
+        // > one block so the per-block tables are exercised
+        let n = QUANT_BLOCK + 37;
+        let grad: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin() * 3.0).collect();
+        for bits in [1u8, 4, 8, 12, 16] {
+            let q = quantize_blocks(&grad, bits);
+            let sent = dequantize_blocks(&q);
+            match roundtrip(encode_gradq(5, 42, &q)) {
+                WireMsg::GradQ { src, stamp, grad: got } => {
+                    assert_eq!((src, stamp), (5, 42));
+                    // the wire reconstructs exactly what the sender's
+                    // error-feedback path computed…
+                    assert_eq!(got.len(), sent.len());
+                    for (a, b) in got.iter().zip(&sent) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "bits={bits}");
+                    }
+                    // …and that reconstruction is within half a
+                    // quantization step of the original, per block
+                    for (i, (a, b)) in got.iter().zip(&grad).enumerate() {
+                        let step = q.scales[i / QUANT_BLOCK];
+                        assert!((a - b).abs() <= step * 0.5 + 1e-12, "bits={bits} i={i}");
+                    }
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn gradq_constant_block_and_empty_vector_are_exact() {
+        let q = quantize_blocks(&[2.5; 10], 4);
+        assert!(q.scales.iter().all(|&s| s == 0.0));
+        assert_eq!(dequantize_blocks(&q), vec![2.5; 10]);
+        let q = quantize_blocks(&[], 8);
+        assert_eq!(q.len, 0);
+        match roundtrip(encode_gradq(0, 0, &q)) {
+            WireMsg::GradQ { grad, .. } => assert!(grad.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn gradq_at_8_bits_shrinks_the_wire_at_least_4x() {
+        let grad: Vec<f64> = (0..4096).map(|i| (i as f64).cos()).collect();
+        let dense = encode_grad(0, 1, &grad).len();
+        let q8 = encode_gradq(0, 1, &quantize_blocks(&grad, 8)).len();
+        assert!(
+            q8 * 4 <= dense,
+            "8-bit gradq frame ({q8} B) not ≥4× smaller than dense ({dense} B)"
+        );
+    }
+
+    #[test]
+    fn gradq_rejects_bad_bits_truncation_and_trailing() {
+        let grad: Vec<f64> = (0..300).map(|i| i as f64 * 0.1).collect();
+        let full = encode_gradq(1, 2, &quantize_blocks(&grad, 8));
+        // every strict prefix must fail loudly
+        for cut in 1..full.len() - 4 {
+            assert!(decode(&full[4..4 + cut]).is_err(), "gradq prefix {cut} decoded");
+        }
+        // trailing bytes are corruption
+        let mut bad = full.clone();
+        bad.push(0);
+        assert!(decode(&bad[4..]).is_err());
+        // bits outside 1..=16 (byte 17 of the body: after kind+src+stamp)
+        for bits in [0u8, 17, 64, 255] {
+            let mut bad = full.clone();
+            bad[4 + 13] = bits;
+            assert!(decode(&bad[4..]).is_err(), "bits={bits} accepted");
+        }
+        // an inflated len header overruns the payload, never allocates
+        let mut bad = full;
+        bad[4 + 14..4 + 18].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&bad[4..]).is_err());
+    }
+
+    #[test]
+    fn heartbeat_roundtrip_and_trailing_bytes() {
+        match roundtrip(encode_heartbeat(3)) {
+            WireMsg::Heartbeat { shard } => assert_eq!(shard, 3),
+            other => panic!("{other:?}"),
+        }
+        let mut bad = encode_heartbeat(3);
+        bad.push(0);
+        assert!(decode(&bad[4..]).is_err());
     }
 
     #[test]

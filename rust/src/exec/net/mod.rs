@@ -100,18 +100,55 @@
 //! partial [`ShardReport`] (`cancelled = true`, honest counters) — no
 //! connection is ever torn down to stop a run.
 //!
+//! ## Quantized gradient wire (protocol v5)
+//!
+//! With `--compress-bits N` (1–16), cross-shard gradients travel as
+//! [`WireMsg::GradQ`] frames: [`codec::QUANT_BLOCK`]-sized blocks, each
+//! carrying an f32 `(offset, scale)` pair plus LSB-first bit-packed
+//! codes — ~8× fewer bytes than dense f64 at 8 bits. The sender keeps a
+//! per-edge **error-feedback** residual (the exact dequantization error
+//! the receiver incurs, since both ends share
+//! [`codec::dequantize_blocks`]) and folds it into the next broadcast,
+//! so the compression error telescopes instead of accumulating
+//! (arXiv:2010.14325); `--quant-naive` drops the residual for ablation.
+//! Compression is **off by default** and the dense `Grad` path is
+//! byte-identical to v4 — goldens, lockstep parity, and
+//! [`config_digest`] handshakes are untouched unless the knob is turned
+//! (the digest then picks up a `|q{bits}:{ef}` suffix so mixed meshes
+//! refuse to form).
+//!
+//! ## Link resilience & heartbeats
+//!
+//! Every cross-shard TCP stream lives in a generation-counted link
+//! slot. A read error or EOF no longer kills the shard: the reader
+//! tears the current generation and the **dialing** side (shard `s`
+//! dials every `t > s`) re-dials with capped exponential backoff
+//! (50 ms → 2 s, 20 s window) while the accepting side keeps its
+//! listener open for the life of the run. While a link is down the
+//! writer drops frames — freshest-wins makes gradient loss equivalent
+//! to staleness, which is the paper's operating regime. With
+//! `--heartbeat-ms T` an idle writer emits [`WireMsg::Heartbeat`]
+//! frames and a reader that sees nothing for 4·T declares the peer
+//! stale (counted, never fatal). Reconnects and stale declarations
+//! surface as [`Counter::LinkReconnects`](crate::obs::Counter) /
+//! [`Counter::PeerStaleDeadlines`](crate::obs::Counter).
+//!
 //! ## Teardown
 //!
 //! Shards announce shutdown with a `Bye` frame and half-close the
 //! socket; a reader keeps draining (and publishing — harmless, the
 //! slots are stamp-guarded) until it has seen `Bye` from its peer, so
 //! no shard can wedge a slower peer's writer by vanishing early. EOF
-//! without `Bye` is reported as a crashed peer.
+//! without `Bye` now re-enters the reconnect path; only a stop-flagged
+//! drain still reports a silently vanished peer as crashed.
 
 pub mod codec;
 pub mod shard;
 
-pub use codec::{HelloFrame, MarkerPhase, ShardReport, WireMsg, MAX_FRAME_BYTES, PROTOCOL_VERSION};
+pub use codec::{
+    dequantize_blocks, quantize_blocks, HelloFrame, MarkerPhase, QuantizedGrad, ShardReport,
+    WireMsg, MAX_FRAME_BYTES, PROTOCOL_VERSION, QUANT_BLOCK,
+};
 pub use shard::{
     aggregate_reports, collect_shard_streams, config_digest, experiment_args,
     run_mesh_processes, run_mesh_processes_with, run_mesh_threads, run_mesh_threads_with,

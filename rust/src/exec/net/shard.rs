@@ -41,19 +41,19 @@ use super::{Pacing, ShardPlan};
 use crate::algo::wbp::WbpNode;
 use crate::algo::{AlgorithmKind, ThetaSeq};
 use crate::coordinator::{
-    CancelToken, ExperimentConfig, ExperimentReport, MetricsEvaluator, RunEvent,
-    RunObserver,
+    CancelToken, Compression, ExperimentConfig, ExperimentReport, MetricsEvaluator,
+    RunEvent, RunObserver,
 };
 use crate::exec::sched::{
     ClaimOrder, FailPoint, FreeGate, LocalGate, NodeScheduler, PhaseBarrier, RoundGate,
     SchedTransport, SchedulerSpec, SweepHooks,
 };
 use crate::exec::transport::MailboxGrid;
-use crate::exec::Transport;
+use crate::exec::{LinkFault, Transport};
 use crate::graph::Graph;
 use crate::measures::{MeasureSpec, NodeMeasure, Samples};
 use crate::metrics::Series;
-use crate::obs::{Counter, Telemetry, TelemetrySnapshot};
+use crate::obs::{Counter, HistKind, Telemetry, TelemetrySnapshot};
 use crate::ot::OracleBackendSpec;
 use crate::rng::Rng64;
 
@@ -73,6 +73,22 @@ const DRAIN_GRACE: Duration = Duration::from_secs(30);
 /// shards × block` under free-pacing skew instead of the full
 /// trajectory.
 const MAX_SNAPSHOT_LEAD: u64 = 64;
+/// First re-dial delay after a peer link tears; doubles per failed
+/// attempt up to [`RECONNECT_CAP`].
+const RECONNECT_BASE: Duration = Duration::from_millis(50);
+/// Backoff ceiling between re-dial attempts.
+const RECONNECT_CAP: Duration = Duration::from_millis(2_000);
+/// How long a reader keeps re-dialing a torn peer link before marking
+/// the peer permanently stale (the mesh then runs on with
+/// freshest-wins staleness on that edge instead of failing).
+const RECONNECT_WINDOW: Duration = Duration::from_secs(20);
+/// Per-connection budget for the Hello exchange on a reconnect (the
+/// initial mesh bring-up uses the run-scaled wait budget instead).
+const HANDSHAKE_WINDOW: Duration = Duration::from_secs(5);
+/// A peer is declared stale after this many silent heartbeat
+/// intervals (only when `--heartbeat-ms` is configured): the stream is
+/// torn and the reconnect path takes over.
+const HEARTBEAT_DEADLINE_FACTOR: u32 = 4;
 
 fn algo_code(a: AlgorithmKind) -> u8 {
     match a {
@@ -109,7 +125,7 @@ fn mesh_tag(cfg: &ExperimentConfig, shards: usize) -> String {
 /// shortest-roundtrip `Debug`), so the digest is exactly as strict as
 /// the bit-level parity contract.
 pub fn config_digest(cfg: &ExperimentConfig) -> u64 {
-    let desc = format!(
+    let mut desc = format!(
         "{:?}|{:?}|{:x}|{:x}|{}|{}|{:x}|{:x}|{:x}|{:?}|{:?}|{:?}",
         cfg.measure,
         cfg.topology,
@@ -124,6 +140,18 @@ pub fn config_digest(cfg: &ExperimentConfig) -> u64 {
         cfg.diag,
         cfg.kernel,
     );
+    // Compression changes the gradients peers exchange, so a mismatch
+    // must fail the handshake like any other dynamics knob — but the
+    // suffix is appended only when compression is ON, so every
+    // compression-off digest (goldens, recorded handshakes) is exactly
+    // the pre-v5 value. `heartbeat_ms` is deliberately absent: it
+    // shapes liveness detection, never the dynamics.
+    if cfg.compression.is_on() {
+        desc.push_str(&format!(
+            "|q{}:{}",
+            cfg.compression.bits, cfg.compression.error_feedback
+        ));
+    }
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in desc.bytes() {
         h ^= b as u64;
@@ -147,13 +175,29 @@ pub struct ShardedMailboxGrid {
     /// owning at least one neighbor, sorted and deduped — the wire
     /// fan-out of one broadcast.
     remote_fanout: Vec<Vec<usize>>,
+    /// Cross-shard wire compression. [`Compression::off`] (the
+    /// default) ships dense [`WireMsg::Grad`] frames bit-identically
+    /// to the pre-v5 wire.
+    compression: Compression,
+    /// Error-feedback accumulators, allocated only when compression is
+    /// on *with* feedback: `residuals[li][fi]` carries the
+    /// quantization error of local node `li`'s last send toward peer
+    /// shard `remote_fanout[li][fi]`, folded into the next send. One
+    /// accumulator per directed (node, peer-shard) edge — each peer
+    /// decodes its own quantized stream, so the residuals diverge per
+    /// peer. Uncontended in practice: a node is activated by one
+    /// worker at a time.
+    residuals: Vec<Vec<Mutex<Vec<f64>>>>,
+    /// Registry handle for the broadcast path (residual-norm
+    /// histogram); mirrors the grid's own attached registry.
+    obs: Option<Arc<Telemetry>>,
 }
 
 impl ShardedMailboxGrid {
     pub fn new(graph: &Graph, n: usize, plan: ShardPlan) -> Self {
         let local = plan.local();
         let grid = MailboxGrid::new_for(graph, n, |j| local.contains(&j));
-        let remote_fanout = local
+        let remote_fanout: Vec<Vec<usize>> = local
             .clone()
             .map(|i| {
                 let mut peers: Vec<usize> = graph
@@ -167,17 +211,48 @@ impl ShardedMailboxGrid {
                 peers
             })
             .collect();
-        Self { plan, grid, remote_fanout }
+        Self {
+            plan,
+            grid,
+            remote_fanout,
+            compression: Compression::off(),
+            residuals: Vec::new(),
+            obs: None,
+        }
     }
 
     pub fn plan(&self) -> &ShardPlan {
         &self.plan
     }
 
+    /// Switch the cross-shard wire to block-quantized
+    /// [`WireMsg::GradQ`] frames (`n` is the gradient width). With
+    /// error feedback, one residual accumulator per (local node, peer
+    /// shard) edge is allocated, zero-initialized — the first send
+    /// quantizes the bare gradient, every later send quantizes
+    /// gradient + carried residual. Call before the grid is shared.
+    pub fn enable_compression(&mut self, c: Compression, n: usize) {
+        self.compression = c;
+        self.residuals = if c.is_on() && c.error_feedback {
+            self.remote_fanout
+                .iter()
+                .map(|peers| peers.iter().map(|_| Mutex::new(vec![0.0; n])).collect())
+                .collect()
+        } else {
+            Vec::new()
+        };
+    }
+
+    /// The active wire compression setting.
+    pub fn compression(&self) -> Compression {
+        self.compression
+    }
+
     /// Route the local grid replica's mailbox telemetry (publishes,
     /// freshest-wins overwrites, stale drops, stamp-lag reads) into
     /// `obs`. Call before the grid is shared.
     pub fn attach_obs(&mut self, obs: Arc<Telemetry>) {
+        self.obs = Some(obs.clone());
         self.grid.attach_obs(obs);
     }
 
@@ -213,22 +288,85 @@ impl<'a> ShardedTransport<'a> {
     }
 }
 
+impl ShardedTransport<'_> {
+    /// Queue one encoded frame toward peer shard `p`.
+    fn ship(&mut self, p: usize, frame: Arc<Vec<u8>>) {
+        if let Some(tx) = &self.senders[p] {
+            // a send error means the writer thread is gone (mesh
+            // shutdown); the run loop surfaces that separately
+            if tx.send(frame).is_ok() {
+                self.wire_messages += 1;
+            }
+        }
+    }
+}
+
+/// ⌊‖·‖₂ · 10⁶⌋ from a squared norm — the residual histogram's
+/// micro-unit encoding ([`HistKind::QuantResidual`]).
+fn micro_norm(norm2: f64) -> u64 {
+    (norm2.sqrt() * 1e6) as u64
+}
+
 impl Transport for ShardedTransport<'_> {
     fn broadcast(&mut self, src: usize, stamp: u64, grad: Arc<Vec<f64>>) {
-        self.messages += self.sgrid.grid.publish(src, stamp, &grad);
-        let peers = self.sgrid.fanout(src);
+        // The local grid replica always receives the full-precision
+        // gradient: compression is a *wire* transform, intra-shard
+        // neighbors never see quantization error.
+        let sgrid = self.sgrid;
+        self.messages += sgrid.grid.publish(src, stamp, &grad);
+        let peers = sgrid.fanout(src);
         if peers.is_empty() {
             return;
         }
-        let frame = Arc::new(codec::encode_grad(src as u32, stamp, &grad));
-        for &p in peers {
-            if let Some(tx) = &self.senders[p] {
-                // a send error means the writer already recorded a
-                // mesh failure; the run loop will surface it
-                if tx.send(frame.clone()).is_ok() {
-                    self.wire_messages += 1;
-                }
+        let c = sgrid.compression;
+        if !c.is_on() {
+            // Dense default: one shared frame for every peer —
+            // byte-identical to the pre-v5 wire.
+            let frame = Arc::new(codec::encode_grad(src as u32, stamp, &grad));
+            for &p in peers {
+                self.ship(p, frame.clone());
             }
+            return;
+        }
+        if sgrid.residuals.is_empty() {
+            // Naive quantization (the ablation arm): every peer sees
+            // the same codes and the quantization error is dropped.
+            let q = codec::quantize_blocks(&grad, c.bits);
+            if let Some(obs) = &sgrid.obs {
+                let deq = codec::dequantize_blocks(&q);
+                let norm2: f64 =
+                    grad.iter().zip(&deq).map(|(g, d)| (g - d) * (g - d)).sum();
+                obs.record(HistKind::QuantResidual, micro_norm(norm2));
+            }
+            let frame = Arc::new(codec::encode_gradq(src as u32, stamp, &q));
+            for &p in peers {
+                self.ship(p, frame.clone());
+            }
+            return;
+        }
+        // Error feedback: quantize gradient + carried residual per
+        // peer, then store exactly the decode error the *receiver*
+        // will see (sender and receiver share `dequantize_blocks`) so
+        // it is folded into the next send. A frame lost to a dead link
+        // degrades like any dropped gradient — freshest-wins staleness
+        // — and its residual stays absorbed in the accumulator.
+        let li = src - sgrid.plan.local().start;
+        for (fi, &p) in peers.iter().enumerate() {
+            let mut r = sgrid.residuals[li][fi].lock().unwrap();
+            let target: Vec<f64> =
+                grad.iter().zip(r.iter()).map(|(g, e)| g + e).collect();
+            let q = codec::quantize_blocks(&target, c.bits);
+            let deq = codec::dequantize_blocks(&q);
+            let mut norm2 = 0.0;
+            for ((e, t), d) in r.iter_mut().zip(&target).zip(&deq) {
+                *e = t - d;
+                norm2 += *e * *e;
+            }
+            drop(r);
+            if let Some(obs) = &sgrid.obs {
+                obs.record(HistKind::QuantResidual, micro_norm(norm2));
+            }
+            self.ship(p, Arc::new(codec::encode_gradq(src as u32, stamp, &q)));
         }
     }
 
@@ -334,17 +472,170 @@ impl Board {
     }
 }
 
+// ------------------------------------------------------------ links
+
+/// One peer link's live state, shared by its reader thread, its
+/// writer thread, the accept supervisor, and the link-fault injector.
+/// The stream is replaced on reconnect; `generation` counts installs,
+/// so each side can tell a fresh stream from the one it already gave
+/// up on.
+struct Link {
+    state: Mutex<LinkConn>,
+    cv: Condvar,
+}
+
+struct LinkConn {
+    /// Bumped on every [`Link::install`]; 0 = never connected.
+    generation: u64,
+    /// The writer's clone source (and the fault injector's handle).
+    stream: Option<TcpStream>,
+    /// The handshake's [`FrameReader`], parked here until the reader
+    /// thread takes it — handed off whole because the handshake may
+    /// have buffered bytes past the Hello, which a fresh reader on a
+    /// stream clone would lose.
+    reader: Option<FrameReader<TcpStream>>,
+    /// Set by the fault injector (permanent cut) or by a reader that
+    /// exhausted its reconnect window: nobody re-dials, the accept
+    /// supervisor refuses the peer, and the mesh degrades to
+    /// freshest-wins staleness on this edge.
+    dead: bool,
+}
+
+impl Link {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(LinkConn {
+                generation: 0,
+                stream: None,
+                reader: None,
+                dead: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Install a freshly handshaken stream + reader pair as the next
+    /// generation. Refused (`false`) when the link is dead, or when a
+    /// live stream is still in place — the old stream must tear before
+    /// a replacement is accepted, so a reconnecting peer retries until
+    /// this side's reader has observed the tear too. (The re-dialing
+    /// reader always tears its own slot first, so on the dialer side
+    /// `false` means dead, never busy.)
+    fn install(&self, stream: TcpStream, fr: FrameReader<TcpStream>) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.dead || s.stream.is_some() {
+            return false;
+        }
+        s.generation += 1;
+        s.stream = Some(stream);
+        s.reader = Some(fr);
+        drop(s);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Reader/writer-side teardown of generation `gen`: shuts the
+    /// stream down both ways (so the remote end observes the tear) and
+    /// clears the slot. Idempotent — a newer install is left alone.
+    fn tear(&self, gen: u64) {
+        let mut s = self.state.lock().unwrap();
+        if s.generation == gen {
+            if let Some(old) = s.stream.take() {
+                let _ = old.shutdown(Shutdown::Both);
+            }
+            s.reader = None;
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Fault-injector cut: tear whatever is live right now.
+    /// `permanent` marks the link dead, refusing every reconnect.
+    fn cut(&self, permanent: bool) {
+        let mut s = self.state.lock().unwrap();
+        if permanent {
+            s.dead = true;
+        }
+        if let Some(old) = s.stream.take() {
+            let _ = old.shutdown(Shutdown::Both);
+        }
+        s.reader = None;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Declare the peer permanently gone (reconnect window exhausted).
+    fn kill(&self) {
+        self.cut(true);
+    }
+
+    fn is_dead(&self) -> bool {
+        self.state.lock().unwrap().dead
+    }
+
+    /// Writer-side refresh: a clone of the live stream, if one newer
+    /// than generation `seen` is installed. Never blocks.
+    fn stream_newer_than(&self, seen: u64) -> Option<(u64, TcpStream)> {
+        let s = self.state.lock().unwrap();
+        match &s.stream {
+            Some(st) if s.generation > seen => {
+                st.try_clone().ok().map(|c| (s.generation, c))
+            }
+            _ => None,
+        }
+    }
+
+    /// Reader-side handoff: block (polling `stop`) until a reader
+    /// newer than generation `seen` is parked, then take it. `None`
+    /// once the link is dead or the mesh is stopping.
+    fn take_reader(
+        &self,
+        seen: u64,
+        stop: &AtomicBool,
+    ) -> Option<(u64, FrameReader<TcpStream>)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.generation > seen && s.reader.is_some() {
+                let fr = s.reader.take().unwrap();
+                return Some((s.generation, fr));
+            }
+            if s.dead || stop.load(Ordering::Acquire) {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(s, READ_POLL).unwrap();
+            s = guard;
+        }
+    }
+}
+
+/// Sleep `total` in small slices, bailing early when the mesh stops —
+/// keeps reconnect backoff from delaying shutdown.
+fn sleep_poll(total: Duration, stop: &AtomicBool) {
+    let slice = Duration::from_millis(25);
+    let mut left = total;
+    while left > Duration::ZERO && !stop.load(Ordering::Acquire) {
+        let d = left.min(slice);
+        std::thread::sleep(d);
+        left -= d;
+    }
+}
+
 // ------------------------------------------------------------ mesh
 
 /// The live connection fabric of one shard: per-peer writer channels,
-/// reader threads feeding the grid, and the marker board.
+/// reader threads feeding the grid, the marker board, the per-peer
+/// [`Link`] slots the reconnect machinery revolves around, and (on
+/// shards with lower-index peers) the accept supervisor that keeps
+/// the listener alive for peers dialing back in.
 struct Mesh {
     shard: usize,
     senders: Vec<Option<mpsc::Sender<Arc<Vec<u8>>>>>,
     board: Arc<Board>,
     stop: Arc<AtomicBool>,
+    links: Vec<Arc<Link>>,
     readers: Vec<std::thread::JoinHandle<()>>,
     writers: Vec<std::thread::JoinHandle<()>>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
 fn dial_retry(addr: &str, deadline: Instant) -> Result<TcpStream, String> {
@@ -396,6 +687,7 @@ impl Mesh {
     /// peer and accepts one connection from every lower-index peer
     /// (one duplex TCP stream per unordered pair), exchanging and
     /// validating [`HelloFrame`]s on each.
+    #[allow(clippy::too_many_arguments)]
     fn establish(
         plan: ShardPlan,
         listener: TcpListener,
@@ -405,6 +697,7 @@ impl Mesh {
         n: usize,
         timeout: Duration,
         obs: Arc<Telemetry>,
+        heartbeat: Option<Duration>,
     ) -> Result<Mesh, String> {
         let shards = plan.shards;
         if peer_addrs.len() != shards {
@@ -486,30 +779,66 @@ impl Mesh {
             }
         }
 
-        // Spawn the per-peer reader/writer pairs.
+        // Park each handshaken connection in its Link slot, then spawn
+        // the per-peer reader/writer pairs around the slots — both
+        // sides survive a torn stream and pick up the next generation.
         let m = plan.nodes;
+        let links: Vec<Arc<Link>> = (0..shards).map(|_| Arc::new(Link::new())).collect();
         let mut senders: Vec<Option<mpsc::Sender<Arc<Vec<u8>>>>> =
             (0..shards).map(|_| None).collect();
         let mut readers = Vec::new();
         let mut writers = Vec::new();
         for (t, conn) in conns.into_iter().enumerate() {
             let Some((stream, fr)) = conn else { continue };
+            links[t].install(stream, fr);
             let (tx, rx) = mpsc::channel::<Arc<Vec<u8>>>();
             senders[t] = Some(tx);
-            let wboard = board.clone();
+            let wlink = links[t].clone();
             let wobs = obs.clone();
             let own = plan.shard as u32;
             writers.push(std::thread::spawn(move || {
-                writer_loop(stream, rx, own, t, &wboard, &wobs)
+                writer_loop(&wlink, rx, own, &wobs, heartbeat)
             }));
-            let rboard = board.clone();
-            let rstop = stop.clone();
-            let rgrid = sgrid.clone();
-            readers.push(std::thread::spawn(move || {
-                reader_loop(fr, rgrid, &rboard, &rstop, m, n, t)
-            }));
+            let cx = ReaderCtx {
+                link: links[t].clone(),
+                // the shard that dialed the original stream owns
+                // re-dialing it; the acceptor side parks for the
+                // supervisor instead
+                redial: (t > plan.shard).then(|| (peer_addrs[t].clone(), hello)),
+                sgrid: sgrid.clone(),
+                board: board.clone(),
+                stop: stop.clone(),
+                obs: obs.clone(),
+                nodes: m,
+                width: n,
+                peer: t,
+                heartbeat,
+            };
+            readers.push(std::thread::spawn(move || reader_loop(cx)));
         }
-        Ok(Mesh { shard: plan.shard, senders, board, stop, readers, writers })
+        // Shards with lower-index peers keep their listener alive so a
+        // torn link can be dialed back in; shard 0 accepts from nobody.
+        let supervisor = if plan.shard > 0 {
+            let slinks = links.clone();
+            let sobs = obs.clone();
+            let sstop = stop.clone();
+            let own = plan.shard;
+            Some(std::thread::spawn(move || {
+                accept_supervisor(listener, &slinks, own, hello, &sobs, &sstop)
+            }))
+        } else {
+            None
+        };
+        Ok(Mesh {
+            shard: plan.shard,
+            senders,
+            board,
+            stop,
+            links,
+            readers,
+            writers,
+            supervisor,
+        })
     }
 
     /// Send one marker to every peer (after any gradients already
@@ -521,8 +850,19 @@ impl Mesh {
         }
     }
 
+    /// Fault injection: cut the TCP stream to `peer` both ways (the
+    /// remote reader observes the tear immediately). A `permanent` cut
+    /// marks the link dead, so the reconnect machinery refuses to heal
+    /// it; a transient cut heals through the normal reconnect path.
+    fn cut_link(&self, peer: usize, permanent: bool) {
+        if let Some(link) = self.links.get(peer) {
+            link.cut(permanent);
+        }
+    }
+
     /// Close the mesh: writers flush + say `Bye`, readers drain peers
-    /// until their `Bye`. Returns any error any network thread hit.
+    /// until their `Bye` (readers parked on a dead link just exit).
+    /// Returns any error any network thread hit.
     fn shutdown(mut self) -> Result<(), String> {
         for tx in self.senders.iter_mut() {
             *tx = None; // closes the channel; writer sends Bye and exits
@@ -532,6 +872,9 @@ impl Mesh {
         }
         self.stop.store(true, Ordering::Release);
         for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
         match self.board.error() {
@@ -553,6 +896,13 @@ impl Mesh {
 /// waiting forever, and a draining worker that happens to win the
 /// leader election still performs the marker exchange — the
 /// cross-shard protocol survives local failures.
+///
+/// A peer that never returns (dead link, crashed shard) cannot wedge a
+/// draining worker's [`GateLedger`](crate::exec::sched::GateLedger):
+/// the leader's marker wait has the hard `wait_budget` timeout, its
+/// error poisons the fence, and `GateLedger::drain` stops at the first
+/// poisoned phase — so the drain settles after at most one timed-out
+/// exchange instead of hanging on the missing markers.
 struct MeshGate<'a> {
     fence: PhaseBarrier,
     mesh: &'a Mesh,
@@ -620,6 +970,12 @@ struct ShardSweepHooks<'a> {
     sweeps: u64,
     wait_budget: Duration,
     obs: Arc<Telemetry>,
+    /// Wire-fault injection: cut the link to the peer named by the
+    /// fault once the trigger sweep completes (see
+    /// [`ShardRunOpts::link_fault`]).
+    link_fault: Option<LinkFault>,
+    /// The cut fires exactly once per run.
+    severed: AtomicBool,
 }
 
 impl SweepHooks for ShardSweepHooks<'_> {
@@ -660,6 +1016,22 @@ impl SweepHooks for ShardSweepHooks<'_> {
         if self.pacing == Pacing::Lockstep {
             self.mesh.broadcast_marker(MarkerPhase::SweepDone, r as u64);
         }
+        // Wire-fault injection: once the trigger sweep completes, cut
+        // the TCP stream to the fault's other endpoint — both ways, so
+        // the remote reader observes the tear immediately. Permanent
+        // cuts (`down_for: None`) mark the link dead on this side;
+        // give the same fault to every shard so the other endpoint
+        // stops re-dialing too.
+        if let Some(f) = self.link_fault {
+            let me = self.shard as usize;
+            if (r as u64) + 1 >= f.at_sweep
+                && (f.a == me || f.b == me)
+                && !self.severed.swap(true, Ordering::Relaxed)
+            {
+                let other = if f.a == me { f.b } else { f.a };
+                self.mesh.cut_link(other, f.down_for.is_none());
+            }
+        }
         Ok(())
     }
 
@@ -675,96 +1047,299 @@ impl SweepHooks for ShardSweepHooks<'_> {
     }
 }
 
-fn writer_loop(
-    stream: TcpStream,
-    rx: mpsc::Receiver<Arc<Vec<u8>>>,
-    own_shard: u32,
-    peer: usize,
-    board: &Board,
+/// Push one frame down the link's current stream, refreshing the
+/// writer's clone when a newer generation was installed. A torn or
+/// absent link *drops* the frame instead of failing the mesh:
+/// freshest-wins makes a lost gradient a staleness event, and a marker
+/// lost to a dead peer is settled by the waiter's hard timeout.
+fn write_on_link(
+    link: &Link,
+    gen: &mut u64,
+    stream: &mut Option<TcpStream>,
+    frame: &[u8],
     obs: &Telemetry,
 ) {
-    let mut w = &stream;
+    if let Some((g, s)) = link.stream_newer_than(*gen) {
+        *gen = g;
+        *stream = Some(s);
+    }
+    let Some(s) = stream.as_ref() else {
+        return; // link down: the frame is dropped
+    };
+    let mut w = s;
+    if codec::write_frame(&mut w, frame, Some(obs)).is_err() {
+        // broken pipe: tear the link; the reader owns reconnection
+        link.tear(*gen);
+        *stream = None;
+    }
+}
+
+/// One peer's outbound half: frames from `rx` go out on the link's
+/// current stream, re-resolved per frame so a reconnect heals the
+/// writer transparently. With heartbeats configured, an idle writer
+/// emits one [`WireMsg::Heartbeat`] per interval, so the peer's
+/// liveness deadline only fires on a genuinely dead link.
+fn writer_loop(
+    link: &Link,
+    rx: mpsc::Receiver<Arc<Vec<u8>>>,
+    own_shard: u32,
+    obs: &Telemetry,
+    heartbeat: Option<Duration>,
+) {
+    let mut gen = 0u64;
+    let mut stream: Option<TcpStream> = None;
+    let idle = heartbeat.unwrap_or(Duration::from_secs(3600));
     loop {
-        match rx.recv() {
+        match rx.recv_timeout(idle) {
             Ok(frame) => {
-                if let Err(e) = codec::write_frame(&mut w, &frame, Some(obs)) {
-                    board.fail(format!("writer to shard {peer}: {e}"));
-                    return;
-                }
+                write_on_link(link, &mut gen, &mut stream, &frame, obs);
                 // drain whatever else is queued before the next block
                 while let Ok(next) = rx.try_recv() {
-                    if let Err(e) = codec::write_frame(&mut w, &next, Some(obs)) {
-                        board.fail(format!("writer to shard {peer}: {e}"));
-                        return;
-                    }
+                    write_on_link(link, &mut gen, &mut stream, &next, obs);
                 }
             }
-            Err(_) => {
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if heartbeat.is_some() {
+                    let beat = codec::encode_heartbeat(own_shard);
+                    write_on_link(link, &mut gen, &mut stream, &beat, obs);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
                 // clean shutdown: all senders dropped
-                let _ = codec::write_frame(&mut w, &codec::encode_bye(own_shard), Some(obs));
-                let _ = stream.shutdown(Shutdown::Write);
+                if let Some((g, s)) = link.stream_newer_than(gen) {
+                    gen = g;
+                    stream = Some(s);
+                }
+                if let Some(s) = &stream {
+                    let mut w = s;
+                    let _ =
+                        codec::write_frame(&mut w, &codec::encode_bye(own_shard), Some(obs));
+                    let _ = s.shutdown(Shutdown::Write);
+                }
                 return;
             }
         }
     }
 }
 
-fn reader_loop(
-    mut fr: FrameReader<TcpStream>,
+/// Everything one peer's reader thread needs across reconnects.
+struct ReaderCtx {
+    link: Arc<Link>,
+    /// `Some((addr, hello))` when this shard dialed the original
+    /// stream and therefore owns re-dialing it; `None` on the acceptor
+    /// side, which parks for the accept supervisor instead.
+    redial: Option<(String, HelloFrame)>,
     sgrid: Arc<ShardedMailboxGrid>,
-    board: &Board,
-    stop: &AtomicBool,
-    m: usize,
-    n: usize,
+    board: Arc<Board>,
+    stop: Arc<AtomicBool>,
+    obs: Arc<Telemetry>,
+    /// Network size m (gradient source bound).
+    nodes: usize,
+    /// Gradient width n.
+    width: usize,
     peer: usize,
-) {
-    // Armed once the local shard has shut down; any frame from the
-    // peer re-arms it, so only a peer that is genuinely *silent* for
-    // the whole grace window is declared dead — an actively-sending
-    // slow peer is drained for as long as it keeps talking.
-    let mut stop_seen: Option<Instant> = None;
+    heartbeat: Option<Duration>,
+}
+
+/// Re-dial a torn peer link with capped exponential backoff, redoing
+/// the Hello handshake on every attempt. `true` once a fresh stream is
+/// installed ([`Counter::LinkReconnects`]); `false` when the link is
+/// declared dead — the fault injector cut it permanently, the mesh is
+/// stopping, or the reconnect window lapsed
+/// ([`Counter::PeerStaleDeadlines`]) — after which the caller degrades
+/// to freshest-wins staleness instead of failing the mesh.
+fn redial_link(cx: &ReaderCtx, addr: &str, hello: &HelloFrame) -> bool {
+    let deadline = Instant::now() + RECONNECT_WINDOW;
+    let mut delay = RECONNECT_BASE;
     loop {
-        match fr.next_frame() {
-            Ok(ReadEvent::Msg(WireMsg::Grad { src, stamp, grad })) => {
-                stop_seen = None;
-                if src as usize >= m || grad.len() != n {
-                    board.fail(format!(
-                        "shard {peer} sent invalid gradient (src {src}, len {})",
-                        grad.len()
-                    ));
-                    return;
+        if cx.link.is_dead() || cx.stop.load(Ordering::Acquire) {
+            return false;
+        }
+        let attempt = (|| -> Result<(TcpStream, FrameReader<TcpStream>), String> {
+            let stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+            prepare_stream(&stream)?;
+            codec::write_frame(&mut (&stream), &codec::encode_hello(hello), Some(&cx.obs))?;
+            let clone = stream.try_clone().map_err(|e| format!("try_clone: {e}"))?;
+            let mut fr = FrameReader::new(clone);
+            fr.attach_obs(cx.obs.clone());
+            let peer = handshake_read(&mut fr, Instant::now() + HANDSHAKE_WINDOW, addr)?;
+            hello.check_compatible(&peer)?;
+            Ok((stream, fr))
+        })();
+        if let Ok((stream, fr)) = attempt {
+            if cx.link.install(stream, fr) {
+                cx.obs.add(Counter::LinkReconnects, 1);
+                return true;
+            }
+            return false; // declared dead while we were dialing
+        }
+        if Instant::now() >= deadline {
+            // the peer is gone for good: mark the link dead and let
+            // the mesh run on with whatever staleness this edge has
+            cx.link.kill();
+            cx.obs.add(Counter::PeerStaleDeadlines, 1);
+            return false;
+        }
+        sleep_poll(delay, &cx.stop);
+        delay = (delay * 2).min(RECONNECT_CAP);
+    }
+}
+
+/// One peer's inbound half, built around link generations: take the
+/// current stream's [`FrameReader`], feed gradients and markers until
+/// the stream tears, then *reconnect* instead of failing the mesh —
+/// the dialer side re-dials ([`redial_link`]), the acceptor side parks
+/// until the accept supervisor installs a replacement. A link that
+/// stays dead degrades its edge to freshest-wins staleness; protocol
+/// violations (bad sizes, unexpected frames) still fail the mesh
+/// loudly, and a peer that goes silent *after* local shutdown without
+/// a `Bye` is still declared crashed after [`DRAIN_GRACE`].
+fn reader_loop(cx: ReaderCtx) {
+    let mut seen = 0u64;
+    let deadline = cx.heartbeat.map(|iv| iv * HEARTBEAT_DEADLINE_FACTOR);
+    loop {
+        let Some((gen, mut fr)) = cx.link.take_reader(seen, &cx.stop) else {
+            return; // link dead or mesh stopping: degrade, don't fail
+        };
+        seen = gen;
+        // Armed once the local shard has shut down; any frame from the
+        // peer re-arms it, so only a peer that is genuinely *silent*
+        // for the whole grace window is declared dead — an
+        // actively-sending slow peer is drained as long as it talks.
+        let mut stop_seen: Option<Instant> = None;
+        let mut last_frame = Instant::now();
+        loop {
+            match fr.next_frame() {
+                Ok(ReadEvent::Msg(msg)) => {
+                    stop_seen = None;
+                    last_frame = Instant::now();
+                    match msg {
+                        // GradQ arrives already dequantized by the
+                        // codec — past this point a compressed
+                        // gradient is indistinguishable from a dense
+                        // one.
+                        WireMsg::Grad { src, stamp, grad }
+                        | WireMsg::GradQ { src, stamp, grad } => {
+                            if src as usize >= cx.nodes || grad.len() != cx.width {
+                                cx.board.fail(format!(
+                                    "shard {} sent invalid gradient (src {src}, len {})",
+                                    cx.peer,
+                                    grad.len()
+                                ));
+                                return;
+                            }
+                            cx.sgrid.grid.publish(src as usize, stamp, &Arc::new(grad));
+                        }
+                        WireMsg::Done { shard, phase, value } => {
+                            cx.board.mark(shard as usize, phase, value);
+                        }
+                        // liveness only — it re-armed the clocks above
+                        WireMsg::Heartbeat { .. } => {}
+                        WireMsg::Bye { .. } => return,
+                        other => {
+                            cx.board.fail(format!(
+                                "shard {} sent unexpected {other:?}",
+                                cx.peer
+                            ));
+                            return;
+                        }
+                    }
                 }
-                sgrid.grid.publish(src as usize, stamp, &Arc::new(grad));
+                Ok(ReadEvent::Timeout) => {
+                    if cx.stop.load(Ordering::Acquire) {
+                        let first = *stop_seen.get_or_insert_with(Instant::now);
+                        if first.elapsed() > DRAIN_GRACE {
+                            cx.board.fail(format!(
+                                "shard {} silent for {DRAIN_GRACE:?} straight after \
+                                 local shutdown (no Bye)",
+                                cx.peer
+                            ));
+                            return;
+                        }
+                    } else if deadline.is_some_and(|d| last_frame.elapsed() > d) {
+                        // Liveness deadline: HEARTBEAT_DEADLINE_FACTOR
+                        // silent intervals — declare the stream stale
+                        // and tear it so the reconnect path below
+                        // takes over.
+                        cx.obs.add(Counter::PeerStaleDeadlines, 1);
+                        break;
+                    }
+                }
+                // A torn stream — EOF without Bye, or any io error —
+                // is a *link* fault, not a mesh teardown: route it
+                // through the reconnect path instead of failing.
+                Ok(ReadEvent::Eof) | Err(_) => break,
             }
-            Ok(ReadEvent::Msg(WireMsg::Done { shard, phase, value })) => {
-                stop_seen = None;
-                board.mark(shard as usize, phase, value);
-            }
-            Ok(ReadEvent::Msg(WireMsg::Bye { .. })) => return,
-            Ok(ReadEvent::Msg(other)) => {
-                board.fail(format!("shard {peer} sent unexpected {other:?}"));
+        }
+        cx.link.tear(gen);
+        if cx.stop.load(Ordering::Acquire) {
+            return; // tore during shutdown: the peer is done anyway
+        }
+        if let Some((addr, hello)) = &cx.redial {
+            if !redial_link(&cx, addr, hello) {
                 return;
             }
-            Ok(ReadEvent::Eof) => {
-                board.fail(format!("shard {peer} closed the stream without Bye"));
-                return;
-            }
-            Ok(ReadEvent::Timeout) => {
-                if stop.load(Ordering::Acquire) {
-                    let first = *stop_seen.get_or_insert_with(Instant::now);
-                    if first.elapsed() > DRAIN_GRACE {
-                        board.fail(format!(
-                            "shard {peer} silent for {DRAIN_GRACE:?} straight after \
-                             local shutdown (no Bye)"
-                        ));
-                        return;
+            // a fresh generation is installed; the outer loop takes it
+        }
+        // acceptor side: loop — take_reader parks until the supervisor
+        // installs the peer's replacement stream
+    }
+}
+
+/// Keeps a shard's listener alive after the initial mesh bring-up, so
+/// a lower-index peer whose stream tore can dial back in. Every
+/// accepted connection redoes the Hello handshake (same config-digest
+/// contract as bring-up) and is installed only when that peer's link
+/// slot is empty and not dead — failed, mismatched, or premature
+/// connections are simply dropped, and the dialer backs off and
+/// retries.
+fn accept_supervisor(
+    listener: TcpListener,
+    links: &[Arc<Link>],
+    own_shard: usize,
+    hello: HelloFrame,
+    obs: &Arc<Telemetry>,
+    stop: &AtomicBool,
+) {
+    // the listener is already nonblocking from the bring-up accept loop
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, from)) => {
+                let attempt =
+                    (|| -> Result<(usize, TcpStream, FrameReader<TcpStream>), String> {
+                        stream.set_nonblocking(false).map_err(|e| e.to_string())?;
+                        prepare_stream(&stream)?;
+                        let clone =
+                            stream.try_clone().map_err(|e| format!("try_clone: {e}"))?;
+                        let mut fr = FrameReader::new(clone);
+                        fr.attach_obs(obs.clone());
+                        let peer = handshake_read(
+                            &mut fr,
+                            Instant::now() + HANDSHAKE_WINDOW,
+                            &from.to_string(),
+                        )?;
+                        hello.check_compatible(&peer)?;
+                        let t = peer.shard as usize;
+                        if t >= own_shard {
+                            return Err(format!("shard {t} must be dialed, not dial"));
+                        }
+                        codec::write_frame(
+                            &mut (&stream),
+                            &codec::encode_hello(&hello),
+                            Some(obs),
+                        )?;
+                        Ok((t, stream, fr))
+                    })();
+                if let Ok((t, stream, fr)) = attempt {
+                    if links[t].install(stream, fr) {
+                        obs.add(Counter::LinkReconnects, 1);
                     }
                 }
             }
-            Err(e) => {
-                board.fail(format!("reader from shard {peer}: {e}"));
-                return;
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
             }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
         }
     }
 }
@@ -803,6 +1378,20 @@ pub struct ShardRunOpts {
     /// Test instrumentation (worker panic injection, forwarded to the
     /// scheduler) — `None` on every production path.
     pub fault_injection: Option<FailPoint>,
+    /// Wire-fault injection: cut the real TCP stream between shards
+    /// `a` and `b` (interpreted as *shard* indices here, node indices
+    /// on the simulator) once `at_sweep` sweeps complete on an
+    /// endpoint. `down_for: None` = permanent — the link is marked
+    /// dead, nobody reconnects, and the mesh degrades to freshest-wins
+    /// staleness on that edge. `down_for: Some(_)` = transient — the
+    /// cut heals through the reconnect path (the sweep count in
+    /// `down_for` is a simulator notion; the mesh heals as fast as the
+    /// backoff allows). Triggering needs a sweep boundary, so the run
+    /// must be sweep-fenced: lockstep, DCWB, or free pacing with
+    /// `record_sweeps`. Pass the same fault to every shard —
+    /// non-endpoints ignore it, and both endpoints marking a permanent
+    /// cut dead keeps either side from re-dialing.
+    pub link_fault: Option<LinkFault>,
 }
 
 /// Run this shard's slice of the experiment against the live mesh.
@@ -824,6 +1413,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         report,
         cancel,
         fault_injection,
+        link_fault,
     } = opts;
     if workers == 0 {
         return Err("shard worker pool needs workers >= 1".into());
@@ -856,6 +1446,15 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         return Err("topology must be connected".into());
     }
     let sync = cfg.algorithm == AlgorithmKind::Dcwb;
+    if link_fault.is_some() && !sync && pacing == Pacing::Free && !record_sweeps {
+        // The cut triggers on a sweep boundary, and a free-running
+        // unrecorded shard has none (FreeGate never calls the hooks).
+        return Err(
+            "link_fault triggers on sweep boundaries; enable record_sweeps \
+             or lockstep pacing so the run is sweep-fenced"
+                .into(),
+        );
+    }
     let compensated = cfg.algorithm != AlgorithmKind::A2dwbn;
     let m_theta = if sync { 1 } else { m };
     let sweeps = ((cfg.duration / cfg.activation_interval).round() as usize).max(1);
@@ -891,6 +1490,9 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
 
     let mut sgrid = ShardedMailboxGrid::new(&graph, n, plan);
     sgrid.attach_obs(obs.clone());
+    if cfg.compression.is_on() {
+        sgrid.enable_compression(cfg.compression, n);
+    }
     let sgrid = Arc::new(sgrid);
     let hello = HelloFrame {
         shard: plan.shard as u32,
@@ -906,6 +1508,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
     let total_compute = sweeps as f64 * m as f64 * cfg.compute_time.max(0.0);
     let wait_budget =
         Duration::from_secs_f64(60.0 + 2.0 * cfg.duration + 10.0 * total_compute);
+    let heartbeat = cfg.heartbeat_ms.map(Duration::from_millis);
     let mesh = Mesh::establish(
         plan,
         listener,
@@ -915,6 +1518,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         n,
         wait_budget,
         obs.clone(),
+        heartbeat,
     )?;
 
     // Cancel listener: the only frames that travel *down* the report
@@ -1035,6 +1639,8 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         sweeps: sweeps as u64,
         wait_budget,
         obs: obs.clone(),
+        link_fault,
+        severed: AtomicBool::new(false),
     };
     let mesh_gate;
     let local_gate;
@@ -1583,6 +2189,11 @@ pub struct MeshOpts {
     /// the run returns a well-formed partial report with
     /// [`ExperimentReport::cancelled`] set.
     pub cancel: CancelToken,
+    /// Wire-fault injection for resilience tests — forwarded to every
+    /// shard's [`ShardRunOpts::link_fault`]; `None` on production
+    /// paths. Thread meshes only ([`run_mesh_threads`]); the
+    /// multi-process runner does not forward it.
+    pub link_fault: Option<LinkFault>,
 }
 
 impl MeshOpts {
@@ -1593,6 +2204,7 @@ impl MeshOpts {
             pacing: Pacing::Free,
             record_sweeps: false,
             cancel: CancelToken::new(),
+            link_fault: None,
         }
     }
 
@@ -1613,6 +2225,11 @@ impl MeshOpts {
 
     pub fn cancel(mut self, token: CancelToken) -> Self {
         self.cancel = token;
+        self
+    }
+
+    pub fn link_fault(mut self, f: LinkFault) -> Self {
+        self.link_fault = Some(f);
         self
     }
 }
@@ -1693,6 +2310,7 @@ pub fn run_mesh_threads_with(
                         // like a real multi-process mesh
                         cancel: CancelToken::new(),
                         fault_injection: None,
+                        link_fault: opts.link_fault,
                     },
                 )
             }));
@@ -1783,6 +2401,15 @@ pub fn experiment_args(cfg: &ExperimentConfig) -> Result<Vec<String>, String> {
     }
     if let Some(cap) = cfg.trace_capacity {
         push(&mut a, "trace-capacity", cap.to_string());
+    }
+    if cfg.compression.is_on() {
+        push(&mut a, "compress-bits", cfg.compression.bits.to_string());
+        if !cfg.compression.error_feedback {
+            a.push("--quant-naive".into());
+        }
+    }
+    if let Some(ms) = cfg.heartbeat_ms {
+        push(&mut a, "heartbeat-ms", ms.to_string());
     }
     Ok(a)
 }
@@ -2152,6 +2779,7 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
             report: report_stream,
             cancel: CancelToken::new(),
             fault_injection: None,
+            link_fault: None,
         },
     )?;
     println!(
@@ -2201,6 +2829,8 @@ mod tests {
         cfg.faults.straggler_slowdown = 3.0;
         cfg.kernel = crate::kernel::KernelImpl::Wide;
         cfg.trace_capacity = Some(4096);
+        cfg.compression = Compression { bits: 8, error_feedback: false };
+        cfg.heartbeat_ms = Some(250);
         let flags = experiment_args(&cfg).unwrap();
         let parsed = crate::cli::Args::parse(flags).unwrap();
         let back = ExperimentConfig::from_cli_args(&parsed, parsed.has_flag("mnist")).unwrap();
@@ -2236,6 +2866,19 @@ mod tests {
         let mut c = base.clone();
         c.kernel = crate::kernel::KernelImpl::Wide;
         assert_ne!(config_digest(&c), d0, "kernel lane width must change the digest");
+        let mut c = base.clone();
+        c.compression = Compression::quantized(8);
+        let d8 = config_digest(&c);
+        assert_ne!(d8, d0, "quantization must change the digest");
+        c.compression.error_feedback = false;
+        assert_ne!(config_digest(&c), d8, "naive vs EF must differ in the digest");
+        let mut c = base.clone();
+        c.heartbeat_ms = Some(100);
+        assert_eq!(
+            config_digest(&c),
+            d0,
+            "heartbeats are liveness, not dynamics — digest must not move"
+        );
     }
 
     #[test]

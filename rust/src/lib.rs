@@ -118,9 +118,9 @@ pub mod sim;
 pub mod prelude {
     pub use crate::algo::{AlgorithmKind, ThetaSeq};
     pub use crate::coordinator::{
-        run_experiment, CancelToken, ExperimentBuilder, ExperimentConfig,
-        ExperimentReport, FaultModel, RunEvent, RunObserver, RunTotals, Session,
-        TaskSpec, TrajectorySink,
+        run_experiment, CancelToken, Compression, ExperimentBuilder,
+        ExperimentConfig, ExperimentReport, FaultModel, RunEvent, RunObserver,
+        RunTotals, Session, TaskSpec, TrajectorySink,
     };
     pub use crate::exec::{ExecutorSpec, SampleCadence};
     pub use crate::graph::{Graph, TopologySpec};

@@ -26,7 +26,8 @@ use a2dwb::exec::{ExecutorSpec, SampleCadence};
 use a2dwb::graph::{Graph, TopologySpec};
 use a2dwb::metrics::{ascii_summary, write_csv};
 use a2dwb::prelude::{
-    run_experiment, AlgorithmKind, ExperimentBuilder, ExperimentConfig, ExperimentReport,
+    run_experiment, AlgorithmKind, Compression, ExperimentBuilder, ExperimentConfig,
+    ExperimentReport,
 };
 
 const SUBCOMMANDS: &[&str] =
@@ -239,8 +240,14 @@ fn cmd_speedup_processes(cfg: &ExperimentConfig, processes: usize, workers: usiz
     );
 
     // Fidelity check: lockstep P×W mesh vs single-process single-worker.
+    // Always on the *uncompressed* wire: quantization is lossy by
+    // construction, so bit-parity is a dense-`Grad` property — with
+    // `--compress-bits` the free-running pair above exercised the
+    // quantized path and this check still pins the default wire.
     let mut pcfg = cfg.clone();
     pcfg.algorithm = AlgorithmKind::A2dwb;
+    pcfg.compression = Compression::off();
+    pcfg.heartbeat_ms = None;
     let mut snapshots_seen = 0u64;
     let mut count_snaps = |ev: &RunEvent| {
         if matches!(ev, RunEvent::ShardSnapshot { .. }) {

@@ -58,20 +58,22 @@ use std::time::Instant;
 /// covers values with `b` significant bits, i.e. `[2^(b−1), 2^b)`).
 pub const NUM_BUCKETS: usize = 32;
 
-/// Wire-kind table width: index 0 is "unknown", 1..=8 are the codec's
+/// Wire-kind table width: index 0 is "unknown", 1..=10 are the codec's
 /// frame kinds (hello, grad, done, bye, report, snapshot, cancel,
-/// telemetry).
-pub const WIRE_KINDS: usize = 9;
+/// telemetry, gradq, heartbeat).
+pub const WIRE_KINDS: usize = 11;
 
 /// Human names for the wire-kind table rows.
-pub const WIRE_KIND_NAMES: [&str; WIRE_KINDS] =
-    ["?", "hello", "grad", "done", "bye", "report", "snapshot", "cancel", "telemetry"];
+pub const WIRE_KIND_NAMES: [&str; WIRE_KINDS] = [
+    "?", "hello", "grad", "done", "bye", "report", "snapshot", "cancel", "telemetry", "gradq",
+    "heartbeat",
+];
 
 /// Number of registry counters ([`Counter::ALL`]).
-pub const NUM_COUNTERS: usize = 13;
+pub const NUM_COUNTERS: usize = 15;
 
 /// Number of registry histograms ([`HistKind::ALL`]).
-pub const NUM_HISTS: usize = 3;
+pub const NUM_HISTS: usize = 4;
 
 /// Registry counters. The enum order is the snapshot wire order — only
 /// append, never reorder.
@@ -115,6 +117,14 @@ pub enum Counter {
     /// ([`KernelImpl::Wide`](crate::kernel::KernelImpl)) — nonzero iff
     /// `--kernel wide` actually ran.
     KernelWideRows,
+    /// Successful mesh link re-establishments (reader or writer side):
+    /// a peer stream died and the capped-backoff reconnect path
+    /// restored it without failing the run.
+    LinkReconnects,
+    /// Peer-liveness deadlines tripped: a gradient stream went silent
+    /// past the heartbeat deadline and the peer was treated as dead
+    /// (degrading to freshest-wins staleness) instead of aborting.
+    PeerStaleDeadlines,
 }
 
 impl Counter {
@@ -133,6 +143,8 @@ impl Counter {
         Counter::Claims,
         Counter::KernelScalarRows,
         Counter::KernelWideRows,
+        Counter::LinkReconnects,
+        Counter::PeerStaleDeadlines,
     ];
 
     fn idx(self) -> usize {
@@ -155,6 +167,8 @@ impl Counter {
             Counter::Claims => "claims",
             Counter::KernelScalarRows => "kernel_scalar_rows",
             Counter::KernelWideRows => "kernel_wide_rows",
+            Counter::LinkReconnects => "link_reconnects",
+            Counter::PeerStaleDeadlines => "peer_stale_deadlines",
         }
     }
 }
@@ -171,12 +185,20 @@ pub enum HistKind {
     /// Duration of one node activation (oracle + update + broadcast),
     /// in ns (virtual compute time on the simulator).
     ActivateNs,
+    /// ℓ₂ norm of the quantization residual carried by one error-
+    /// feedback send, in micro-units (`⌊‖r‖₂ · 10⁶⌋`) — how much
+    /// precision each `GradQ` frame deferred to the next send.
+    QuantResidual,
 }
 
 impl HistKind {
     /// All histograms in snapshot wire order.
-    pub const ALL: [HistKind; NUM_HISTS] =
-        [HistKind::GateWaitNs, HistKind::StampLag, HistKind::ActivateNs];
+    pub const ALL: [HistKind; NUM_HISTS] = [
+        HistKind::GateWaitNs,
+        HistKind::StampLag,
+        HistKind::ActivateNs,
+        HistKind::QuantResidual,
+    ];
 
     fn idx(self) -> usize {
         self as usize
@@ -188,6 +210,7 @@ impl HistKind {
             HistKind::GateWaitNs => "gate_wait_ns",
             HistKind::StampLag => "stamp_lag",
             HistKind::ActivateNs => "activate_ns",
+            HistKind::QuantResidual => "quant_residual_u",
         }
     }
 }
@@ -598,9 +621,11 @@ impl TelemetrySnapshot {
     }
 
     /// Gradient frames sent on the wire — the quantity the legacy
-    /// `wire_messages` report counter carried (kind 2 = Grad).
+    /// `wire_messages` report counter carried. Counts dense `Grad`
+    /// (kind 2) and block-quantized `GradQ` (kind 9) alike: both are
+    /// one gradient broadcast per peer shard.
     pub fn wire_grad_frames(&self) -> u64 {
-        self.wire_kind_sent(2)
+        self.wire_kind_sent(2) + self.wire_kind_sent(9)
     }
 
     /// Fold `other` into `self` (elementwise add; maxima take max;

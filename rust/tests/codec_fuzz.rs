@@ -1,0 +1,288 @@
+//! Adversarial + roundtrip property suite for the protocol v5 wire
+//! codec (`a2dwb::exec::net::codec`).
+//!
+//! Two contracts, fuzzed over [`PropCheck`] cases:
+//!
+//! * **roundtrip** — every frame kind (Hello, Grad, Done, Bye,
+//!   Snapshot, Report, Cancel, Telemetry, GradQ, Heartbeat)
+//!   encodes/decodes bit-exactly, alone and concatenated through a
+//!   [`FrameReader`] stream;
+//! * **adversarial** — truncated, trailing-byte, bit-flipped,
+//!   garbage, wrong-version, wrong-magic, zero-length, and oversized
+//!   inputs must come back as `Err` (or a differently-valued frame for
+//!   value-level flips) — **never** a panic, hang, or wild allocation.
+
+use std::io::Cursor;
+
+use a2dwb::exec::net::codec::{self, FrameReader, ReadEvent, WireMsg};
+use a2dwb::exec::net::{
+    dequantize_blocks, quantize_blocks, HelloFrame, MarkerPhase, ShardReport,
+    MAX_FRAME_BYTES, QUANT_BLOCK,
+};
+use a2dwb::obs::{Counter, HistKind, Telemetry};
+use a2dwb::proptest_util::{gen_f64, gen_usize, gen_vec_normal, PropCheck};
+use a2dwb::rng::Rng64;
+
+/// Strip the length prefix, asserting it covers the body exactly.
+fn body(frame: &[u8]) -> &[u8] {
+    let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+    assert_eq!(len + 4, frame.len(), "length prefix must cover the body exactly");
+    &frame[4..]
+}
+
+fn random_hello(rng: &mut Rng64) -> HelloFrame {
+    HelloFrame {
+        shard: rng.below(8) as u32,
+        shards: 8,
+        nodes: rng.below(1000) as u32,
+        support: rng.below(1000) as u32,
+        seed: rng.next_u64(),
+        algo: rng.below(3) as u8,
+        sweeps: rng.below(10_000),
+        pacing: rng.below(2) as u8,
+        digest: rng.next_u64(),
+    }
+}
+
+/// One encoded frame of every kind, paired with its expected decode.
+fn random_frames(rng: &mut Rng64) -> Vec<(Vec<u8>, WireMsg)> {
+    let mut out = Vec::new();
+
+    let h = random_hello(rng);
+    out.push((codec::encode_hello(&h), WireMsg::Hello(h)));
+
+    let (src, stamp) = (rng.below(1000) as u32, rng.next_u64());
+    let mut grad = gen_vec_normal(rng, gen_usize(rng, 0, 600), 1.0);
+    if grad.len() >= 3 {
+        // f64 edge values must survive the wire bit-for-bit
+        grad[0] = f64::MAX;
+        grad[1] = -0.0;
+        grad[2] = 1e-308;
+    }
+    out.push((
+        codec::encode_grad(src, stamp, &grad),
+        WireMsg::Grad { src, stamp, grad: grad.clone() },
+    ));
+
+    let phases = [
+        MarkerPhase::Init,
+        MarkerPhase::SweepDone,
+        MarkerPhase::RoundPublished,
+        MarkerPhase::RoundCollected,
+    ];
+    let phase = phases[gen_usize(rng, 0, 3)];
+    let (shard, value) = (rng.below(64) as u32, rng.next_u64());
+    out.push((
+        codec::encode_done(shard, phase, value),
+        WireMsg::Done { shard, phase, value },
+    ));
+
+    out.push((codec::encode_bye(shard), WireMsg::Bye { shard }));
+
+    let sweep = rng.below(10_000);
+    let etas = gen_vec_normal(rng, gen_usize(rng, 0, 300), 5.0);
+    out.push((
+        codec::encode_snapshot(shard, sweep, &etas),
+        WireMsg::Snapshot { shard, sweep, etas: etas.clone() },
+    ));
+
+    let report = ShardReport {
+        shard: rng.below(8) as usize,
+        activations: rng.below(1 << 40),
+        messages: rng.below(1 << 40),
+        wire_messages: rng.below(1 << 40),
+        rounds: rng.below(1 << 20),
+        sweeps_done: rng.below(1 << 20),
+        cancelled: rng.below(2) == 1,
+        window_secs: gen_f64(rng, 0.0, 1e6),
+        final_etas: gen_vec_normal(rng, gen_usize(rng, 0, 200), 2.0),
+    };
+    out.push((codec::encode_report(&report), WireMsg::Report(report.clone())));
+
+    out.push((codec::encode_cancel(), WireMsg::Cancel));
+
+    let obs = Telemetry::shared(4);
+    obs.add(Counter::Messages, rng.below(100_000));
+    obs.add(Counter::LinkReconnects, rng.below(100));
+    obs.record(HistKind::QuantResidual, rng.below(1_000_000));
+    let snapshot = obs.snapshot();
+    out.push((
+        codec::encode_telemetry(shard, &snapshot),
+        WireMsg::Telemetry { shard, snapshot },
+    ));
+
+    let bits = gen_usize(rng, 1, 16) as u8;
+    let qv = gen_vec_normal(rng, gen_usize(rng, 0, 600), 10.0);
+    let q = quantize_blocks(&qv, bits);
+    let reconstructed = dequantize_blocks(&q);
+    out.push((
+        codec::encode_gradq(src, stamp, &q),
+        WireMsg::GradQ { src, stamp, grad: reconstructed },
+    ));
+
+    out.push((codec::encode_heartbeat(shard), WireMsg::Heartbeat { shard }));
+
+    out
+}
+
+#[test]
+fn every_frame_kind_roundtrips_bit_exactly() {
+    PropCheck::new("codec roundtrip", 0xC0DEC, 48).run(|rng| {
+        for (frame, want) in random_frames(rng) {
+            let got = codec::decode(body(&frame))
+                .map_err(|e| format!("decode of a valid {want:?} failed: {e}"))?;
+            if got != want {
+                return Err(format!("roundtrip mismatch: {got:?} vs {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frame_reader_replays_a_concatenated_stream_in_order() {
+    PropCheck::new("codec stream", 0x5EED, 16).run(|rng| {
+        let frames = random_frames(rng);
+        let mut wire = Vec::new();
+        for (f, _) in &frames {
+            wire.extend_from_slice(f);
+        }
+        let mut fr = FrameReader::new(Cursor::new(wire));
+        for (_, want) in &frames {
+            match fr.next_frame() {
+                Ok(ReadEvent::Msg(got)) if &got == want => {}
+                other => {
+                    return Err(format!("stream misread: wanted {want:?}, got {other:?}"))
+                }
+            }
+        }
+        match fr.next_frame() {
+            Ok(ReadEvent::Eof) => Ok(()),
+            other => Err(format!("expected clean EOF, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn truncated_or_padded_frames_error_and_never_panic() {
+    PropCheck::new("codec truncation", 0x7A11, 96).run(|rng| {
+        let frames = random_frames(rng);
+        let (frame, _) = &frames[gen_usize(rng, 0, frames.len() - 1)];
+        let b = body(frame);
+        // every strict prefix must underrun some field (or fail the
+        // exhaustion check) — a prefix that decodes is a framing hole
+        let cut = gen_usize(rng, 0, b.len() - 1);
+        if let Ok(m) = codec::decode(&b[..cut]) {
+            return Err(format!("a {cut}-of-{} byte prefix decoded to {m:?}", b.len()));
+        }
+        // and a trailing byte must trip the exhaustion check
+        let mut padded = b.to_vec();
+        padded.push(rng.below(256) as u8);
+        if let Ok(m) = codec::decode(&padded) {
+            return Err(format!("a trailing byte was swallowed: {m:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_frames_never_panic() {
+    PropCheck::new("codec corruption", 0xF1B5, 96).run(|rng| {
+        let frames = random_frames(rng);
+        let (frame, _) = &frames[gen_usize(rng, 0, frames.len() - 1)];
+        let mut b = body(frame).to_vec();
+        let bit = gen_usize(rng, 0, b.len() * 8 - 1);
+        b[bit / 8] ^= 1 << (bit % 8);
+        // length fields are guarded before any allocation, so the only
+        // acceptable outcomes are Err or a differently-valued frame
+        let _ = codec::decode(&b);
+        let garbage: Vec<u8> =
+            (0..gen_usize(rng, 0, 200)).map(|_| rng.below(256) as u8).collect();
+        let _ = codec::decode(&garbage);
+        Ok(())
+    });
+}
+
+#[test]
+fn wrong_version_and_wrong_magic_are_rejected() {
+    PropCheck::new("codec version gate", 0x7E57, 48).run(|rng| {
+        let frame = codec::encode_hello(&random_hello(rng));
+        // body layout: kind | magic u32 | version u8 | ...
+        let mut skewed = body(&frame).to_vec();
+        skewed[5] = skewed[5].wrapping_add(1 + rng.below(254) as u8);
+        match codec::decode(&skewed) {
+            Err(e) if e.contains("protocol version") => {}
+            other => return Err(format!("version skew accepted: {other:?}")),
+        }
+        let mut alien = body(&frame).to_vec();
+        alien[1 + rng.below(4) as usize] ^= 0xFF;
+        match codec::decode(&alien) {
+            Err(e) if e.contains("magic") => Ok(()),
+            other => Err(format!("bad magic accepted: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn frame_reader_rejects_hostile_lengths_and_mid_frame_eof() {
+    // a length prefix past MAX_FRAME_BYTES must be rejected up front —
+    // before any buffering proportional to the claimed length
+    let mut wire = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+    wire.extend_from_slice(&[9, 0, 0, 0]);
+    let mut fr = FrameReader::new(Cursor::new(wire));
+    match fr.next_frame() {
+        Err(e) => assert!(e.contains("out of range"), "unexpected error: {e}"),
+        other => panic!("oversized frame accepted: {other:?}"),
+    }
+
+    // zero-length frames are equally corrupt
+    let mut fr = FrameReader::new(Cursor::new(vec![0u8; 8]));
+    match fr.next_frame() {
+        Err(e) => assert!(e.contains("out of range"), "unexpected error: {e}"),
+        other => panic!("zero-length frame accepted: {other:?}"),
+    }
+
+    // EOF inside a frame is a truncation error, not a silent drop
+    let frame = codec::encode_bye(3);
+    let mut fr = FrameReader::new(Cursor::new(frame[..frame.len() - 1].to_vec()));
+    match fr.next_frame() {
+        Err(e) => assert!(e.contains("mid-frame"), "unexpected error: {e}"),
+        other => panic!("mid-frame EOF accepted: {other:?}"),
+    }
+}
+
+#[test]
+fn quantizer_error_is_bounded_by_half_a_step() {
+    PropCheck::new("quantizer bound", 0x9B17, 64).run(|rng| {
+        let len = gen_usize(rng, 1, 700);
+        let bits = gen_usize(rng, 1, 16) as u8;
+        let v = gen_vec_normal(rng, len, 10.0);
+        let q = quantize_blocks(&v, bits);
+        if q.len != len || q.bits != bits {
+            return Err(format!("header mismatch: ({}, {}) vs ({len}, {bits})", q.len, q.bits));
+        }
+        let blocks = len.div_ceil(QUANT_BLOCK);
+        if q.offsets.len() != blocks || q.scales.len() != blocks {
+            return Err(format!("{} blocks expected, got {}/{}", blocks, q.offsets.len(), q.scales.len()));
+        }
+        if q.packed.len() != (len * bits as usize).div_ceil(8) {
+            return Err(format!("packed {} bytes for len {len} bits {bits}", q.packed.len()));
+        }
+        let back = dequantize_blocks(&q);
+        if back.len() != len {
+            return Err(format!("dequantized to {} of {len} values", back.len()));
+        }
+        for (i, (&x, &y)) in v.iter().zip(&back).enumerate() {
+            let tol = 0.5 * q.scales[i / QUANT_BLOCK] * (1.0 + 1e-9) + 1e-12;
+            if (x - y).abs() > tol {
+                return Err(format!("element {i}: |{x} - {y}| > {tol} at {bits} bits"));
+            }
+        }
+        // a constant block has zero range: its reconstruction is exact
+        let c = vec![3.25; gen_usize(rng, 1, 40)];
+        if dequantize_blocks(&quantize_blocks(&c, bits)) != c {
+            return Err("constant block must reconstruct exactly".into());
+        }
+        Ok(())
+    });
+}
