@@ -52,6 +52,26 @@ impl AlgorithmKind {
     pub fn all() -> [AlgorithmKind; 3] {
         [AlgorithmKind::A2dwb, AlgorithmKind::A2dwbn, AlgorithmKind::Dcwb]
     }
+
+    /// Stable wire code (the `algo` byte of the mesh handshake and the
+    /// v6 session-event frames). Inverse of [`AlgorithmKind::from_code`].
+    pub fn code(&self) -> u8 {
+        match self {
+            AlgorithmKind::A2dwb => 0,
+            AlgorithmKind::A2dwbn => 1,
+            AlgorithmKind::Dcwb => 2,
+        }
+    }
+
+    /// Decode a wire code produced by [`AlgorithmKind::code`].
+    pub fn from_code(code: u8) -> Result<Self, String> {
+        match code {
+            0 => Ok(AlgorithmKind::A2dwb),
+            1 => Ok(AlgorithmKind::A2dwbn),
+            2 => Ok(AlgorithmKind::Dcwb),
+            other => Err(format!("unknown algorithm code {other}")),
+        }
+    }
 }
 
 /// Abstract L-smooth stochastic objective over `m` blocks of dimension

@@ -1,22 +1,39 @@
 //! Experiment checkpointing — warm restart for long runs.
 //!
-//! Serializes the coordinator-visible state (per-node `(ū, v̄)`, the
-//! global iteration counter, virtual clock, and the config fingerprint)
-//! to a compact self-describing binary format. A paper-scale m = 500 run
-//! is ~25 s wall here, but on a real deployment the same state is hours
-//! of work — a runtime without restart is not deployable.
+//! Serializes the resumable per-node state to a compact
+//! self-describing binary format. A paper-scale m = 500 run is ~25 s
+//! wall here, but on a real deployment the same state is hours of work
+//! — a runtime without restart is not deployable. The daemon
+//! ([`crate::serve`]) embeds these blobs in its write-ahead session
+//! journal and resumes in-flight runs from the latest one.
 //!
-//! Format (little-endian):
+//! Format v2 (little-endian):
 //! `MAGIC "A2DWBCKP" | version u32 | fingerprint u64 | time f64 |
-//!  k u64 | m u64 | n u64 | m×(u[n] f64, v[n] f64)`
+//!  k u64 | m u64 | n u64 | m×(u[n] f64, v[n] f64, own_grad[n] f64,
+//!  last_update_iter u64, activations u64, rng[4] u64)`
+//!
+//! v1 carried only the `(ū, v̄)` blocks per node; v1 files still read
+//! (the extra fields come back zeroed), which restores the dual state
+//! exactly as v1 always did but cannot promise the bit-exact sampling
+//! continuation that v2's RNG states provide.
+//!
+//! Bit-exact resume contract (what v2 captures and why): at a sweep
+//! boundary under deterministic claims, a node's next activation needs
+//! its dual iterates `(u, v)` (v2 ⊇ v1), its latest broadcast gradient
+//! `own_grad` with the stamp it was computed at (`last_update_iter`) —
+//! enough to rebuild every neighbor mailbox by republishing, since
+//! freshest-wins delivery makes the mailbox a pure function of the
+//! latest broadcasts — and its sampling RNG state, so the next
+//! gradient draws the same batch the uninterrupted run would have.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::algo::wbp::WbpNode;
+use crate::rng::Rng64;
 
 const MAGIC: &[u8; 8] = b"A2DWBCKP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Snapshot of resumable state.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,21 +47,46 @@ pub struct Checkpoint {
     /// Per-node (u, v) blocks.
     pub u: Vec<Vec<f64>>,
     pub v: Vec<Vec<f64>>,
+    /// Per-node latest broadcast gradient (what every neighbor mailbox
+    /// slot for this node holds under freshest-wins delivery). Zeroed
+    /// when read from a v1 file.
+    pub own_grad: Vec<Vec<f64>>,
+    /// Per-node stamp of that broadcast (`WbpNode::last_update_iter`).
+    /// Zeroed when read from a v1 file.
+    pub last_update_iter: Vec<u64>,
+    /// Per-node activation counters. Zeroed when read from a v1 file.
+    pub activations: Vec<u64>,
+    /// Per-node sampling RNG states ([`Rng64::state`]). Zeroed when
+    /// read from a v1 file.
+    pub rng: Vec<[u64; 4]>,
 }
 
 impl Checkpoint {
-    /// Capture from live nodes.
-    pub fn capture(nodes: &[WbpNode], time: f64, k: u64, fingerprint: u64) -> Self {
+    /// Capture from live nodes and their sampling RNGs (`rngs[i]`
+    /// belongs to `nodes[i]`; lengths must match).
+    pub fn capture(
+        nodes: &[WbpNode],
+        rngs: &[Rng64],
+        time: f64,
+        k: u64,
+        fingerprint: u64,
+    ) -> Self {
+        assert_eq!(nodes.len(), rngs.len(), "one RNG per node");
         Self {
             fingerprint,
             time,
             k,
             u: nodes.iter().map(|nd| nd.u.clone()).collect(),
             v: nodes.iter().map(|nd| nd.v.clone()).collect(),
+            own_grad: nodes.iter().map(|nd| nd.own_grad.clone()).collect(),
+            last_update_iter: nodes.iter().map(|nd| nd.last_update_iter as u64).collect(),
+            activations: nodes.iter().map(|nd| nd.activations).collect(),
+            rng: rngs.iter().map(Rng64::state).collect(),
         }
     }
 
-    /// Restore into live nodes (shapes must match).
+    /// Restore the dual state `(u, v)` into live nodes (shapes must
+    /// match) — the v1 contract, valid for any checkpoint version.
     pub fn restore(&self, nodes: &mut [WbpNode]) -> Result<(), String> {
         if nodes.len() != self.u.len() {
             return Err(format!(
@@ -63,6 +105,28 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Restore the full v2 state — dual iterates, latest broadcast
+    /// gradient and stamp, activation counters — and hand back the
+    /// per-node sampling RNGs, resumed mid-stream. The caller rebuilds
+    /// the mailbox grid by republishing each node's `own_grad` at its
+    /// `last_update_iter` stamp (freshest-wins makes that
+    /// reconstruction exact at a sweep boundary).
+    pub fn restore_full(&self, nodes: &mut [WbpNode]) -> Result<Vec<Rng64>, String> {
+        self.restore(nodes)?;
+        if self.own_grad.len() != nodes.len() || self.rng.len() != nodes.len() {
+            return Err("checkpoint lacks full per-node state".into());
+        }
+        for (i, nd) in nodes.iter_mut().enumerate() {
+            if nd.own_grad.len() != self.own_grad[i].len() {
+                return Err("support size mismatch".into());
+            }
+            nd.own_grad.copy_from_slice(&self.own_grad[i]);
+            nd.last_update_iter = self.last_update_iter[i] as usize;
+            nd.activations = self.activations[i];
+        }
+        Ok(self.rng.iter().map(|&s| Rng64::from_state(s)).collect())
+    }
+
     pub fn write_to(&self, mut w: impl Write) -> std::io::Result<()> {
         w.write_all(MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
@@ -73,12 +137,20 @@ impl Checkpoint {
         let n = self.u.first().map(|x| x.len()).unwrap_or(0) as u64;
         w.write_all(&m.to_le_bytes())?;
         w.write_all(&n.to_le_bytes())?;
-        for (u, v) in self.u.iter().zip(&self.v) {
-            for x in u {
+        for i in 0..self.u.len() {
+            for x in &self.u[i] {
                 w.write_all(&x.to_le_bytes())?;
             }
-            for x in v {
+            for x in &self.v[i] {
                 w.write_all(&x.to_le_bytes())?;
+            }
+            for x in &self.own_grad[i] {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            w.write_all(&self.last_update_iter[i].to_le_bytes())?;
+            w.write_all(&self.activations[i].to_le_bytes())?;
+            for s in self.rng[i] {
+                w.write_all(&s.to_le_bytes())?;
             }
         }
         Ok(())
@@ -94,7 +166,7 @@ impl Checkpoint {
         let mut b8 = [0u8; 8];
         r.read_exact(&mut b4).map_err(|e| e.to_string())?;
         let version = u32::from_le_bytes(b4);
-        if version != VERSION {
+        if version == 0 || version > VERSION {
             return Err(format!("unsupported checkpoint version {version}"));
         }
         let mut next_u64 = |r: &mut dyn Read| -> Result<u64, String> {
@@ -120,11 +192,31 @@ impl Checkpoint {
         };
         let mut u = Vec::with_capacity(m);
         let mut v = Vec::with_capacity(m);
+        let mut own_grad = Vec::with_capacity(m);
+        let mut last_update_iter = Vec::with_capacity(m);
+        let mut activations = Vec::with_capacity(m);
+        let mut rng = Vec::with_capacity(m);
         for _ in 0..m {
             u.push(read_vec(&mut r)?);
             v.push(read_vec(&mut r)?);
+            if version >= 2 {
+                own_grad.push(read_vec(&mut r)?);
+                last_update_iter.push(next_u64(&mut r)?);
+                activations.push(next_u64(&mut r)?);
+                let mut s = [0u64; 4];
+                for slot in &mut s {
+                    *slot = next_u64(&mut r)?;
+                }
+                rng.push(s);
+            } else {
+                // v1 back-compat: dual state only; the rest zeroed
+                own_grad.push(vec![0.0; n]);
+                last_update_iter.push(0);
+                activations.push(0);
+                rng.push([0; 4]);
+            }
         }
-        Ok(Self { fingerprint, time, k, u, v })
+        Ok(Self { fingerprint, time, k, u, v, own_grad, last_update_iter, activations, rng })
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
@@ -138,18 +230,26 @@ impl Checkpoint {
     }
 }
 
-/// Stable fingerprint of the resumable-relevant config fields.
+/// Stable fingerprint of the resumable-relevant config. Built on the
+/// mesh [`config_digest`](crate::exec::net::config_digest) string — so
+/// every dynamics knob the digest tracks (β, γ-scale, batch sizes,
+/// topology, measure, faults, intervals, `kernel`, `compression`, …)
+/// refuses a drifted resume — then explicitly mixes in the handshake
+/// fields the digest delegates to [`HelloFrame`](crate::exec::net::HelloFrame)
+/// (m, seed, algorithm) and the knobs the digest deliberately omits
+/// (`heartbeat_ms`, `progress_every`), which for a resume *do* matter:
+/// they shape the event feed a re-attached client replays.
 pub fn config_fingerprint(cfg: &super::ExperimentConfig) -> u64 {
-    let mut acc: u64 = 0xF17E_0001;
+    let mut acc: u64 = 0xF17E_0002;
     let mut mix = |acc: &mut u64, x: u64| {
         *acc = crate::rng::SplitMix64::new(*acc ^ x).next_u64();
     };
+    mix(&mut acc, crate::exec::net::config_digest(cfg));
     mix(&mut acc, cfg.nodes as u64);
     mix(&mut acc, cfg.seed);
-    mix(&mut acc, cfg.support_size() as u64);
-    mix(&mut acc, cfg.beta.to_bits());
-    mix(&mut acc, cfg.gamma_scale.to_bits());
-    mix(&mut acc, cfg.samples_per_activation as u64);
+    mix(&mut acc, cfg.algorithm.code() as u64);
+    mix(&mut acc, cfg.heartbeat_ms.map(|ms| ms + 1).unwrap_or(0));
+    mix(&mut acc, cfg.progress_every.map(|k| k + 1).unwrap_or(0));
     acc
 }
 
@@ -161,19 +261,36 @@ mod tests {
     fn nodes(m: usize, n: usize) -> Vec<WbpNode> {
         let mut out: Vec<WbpNode> = (0..m).map(|_| WbpNode::new(n, 2)).collect();
         let mut rng = crate::rng::Rng64::new(3);
-        for nd in &mut out {
+        for (j, nd) in out.iter_mut().enumerate() {
             for l in 0..n {
                 nd.u[l] = rng.normal();
                 nd.v[l] = rng.normal();
+                nd.own_grad[l] = rng.normal();
             }
+            nd.last_update_iter = 10 + j;
+            nd.activations = 3 + j as u64;
         }
         out
+    }
+
+    fn rngs(m: usize) -> Vec<Rng64> {
+        let mut root = Rng64::new(42);
+        (0..m)
+            .map(|i| {
+                let mut r = root.split(i as u64);
+                // advance so the captured state is mid-stream
+                for _ in 0..=i {
+                    r.next_u64();
+                }
+                r
+            })
+            .collect()
     }
 
     #[test]
     fn roundtrip_in_memory() {
         let ns = nodes(4, 7);
-        let ck = Checkpoint::capture(&ns, 12.5, 99, 0xABCD);
+        let ck = Checkpoint::capture(&ns, &rngs(4), 12.5, 99, 0xABCD);
         let mut buf = Vec::new();
         ck.write_to(&mut buf).unwrap();
         let back = Checkpoint::read_from(&buf[..]).unwrap();
@@ -181,34 +298,77 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_on_disk_and_restore() {
+    fn roundtrip_on_disk_and_restore_full() {
         let ns = nodes(3, 5);
-        let ck = Checkpoint::capture(&ns, 1.0, 7, 1);
+        let rs = rngs(3);
+        let ck = Checkpoint::capture(&ns, &rs, 1.0, 7, 1);
         let path = std::env::temp_dir().join("a2dwb_ckpt_test.bin");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
-        let mut fresh = nodes(3, 5);
-        for nd in &mut fresh {
-            nd.u.fill(0.0);
-            nd.v.fill(0.0);
-        }
-        back.restore(&mut fresh).unwrap();
+        let mut fresh: Vec<WbpNode> = (0..3).map(|_| WbpNode::new(5, 2)).collect();
+        let mut resumed = back.restore_full(&mut fresh).unwrap();
         for (a, b) in fresh.iter().zip(&ns) {
             assert_eq!(a.u, b.u);
             assert_eq!(a.v, b.v);
+            assert_eq!(a.own_grad, b.own_grad);
+            assert_eq!(a.last_update_iter, b.last_update_iter);
+            assert_eq!(a.activations, b.activations);
         }
+        // the resumed RNGs continue the original streams exactly
+        for (r, orig) in resumed.iter_mut().zip(rs) {
+            let mut orig = orig.clone();
+            assert_eq!(r.next_u64(), orig.next_u64());
+        }
+    }
+
+    #[test]
+    fn v1_files_still_read_with_zeroed_extensions() {
+        // hand-built v1 image: m=2, n=3, (u, v) blocks only
+        let ns = nodes(2, 3);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&0xABCDu64.to_le_bytes());
+        buf.extend_from_slice(&2.5f64.to_le_bytes());
+        buf.extend_from_slice(&9u64.to_le_bytes());
+        buf.extend_from_slice(&2u64.to_le_bytes());
+        buf.extend_from_slice(&3u64.to_le_bytes());
+        for nd in &ns {
+            for x in &nd.u {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            for x in &nd.v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let ck = Checkpoint::read_from(&buf[..]).unwrap();
+        assert_eq!((ck.fingerprint, ck.time, ck.k), (0xABCD, 2.5, 9));
+        assert_eq!(ck.u[1], ns[1].u);
+        assert_eq!(ck.v[0], ns[0].v);
+        assert_eq!(ck.own_grad, vec![vec![0.0; 3]; 2]);
+        assert_eq!(ck.rng, vec![[0u64; 4]; 2]);
+        // the v1 restore contract still holds on a v1 file
+        let mut fresh: Vec<WbpNode> = (0..2).map(|_| WbpNode::new(3, 2)).collect();
+        ck.restore(&mut fresh).unwrap();
+        assert_eq!(fresh[0].u, ns[0].u);
     }
 
     #[test]
     fn rejects_corruption_and_mismatch() {
         let ns = nodes(2, 3);
-        let ck = Checkpoint::capture(&ns, 0.0, 0, 5);
+        let ck = Checkpoint::capture(&ns, &rngs(2), 0.0, 0, 5);
         let mut buf = Vec::new();
         ck.write_to(&mut buf).unwrap();
         // corrupt magic
         let mut bad = buf.clone();
         bad[0] = b'X';
         assert!(Checkpoint::read_from(&bad[..]).is_err());
+        // a future version must refuse, not misparse
+        let mut future = buf.clone();
+        future[8..12].copy_from_slice(&99u32.to_le_bytes());
+        assert!(Checkpoint::read_from(&future[..])
+            .unwrap_err()
+            .contains("unsupported checkpoint version"));
         // truncation
         assert!(Checkpoint::read_from(&buf[..buf.len() - 4]).is_err());
         // node-count mismatch on restore
@@ -223,5 +383,18 @@ mod tests {
         b.beta *= 2.0;
         assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
         assert_eq!(config_fingerprint(&a), config_fingerprint(&a.clone()));
+        // the knobs the v1 fingerprint missed now all matter
+        let mut c = a.clone();
+        c.kernel = crate::kernel::KernelImpl::Wide;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        let mut d = a.clone();
+        d.compression = crate::coordinator::Compression::quantized(8);
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&d));
+        let mut e = a.clone();
+        e.heartbeat_ms = Some(250);
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&e));
+        let mut f = a.clone();
+        f.progress_every = Some(64);
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&f));
     }
 }

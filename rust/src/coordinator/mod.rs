@@ -325,6 +325,7 @@ impl ExperimentConfig {
         "executor",
         "paper-literal-diag",
         "progress-every",
+        "sample-every-acts",
         "kernel",
         "trace-capacity",
         "compress-bits",
@@ -390,6 +391,10 @@ impl ExperimentConfig {
                 .parse()
                 .map_err(|e| format!("--progress-every: {e}"))?;
             cfg.progress_every = Some(every);
+        }
+        if let Some(k) = args.get_opt("sample-every-acts") {
+            let k: u64 = k.parse().map_err(|e| format!("--sample-every-acts: {e}"))?;
+            cfg.sample_cadence = crate::exec::SampleCadence::Activations(k);
         }
         cfg.kernel = KernelImpl::parse(&args.get_str("kernel", "scalar"))?;
         if let Some(cap) = args.get_opt("trace-capacity") {

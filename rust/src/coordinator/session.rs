@@ -172,7 +172,7 @@ mod sigint {
 /// everything an [`ExperimentReport`] holds besides the metric series
 /// (which stream as [`RunEvent::MetricSample`]s) and `wall_seconds`
 /// (stamped by the caller).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunTotals {
     pub tag: String,
     pub algorithm: AlgorithmKind,
@@ -196,7 +196,7 @@ pub struct RunTotals {
 }
 
 /// One progress event from a running experiment.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum RunEvent {
     /// The run is about to start executing.
     Started {

@@ -79,6 +79,27 @@
 //!   stop claiming iterations, drain whatever pacing phases they still
 //!   owe their peers, and the stream ends with a partial `Report` —
 //!   remote cancellation without tearing a single connection down.
+//! * [`WireMsg::Submit`] — a client's experiment submission to a
+//!   [`BarycenterDaemon`](crate::serve::BarycenterDaemon) (protocol
+//!   v6): the experiment serialized as the CLI flag vector
+//!   [`experiment_args`](crate::exec::net::experiment_args) produces —
+//!   the exact strings `ExperimentConfig::from_cli_args` re-parses
+//!   bit-identically. A nonzero `session` re-attaches to an existing
+//!   session (after a client or daemon restart) instead of admitting a
+//!   new one.
+//! * [`WireMsg::Accept`] / [`WireMsg::Reject`] — the daemon's
+//!   admission verdict: the assigned session id, or a human-readable
+//!   refusal (pool full, malformed config, draining).
+//! * [`WireMsg::SessionEvent`] — one
+//!   [`RunEvent`](crate::coordinator::session::RunEvent) of one
+//!   session's private feed, streamed to the submitting client.
+//!   Everything a [`RunObserver`](crate::coordinator::session::RunObserver)
+//!   would see in-process crosses the wire bit-for-bit, `Finished`
+//!   totals (telemetry snapshot and barycenter included).
+//! * [`WireMsg::SessionCancel`] — client-initiated cancel of one
+//!   session; other tenants are untouched.
+//! * [`WireMsg::Drain`] — ask the daemon to stop admitting new
+//!   sessions and finish the resident ones (graceful shutdown).
 //!
 //! Decoding is strict: unknown kinds, short/trailing payload bytes,
 //! oversized frames ([`MAX_FRAME_BYTES`]), and bad magic/version are
@@ -90,6 +111,8 @@
 
 use std::io::{Read, Write};
 
+use crate::algo::AlgorithmKind;
+use crate::coordinator::session::{RunEvent, RunTotals};
 use crate::obs::{Telemetry, TelemetrySnapshot};
 
 /// `b"A2WB"` — first four bytes of every handshake.
@@ -108,7 +131,13 @@ pub const MAGIC: u32 = 0x4132_5742;
 /// per-block offset/scale and configurable bits-per-value) and new
 /// `Heartbeat` frame (peer-liveness keepalive on idle gradient
 /// streams). Uncompressed `Grad` is unchanged and remains the default.
-pub const PROTOCOL_VERSION: u8 = 5;
+/// v6: the daemon service frames — `Submit` / `Accept` / `Reject` /
+/// `SessionEvent` / `SessionCancel` / `Drain` — for multi-tenant
+/// session multiplexing ([`crate::serve`]). Every pre-v6 frame layout
+/// is unchanged; the bump exists because a v5 peer would reject the
+/// new kind bytes with "unknown frame kind" instead of a version
+/// diagnosis.
+pub const PROTOCOL_VERSION: u8 = 6;
 /// Hard upper bound on one frame (64 MiB): a length prefix beyond this
 /// is treated as stream corruption, not an allocation request.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
@@ -123,6 +152,12 @@ const KIND_CANCEL: u8 = 7;
 const KIND_TELEMETRY: u8 = 8;
 const KIND_GRADQ: u8 = 9;
 const KIND_HEARTBEAT: u8 = 10;
+const KIND_SUBMIT: u8 = 11;
+const KIND_ACCEPT: u8 = 12;
+const KIND_REJECT: u8 = 13;
+const KIND_SESSION_EVENT: u8 = 14;
+const KIND_SESSION_CANCEL: u8 = 15;
+const KIND_DRAIN: u8 = 16;
 
 /// Which fence a [`WireMsg::Done`] marker announces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -267,6 +302,26 @@ pub enum WireMsg {
     /// Peer-liveness keepalive (protocol v5): proves the sending
     /// shard's writer thread is alive while it has nothing to say.
     Heartbeat { shard: u32 },
+    /// An experiment submission to the daemon (protocol v6): the
+    /// config as its `experiment_args` CLI-flag serialization.
+    /// `session == 0` requests a new session; a nonzero id re-attaches
+    /// to an existing one by id (journal resume / client reconnect).
+    Submit { session: u64, args: Vec<String> },
+    /// Admission granted: the session id all further frames about this
+    /// run carry (protocol v6). Never zero.
+    Accept { session: u64 },
+    /// Admission refused (pool full, malformed config, draining) with
+    /// a human-readable reason (protocol v6).
+    Reject { reason: String },
+    /// One event of one session's private [`RunEvent`] feed
+    /// (protocol v6).
+    SessionEvent { session: u64, event: RunEvent },
+    /// Client-initiated cooperative cancel of one session
+    /// (protocol v6).
+    SessionCancel { session: u64 },
+    /// Stop admitting new sessions; finish the resident ones
+    /// (protocol v6).
+    Drain,
 }
 
 // ----------------------------------------------------------- quantizer
@@ -405,6 +460,11 @@ fn put_f64s(buf: &mut Vec<u8>, vs: &[f64]) {
     }
 }
 
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
 /// Finish a frame started with [`frame_start`]: backfill the length.
 fn frame_finish(mut buf: Vec<u8>) -> Vec<u8> {
     let len = (buf.len() - 4) as u32;
@@ -536,6 +596,100 @@ pub fn encode_heartbeat(shard: u32) -> Vec<u8> {
     frame_finish(b)
 }
 
+/// Encode an experiment submission (protocol v6). `args` is the
+/// config's `experiment_args` CLI-flag serialization — length-prefixed
+/// UTF-8 strings, each of which `from_cli_args` re-parses bit-exactly.
+/// `session == 0` asks for a new session; nonzero re-attaches by id.
+pub fn encode_submit(session: u64, args: &[String]) -> Vec<u8> {
+    let payload: usize = args.iter().map(|a| 4 + a.len()).sum();
+    let mut b = frame_start(KIND_SUBMIT, 12 + payload);
+    put_u64(&mut b, session);
+    put_u32(&mut b, args.len() as u32);
+    for a in args {
+        put_str(&mut b, a);
+    }
+    frame_finish(b)
+}
+
+/// Encode an admission grant (protocol v6).
+pub fn encode_accept(session: u64) -> Vec<u8> {
+    let mut b = frame_start(KIND_ACCEPT, 8);
+    put_u64(&mut b, session);
+    frame_finish(b)
+}
+
+/// Encode an admission refusal (protocol v6).
+pub fn encode_reject(reason: &str) -> Vec<u8> {
+    let mut b = frame_start(KIND_REJECT, 4 + reason.len());
+    put_str(&mut b, reason);
+    frame_finish(b)
+}
+
+/// Encode one session-feed event (protocol v6). Layout: `session: u64
+/// | tag: u8 | tag-specific payload`; `Finished` carries the full
+/// [`RunTotals`] including the self-describing telemetry blob, so a
+/// daemon client reconstructs exactly what an in-process
+/// [`RunObserver`](crate::coordinator::session::RunObserver) sees.
+pub fn encode_session_event(session: u64, event: &RunEvent) -> Vec<u8> {
+    let mut b = frame_start(KIND_SESSION_EVENT, 64);
+    put_u64(&mut b, session);
+    match event {
+        RunEvent::Started { tag, algorithm, nodes, support } => {
+            b.push(0);
+            put_str(&mut b, tag);
+            b.push(algorithm.code());
+            put_u64(&mut b, *nodes as u64);
+            put_u64(&mut b, *support as u64);
+        }
+        RunEvent::MetricSample { t, wall, dual, consensus, spread } => {
+            b.push(1);
+            put_f64(&mut b, *t);
+            put_f64(&mut b, *wall);
+            put_f64(&mut b, *dual);
+            put_f64(&mut b, *consensus);
+            put_f64(&mut b, *spread);
+        }
+        RunEvent::Progress { activations, rounds } => {
+            b.push(2);
+            put_u64(&mut b, *activations);
+            put_u64(&mut b, *rounds);
+        }
+        RunEvent::ShardSnapshot { shard, sweep } => {
+            b.push(3);
+            put_u64(&mut b, *shard as u64);
+            put_u64(&mut b, *sweep);
+        }
+        RunEvent::Finished(t) => {
+            b.push(4);
+            put_str(&mut b, &t.tag);
+            b.push(t.algorithm.code());
+            put_u64(&mut b, t.activations);
+            put_u64(&mut b, t.rounds);
+            put_u64(&mut b, t.messages);
+            put_u64(&mut b, t.events);
+            put_f64(&mut b, t.lambda_max);
+            let blob = t.telemetry.to_bytes();
+            put_u32(&mut b, blob.len() as u32);
+            b.extend_from_slice(&blob);
+            put_f64s(&mut b, &t.barycenter);
+            b.push(u8::from(t.cancelled));
+        }
+    }
+    frame_finish(b)
+}
+
+/// Encode a per-session cooperative cancel (protocol v6).
+pub fn encode_session_cancel(session: u64) -> Vec<u8> {
+    let mut b = frame_start(KIND_SESSION_CANCEL, 8);
+    put_u64(&mut b, session);
+    frame_finish(b)
+}
+
+/// Encode a drain request (protocol v6, kind byte only).
+pub fn encode_drain() -> Vec<u8> {
+    frame_finish(frame_start(KIND_DRAIN, 0))
+}
+
 // ---------------------------------------------------------------- decode
 
 /// Strict little-endian cursor: every `take_*` fails on underrun, and
@@ -591,12 +745,70 @@ impl<'a> Cursor<'a> {
         Ok(out)
     }
 
+    fn take_str(&mut self) -> Result<String, String> {
+        let len = self.take_u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| "invalid utf-8 in string field".to_string())
+    }
+
     fn finish(self) -> Result<(), String> {
         if self.pos != self.buf.len() {
             return Err(format!("{} trailing bytes after frame payload", self.buf.len() - self.pos));
         }
         Ok(())
     }
+}
+
+/// Decode the tag-dispatched [`RunEvent`] payload of a
+/// [`WireMsg::SessionEvent`] frame.
+fn take_run_event(c: &mut Cursor) -> Result<RunEvent, String> {
+    Ok(match c.take_u8()? {
+        0 => RunEvent::Started {
+            tag: c.take_str()?,
+            algorithm: AlgorithmKind::from_code(c.take_u8()?)?,
+            nodes: c.take_u64()? as usize,
+            support: c.take_u64()? as usize,
+        },
+        1 => RunEvent::MetricSample {
+            t: c.take_f64()?,
+            wall: c.take_f64()?,
+            dual: c.take_f64()?,
+            consensus: c.take_f64()?,
+            spread: c.take_f64()?,
+        },
+        2 => RunEvent::Progress { activations: c.take_u64()?, rounds: c.take_u64()? },
+        3 => RunEvent::ShardSnapshot {
+            shard: c.take_u64()? as usize,
+            sweep: c.take_u64()?,
+        },
+        4 => {
+            let tag = c.take_str()?;
+            let algorithm = AlgorithmKind::from_code(c.take_u8()?)?;
+            let activations = c.take_u64()?;
+            let rounds = c.take_u64()?;
+            let messages = c.take_u64()?;
+            let events = c.take_u64()?;
+            let lambda_max = c.take_f64()?;
+            let blob_len = c.take_u32()? as usize;
+            let blob = c.take(blob_len)?;
+            let telemetry = TelemetrySnapshot::from_bytes(blob)
+                .map_err(|e| format!("session totals telemetry: {e}"))?;
+            RunEvent::Finished(RunTotals {
+                tag,
+                algorithm,
+                activations,
+                rounds,
+                messages,
+                events,
+                lambda_max,
+                telemetry,
+                barycenter: c.take_f64s()?,
+                cancelled: c.take_u8()? != 0,
+            })
+        }
+        other => return Err(format!("unknown session event tag {other}")),
+    })
 }
 
 /// Decode one frame body (`kind` byte + payload, length prefix already
@@ -688,6 +900,29 @@ pub fn decode(body: &[u8]) -> Result<WireMsg, String> {
             WireMsg::GradQ { src, stamp, grad: dequantize_blocks(&q) }
         }
         KIND_HEARTBEAT => WireMsg::Heartbeat { shard: c.take_u32()? },
+        KIND_SUBMIT => {
+            let session = c.take_u64()?;
+            let count = c.take_u32()? as usize;
+            // guard the allocation before trusting the declared count
+            // (every arg costs at least its 4-byte length prefix)
+            if count * 4 > c.buf.len() - c.pos {
+                return Err(format!("truncated frame: {count}-element arg vector overruns payload"));
+            }
+            let mut args = Vec::with_capacity(count);
+            for _ in 0..count {
+                args.push(c.take_str()?);
+            }
+            WireMsg::Submit { session, args }
+        }
+        KIND_ACCEPT => WireMsg::Accept { session: c.take_u64()? },
+        KIND_REJECT => WireMsg::Reject { reason: c.take_str()? },
+        KIND_SESSION_EVENT => {
+            let session = c.take_u64()?;
+            let event = take_run_event(&mut c)?;
+            WireMsg::SessionEvent { session, event }
+        }
+        KIND_SESSION_CANCEL => WireMsg::SessionCancel { session: c.take_u64()? },
+        KIND_DRAIN => WireMsg::Drain,
         other => return Err(format!("unknown frame kind {other}")),
     };
     c.finish()?;
@@ -932,6 +1167,78 @@ mod tests {
             WireMsg::Report(got) => assert_eq!(got, partial),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn v6_service_frames_roundtrip() {
+        let args: Vec<String> =
+            ["--nodes", "6", "--support", "10", "--seed", "42", ""].iter().map(|s| s.to_string()).collect();
+        match roundtrip(encode_submit(0, &args)) {
+            WireMsg::Submit { session, args: got } => {
+                assert_eq!(session, 0);
+                assert_eq!(got, args);
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(encode_accept(7)) {
+            WireMsg::Accept { session } => assert_eq!(session, 7),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(encode_reject("pool full: 600 resident of 512 cap")) {
+            WireMsg::Reject { reason } => assert!(reason.contains("pool full")),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(encode_session_cancel(9)) {
+            WireMsg::SessionCancel { session } => assert_eq!(session, 9),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(encode_drain()) {
+            WireMsg::Drain => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_event_roundtrips_every_variant() {
+        let obs = Telemetry::shared(2);
+        obs.add(crate::obs::Counter::Messages, 12);
+        let totals = RunTotals {
+            tag: "tenant-a".into(),
+            algorithm: AlgorithmKind::A2dwb,
+            activations: 60,
+            rounds: 0,
+            messages: 240,
+            events: 60,
+            lambda_max: 3.5,
+            telemetry: obs.snapshot(),
+            barycenter: vec![0.25, -0.0, 1e-308, 0.75],
+            cancelled: false,
+        };
+        let events = [
+            RunEvent::Started {
+                tag: "tenant-a".into(),
+                algorithm: AlgorithmKind::Dcwb,
+                nodes: 6,
+                support: 10,
+            },
+            RunEvent::MetricSample { t: 1.0, wall: 0.5, dual: -3.25, consensus: 1e-9, spread: 0.125 },
+            RunEvent::Progress { activations: 42, rounds: 7 },
+            RunEvent::ShardSnapshot { shard: 3, sweep: 11 },
+            RunEvent::Finished(totals),
+        ];
+        for want in events {
+            match roundtrip(encode_session_event(5, &want)) {
+                WireMsg::SessionEvent { session, event } => {
+                    assert_eq!(session, 5);
+                    assert_eq!(event, want);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // an unknown event tag is a decode error, not a panic
+        let mut b = encode_session_event(5, &RunEvent::Progress { activations: 1, rounds: 0 });
+        b[4 + 1 + 8] = 200; // len | kind | session, then the tag byte
+        assert!(decode(&b[4..]).is_err());
     }
 
     #[test]

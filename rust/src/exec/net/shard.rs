@@ -91,11 +91,7 @@ const HANDSHAKE_WINDOW: Duration = Duration::from_secs(5);
 const HEARTBEAT_DEADLINE_FACTOR: u32 = 4;
 
 fn algo_code(a: AlgorithmKind) -> u8 {
-    match a {
-        AlgorithmKind::A2dwb => 0,
-        AlgorithmKind::A2dwbn => 1,
-        AlgorithmKind::Dcwb => 2,
-    }
+    a.code()
 }
 
 /// Filename tag of an aggregated mesh run: same shape as
@@ -1627,6 +1623,8 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         order,
         cadence_snapshots: false,
         jitter_salt: plan.shard as u64,
+        sweep_offset: 0,
+        lane: None,
         fault_injection,
         obs: Some(obs.clone()),
     });
@@ -1699,7 +1697,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
     let mut theta_final = ThetaSeq::new(m_theta);
     let mut point = vec![0.0; n];
     let mut final_etas = vec![0.0; local.len() * n];
-    for (li, (_, node)) in outcome.nodes.iter().enumerate() {
+    for (li, (_, node, _)) in outcome.nodes.iter().enumerate() {
         node.eta(&mut theta_final, k_final.max(1), &mut point);
         final_etas[li * n..(li + 1) * n].copy_from_slice(&point);
     }
@@ -2411,6 +2409,12 @@ pub fn experiment_args(cfg: &ExperimentConfig) -> Result<Vec<String>, String> {
     if let Some(ms) = cfg.heartbeat_ms {
         push(&mut a, "heartbeat-ms", ms.to_string());
     }
+    if let Some(every) = cfg.progress_every {
+        push(&mut a, "progress-every", every.to_string());
+    }
+    if let crate::exec::SampleCadence::Activations(k) = cfg.sample_cadence {
+        push(&mut a, "sample-every-acts", k.to_string());
+    }
     Ok(a)
 }
 
@@ -2767,6 +2771,12 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
         cfg.algorithm.name(),
         cfg.topology.name(),
     );
+    // Ctrl-C on a hand-launched shard stops it cooperatively: the
+    // worker pool exits at the next claim, peers are released through
+    // the marker drain, and the report (if any) says `cancelled` —
+    // the same path `join --cancel-after` exercises mesh-wide.
+    let cancel = CancelToken::new();
+    cancel.cancel_on_sigint();
     let report = run_shard(
         &cfg,
         ShardRunOpts {
@@ -2777,7 +2787,7 @@ pub fn serve_main(args: &crate::cli::Args) -> Result<(), String> {
             listener,
             peer_addrs,
             report: report_stream,
-            cancel: CancelToken::new(),
+            cancel,
             fault_injection: None,
             link_fault: None,
         },

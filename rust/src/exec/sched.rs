@@ -50,7 +50,7 @@ use std::cell::Cell;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::transport::{ThreadedTransport, Transport};
 use super::{activate_node, SampleCadence, StepCtx};
@@ -343,6 +343,116 @@ pub enum ClaimOrder {
     Serial,
 }
 
+/// Weighted round-robin claim arbiter for multi-tenant worker pools
+/// (the daemon's fair-share seam). Each resident session registers a
+/// [`SessionLane`] with a weight; every activation claim on a laned
+/// scheduler first calls [`SessionLane::pace`], which spends one
+/// credit. A lane out of credits waits until **every other active
+/// lane** has spent its allotment too, then all active lanes refill —
+/// so over any refill epoch, session i performs at most `weight_i`
+/// claims while the slowest tenant performs its own `weight_j`, and a
+/// large synchronous run cannot starve small asynchronous ones.
+///
+/// Pacing only ever *delays* a claim. It never reorders a session's
+/// own deterministic claim sequence, touches an RNG stream, or alters
+/// message contents — so a paced run is bit-identical to a solo run of
+/// the same session, just slower on the wall clock.
+///
+/// Dropping a [`SessionLane`] retires it (finished or cancelled
+/// tenants stop counting toward "every other active lane"), so a
+/// completed session can never wedge the survivors.
+pub struct ClaimArbiter {
+    state: Mutex<Vec<LaneSlot>>,
+    cv: Condvar,
+}
+
+struct LaneSlot {
+    weight: u64,
+    credit: u64,
+    active: bool,
+}
+
+impl ClaimArbiter {
+    /// Fresh arbiter with no lanes.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { state: Mutex::new(Vec::new()), cv: Condvar::new() })
+    }
+
+    /// Register a lane with `weight` claims per refill epoch
+    /// (clamped to ≥ 1). The lane starts with a full allotment.
+    pub fn register(self: &Arc<Self>, weight: u64) -> SessionLane {
+        let weight = weight.max(1);
+        let mut s = self.state.lock().unwrap();
+        s.push(LaneSlot { weight, credit: weight, active: true });
+        SessionLane { arb: Arc::clone(self), id: s.len() - 1 }
+    }
+
+    fn pace(&self, id: usize, cancel: &CancelToken) {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if cancel.is_cancelled() {
+                return;
+            }
+            if s[id].credit > 0 {
+                s[id].credit -= 1;
+                if s[id].credit == 0 {
+                    // this lane may have been the last holdout another
+                    // exhausted lane was waiting on
+                    self.cv.notify_all();
+                }
+                return;
+            }
+            let others_done = s
+                .iter()
+                .enumerate()
+                .all(|(j, l)| j == id || !l.active || l.credit == 0);
+            if others_done {
+                for l in s.iter_mut().filter(|l| l.active) {
+                    l.credit = l.weight;
+                }
+                self.cv.notify_all();
+                continue;
+            }
+            // bounded wait: re-check the cancel token even if no
+            // notify ever arrives (a peer stalled mid-epoch)
+            let (back, _timeout) =
+                self.cv.wait_timeout(s, Duration::from_millis(5)).unwrap();
+            s = back;
+        }
+    }
+
+    fn retire(&self, id: usize) {
+        let mut s = self.state.lock().unwrap();
+        s[id].active = false;
+        drop(s);
+        self.cv.notify_all();
+    }
+}
+
+/// One session's handle into a [`ClaimArbiter`]. Shared by reference
+/// across that session's workers ([`SchedulerSpec::lane`]); retired on
+/// drop.
+pub struct SessionLane {
+    arb: Arc<ClaimArbiter>,
+    id: usize,
+}
+
+impl SessionLane {
+    /// Spend one claim credit, waiting for a refill epoch if the
+    /// allotment is exhausted. Returns immediately once `cancel` trips
+    /// (a cancelled session must not be throttled on its way out).
+    pub fn pace(&self, cancel: &CancelToken) {
+        self.arb.pace(self.id, cancel);
+    }
+}
+
+impl Drop for SessionLane {
+    fn drop(&mut self) {
+        self.arb.retire(self.id);
+    }
+}
+
 /// Transport with message counters, as the scheduler needs to total
 /// them at join time: `(messages, wire_messages)` — directed-edge
 /// deliveries and TCP frames respectively (0 wire for in-process).
@@ -476,6 +586,17 @@ pub struct SchedulerSpec<'a> {
     pub cadence_snapshots: bool,
     /// Namespace for per-worker jitter RNG seeds (timing-only).
     pub jitter_salt: u64,
+    /// Global index of this invocation's first sweep (0 for a whole
+    /// run). Windowed callers — the daemon's checkpointed runner —
+    /// pass the sweeps already done, so iteration indices
+    /// `k = (sweep_offset + sweep)·m + i`, θ lookups, and broadcast
+    /// stamps continue the original sequence exactly and a resumed
+    /// window is bit-identical to the same sweeps of one long run.
+    /// Hook and fault-injection sweep indices stay invocation-relative.
+    pub sweep_offset: usize,
+    /// Fair-share pacing lane for multi-tenant pools (`None` =
+    /// unpaced, the single-tenant executors). See [`ClaimArbiter`].
+    pub lane: Option<&'a SessionLane>,
     /// Panic injection for drain tests; `None` in production.
     pub fault_injection: Option<FailPoint>,
     /// Telemetry registry for this run (`None` records nothing).
@@ -490,9 +611,11 @@ pub type QueuedSnapshot = (u64, f64, Vec<f64>);
 
 /// What a completed (or cancelled) scheduler run hands back.
 pub struct SchedOutcome {
-    /// Every owned node, in node-index order (for the caller's final
-    /// metric snapshot).
-    pub nodes: Vec<(usize, WbpNode)>,
+    /// Every owned node with its sampling RNG, in node-index order
+    /// (for the caller's final metric snapshot — and, for windowed
+    /// callers, the next window or checkpoint: the RNG stream resumes
+    /// exactly where this invocation left it).
+    pub nodes: Vec<(usize, WbpNode, Rng64)>,
     pub messages: u64,
     pub wire_messages: u64,
     /// Total activations performed (the progress counter).
@@ -505,7 +628,7 @@ pub struct SchedOutcome {
     pub sweeps_done_min: usize,
 }
 
-type WorkerOut = (Vec<(usize, WbpNode)>, u64, u64, usize);
+type WorkerOut = (Vec<(usize, WbpNode, Rng64)>, u64, u64, usize);
 
 /// The shared worker-pool core. See the [module docs](self) for the
 /// composition story; [`crate::exec::threaded`] and
@@ -650,7 +773,7 @@ impl<'a> NodeScheduler<'a> {
         };
         self.live.store(spec.workers, Ordering::Release);
 
-        let mut nodes: Vec<(usize, WbpNode)> = Vec::with_capacity(spec.range.len());
+        let mut nodes: Vec<(usize, WbpNode, Rng64)> = Vec::with_capacity(spec.range.len());
         let mut messages = 0u64;
         let mut wire_messages = 0u64;
         let mut sweeps_done_min = spec.sweeps;
@@ -694,7 +817,7 @@ impl<'a> NodeScheduler<'a> {
             hooks.drain();
         }
         run_res?;
-        nodes.sort_by_key(|&(i, _)| i);
+        nodes.sort_by_key(|&(i, _, _)| i);
         Ok(SchedOutcome {
             nodes,
             messages,
@@ -883,16 +1006,22 @@ impl<'a> NodeScheduler<'a> {
                     self.drain_ledger(w, ledger);
                     break;
                 }
+                // global round index: windowed callers resume the θ /
+                // stamp sequence where their last window stopped
+                let g = spec.sweep_offset + r;
                 for (i, node, rng) in mine.iter_mut() {
                     let i = *i;
+                    if let Some(lane) = spec.lane {
+                        lane.pace(&spec.cancel);
+                    }
                     self.sleep_compute(i, &mut jitter);
                     let _act =
                         obs.map(|o| o.timer(HistKind::ActivateNs, "activate", i as u64));
-                    node.eval_point(&mut theta, r, true, &mut point);
+                    node.eval_point(&mut theta, g, true, &mut point);
                     spec.measures[i].draw_samples_into(rng, ctx.batch, &mut samples);
                     let rows = spec.measures[i].cost_rows(&samples);
                     oracle.eval(&point, &rows, ctx.beta, &mut node.own_grad);
-                    transport.broadcast(i, r as u64 + 1, Arc::new(node.own_grad.clone()));
+                    transport.broadcast(i, g as u64 + 1, Arc::new(node.own_grad.clone()));
                 }
                 {
                     if let Some(o) = obs {
@@ -904,16 +1033,16 @@ impl<'a> NodeScheduler<'a> {
                 }
                 for (i, node, _) in mine.iter_mut() {
                     let i = *i;
-                    transport.collect(i, node, r as u64 + 1);
+                    transport.collect(i, node, g as u64 + 1);
                     node.apply_update(
                         &mut theta,
-                        r,
+                        g,
                         ctx.m_theta,
                         ctx.gamma,
                         spec.graph.degree(i),
                         ctx.diag,
                     );
-                    node.eta(&mut theta, r + 1, &mut point);
+                    node.eta(&mut theta, g + 1, &mut point);
                     self.eta_snaps[i - start].lock().unwrap().copy_from_slice(&point);
                     self.bump_progress();
                     claims += 1;
@@ -954,7 +1083,10 @@ impl<'a> NodeScheduler<'a> {
                             return Err(e);
                         }
                     }
-                    let k = sweep * m + i;
+                    if let Some(lane) = spec.lane {
+                        lane.pace(&spec.cancel);
+                    }
+                    let k = (spec.sweep_offset + sweep) * m + i;
                     self.sleep_compute(i, &mut jitter);
                     {
                         let _act = obs
@@ -1004,11 +1136,14 @@ impl<'a> NodeScheduler<'a> {
                         break 'sweeps;
                     }
                     let i = *i;
+                    if let Some(lane) = spec.lane {
+                        lane.pace(&spec.cancel);
+                    }
                     let k = match spec.order {
                         ClaimOrder::AtomicRace => {
-                            self.k_counter.fetch_add(1, Ordering::Relaxed)
+                            spec.sweep_offset * m + self.k_counter.fetch_add(1, Ordering::Relaxed)
                         }
-                        _ => sweep * m + i,
+                        _ => (spec.sweep_offset + sweep) * m + i,
                     };
                     self.sleep_compute(i, &mut jitter);
                     {
@@ -1061,12 +1196,7 @@ impl<'a> NodeScheduler<'a> {
             }
         }
         let (messages, wire_messages) = transport.counters();
-        Ok((
-            mine.into_iter().map(|(i, node, _)| (i, node)).collect(),
-            messages,
-            wire_messages,
-            sweeps_done,
-        ))
+        Ok((mine, messages, wire_messages, sweeps_done))
     }
 }
 
@@ -1197,5 +1327,44 @@ mod tests {
         let ledger = GateLedger::new(&gate);
         ledger.drain();
         assert_eq!(ledger.served(), 0);
+    }
+
+    #[test]
+    fn claim_arbiter_blocks_the_greedy_lane_until_the_epoch_closes() {
+        let arb = ClaimArbiter::new();
+        let a = arb.register(1);
+        let b = arb.register(1);
+        let cancel = CancelToken::new();
+        a.pace(&cancel); // a spends its whole epoch allotment
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                a.pace(&cancel); // must wait: b still holds a credit
+                true
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            b.pace(&cancel); // closes the epoch → everyone refills
+            assert!(h.join().unwrap());
+        });
+    }
+
+    #[test]
+    fn claim_arbiter_retirement_and_cancel_never_wedge_a_lane() {
+        let arb = ClaimArbiter::new();
+        let a = arb.register(2);
+        let b = arb.register(2);
+        let cancel = CancelToken::new();
+        a.pace(&cancel);
+        a.pace(&cancel);
+        // a is out of credit but b retires (session finished): a's
+        // epochs must keep refilling against an empty field
+        drop(b);
+        for _ in 0..5 {
+            a.pace(&cancel);
+        }
+        // and a tripped cancel token short-circuits pacing outright
+        cancel.cancel();
+        for _ in 0..5 {
+            a.pace(&cancel);
+        }
     }
 }

@@ -195,6 +195,8 @@ pub(crate) fn run(
         order: ClaimOrder::AtomicRace,
         cadence_snapshots: true,
         jitter_salt: 0,
+        sweep_offset: 0,
+        lane: None,
         fault_injection: None,
         obs: Some(obs.clone()),
     });
@@ -362,7 +364,7 @@ pub(crate) fn run(
         cfg.duration
     };
     let mut theta_final = ThetaSeq::new(m_theta);
-    for &(i, ref node) in &outcome.nodes {
+    for &(i, ref node, _) in &outcome.nodes {
         node.eta(&mut theta_final, k_final.max(1), &mut point);
         etas[i * n..(i + 1) * n].copy_from_slice(&point);
     }

@@ -112,6 +112,7 @@ pub mod problems;
 pub mod proptest_util;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 
 /// One-stop imports for examples and binaries.

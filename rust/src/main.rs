@@ -10,6 +10,8 @@
 //! a2dwb speedup  --processes 2 --nodes 16          # sharded over loopback TCP
 //! a2dwb serve    --shard 0/2 --listen 127.0.0.1:7701 --peers 127.0.0.1:7701,127.0.0.1:7702
 //! a2dwb join     --listen 127.0.0.1:7700 --shards 2  # stream + aggregate shard reports
+//! a2dwb daemon   --listen 127.0.0.1:7800 --journal wb.jnl  # multi-tenant service
+//! a2dwb submit   --addr 127.0.0.1:7800 --nodes 8 --duration 5 --progress
 //! a2dwb oracle   --backend pjrt --m 32 --n 100     # oracle micro-check
 //! a2dwb inspect  --topology star --nodes 100       # graph spectral info
 //! ```
@@ -30,8 +32,10 @@ use a2dwb::prelude::{
     ExperimentReport,
 };
 
-const SUBCOMMANDS: &[&str] =
-    &["gaussian", "mnist", "sweep", "speedup", "serve", "join", "oracle", "inspect"];
+const SUBCOMMANDS: &[&str] = &[
+    "gaussian", "mnist", "sweep", "speedup", "serve", "join", "daemon", "submit",
+    "oracle", "inspect",
+];
 
 fn main() {
     let args = match Args::from_env() {
@@ -48,6 +52,8 @@ fn main() {
         Some("speedup") => cmd_speedup(&args),
         Some("serve") => cmd_serve(&args),
         Some("join") => cmd_join(&args),
+        Some("daemon") => cmd_daemon(&args),
+        Some("submit") => cmd_submit(&args),
         Some("oracle") => cmd_oracle(&args),
         Some("inspect") => cmd_inspect(&args),
         _ => {
@@ -540,6 +546,105 @@ fn cmd_sweep(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// Long-lived multi-tenant service: accept experiment submissions over
+/// protocol-v6 frames, multiplex sessions onto one shared worker pool
+/// with admission control, and journal every lifecycle transition so a
+/// killed daemon resumes in-flight runs bit-for-bit on restart.
+fn cmd_daemon(args: &Args) -> i32 {
+    use a2dwb::serve::table::AdmissionPolicy;
+    use a2dwb::serve::{BarycenterDaemon, DaemonOpts};
+    let run = || -> Result<(), String> {
+        args.reject_unknown(&["listen", "journal", "max-cells", "max-sessions"])?;
+        let listen = args.get_str("listen", "127.0.0.1:7800");
+        let journal = args.get_str("journal", "a2dwb-journal.bin");
+        let defaults = AdmissionPolicy::default();
+        let policy = AdmissionPolicy {
+            max_cells: args.get("max-cells", defaults.max_cells)?,
+            max_sessions: args.get("max-sessions", defaults.max_sessions)?,
+        };
+        let daemon = BarycenterDaemon::start(DaemonOpts {
+            listen,
+            journal: journal.clone().into(),
+            policy,
+        })?;
+        println!("daemon listening on {} (journal {journal})", daemon.local_addr());
+        // Ctrl-C drains and shuts down cleanly: residents are cancelled
+        // and journaled Finished. To exercise crash-resume, SIGKILL.
+        let stop = CancelToken::new();
+        stop.cancel_on_sigint();
+        while !stop.is_cancelled() {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        println!("daemon: interrupt — draining and shutting down");
+        daemon.drain();
+        // Per-tenant split plus the pool-wide merge — the service's
+        // parting cost accounting.
+        let (per_session, pool) = daemon.telemetry();
+        for (id, snap) in &per_session {
+            print!("{}", snap.render_table_for(Some(*id)));
+        }
+        print!("{}", pool.render_table());
+        daemon.shutdown()
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Submit one experiment to a running daemon and stream its events
+/// until the terminal Finished frame. `--session ID` re-attaches to an
+/// in-flight session instead (events buffered while detached replay).
+fn cmd_submit(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        args.reject_unknown(&known_flags(&[
+            "addr",
+            "session",
+            "progress",
+            "telemetry",
+        ]))?;
+        let addr = args.get_str("addr", "127.0.0.1:7800");
+        let mut observer: Box<dyn RunObserver> = if args.has_flag("progress") {
+            Box::new(progress_printer())
+        } else {
+            Box::new(|_: &RunEvent| {})
+        };
+        let totals = match args.get_opt("session") {
+            Some(id) => {
+                let id: u64 = id.parse().map_err(|e| format!("--session: {e}"))?;
+                a2dwb::serve::attach(&addr, id, &mut |ev| observer.on_event(ev))?
+            }
+            None => {
+                let cfg = ExperimentBuilder::from_cli_args(args, args.has_flag("mnist"))?
+                    .config()?;
+                a2dwb::serve::submit(&addr, &cfg, &mut |ev| observer.on_event(ev))?
+            }
+        };
+        println!(
+            "session finished: {} on {} — {} activations, {} messages{}",
+            totals.tag,
+            totals.algorithm.name(),
+            totals.activations,
+            totals.messages,
+            if totals.cancelled { " (cancelled)" } else { "" }
+        );
+        if args.has_flag("telemetry") {
+            print!("{}", totals.telemetry.render_table());
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_oracle(args: &Args) -> i32 {

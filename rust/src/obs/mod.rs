@@ -59,14 +59,16 @@ use std::time::Instant;
 pub const NUM_BUCKETS: usize = 32;
 
 /// Wire-kind table width: index 0 is "unknown", 1..=10 are the codec's
-/// frame kinds (hello, grad, done, bye, report, snapshot, cancel,
-/// telemetry, gradq, heartbeat).
-pub const WIRE_KINDS: usize = 11;
+/// mesh frame kinds (hello, grad, done, bye, report, snapshot, cancel,
+/// telemetry, gradq, heartbeat), 11..=16 the protocol-v6 daemon
+/// service kinds (submit, accept, reject, session_event,
+/// session_cancel, drain). Append-only, like the counter registry.
+pub const WIRE_KINDS: usize = 17;
 
 /// Human names for the wire-kind table rows.
 pub const WIRE_KIND_NAMES: [&str; WIRE_KINDS] = [
     "?", "hello", "grad", "done", "bye", "report", "snapshot", "cancel", "telemetry", "gradq",
-    "heartbeat",
+    "heartbeat", "submit", "accept", "reject", "session_event", "session_cancel", "drain",
 ];
 
 /// Number of registry counters ([`Counter::ALL`]).
@@ -718,8 +720,19 @@ impl TelemetrySnapshot {
 
     /// Human summary table (the `--telemetry` CLI surface).
     pub fn render_table(&self) -> String {
+        self.render_table_for(None)
+    }
+
+    /// [`TelemetrySnapshot::render_table`] with an optional session
+    /// column: the daemon's multi-tenant view prints one table per
+    /// resident session (tagged by id) plus the pool-wide merge
+    /// (untagged), so per-tenant and shared-pool costs stay separable.
+    pub fn render_table_for(&self, session: Option<u64>) -> String {
         let mut s = String::new();
-        s.push_str("telemetry:\n");
+        match session {
+            Some(id) => s.push_str(&format!("telemetry [session {id}]:\n")),
+            None => s.push_str("telemetry:\n"),
+        }
         for (i, &c) in Counter::ALL.iter().enumerate() {
             let v = self.counters.get(i).copied().unwrap_or(0);
             if v != 0 {
@@ -985,5 +998,9 @@ mod tests {
         assert!(table.contains("messages"));
         assert!(table.contains("grad"));
         assert!(!table.contains("oracle_passes"));
+        // Multi-tenant tagging: same rows, session-labelled header.
+        let tagged = t.snapshot().render_table_for(Some(7));
+        assert!(tagged.starts_with("telemetry [session 7]:"));
+        assert_eq!(table.lines().count(), tagged.lines().count());
     }
 }

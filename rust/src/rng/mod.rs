@@ -61,6 +61,25 @@ impl Rng64 {
         Self { s }
     }
 
+    /// Raw generator state, for checkpointing. Restoring via
+    /// [`Rng64::from_state`] resumes the stream exactly where
+    /// [`Rng64::state`] observed it.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng64::state`] snapshot. An
+    /// all-zero state (invalid for xoshiro, and never produced by a
+    /// live generator) is coerced to the same non-zero word
+    /// [`Rng64::new`] uses, so a zeroed checkpoint field cannot wedge
+    /// the stream.
+    pub fn from_state(mut s: [u64; 4]) -> Self {
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
     /// Derive an independent child stream (used for per-node seeding).
     pub fn split(&mut self, tag: u64) -> Rng64 {
         let a = self.next_u64();

@@ -1,0 +1,382 @@
+//! Append-only session journal — the daemon's write-ahead log.
+//!
+//! Every lifecycle transition of a resident session is appended as one
+//! framed record **before** the daemon acts on it, so a daemon killed
+//! at any instant can replay the file and reconstruct which sessions
+//! were in flight and where each one stood:
+//!
+//! ```text
+//! file   := magic b"A2DWBJNL" | version u32 LE | record*
+//! record := len u32 LE | kind u8 | payload        (len covers kind+payload)
+//! kind 1 := Submitted  { session u64, fingerprint u64,
+//!                        argc u32, (len u32, utf-8 bytes)* }
+//! kind 2 := Started    { session u64 }
+//! kind 3 := Checkpoint { session u64, Checkpoint image (its own format) }
+//! kind 4 := Finished   { session u64, cancelled u8 }
+//! ```
+//!
+//! The `Submitted` record carries the experiment as the
+//! [`experiment_args`](crate::exec::net::shard) CLI-flag vector — the
+//! same self-describing serialization the v6 `Submit` wire frame uses —
+//! so replay re-parses it through the one config codepath that is
+//! round-trip tested. `Checkpoint` records embed the
+//! [`Checkpoint`](crate::coordinator::Checkpoint) v2 image verbatim
+//! (fingerprint-guarded against config drift).
+//!
+//! Replay contract: a record is only trusted if it is *complete*; a
+//! truncated tail (the crash happened mid-append) is silently
+//! discarded, which is exactly the WAL guarantee — you lose at most
+//! the record being written, never the prefix. Corruption *inside* a
+//! complete record is an error: that file lies, and resuming from it
+//! would violate the bit-exactness contract.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::checkpoint::Checkpoint;
+
+const MAGIC: &[u8; 8] = b"A2DWBJNL";
+const VERSION: u32 = 1;
+
+const REC_SUBMITTED: u8 = 1;
+const REC_STARTED: u8 = 2;
+const REC_CHECKPOINT: u8 = 3;
+const REC_FINISHED: u8 = 4;
+
+/// Cap on a single record (a checkpoint for a paper-scale mesh fits
+/// well under this); larger lengths mean the file is corrupt.
+const MAX_RECORD_BYTES: u32 = 256 << 20;
+
+/// Append handle. One per daemon; records are written with a single
+/// `write_all` each so an in-process crash can only truncate the tail.
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Open for appending, writing the header if the file is new (or
+    /// empty). Refuses a non-empty file that lacks the magic.
+    pub fn open(path: &Path) -> Result<Self, String> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("open journal {}: {e}", path.display()))?;
+        let len = file
+            .metadata()
+            .map_err(|e| format!("stat journal: {e}"))?
+            .len();
+        if len == 0 {
+            let mut header = Vec::with_capacity(12);
+            header.extend_from_slice(MAGIC);
+            header.extend_from_slice(&VERSION.to_le_bytes());
+            file.write_all(&header)
+                .map_err(|e| format!("write journal header: {e}"))?;
+        } else {
+            let mut magic = [0u8; 8];
+            file.read_exact(&mut magic)
+                .map_err(|e| format!("read journal header: {e}"))?;
+            if &magic != MAGIC {
+                return Err(format!(
+                    "{} is not a session journal (bad magic)",
+                    path.display()
+                ));
+            }
+        }
+        Ok(Self { file, path: path.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append(&mut self, kind: u8, payload: &[u8]) -> Result<(), String> {
+        let len = 1 + payload.len();
+        let mut rec = Vec::with_capacity(4 + len);
+        rec.extend_from_slice(&(len as u32).to_le_bytes());
+        rec.push(kind);
+        rec.extend_from_slice(payload);
+        self.file
+            .write_all(&rec)
+            .and_then(|()| self.file.sync_data())
+            .map_err(|e| format!("append journal record: {e}"))
+    }
+
+    /// Record an admitted submission *before* its session runs.
+    pub fn submitted(
+        &mut self,
+        session: u64,
+        fingerprint: u64,
+        args: &[String],
+    ) -> Result<(), String> {
+        let mut p = Vec::new();
+        p.extend_from_slice(&session.to_le_bytes());
+        p.extend_from_slice(&fingerprint.to_le_bytes());
+        p.extend_from_slice(&(args.len() as u32).to_le_bytes());
+        for a in args {
+            p.extend_from_slice(&(a.len() as u32).to_le_bytes());
+            p.extend_from_slice(a.as_bytes());
+        }
+        self.append(REC_SUBMITTED, &p)
+    }
+
+    pub fn started(&mut self, session: u64) -> Result<(), String> {
+        self.append(REC_STARTED, &session.to_le_bytes())
+    }
+
+    pub fn checkpoint(&mut self, session: u64, ck: &Checkpoint) -> Result<(), String> {
+        let mut p = Vec::new();
+        p.extend_from_slice(&session.to_le_bytes());
+        ck.write_to(&mut p)
+            .map_err(|e| format!("serialize checkpoint: {e}"))?;
+        self.append(REC_CHECKPOINT, &p)
+    }
+
+    pub fn finished(&mut self, session: u64, cancelled: bool) -> Result<(), String> {
+        let mut p = Vec::with_capacity(9);
+        p.extend_from_slice(&session.to_le_bytes());
+        p.push(cancelled as u8);
+        self.append(REC_FINISHED, &p)
+    }
+}
+
+/// One journal record, decoded.
+#[derive(Debug)]
+pub enum Record {
+    Submitted { session: u64, fingerprint: u64, args: Vec<String> },
+    Started { session: u64 },
+    Checkpoint { session: u64, image: Checkpoint },
+    Finished { session: u64, cancelled: bool },
+}
+
+/// A session the journal proves was in flight when the daemon died:
+/// `Submitted` with no matching `Finished`. `checkpoint` is the latest
+/// image (None = restart from scratch).
+pub struct ResumableSession {
+    pub session: u64,
+    pub fingerprint: u64,
+    pub args: Vec<String>,
+    pub checkpoint: Option<Checkpoint>,
+}
+
+/// Replay state: resumable sessions (submission order) and the next
+/// free session id.
+pub struct Replay {
+    pub resumable: Vec<ResumableSession>,
+    pub next_session: u64,
+}
+
+fn take<'a>(buf: &mut &'a [u8], n: usize) -> Result<&'a [u8], String> {
+    if buf.len() < n {
+        return Err("journal record truncated inside its frame".into());
+    }
+    let (head, tail) = buf.split_at(n);
+    *buf = tail;
+    Ok(head)
+}
+
+fn take_u64(buf: &mut &[u8]) -> Result<u64, String> {
+    Ok(u64::from_le_bytes(take(buf, 8)?.try_into().unwrap()))
+}
+
+fn take_u32(buf: &mut &[u8]) -> Result<u32, String> {
+    Ok(u32::from_le_bytes(take(buf, 4)?.try_into().unwrap()))
+}
+
+fn decode_record(kind: u8, mut p: &[u8]) -> Result<Record, String> {
+    let rec = match kind {
+        REC_SUBMITTED => {
+            let session = take_u64(&mut p)?;
+            let fingerprint = take_u64(&mut p)?;
+            let argc = take_u32(&mut p)? as usize;
+            if argc.saturating_mul(4) > p.len() {
+                return Err("journal arg count exceeds record".into());
+            }
+            let mut args = Vec::with_capacity(argc);
+            for _ in 0..argc {
+                let n = take_u32(&mut p)? as usize;
+                let bytes = take(&mut p, n)?;
+                args.push(
+                    String::from_utf8(bytes.to_vec())
+                        .map_err(|_| "journal arg is not utf-8".to_string())?,
+                );
+            }
+            Record::Submitted { session, fingerprint, args }
+        }
+        REC_STARTED => Record::Started { session: take_u64(&mut p)? },
+        REC_CHECKPOINT => {
+            let session = take_u64(&mut p)?;
+            let image = Checkpoint::read_from(&mut p)?;
+            Record::Checkpoint { session, image }
+        }
+        REC_FINISHED => {
+            let session = take_u64(&mut p)?;
+            let cancelled = take(&mut p, 1)?[0] != 0;
+            Record::Finished { session, cancelled }
+        }
+        other => return Err(format!("unknown journal record kind {other}")),
+    };
+    if !p.is_empty() {
+        return Err("trailing bytes in journal record".into());
+    }
+    Ok(rec)
+}
+
+/// Read every complete record (see module docs for the truncated-tail
+/// rule). Missing file = empty journal.
+pub fn read_records(path: &Path) -> Result<Vec<Record>, String> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(format!("read journal {}: {e}", path.display())),
+    };
+    if bytes.is_empty() {
+        return Ok(Vec::new());
+    }
+    if bytes.len() < 12 || &bytes[..8] != MAGIC {
+        return Err(format!("{} is not a session journal", path.display()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(format!("unsupported journal version {version}"));
+    }
+    let mut records = Vec::new();
+    let mut pos = 12usize;
+    while pos < bytes.len() {
+        if bytes.len() - pos < 4 {
+            break; // torn length prefix: crash mid-append
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        if len == 0 || len > MAX_RECORD_BYTES {
+            return Err(format!("journal record length {len} is implausible"));
+        }
+        let len = len as usize;
+        if bytes.len() - pos - 4 < len {
+            break; // torn record body: crash mid-append
+        }
+        let kind = bytes[pos + 4];
+        let payload = &bytes[pos + 5..pos + 4 + len];
+        records.push(decode_record(kind, payload)?);
+        pos += 4 + len;
+    }
+    Ok(records)
+}
+
+/// Fold the journal into restart state: which sessions to resume (and
+/// from which checkpoint), and the next session id to hand out.
+pub fn replay(path: &Path) -> Result<Replay, String> {
+    let mut resumable: Vec<ResumableSession> = Vec::new();
+    let mut next_session = 1u64;
+    for rec in read_records(path)? {
+        match rec {
+            Record::Submitted { session, fingerprint, args } => {
+                next_session = next_session.max(session + 1);
+                resumable.push(ResumableSession {
+                    session,
+                    fingerprint,
+                    args,
+                    checkpoint: None,
+                });
+            }
+            Record::Started { .. } => {}
+            Record::Checkpoint { session, image } => {
+                if let Some(s) = resumable.iter_mut().find(|s| s.session == session) {
+                    if image.fingerprint != s.fingerprint {
+                        return Err(format!(
+                            "journal checkpoint for session {session} has \
+                             fingerprint {:#018x}, submission said {:#018x}",
+                            image.fingerprint, s.fingerprint
+                        ));
+                    }
+                    s.checkpoint = Some(image);
+                }
+            }
+            Record::Finished { session, .. } => {
+                resumable.retain(|s| s.session != session);
+            }
+        }
+    }
+    Ok(Replay { resumable, next_session })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("a2dwb_journal_{name}_{}", std::process::id()));
+        p
+    }
+
+    fn sample_checkpoint(fingerprint: u64) -> Checkpoint {
+        use crate::algo::wbp::WbpNode;
+        let mut nodes: Vec<WbpNode> = (0..2).map(|_| WbpNode::new(3, 1)).collect();
+        for (i, nd) in nodes.iter_mut().enumerate() {
+            nd.u[i] = 1.5 + i as f64;
+            nd.last_update_iter = i + 1;
+            nd.activations = (i + 1) as u64;
+        }
+        let rngs = vec![Rng64::new(7), Rng64::new(8)];
+        Checkpoint::capture(&nodes, &rngs, 0.25, 4, fingerprint)
+    }
+
+    #[test]
+    fn lifecycle_replays_to_the_latest_checkpoint() {
+        let path = tmp("lifecycle");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.submitted(1, 0xAB, &["--nodes".into(), "2".into()]).unwrap();
+            j.started(1).unwrap();
+            j.submitted(2, 0xCD, &["--nodes".into(), "4".into()]).unwrap();
+            j.checkpoint(1, &sample_checkpoint(0xAB)).unwrap();
+            j.finished(2, true).unwrap();
+        }
+        // Reopen-append survives (daemon restart without loss).
+        {
+            let mut j = Journal::open(&path).unwrap();
+            let mut ck = sample_checkpoint(0xAB);
+            ck.k = 8;
+            j.checkpoint(1, &ck).unwrap();
+        }
+        let replayed = replay(&path).unwrap();
+        assert_eq!(replayed.next_session, 3);
+        assert_eq!(replayed.resumable.len(), 1);
+        let s = &replayed.resumable[0];
+        assert_eq!(s.session, 1);
+        assert_eq!(s.args, vec!["--nodes".to_string(), "2".to_string()]);
+        let ck = s.checkpoint.as_ref().expect("latest checkpoint");
+        assert_eq!(ck.k, 8, "replay keeps the newest image");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_discarded_but_corruption_is_an_error() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.submitted(1, 0xAB, &["--seed".into(), "9".into()]).unwrap();
+            j.started(1).unwrap();
+        }
+        let full = std::fs::read(&path).unwrap();
+        // Torn tail: drop the last 3 bytes of the Started record.
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let recs = read_records(&path).unwrap();
+        assert_eq!(recs.len(), 1, "only the complete prefix survives");
+        // Corruption inside a complete record: flip the kind byte.
+        let mut bad = full.clone();
+        bad[16] = 99; // first record's kind byte (12-byte header + len u32)
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_records(&path).unwrap_err().contains("unknown journal"));
+        // Bad magic refuses to append.
+        std::fs::write(&path, b"NOTAJRNL plus whatever").unwrap();
+        assert!(Journal::open(&path).unwrap_err().contains("bad magic"));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,569 @@
+//! Multi-tenant barycenter daemon — the service layer.
+//!
+//! `a2dwb daemon` turns the library into a long-lived server: clients
+//! submit experiments over the existing length-prefixed socket codec
+//! (protocol v6's `Submit`/`Accept`/`Reject`/`SessionEvent`/
+//! `SessionCancel`/`Drain` frames), the daemon multiplexes every
+//! admitted session onto one shared worker pool, and a write-ahead
+//! [`journal`] makes the whole thing crash-restartable: a daemon
+//! killed mid-run replays the journal on the next start and resumes
+//! every in-flight session **bit-for-bit** from its last checkpoint.
+//!
+//! The pieces, one module each:
+//!
+//! * [`table`] — admission control (Σ `nodes × support` cell cap,
+//!   session-count cap, backpressure `Reject`) and the per-session
+//!   buffered event feeds clients (re-)attach to by session id.
+//! * [`runner`] — the windowed, checkpointing executor every resident
+//!   session runs on (`workers = 1`, deterministic claims, fair-share
+//!   [`ClaimArbiter`] lane).
+//! * [`journal`] — the append-only session journal and its replay.
+//!
+//! Wire conversation (client side in [`submit`] / [`attach`]):
+//!
+//! ```text
+//! client                          daemon
+//!   Submit{0, args}        →        admission check, journal Submitted
+//!                          ←        Accept{id}   (or Reject{reason})
+//!                          ←        SessionEvent{id, Started}
+//!                          ←        SessionEvent{id, MetricSample…}   (stream)
+//!   SessionCancel{id}      →        cancel that tenant only
+//!                          ←        SessionEvent{id, Finished{…}}
+//! ```
+//!
+//! A client that disconnects loses nothing: events stay in the
+//! session's feed (reads are cursor-based, never destructive) and a
+//! later `Submit{id, []}` (attach form — nonzero id, empty args)
+//! replays the retained history from the start.
+
+pub mod journal;
+pub mod runner;
+pub mod table;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cli::Args;
+use crate::coordinator::checkpoint::{config_fingerprint, Checkpoint};
+use crate::coordinator::session::{RunEvent, RunTotals};
+use crate::coordinator::ExperimentConfig;
+use crate::exec::net::codec::{
+    encode_accept, encode_drain, encode_reject, encode_session_cancel,
+    encode_session_event, encode_submit, FrameReader, ReadEvent, WireMsg,
+};
+use crate::exec::net::shard::experiment_args;
+use crate::exec::sched::ClaimArbiter;
+use crate::obs::{Telemetry, TelemetrySnapshot};
+use journal::Journal;
+use runner::{run_session, SessionRun};
+use table::{AdmissionPolicy, SessionEntry, SessionTable};
+
+/// How a daemon is stood up.
+pub struct DaemonOpts {
+    /// `host:port` to listen on (`127.0.0.1:0` = ephemeral).
+    pub listen: String,
+    /// Write-ahead journal path (created if absent, replayed if not).
+    pub journal: PathBuf,
+    pub policy: AdmissionPolicy,
+}
+
+struct DaemonShared {
+    table: SessionTable,
+    journal: Mutex<Journal>,
+    arbiter: Arc<ClaimArbiter>,
+    draining: AtomicBool,
+    stop: AtomicBool,
+    next_session: AtomicU64,
+    /// Per-session telemetry registries (satellite view of the shared
+    /// pool; merged on demand for the pool-wide table).
+    session_obs: Mutex<Vec<(u64, Arc<Telemetry>)>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running daemon (owned handle; [`BarycenterDaemon::shutdown`]
+/// cancels residents and joins every thread).
+pub struct BarycenterDaemon {
+    addr: SocketAddr,
+    shared: Arc<DaemonShared>,
+    accept_thread: Option<JoinHandle<()>>,
+    resumed: Vec<u64>,
+}
+
+impl BarycenterDaemon {
+    /// Bind, replay the journal (resuming any session it proves was in
+    /// flight), and start accepting submissions.
+    pub fn start(opts: DaemonOpts) -> Result<Self, String> {
+        let replayed = journal::replay(&opts.journal)?;
+        let jr = Journal::open(&opts.journal)?;
+        let listener = TcpListener::bind(&opts.listen)
+            .map_err(|e| format!("bind {}: {e}", opts.listen))?;
+        let addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("set_nonblocking: {e}"))?;
+
+        let shared = Arc::new(DaemonShared {
+            table: SessionTable::new(opts.policy),
+            journal: Mutex::new(jr),
+            arbiter: ClaimArbiter::new(),
+            draining: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            next_session: AtomicU64::new(replayed.next_session),
+            session_obs: Mutex::new(Vec::new()),
+            workers: Mutex::new(Vec::new()),
+        });
+
+        let mut resumed = Vec::new();
+        for s in replayed.resumable {
+            // `Args::parse` treats the first bare word as the
+            // subcommand; experiment args are pure flags, so feed a
+            // placeholder and parse flags only.
+            let args = Args::parse(
+                ["daemon".to_string()].into_iter().chain(s.args.iter().cloned()),
+            )
+            .map_err(|e| format!("journal session {}: {e}", s.session))?;
+            let cfg = ExperimentConfig::from_cli_args(&args, args.has_flag("mnist"))?;
+            if config_fingerprint(&cfg) != s.fingerprint {
+                return Err(format!(
+                    "journal session {}: submitted args re-parse to a \
+                     different fingerprint — journal or build drift",
+                    s.session
+                ));
+            }
+            let cells = cfg.nodes * cfg.support_size();
+            let entry = shared.table.admit(s.session, cells)?;
+            let from_k = s.checkpoint.as_ref().map(|c| c.k).unwrap_or(0);
+            println!("resumed session {} from activation {from_k}", s.session);
+            resumed.push(s.session);
+            spawn_runner(&shared, entry, cfg, s.checkpoint);
+        }
+
+        let accept_shared = shared.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("a2dwb-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .map_err(|e| format!("spawn accept thread: {e}"))?;
+
+        Ok(Self { addr, shared, accept_thread: Some(accept_thread), resumed })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Sessions the journal replay restarted.
+    pub fn resumed_sessions(&self) -> &[u64] {
+        &self.resumed
+    }
+
+    /// Stop accepting new submissions; resident sessions run on.
+    pub fn drain(&self) {
+        self.shared.draining.store(true, Ordering::Release);
+    }
+
+    /// Ids currently counted against the admission policy.
+    pub fn resident_sessions(&self) -> Vec<u64> {
+        self.shared.table.resident()
+    }
+
+    /// Cancel one tenant (true if the id resolves).
+    pub fn cancel_session(&self, id: u64) -> bool {
+        self.shared.table.cancel(id)
+    }
+
+    /// Per-session telemetry snapshots plus the pool-wide merge —
+    /// the multi-tenant split `render_table` can tag by session.
+    pub fn telemetry(&self) -> (Vec<(u64, TelemetrySnapshot)>, TelemetrySnapshot) {
+        let per: Vec<(u64, TelemetrySnapshot)> = self
+            .shared
+            .session_obs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, t)| (*id, t.snapshot()))
+            .collect();
+        let mut pool = TelemetrySnapshot::default();
+        for (_, snap) in &per {
+            pool.merge(snap);
+        }
+        (per, pool)
+    }
+
+    /// Cancel every resident session, stop the listener, join all
+    /// threads. The journal keeps `Finished(cancelled)` records, so a
+    /// later daemon does **not** resume sessions shut down this way —
+    /// kill the process instead to exercise crash-resume.
+    pub fn shutdown(mut self) -> Result<(), String> {
+        for id in self.shared.table.resident() {
+            self.shared.table.cancel(id);
+        }
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            t.join().map_err(|_| "accept thread panicked".to_string())?;
+        }
+        loop {
+            let worker = self.shared.workers.lock().unwrap().pop();
+            match worker {
+                Some(t) => t
+                    .join()
+                    .map_err(|_| "daemon worker thread panicked".to_string())?,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<DaemonShared>) {
+    while !shared.stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn_shared = shared.clone();
+                let handle = std::thread::Builder::new()
+                    .name("a2dwb-conn".into())
+                    .spawn(move || {
+                        if let Err(e) = handle_conn(stream, &conn_shared) {
+                            eprintln!("daemon connection error: {e}");
+                        }
+                    });
+                match handle {
+                    Ok(h) => shared.workers.lock().unwrap().push(h),
+                    Err(e) => eprintln!("daemon: spawn connection thread: {e}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                eprintln!("daemon accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn send(stream: &Arc<Mutex<TcpStream>>, frame: &[u8]) -> Result<(), String> {
+    use std::io::Write;
+    stream
+        .lock()
+        .unwrap()
+        .write_all(frame)
+        .map_err(|e| format!("socket write: {e}"))
+}
+
+/// Stream one session's feed down a connection until the feed closes
+/// or the peer goes away.
+fn spawn_feeder(
+    shared: &Arc<DaemonShared>,
+    entry: Arc<SessionEntry>,
+    writer: Arc<Mutex<TcpStream>>,
+) {
+    let stop_shared = shared.clone();
+    let handle = std::thread::Builder::new()
+        .name("a2dwb-feed".into())
+        .spawn(move || {
+            let mut cursor = 0u64;
+            loop {
+                if stop_shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                match entry.feed.read_from(&mut cursor, Duration::from_millis(100))
+                {
+                    None => return, // closed and this cursor is caught up
+                    Some(events) => {
+                        for ev in events {
+                            let frame = encode_session_event(entry.id, &ev);
+                            if send(&writer, &frame).is_err() {
+                                // Client went away. Reads are
+                                // non-destructive, so a later attach
+                                // replays everything from its own
+                                // fresh cursor.
+                                return;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    match handle {
+        Ok(h) => shared.workers.lock().unwrap().push(h),
+        Err(e) => eprintln!("daemon: spawn feeder thread: {e}"),
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &Arc<DaemonShared>) -> Result<(), String> {
+    stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .map_err(|e| format!("set_read_timeout: {e}"))?;
+    let writer = Arc::new(Mutex::new(
+        stream.try_clone().map_err(|e| format!("clone stream: {e}"))?,
+    ));
+    let mut reader = FrameReader::new(stream);
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let msg = match reader.next_frame()? {
+            ReadEvent::Timeout => continue,
+            ReadEvent::Eof => return Ok(()),
+            ReadEvent::Msg(m) => m,
+        };
+        match msg {
+            WireMsg::Submit { session: 0, args } => {
+                if shared.draining.load(Ordering::Acquire) {
+                    send(&writer, &encode_reject("daemon is draining"))?;
+                    continue;
+                }
+                // Flags-only vector: give Args::parse a subcommand
+                // placeholder (it treats the first bare word as one).
+                let parsed =
+                    match Args::parse(["daemon".to_string()].into_iter().chain(args.iter().cloned()))
+                        .and_then(|a| {
+                            ExperimentConfig::from_cli_args(&a, a.has_flag("mnist"))
+                                .map(|cfg| (a, cfg))
+                        }) {
+                        Ok((_, cfg)) => cfg,
+                        Err(e) => {
+                            send(&writer, &encode_reject(&format!("bad submission: {e}")))?;
+                            continue;
+                        }
+                    };
+                let cells = parsed.nodes * parsed.support_size();
+                let id = shared.next_session.fetch_add(1, Ordering::AcqRel);
+                match shared.table.admit(id, cells) {
+                    Err(reason) => send(&writer, &encode_reject(&reason))?,
+                    Ok(entry) => {
+                        let logged = shared
+                            .journal
+                            .lock()
+                            .unwrap()
+                            .submitted(id, config_fingerprint(&parsed), &args);
+                        if let Err(e) = logged {
+                            // No journal record ⇒ no session: the WAL
+                            // must lead every state transition.
+                            shared.table.forget(id);
+                            send(&writer, &encode_reject(&format!("journal: {e}")))?;
+                            continue;
+                        }
+                        send(&writer, &encode_accept(id))?;
+                        spawn_runner(shared, entry.clone(), parsed, None);
+                        spawn_feeder(shared, entry, writer.clone());
+                    }
+                }
+            }
+            WireMsg::Submit { session, args } if args.is_empty() => {
+                // Attach form: stream an existing session's feed.
+                match shared.table.get(session) {
+                    Some(entry) => {
+                        send(&writer, &encode_accept(session))?;
+                        spawn_feeder(shared, entry, writer.clone());
+                    }
+                    None => send(
+                        &writer,
+                        &encode_reject(&format!("unknown session {session}")),
+                    )?,
+                }
+            }
+            WireMsg::Submit { session, .. } => send(
+                &writer,
+                &encode_reject(&format!(
+                    "submission must use session 0 (got {session}); \
+                     attach uses an empty arg vector"
+                )),
+            )?,
+            WireMsg::SessionCancel { session } => {
+                if !shared.table.cancel(session) {
+                    send(
+                        &writer,
+                        &encode_reject(&format!("unknown session {session}")),
+                    )?;
+                }
+            }
+            WireMsg::Drain => {
+                shared.draining.store(true, Ordering::Release);
+            }
+            other => {
+                return Err(format!(
+                    "unexpected frame on a daemon connection: {other:?}"
+                ))
+            }
+        }
+    }
+}
+
+fn spawn_runner(
+    shared: &Arc<DaemonShared>,
+    entry: Arc<SessionEntry>,
+    cfg: ExperimentConfig,
+    resume: Option<Checkpoint>,
+) {
+    let shared = shared.clone();
+    let obs = Arc::new(Telemetry::new(cfg.nodes));
+    shared.session_obs.lock().unwrap().push((entry.id, obs.clone()));
+    let handle = std::thread::Builder::new()
+        .name(format!("a2dwb-session-{}", entry.id))
+        .spawn(move || {
+            let id = entry.id;
+            if let Err(e) = shared.journal.lock().unwrap().started(id) {
+                eprintln!("session {id}: journal: {e}");
+            }
+            let lane = shared.arbiter.register(1);
+            let run = SessionRun {
+                cfg: &cfg,
+                cancel: entry.cancel.clone(),
+                lane: Some(&lane),
+                obs,
+                resume: resume.as_ref(),
+            };
+            let feed = &entry.feed;
+            let result = run_session(
+                run,
+                &mut |ck| shared.journal.lock().unwrap().checkpoint(id, ck),
+                &mut |ev| feed.push(ev),
+            );
+            let cancelled = match &result {
+                Ok(totals) => totals.cancelled,
+                Err(e) => {
+                    eprintln!("session {id} failed: {e}");
+                    true
+                }
+            };
+            if let Err(e) = shared.journal.lock().unwrap().finished(id, cancelled) {
+                eprintln!("session {id}: journal: {e}");
+            }
+            shared.table.release(id);
+            entry.feed.close();
+        });
+    match handle {
+        Ok(h) => shared.workers.lock().unwrap().push(h),
+        Err(e) => eprintln!("daemon: spawn session thread: {e}"),
+    }
+}
+
+// ------------------------------------------------------------ client side
+
+fn connect(addr: &str) -> Result<TcpStream, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .map_err(|e| format!("set_read_timeout: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
+}
+
+fn stream_until_finished(
+    reader: &mut FrameReader<TcpStream>,
+    session: u64,
+    on_event: &mut dyn FnMut(&RunEvent),
+) -> Result<RunTotals, String> {
+    loop {
+        match reader.next_frame()? {
+            ReadEvent::Timeout => continue,
+            ReadEvent::Eof => {
+                return Err(format!(
+                    "daemon closed the stream before session {session} finished"
+                ))
+            }
+            ReadEvent::Msg(WireMsg::SessionEvent { session: s, event })
+                if s == session =>
+            {
+                on_event(&event);
+                if let RunEvent::Finished(totals) = event {
+                    return Ok(totals);
+                }
+            }
+            ReadEvent::Msg(WireMsg::Reject { reason }) => {
+                return Err(format!("daemon rejected mid-stream: {reason}"))
+            }
+            ReadEvent::Msg(_) => continue,
+        }
+    }
+}
+
+fn expect_accept(reader: &mut FrameReader<TcpStream>) -> Result<u64, String> {
+    loop {
+        match reader.next_frame()? {
+            ReadEvent::Timeout => continue,
+            ReadEvent::Eof => return Err("daemon closed before replying".into()),
+            ReadEvent::Msg(WireMsg::Accept { session }) => return Ok(session),
+            ReadEvent::Msg(WireMsg::Reject { reason }) => {
+                return Err(format!("rejected: {reason}"))
+            }
+            ReadEvent::Msg(other) => {
+                return Err(format!("expected Accept/Reject, got {other:?}"))
+            }
+        }
+    }
+}
+
+/// Submit `cfg` to a daemon and stream its events until the terminal
+/// [`RunEvent::Finished`]. `Err("rejected: …")` carries the daemon's
+/// backpressure reason.
+pub fn submit(
+    addr: &str,
+    cfg: &ExperimentConfig,
+    on_event: &mut dyn FnMut(&RunEvent),
+) -> Result<RunTotals, String> {
+    use std::io::Write;
+    let args = experiment_args(cfg)?;
+    let mut stream = connect(addr)?;
+    stream
+        .write_all(&encode_submit(0, &args))
+        .map_err(|e| format!("send submit: {e}"))?;
+    let mut reader = FrameReader::new(stream);
+    let session = expect_accept(&mut reader)?;
+    stream_until_finished(&mut reader, session, on_event)
+}
+
+/// Submit without waiting for events; returns the accepted session id
+/// (the connection is dropped, so events buffer in the daemon until an
+/// [`attach`]).
+pub fn submit_detached(addr: &str, cfg: &ExperimentConfig) -> Result<u64, String> {
+    use std::io::Write;
+    let args = experiment_args(cfg)?;
+    let mut stream = connect(addr)?;
+    stream
+        .write_all(&encode_submit(0, &args))
+        .map_err(|e| format!("send submit: {e}"))?;
+    let mut reader = FrameReader::new(stream);
+    expect_accept(&mut reader)
+}
+
+/// Re-attach to a session by id and stream until it finishes.
+pub fn attach(
+    addr: &str,
+    session: u64,
+    on_event: &mut dyn FnMut(&RunEvent),
+) -> Result<RunTotals, String> {
+    use std::io::Write;
+    let mut stream = connect(addr)?;
+    stream
+        .write_all(&encode_submit(session, &[]))
+        .map_err(|e| format!("send attach: {e}"))?;
+    let mut reader = FrameReader::new(stream);
+    let sid = expect_accept(&mut reader)?;
+    stream_until_finished(&mut reader, sid, on_event)
+}
+
+/// Ask the daemon to cancel one session. Fire-and-forget: a `Reject`
+/// only comes back for unknown ids, and this helper does not wait.
+pub fn cancel(addr: &str, session: u64) -> Result<(), String> {
+    use std::io::Write;
+    let mut stream = connect(addr)?;
+    stream
+        .write_all(&encode_session_cancel(session))
+        .map_err(|e| format!("send cancel: {e}"))
+}
+
+/// Ask the daemon to stop accepting new submissions.
+pub fn drain(addr: &str) -> Result<(), String> {
+    use std::io::Write;
+    let mut stream = connect(addr)?;
+    stream
+        .write_all(&encode_drain())
+        .map_err(|e| format!("send drain: {e}"))
+}

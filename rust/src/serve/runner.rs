@@ -1,0 +1,361 @@
+//! Windowed, checkpointing session runner — the daemon's per-tenant
+//! executor.
+//!
+//! One resident session runs here instead of going through the
+//! [`crate::exec::threaded`] executor directly: the sweep budget is cut
+//! into **windows** (sized by the session's
+//! [`SampleCadence`](crate::exec::SampleCadence)), and between windows
+//! the runner captures a full [`Checkpoint`] (dual iterates, latest
+//! broadcast gradients and stamps, activation counters, RNG streams)
+//! and hands it to the caller's journal sink. Windows run at
+//! `workers = 1` with [`ClaimOrder::Deterministic`] claims, so
+//!
+//! * the activation sequence of window `w` continues the global
+//!   iteration index via [`SchedulerSpec::sweep_offset`], and
+//! * a run resumed from the checkpoint after window `w` replays
+//!   windows `w+1..` **bit-for-bit** identical to one uninterrupted
+//!   run — the property `rust/tests/daemon.rs` pins.
+//!
+//! Resume rebuilds the mailbox grid without having serialized it:
+//! at a sweep boundary every node has broadcast its `own_grad` at
+//! stamp `last_update_iter`, so republishing exactly that pair into a
+//! fresh freshest-wins [`MailboxGrid`] reconstructs every slot (stamps
+//! `>= 1` dominate the zero-initialized slots, and each node's
+//! `collect` precedes its next `apply_update`, so no zeroed mailbox is
+//! ever consumed).
+//!
+//! Fair-share multi-tenancy enters through the optional
+//! [`SessionLane`]: claim pacing only ever delays a claim, so the
+//! interleaving of tenants on the shared pool never perturbs any
+//! session's RNG streams or math — concurrent tenants reproduce their
+//! solo trajectories bit-identically (also pinned by the tests).
+
+use std::sync::Arc;
+
+use crate::algo::wbp::WbpNode;
+use crate::algo::{AlgorithmKind, ThetaSeq};
+use crate::coordinator::checkpoint::{config_fingerprint, Checkpoint};
+use crate::coordinator::session::{CancelToken, RunEvent, RunTotals};
+use crate::coordinator::{ExperimentConfig, MetricsEvaluator};
+use crate::exec::sched::{
+    ClaimOrder, FreeGate, LocalGate, NoHooks, NodeScheduler, RoundGate, SchedulerSpec,
+    SessionLane,
+};
+use crate::exec::transport::{MailboxGrid, ThreadedTransport};
+use crate::exec::{initial_exchange, SampleCadence};
+use crate::graph::Graph;
+use crate::measures::Samples;
+use crate::obs::{Counter, Telemetry};
+use crate::rng::Rng64;
+
+/// Everything one daemon session needs to run: the parsed config plus
+/// the multi-tenancy seams (lane, cancel, telemetry) and the resume
+/// image. The journal sink and event feed are passed to
+/// [`run_session`] as closures so the daemon owns the I/O.
+pub struct SessionRun<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub cancel: CancelToken,
+    /// Fair-share pacing lane (`None` when the pool has one tenant).
+    pub lane: Option<&'a SessionLane>,
+    /// Per-session telemetry registry; the daemon merges snapshots
+    /// across tenants for the pool-wide view.
+    pub obs: Arc<Telemetry>,
+    /// Journal image to resume from (fingerprint must match `cfg`).
+    pub resume: Option<&'a Checkpoint>,
+}
+
+/// Sweeps per checkpoint window for this config: the
+/// [`SampleCadence::Activations`] budget rounded up to whole sweeps
+/// (deterministic cadence — what the resume tests use); the wall-clock
+/// cadence gets single-sweep windows and the runner decides per
+/// boundary whether the interval has elapsed.
+fn window_sweeps(cfg: &ExperimentConfig, m: usize) -> usize {
+    match cfg.sample_cadence {
+        SampleCadence::Activations(k) => ((k as usize) + m - 1) / m,
+        SampleCadence::WallClockMillis(_) => 1,
+    }
+    .max(1)
+}
+
+/// Run one session to completion (or cancellation), checkpointing at
+/// every window boundary through `on_checkpoint` and streaming
+/// [`RunEvent`]s through `emit`. Returns the same [`RunTotals`] the
+/// terminal [`RunEvent::Finished`] carries.
+///
+/// Determinism contract: `workers = 1`, deterministic claims, metric
+/// evaluation only at window boundaries on the common θ index — the
+/// emitted `(t, dual, consensus, spread)` series and the final
+/// barycenter are pure functions of (`cfg`, resume point), never of
+/// wall-clock scheduling. `wall` fields and telemetry counters are the
+/// only honest-clock values in the stream.
+pub fn run_session(
+    run: SessionRun<'_>,
+    on_checkpoint: &mut dyn FnMut(&Checkpoint) -> Result<(), String>,
+    emit: &mut dyn FnMut(RunEvent),
+) -> Result<RunTotals, String> {
+    let cfg = run.cfg;
+    cfg.validate()?;
+    if cfg.faults.drop_prob > 0.0 {
+        return Err(
+            "drop_prob > 0 is modeled by the sim executor only; the daemon \
+             runner has no message-loss model"
+                .into(),
+        );
+    }
+    let m = cfg.nodes;
+    let n = cfg.support_size();
+    let graph = Graph::build(m, cfg.topology);
+    let obs = run.obs;
+    let measures = cfg.measure.build_network(m, cfg.seed);
+    let mut init_oracle = cfg.backend.build(cfg.samples_per_activation, n)?;
+    init_oracle.attach_obs(obs.clone());
+    init_oracle.set_kernel(cfg.kernel);
+    let lambda_max = graph.lambda_max();
+    let gamma = cfg.gamma_scale / (lambda_max / cfg.beta);
+
+    let sync = cfg.algorithm == AlgorithmKind::Dcwb;
+    let compensated = cfg.algorithm != AlgorithmKind::A2dwbn;
+    let m_theta = if sync { 1 } else { m };
+    let total_sweeps =
+        ((cfg.duration / cfg.activation_interval).round() as usize).max(1);
+    // Σ out-degree — messages one full sweep (or one initial exchange)
+    // puts on the grid; used to reconstruct the pre-crash message
+    // count on resume so a resumed run's totals match an uninterrupted
+    // one.
+    let total_deg: u64 = (0..m).map(|i| graph.degree(i) as u64).sum();
+
+    let fingerprint = config_fingerprint(cfg);
+    let mut nodes: Vec<WbpNode> =
+        (0..m).map(|i| WbpNode::new(n, graph.degree(i))).collect();
+    let mut root = Rng64::new(cfg.seed ^ 0x5254_4E44);
+    let mut node_rngs: Vec<Rng64> = (0..m).map(|i| root.split(i as u64)).collect();
+    let node_factors = cfg.faults.node_factors(m, cfg.seed);
+
+    let mut grid = MailboxGrid::new(&graph, n);
+    grid.attach_obs(obs.clone());
+    let mut samples = Samples::empty();
+    let mut point = vec![0.0; n];
+    let mut messages: u64 = 0;
+    // Sweeps completed before this process (resume) plus in it.
+    let mut done: usize = 0;
+
+    emit(RunEvent::Started {
+        tag: cfg.tag(),
+        algorithm: cfg.algorithm,
+        nodes: m,
+        support: n,
+    });
+
+    let mut evaluator =
+        MetricsEvaluator::new(&graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
+    evaluator.set_kernel(cfg.kernel);
+    let mut etas = vec![0.0; m * n];
+
+    if let Some(ck) = run.resume {
+        if ck.fingerprint != fingerprint {
+            return Err(format!(
+                "checkpoint fingerprint {:#018x} does not match this \
+                 config's {:#018x} — refusing to resume a different experiment",
+                ck.fingerprint, fingerprint
+            ));
+        }
+        node_rngs = ck.restore_full(&mut nodes)?;
+        if ck.k % m as u64 != 0 {
+            return Err("checkpoint is not at a sweep boundary".into());
+        }
+        done = (ck.k / m as u64) as usize;
+        // Rebuild the grid: each node's freshest broadcast, verbatim.
+        for (i, nd) in nodes.iter().enumerate() {
+            let stamp = nd.last_update_iter as u64;
+            grid.publish(i, stamp, &Arc::new(nd.own_grad.clone()));
+        }
+        // The republish re-sends what the pre-crash process already
+        // paid for; charge the uninterrupted run's deterministic tally
+        // instead, so a resumed run's totals match an unbroken one.
+        messages = done as u64 * total_deg + if sync { 0 } else { total_deg };
+    } else {
+        if !sync {
+            // Algorithm 3 line 1 (DCWB's first fenced round delivers
+            // fresh gradients itself).
+            let mut theta0 = ThetaSeq::new(m_theta);
+            let mut transport = ThreadedTransport::new(&grid);
+            initial_exchange(
+                &mut nodes,
+                &mut theta0,
+                &measures,
+                &mut node_rngs,
+                init_oracle.as_mut(),
+                &mut samples,
+                cfg.samples_per_activation,
+                &mut point,
+                cfg.beta,
+                &mut transport,
+            );
+            messages += transport.messages;
+        }
+        // t = 0 sample of the zero state, matching the other backends.
+        let (dual, consensus, spread) = evaluator.evaluate(&etas, &measures);
+        emit(RunEvent::MetricSample { t: 0.0, wall: 0.0, dual, consensus, spread });
+    }
+
+    let window = window_sweeps(cfg, m);
+    let wall_every_ms = match cfg.sample_cadence {
+        SampleCadence::WallClockMillis(ms) => Some(ms),
+        SampleCadence::Activations(_) => None,
+    };
+    let wall_t0 = std::time::Instant::now();
+    let mut last_wall_mark = std::time::Instant::now();
+
+    // Common-θ metric snapshot of the current node state at the sweep
+    // boundary `done` — the deterministic boundary analogue of the
+    // threaded executor's final snapshot.
+    let mut boundary_sample = |nodes: &[WbpNode],
+                               evaluator: &mut MetricsEvaluator,
+                               etas: &mut [f64],
+                               point: &mut [f64],
+                               done: usize,
+                               t: f64,
+                               wall: f64,
+                               emit: &mut dyn FnMut(RunEvent)| {
+        let k_eval = if sync { done } else { done * m };
+        let mut theta = ThetaSeq::new(m_theta);
+        for (i, node) in nodes.iter().enumerate() {
+            node.eta(&mut theta, k_eval.max(1), point);
+            etas[i * n..(i + 1) * n].copy_from_slice(point);
+        }
+        let (dual, consensus, spread) = evaluator.evaluate(etas, &measures);
+        emit(RunEvent::MetricSample { t, wall, dual, consensus, spread });
+    };
+
+    while done < total_sweeps && !run.cancel.is_cancelled() {
+        let this_window = window.min(total_sweeps - done);
+        let dealt: Vec<(usize, WbpNode, Rng64)> = nodes
+            .drain(..)
+            .zip(node_rngs.drain(..))
+            .enumerate()
+            .map(|(i, (node, rng))| (i, node, rng))
+            .collect();
+        let per_worker = NodeScheduler::deal_round_robin(dealt, 1);
+        let sched = NodeScheduler::new(SchedulerSpec {
+            cfg,
+            graph: &graph,
+            measures: &measures,
+            range: 0..m,
+            workers: 1,
+            sweeps: this_window,
+            gamma,
+            m_theta,
+            sync,
+            compensated,
+            node_factors: &node_factors,
+            cancel: run.cancel.clone(),
+            order: ClaimOrder::Deterministic,
+            cadence_snapshots: false,
+            jitter_salt: 0,
+            sweep_offset: done,
+            lane: run.lane,
+            fault_injection: None,
+            obs: Some(obs.clone()),
+        });
+        let local_gate;
+        let free_gate;
+        let gate: &dyn RoundGate = if sync {
+            local_gate = LocalGate::new(1, 2 * this_window);
+            &local_gate
+        } else {
+            free_gate = FreeGate;
+            &free_gate
+        };
+        let outcome = sched.run(
+            per_worker,
+            &|_w| ThreadedTransport::new(&grid),
+            gate,
+            &NoHooks,
+            &mut || {},
+        )?;
+        messages += outcome.messages;
+        done += outcome.sweeps_done_min;
+        debug_assert_eq!(outcome.nodes.len(), m);
+        for (i, node, rng) in outcome.nodes {
+            debug_assert_eq!(i, nodes.len());
+            nodes.push(node);
+            node_rngs.push(rng);
+        }
+        if run.cancel.is_cancelled() {
+            break;
+        }
+        let due = match wall_every_ms {
+            None => true,
+            Some(ms) => {
+                let elapsed =
+                    last_wall_mark.elapsed().as_millis() as u64 >= ms;
+                if elapsed {
+                    last_wall_mark = std::time::Instant::now();
+                }
+                elapsed || done >= total_sweeps
+            }
+        };
+        if !due {
+            continue;
+        }
+        let t = (done as f64 * cfg.activation_interval).min(cfg.duration);
+        let ck = Checkpoint::capture(
+            &nodes,
+            &node_rngs,
+            t,
+            (done * m) as u64,
+            fingerprint,
+        );
+        on_checkpoint(&ck)?;
+        boundary_sample(
+            &nodes,
+            &mut evaluator,
+            &mut etas,
+            &mut point,
+            done,
+            t,
+            wall_t0.elapsed().as_secs_f64(),
+            emit,
+        );
+        emit(RunEvent::Progress {
+            activations: (done * m) as u64,
+            rounds: if sync { done as u64 } else { 0 },
+        });
+    }
+
+    let cancelled = run.cancel.is_cancelled();
+    let acts_done = (done * m) as u64;
+    obs.add(Counter::Messages, messages);
+    let t_end = if cancelled {
+        (done as f64 * cfg.activation_interval).min(cfg.duration)
+    } else {
+        cfg.duration
+    };
+    // Horizon sample (the simulator's final common-θ point). Under
+    // cancellation this re-evaluates the last boundary honestly.
+    boundary_sample(
+        &nodes,
+        &mut evaluator,
+        &mut etas,
+        &mut point,
+        done,
+        t_end,
+        wall_t0.elapsed().as_secs_f64(),
+        emit,
+    );
+    let rounds_done = if sync { done as u64 } else { 0 };
+    let totals = RunTotals {
+        tag: cfg.tag(),
+        algorithm: cfg.algorithm,
+        activations: acts_done,
+        rounds: rounds_done,
+        messages,
+        events: acts_done,
+        lambda_max,
+        barycenter: evaluator.barycenter(),
+        cancelled,
+        telemetry: obs.snapshot(),
+    };
+    emit(RunEvent::Finished(totals.clone()));
+    Ok(totals)
+}

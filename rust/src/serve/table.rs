@@ -1,0 +1,304 @@
+//! Resident-session bookkeeping and admission control.
+//!
+//! The daemon multiplexes every admitted experiment onto one shared
+//! worker pool, so residency must be bounded by *state size*, not
+//! session count alone: each session pins `nodes × support` f64 dual
+//! blocks (plus mailbox slots proportional to edges), and the
+//! [`AdmissionPolicy`] caps the sum of those cells across resident
+//! sessions. A submission that would exceed the cap (or the session
+//! count cap) is **rejected with backpressure** — the client gets a
+//! [`WireMsg::Reject`](crate::exec::net::codec::WireMsg) naming the
+//! reason and is expected to retry later; nothing queues server-side,
+//! so a stuck client can never pin daemon memory.
+//!
+//! Each resident session owns a [`SessionFeed`] — the retained
+//! [`RunEvent`] log a (re-)attaching client reads through its own
+//! cursor. Events accumulate whether or not a client is attached (a
+//! daemon restart orphans streams until clients re-attach by session
+//! id), bounded by `FEED_CAP` with oldest-first shedding of
+//! non-terminal events.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::session::{CancelToken, RunEvent};
+
+/// Caps on what may be resident at once. `max_cells` bounds
+/// Σ `nodes × support` over live sessions.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    pub max_cells: usize,
+    pub max_sessions: usize,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        // ~8 MiB of dual blocks per f64 vector pair at the default cap;
+        // generous for tests, small enough to demonstrate backpressure.
+        Self { max_cells: 1 << 20, max_sessions: 8 }
+    }
+}
+
+/// Per-session event log. The runner thread pushes; any number of
+/// attached clients read **non-destructively** through their own
+/// cursors, so a client that dies mid-stream never loses events for
+/// the next one — a re-attach by session id replays the retained
+/// history (`Started`, every sample, the terminal `Finished`) from
+/// the start. Retention is capped at `FEED_CAP` events: the oldest
+/// are shed (counted in `shed`) and a cursor that fell behind the
+/// shed horizon skips forward; the terminal event is always the
+/// newest, so it can never be shed out from under a live attach.
+pub struct SessionFeed {
+    state: Mutex<FeedState>,
+    cv: Condvar,
+}
+
+struct FeedState {
+    log: VecDeque<RunEvent>,
+    /// Global index of `log[0]` (grows as old events are shed).
+    base: u64,
+    shed: u64,
+    closed: bool,
+}
+
+const FEED_CAP: usize = 4096;
+
+impl SessionFeed {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(FeedState {
+                log: VecDeque::new(),
+                base: 0,
+                shed: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, ev: RunEvent) {
+        let mut st = self.state.lock().unwrap();
+        if st.log.len() >= FEED_CAP {
+            st.log.pop_front();
+            st.base += 1;
+            st.shed += 1;
+        }
+        st.log.push_back(ev);
+        self.cv.notify_all();
+    }
+
+    /// Mark the stream complete (after the terminal event is pushed).
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Copy every event at or past `*cursor`, advancing the cursor;
+    /// waits up to `timeout` when caught up. `None` = stream closed
+    /// and this cursor has seen everything (detach now). A fresh
+    /// cursor (0) replays the retained history from the start.
+    pub fn read_from(
+        &self,
+        cursor: &mut u64,
+        timeout: Duration,
+    ) -> Option<Vec<RunEvent>> {
+        let mut st = self.state.lock().unwrap();
+        if *cursor >= st.base + st.log.len() as u64 && !st.closed {
+            let (guard, _) = self.cv.wait_timeout(st, timeout).unwrap();
+            st = guard;
+        }
+        if *cursor < st.base {
+            *cursor = st.base; // fell behind the shed horizon
+        }
+        let from = (*cursor - st.base) as usize;
+        if from >= st.log.len() {
+            return if st.closed { None } else { Some(Vec::new()) };
+        }
+        let out: Vec<RunEvent> = st.log.iter().skip(from).cloned().collect();
+        *cursor = st.base + st.log.len() as u64;
+        Some(out)
+    }
+
+    /// Events shed past the retention cap.
+    pub fn shed(&self) -> u64 {
+        self.state.lock().unwrap().shed
+    }
+}
+
+/// One resident (or recently finished) session.
+pub struct SessionEntry {
+    pub id: u64,
+    /// `nodes × support` — the admission cost this session pins.
+    pub cells: usize,
+    pub cancel: CancelToken,
+    pub feed: SessionFeed,
+}
+
+/// The daemon's session registry: admission accounting plus id →
+/// entry lookup. Finished sessions release their cells immediately but
+/// stay resolvable (for late attaches that want the buffered terminal
+/// event) until `forget`.
+pub struct SessionTable {
+    policy: AdmissionPolicy,
+    inner: Mutex<TableInner>,
+}
+
+struct TableInner {
+    entries: Vec<Arc<SessionEntry>>,
+    /// Ids still counted against the policy (subset of `entries`).
+    resident: Vec<u64>,
+    used_cells: usize,
+}
+
+impl SessionTable {
+    pub fn new(policy: AdmissionPolicy) -> Self {
+        Self {
+            policy,
+            inner: Mutex::new(TableInner {
+                entries: Vec::new(),
+                resident: Vec::new(),
+                used_cells: 0,
+            }),
+        }
+    }
+
+    /// Admit session `id` at cost `cells`, or explain the rejection.
+    /// The entry's cancel token and feed are created here so the
+    /// journal record, the runner thread, and any attaching client all
+    /// share them.
+    pub fn admit(&self, id: u64, cells: usize) -> Result<Arc<SessionEntry>, String> {
+        let mut t = self.inner.lock().unwrap();
+        if t.resident.len() >= self.policy.max_sessions {
+            return Err(format!(
+                "at capacity: {} resident sessions (cap {}) — retry later",
+                t.resident.len(),
+                self.policy.max_sessions
+            ));
+        }
+        if t.used_cells + cells > self.policy.max_cells {
+            return Err(format!(
+                "insufficient capacity: request needs {cells} cells, \
+                 {} of {} in use — retry later",
+                t.used_cells, self.policy.max_cells
+            ));
+        }
+        if t.entries.iter().any(|e| e.id == id) {
+            return Err(format!("session id {id} already exists"));
+        }
+        let entry = Arc::new(SessionEntry {
+            id,
+            cells,
+            cancel: CancelToken::new(),
+            feed: SessionFeed::new(),
+        });
+        t.used_cells += cells;
+        t.resident.push(id);
+        t.entries.push(entry.clone());
+        Ok(entry)
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<SessionEntry>> {
+        self.inner.lock().unwrap().entries.iter().find(|e| e.id == id).cloned()
+    }
+
+    /// Cancel one session; other tenants are untouched. False if the
+    /// id is unknown.
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.get(id) {
+            Some(e) => {
+                e.cancel.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release the admission cost when a session finishes (idempotent).
+    /// The entry stays resolvable for late attaches.
+    pub fn release(&self, id: u64) {
+        let mut t = self.inner.lock().unwrap();
+        if let Some(pos) = t.resident.iter().position(|&r| r == id) {
+            t.resident.swap_remove(pos);
+            let cells = t
+                .entries
+                .iter()
+                .find(|e| e.id == id)
+                .map(|e| e.cells)
+                .unwrap_or(0);
+            t.used_cells -= cells;
+        }
+    }
+
+    /// Drop a finished session entirely.
+    pub fn forget(&self, id: u64) {
+        self.release(id);
+        let mut t = self.inner.lock().unwrap();
+        t.entries.retain(|e| e.id != id);
+    }
+
+    /// Ids currently counted against the admission policy.
+    pub fn resident(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().resident.clone()
+    }
+
+    pub fn used_cells(&self) -> usize {
+        self.inner.lock().unwrap().used_cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_caps_cells_and_count_then_release_frees() {
+        let table =
+            SessionTable::new(AdmissionPolicy { max_cells: 100, max_sessions: 2 });
+        let a = table.admit(1, 60).unwrap();
+        assert_eq!(a.cells, 60);
+        let err = table.admit(2, 60).unwrap_err();
+        assert!(err.contains("insufficient capacity"), "{err}");
+        table.admit(2, 30).unwrap();
+        let err = table.admit(3, 1).unwrap_err();
+        assert!(err.contains("at capacity"), "{err}");
+        table.release(1);
+        table.release(1); // idempotent
+        assert_eq!(table.used_cells(), 30);
+        table.admit(3, 60).unwrap();
+        assert_eq!(table.resident(), vec![2, 3]);
+        // Released-but-not-forgotten sessions stay resolvable.
+        assert!(table.get(1).is_some());
+        table.forget(1);
+        assert!(table.get(1).is_none());
+    }
+
+    #[test]
+    fn cancel_hits_only_the_named_tenant_and_feeds_buffer() {
+        let table = SessionTable::new(AdmissionPolicy::default());
+        let a = table.admit(1, 4).unwrap();
+        let b = table.admit(2, 4).unwrap();
+        assert!(table.cancel(1));
+        assert!(a.cancel.is_cancelled());
+        assert!(!b.cancel.is_cancelled());
+        assert!(!table.cancel(99));
+
+        b.feed.push(RunEvent::Progress { activations: 3, rounds: 0 });
+        b.feed.push(RunEvent::Progress { activations: 6, rounds: 0 });
+        let mut cur = 0u64;
+        let got = b.feed.read_from(&mut cur, Duration::from_millis(1)).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(cur, 2);
+        b.feed.close();
+        assert!(b.feed.read_from(&mut cur, Duration::from_millis(1)).is_none());
+        // A fresh cursor replays the whole retained history even after
+        // close — this is what lets a second attach recover the stream.
+        let mut fresh = 0u64;
+        let replay =
+            b.feed.read_from(&mut fresh, Duration::from_millis(1)).unwrap();
+        assert_eq!(replay.len(), 2);
+        assert!(b.feed.read_from(&mut fresh, Duration::from_millis(1)).is_none());
+        assert_eq!(b.feed.shed(), 0);
+    }
+}

@@ -1,12 +1,13 @@
-//! Adversarial + roundtrip property suite for the protocol v5 wire
+//! Adversarial + roundtrip property suite for the protocol v6 wire
 //! codec (`a2dwb::exec::net::codec`).
 //!
 //! Two contracts, fuzzed over [`PropCheck`] cases:
 //!
 //! * **roundtrip** — every frame kind (Hello, Grad, Done, Bye,
-//!   Snapshot, Report, Cancel, Telemetry, GradQ, Heartbeat)
-//!   encodes/decodes bit-exactly, alone and concatenated through a
-//!   [`FrameReader`] stream;
+//!   Snapshot, Report, Cancel, Telemetry, GradQ, Heartbeat, and the
+//!   v6 service frames Submit, Accept, Reject, SessionEvent,
+//!   SessionCancel, Drain) encodes/decodes bit-exactly, alone and
+//!   concatenated through a [`FrameReader`] stream;
 //! * **adversarial** — truncated, trailing-byte, bit-flipped,
 //!   garbage, wrong-version, wrong-magic, zero-length, and oversized
 //!   inputs must come back as `Err` (or a differently-valued frame for
@@ -14,6 +15,8 @@
 
 use std::io::Cursor;
 
+use a2dwb::algo::AlgorithmKind;
+use a2dwb::coordinator::session::{RunEvent, RunTotals};
 use a2dwb::exec::net::codec::{self, FrameReader, ReadEvent, WireMsg};
 use a2dwb::exec::net::{
     dequantize_blocks, quantize_blocks, HelloFrame, MarkerPhase, ShardReport,
@@ -122,7 +125,88 @@ fn random_frames(rng: &mut Rng64) -> Vec<(Vec<u8>, WireMsg)> {
 
     out.push((codec::encode_heartbeat(shard), WireMsg::Heartbeat { shard }));
 
+    // ---- v6 service frames ----
+
+    let session = rng.next_u64();
+    let args: Vec<String> = (0..gen_usize(rng, 0, 12))
+        .map(|i| match rng.below(3) {
+            0 => String::new(),
+            1 => format!("--flag-{i}"),
+            _ => format!("π≈{}", gen_f64(rng, -1e3, 1e3)),
+        })
+        .collect();
+    out.push((
+        codec::encode_submit(session, &args),
+        WireMsg::Submit { session, args },
+    ));
+
+    out.push((codec::encode_accept(session), WireMsg::Accept { session }));
+
+    let reason = format!("at capacity: {} cells", rng.below(1 << 20));
+    out.push((
+        codec::encode_reject(&reason),
+        WireMsg::Reject { reason },
+    ));
+
+    let event = random_run_event(rng);
+    out.push((
+        codec::encode_session_event(session, &event),
+        WireMsg::SessionEvent { session, event },
+    ));
+
+    out.push((
+        codec::encode_session_cancel(session),
+        WireMsg::SessionCancel { session },
+    ));
+
+    out.push((codec::encode_drain(), WireMsg::Drain));
+
     out
+}
+
+/// One random `RunEvent`, every variant reachable (f64 edge values
+/// included via `gen_f64`'s range ends).
+fn random_run_event(rng: &mut Rng64) -> RunEvent {
+    let algos = [AlgorithmKind::A2dwb, AlgorithmKind::A2dwbn, AlgorithmKind::Dcwb];
+    match rng.below(5) {
+        0 => RunEvent::Started {
+            tag: format!("tag-{}", rng.below(1000)),
+            algorithm: algos[gen_usize(rng, 0, 2)],
+            nodes: gen_usize(rng, 1, 500),
+            support: gen_usize(rng, 1, 500),
+        },
+        1 => RunEvent::MetricSample {
+            t: gen_f64(rng, 0.0, 1e3),
+            wall: gen_f64(rng, 0.0, 1e3),
+            dual: gen_f64(rng, -1e6, 1e6),
+            consensus: gen_f64(rng, 0.0, 1e3),
+            spread: gen_f64(rng, 0.0, 1e3),
+        },
+        2 => RunEvent::Progress {
+            activations: rng.next_u64() >> 20,
+            rounds: rng.next_u64() >> 40,
+        },
+        3 => RunEvent::ShardSnapshot {
+            shard: gen_usize(rng, 0, 63),
+            sweep: rng.below(1 << 20),
+        },
+        _ => {
+            let obs = Telemetry::shared(2);
+            obs.add(Counter::Messages, rng.below(10_000));
+            RunEvent::Finished(RunTotals {
+                tag: format!("run-{}", rng.below(1000)),
+                algorithm: algos[gen_usize(rng, 0, 2)],
+                activations: rng.below(1 << 40),
+                rounds: rng.below(1 << 20),
+                messages: rng.below(1 << 40),
+                events: rng.below(1 << 40),
+                lambda_max: gen_f64(rng, 0.0, 1e3),
+                telemetry: obs.snapshot(),
+                barycenter: gen_vec_normal(rng, gen_usize(rng, 0, 200), 1.0),
+                cancelled: rng.below(2) == 1,
+            })
+        }
+    }
 }
 
 #[test]

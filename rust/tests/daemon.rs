@@ -1,0 +1,374 @@
+//! Service-layer contract tests: the multi-tenant daemon, its
+//! admission control, and journaled crash-resume.
+//!
+//! The determinism claims are the load-bearing ones:
+//!
+//! * **multi-tenant parity** — two sessions running concurrently on
+//!   the shared pool (fair-lane interleaved) must each reproduce the
+//!   metric trajectory and totals of the same experiment run alone,
+//!   bit for bit. Lane pacing may only ever delay a claim, never
+//!   reorder one.
+//! * **crash-resume parity** — a daemon restarted over a journal whose
+//!   last record is a mid-run checkpoint must finish the run with
+//!   exactly the samples an uninterrupted run would have produced
+//!   (`workers = 1`, deterministic claims).
+//!
+//! Wall-clock fields (`wall`, telemetry wait histograms) are the only
+//! values excluded from comparison — they are honest clocks.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use a2dwb::coordinator::checkpoint::config_fingerprint;
+use a2dwb::coordinator::session::{CancelToken, RunEvent, RunTotals};
+use a2dwb::coordinator::ExperimentConfig;
+use a2dwb::exec::net::experiment_args;
+use a2dwb::exec::SampleCadence;
+use a2dwb::obs::Telemetry;
+use a2dwb::prelude::{AlgorithmKind, ExperimentBuilder};
+use a2dwb::serve::journal::{self, Journal};
+use a2dwb::serve::runner::{run_session, SessionRun};
+use a2dwb::serve::table::AdmissionPolicy;
+use a2dwb::serve::{self, BarycenterDaemon, DaemonOpts};
+
+fn tmp_journal(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("a2dwb_daemon_{name}_{}.jnl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn cfg(seed: u64, algorithm: AlgorithmKind, sweeps: usize) -> ExperimentConfig {
+    let nodes = 4;
+    ExperimentBuilder::gaussian()
+        .nodes(nodes)
+        .seed(seed)
+        .algorithm(algorithm)
+        .measure(a2dwb::measures::MeasureSpec::Gaussian { n: 12 })
+        .samples_per_activation(4)
+        .eval_samples(8)
+        .duration(sweeps as f64 * 0.2)
+        .activation_interval(0.2)
+        .metric_interval(0.2)
+        // One-sweep checkpoint windows: every boundary journals and
+        // samples, the densest (hardest) resume grid.
+        .sample_cadence(SampleCadence::Activations(nodes as u64))
+        .config()
+        .unwrap()
+}
+
+/// The deterministic fields of a metric sample (wall excluded).
+fn sample_bits(events: &[RunEvent]) -> Vec<[u64; 4]> {
+    events
+        .iter()
+        .filter_map(|ev| match ev {
+            RunEvent::MetricSample { t, dual, consensus, spread, .. } => Some([
+                t.to_bits(),
+                dual.to_bits(),
+                consensus.to_bits(),
+                spread.to_bits(),
+            ]),
+            _ => None,
+        })
+        .collect()
+}
+
+fn barycenter_bits(t: &RunTotals) -> Vec<u64> {
+    t.barycenter.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Run one session alone on the daemon's runner (no lane, no journal)
+/// — the solo baseline every multi-tenant trajectory must match.
+fn solo(cfg: &ExperimentConfig) -> (Vec<RunEvent>, RunTotals) {
+    let mut events = Vec::new();
+    let totals = run_session(
+        SessionRun {
+            cfg,
+            cancel: CancelToken::new(),
+            lane: None,
+            obs: Arc::new(Telemetry::new(cfg.nodes)),
+            resume: None,
+        },
+        &mut |_ck| Ok(()),
+        &mut |ev| events.push(ev),
+    )
+    .expect("solo run");
+    (events, totals)
+}
+
+fn assert_same_run(label: &str, solo: &(Vec<RunEvent>, RunTotals), got: &[RunEvent], totals: &RunTotals) {
+    assert_eq!(
+        sample_bits(&solo.0),
+        sample_bits(got),
+        "{label}: metric trajectory must be bit-identical to the solo run"
+    );
+    assert_eq!(solo.1.activations, totals.activations, "{label}: activations");
+    assert_eq!(solo.1.messages, totals.messages, "{label}: messages");
+    assert_eq!(solo.1.rounds, totals.rounds, "{label}: rounds");
+    assert_eq!(
+        barycenter_bits(&solo.1),
+        barycenter_bits(totals),
+        "{label}: barycenter"
+    );
+    assert!(!totals.cancelled, "{label}: run must complete");
+}
+
+#[test]
+fn concurrent_tenants_reproduce_their_solo_runs_bit_for_bit() {
+    let journal = tmp_journal("parity");
+    let daemon = BarycenterDaemon::start(DaemonOpts {
+        listen: "127.0.0.1:0".into(),
+        journal: journal.clone(),
+        policy: AdmissionPolicy::default(),
+    })
+    .unwrap();
+    let addr = daemon.local_addr().to_string();
+
+    // Different seeds AND different algorithms (one async, one
+    // round-fenced) share the pool — the adversarial mix for fairness.
+    let cfg_a = cfg(11, AlgorithmKind::A2dwb, 6);
+    let cfg_b = cfg(23, AlgorithmKind::Dcwb, 8);
+    let solo_a = solo(&cfg_a);
+    let solo_b = solo(&cfg_b);
+
+    let run = |cfg: ExperimentConfig, addr: String| {
+        std::thread::spawn(move || {
+            let events = Arc::new(Mutex::new(Vec::new()));
+            let sink = events.clone();
+            let totals = serve::submit(&addr, &cfg, &mut |ev| {
+                sink.lock().unwrap().push(ev.clone())
+            })
+            .expect("submit");
+            let events = events.lock().unwrap().clone();
+            (events, totals)
+        })
+    };
+    let ha = run(cfg_a.clone(), addr.clone());
+    let hb = run(cfg_b.clone(), addr.clone());
+    let (ev_a, tot_a) = ha.join().unwrap();
+    let (ev_b, tot_b) = hb.join().unwrap();
+
+    assert_same_run("tenant A", &solo_a, &ev_a, &tot_a);
+    assert_same_run("tenant B", &solo_b, &ev_b, &tot_b);
+
+    // Per-session telemetry split: both tenants visible, pool merge
+    // covers them.
+    let (per_session, pool) = daemon.telemetry();
+    assert_eq!(per_session.len(), 2, "one telemetry registry per tenant");
+    let acts: u64 = per_session
+        .iter()
+        .map(|(_, s)| s.node_activations.iter().sum::<u64>())
+        .sum();
+    assert_eq!(acts, pool.node_activations.iter().sum::<u64>());
+    assert_eq!(acts, tot_a.activations + tot_b.activations);
+
+    daemon.shutdown().unwrap();
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn restarted_daemon_resumes_from_the_journal_bit_for_bit() {
+    let journal_path = tmp_journal("resume");
+    let cfg = cfg(42, AlgorithmKind::A2dwb, 7);
+    let args = experiment_args(&cfg).unwrap();
+    let fingerprint = config_fingerprint(&cfg);
+    let uninterrupted = solo(&cfg);
+
+    // Phase 1 — a daemon's runner dies two checkpoints in. Build the
+    // exact journal a crashed daemon leaves behind: Submitted, Started,
+    // two Checkpoint records, no Finished.
+    let mut pre_events = Vec::new();
+    {
+        let mut j = Journal::open(&journal_path).unwrap();
+        j.submitted(1, fingerprint, &args).unwrap();
+        j.started(1).unwrap();
+        let cancel = CancelToken::new();
+        let crash = cancel.clone();
+        let mut checkpoints = 0usize;
+        let j = std::cell::RefCell::new(j);
+        run_session(
+            SessionRun {
+                cfg: &cfg,
+                cancel: cancel.clone(),
+                lane: None,
+                obs: Arc::new(Telemetry::new(cfg.nodes)),
+                resume: None,
+            },
+            &mut |ck| {
+                j.borrow_mut().checkpoint(1, ck)?;
+                checkpoints += 1;
+                if checkpoints == 2 {
+                    // Simulated crash: stop mid-run; the journal keeps
+                    // no Finished record, exactly like a SIGKILL after
+                    // this append.
+                    crash.cancel();
+                }
+                Ok(())
+            },
+            &mut |ev| pre_events.push(ev),
+        )
+        .unwrap();
+    }
+    let replayed = journal::replay(&journal_path).unwrap();
+    assert_eq!(replayed.resumable.len(), 1);
+    assert_eq!(replayed.resumable[0].checkpoint.as_ref().unwrap().k, 8,
+        "latest checkpoint: two 1-sweep windows of 4 nodes");
+
+    // Phase 2 — a fresh daemon over that journal resumes session 1;
+    // a client re-attaches by id and streams to completion.
+    let daemon = BarycenterDaemon::start(DaemonOpts {
+        listen: "127.0.0.1:0".into(),
+        journal: journal_path.clone(),
+        policy: AdmissionPolicy::default(),
+    })
+    .unwrap();
+    assert_eq!(daemon.resumed_sessions(), &[1]);
+    let addr = daemon.local_addr().to_string();
+    let mut post_events = Vec::new();
+    let totals = serve::attach(&addr, 1, &mut |ev| post_events.push(ev.clone())).unwrap();
+
+    // Stitch: pre-crash samples (minus the cancellation's terminal
+    // re-sample) + post-resume samples == the uninterrupted series.
+    let mut pre = sample_bits(&pre_events);
+    pre.pop(); // the cancelled run's horizon sample (duplicate boundary)
+    let post = sample_bits(&post_events);
+    let mut stitched = pre;
+    stitched.extend(post);
+    assert_eq!(
+        sample_bits(&uninterrupted.0),
+        stitched,
+        "resumed trajectory must continue the original bit-for-bit"
+    );
+    assert_eq!(uninterrupted.1.activations, totals.activations);
+    assert_eq!(uninterrupted.1.messages, totals.messages,
+        "resume reconstructs the pre-crash message tally");
+    assert_eq!(barycenter_bits(&uninterrupted.1), barycenter_bits(&totals));
+    assert!(!totals.cancelled);
+
+    // The finished session is journaled Finished: a third daemon over
+    // the same journal has nothing to resume.
+    daemon.shutdown().unwrap();
+    let replayed = journal::replay(&journal_path).unwrap();
+    assert!(replayed.resumable.is_empty(), "Finished record closes the session");
+    let _ = std::fs::remove_file(&journal_path);
+}
+
+#[test]
+fn admission_rejects_past_the_cell_cap_and_frees_on_completion() {
+    let journal = tmp_journal("admission");
+    let daemon = BarycenterDaemon::start(DaemonOpts {
+        listen: "127.0.0.1:0".into(),
+        journal: journal.clone(),
+        // 4 nodes × 12 support = 48 cells fits; 100 does not leave
+        // room for a second 48 after one 64-cell tenant — but the
+        // decisive case is a request bigger than the whole cap.
+        policy: AdmissionPolicy { max_cells: 100, max_sessions: 8 },
+    })
+    .unwrap();
+    let addr = daemon.local_addr().to_string();
+
+    // A request that can never fit is rejected with the backpressure
+    // reason, not an error or a hang.
+    let mut big = cfg(5, AlgorithmKind::A2dwb, 2);
+    big.nodes = 16;
+    big.measure = a2dwb::measures::MeasureSpec::Gaussian { n: 32 };
+    let err = serve::submit(&addr, &big, &mut |_| {}).unwrap_err();
+    assert!(
+        err.contains("rejected") && err.contains("capacity"),
+        "want a backpressure Reject, got: {err}"
+    );
+
+    // A fitting request is accepted, and its completion releases the
+    // cells for the next tenant.
+    let small = cfg(6, AlgorithmKind::A2dwb, 2);
+    let t1 = serve::submit(&addr, &small, &mut |_| {}).unwrap();
+    assert!(!t1.cancelled);
+    let t2 = serve::submit(&addr, &cfg(7, AlgorithmKind::A2dwbn, 2), &mut |_| {})
+        .unwrap();
+    assert!(!t2.cancelled);
+
+    daemon.shutdown().unwrap();
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn cancelling_one_tenant_leaves_the_other_bit_exact() {
+    let journal = tmp_journal("cancel");
+    let daemon = BarycenterDaemon::start(DaemonOpts {
+        listen: "127.0.0.1:0".into(),
+        journal: journal.clone(),
+        policy: AdmissionPolicy::default(),
+    })
+    .unwrap();
+    let addr = daemon.local_addr().to_string();
+
+    // Tenant A: one giant window (cadence ≫ budget ⇒ no intermediate
+    // checkpoints), long enough that the cancel lands mid-flight.
+    let mut long = cfg(99, AlgorithmKind::A2dwb, 4000);
+    long.sample_cadence = SampleCadence::Activations(1 << 30);
+    let id_a = serve::submit_detached(&addr, &long).unwrap();
+
+    // Tenant B: a short run racing A on the shared pool.
+    let cfg_b = cfg(31, AlgorithmKind::A2dwbn, 6);
+    let solo_b = solo(&cfg_b);
+    let mut ev_b = Vec::new();
+    let handle = {
+        let addr = addr.clone();
+        let cfg_b = cfg_b.clone();
+        std::thread::spawn(move || {
+            let mut events = Vec::new();
+            let totals =
+                serve::submit(&addr, &cfg_b, &mut |ev| events.push(ev.clone()))
+                    .expect("tenant B");
+            (events, totals)
+        })
+    };
+
+    serve::cancel(&addr, id_a).unwrap();
+    let (events_b, totals_b) = handle.join().unwrap();
+    ev_b.extend(events_b);
+    assert_same_run("surviving tenant", &solo_b, &ev_b, &totals_b);
+
+    // A wound down as cancelled; its feed ends with Finished.
+    let mut ev_a = Vec::new();
+    let totals_a = serve::attach(&addr, id_a, &mut |ev| ev_a.push(ev.clone()))
+        .expect("attach to cancelled session");
+    assert!(totals_a.cancelled, "tenant A must report cancellation");
+    assert!(totals_a.activations < long.nodes as u64 * 4000);
+
+    // Unknown ids get a Reject, not a hang.
+    let err = serve::attach(&addr, 777, &mut |_| {}).unwrap_err();
+    assert!(err.contains("unknown session"), "{err}");
+
+    daemon.shutdown().unwrap();
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn draining_daemon_rejects_new_submissions() {
+    let journal = tmp_journal("drain");
+    let daemon = BarycenterDaemon::start(DaemonOpts {
+        listen: "127.0.0.1:0".into(),
+        journal: journal.clone(),
+        policy: AdmissionPolicy::default(),
+    })
+    .unwrap();
+    let addr = daemon.local_addr().to_string();
+    serve::drain(&addr).unwrap();
+    // The Drain frame races the next submission only through the
+    // daemon's own flag; poll until it lands (one-way frame, no ack).
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        match serve::submit(&addr, &cfg(3, AlgorithmKind::A2dwb, 2), &mut |_| {}) {
+            Err(e) if e.contains("draining") => break,
+            Ok(_) if std::time::Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(10))
+            }
+            Ok(_) => panic!("drained daemon kept accepting submissions"),
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    daemon.shutdown().unwrap();
+    let _ = std::fs::remove_file(&journal);
+}
