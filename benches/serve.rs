@@ -1,0 +1,177 @@
+//! Multi-tenant daemon bench: N same-geometry tenants on one
+//! [`BarycenterDaemon`], cross-session batch lane ON (200 µs window)
+//! vs OFF (`--batch-window-us 0`), at N ∈ {1, 4, 8}. Emits
+//! `BENCH_serve.json` at the repository root (schema documented in
+//! ARCHITECTURE.md, gated by `scripts/bench_check` once committed).
+//!
+//! The two acceptance numbers per cell:
+//!
+//! * `throughput_ratio` — batched activations/s over unbatched: the
+//!   lane must not cost throughput (≥ 1.0 modulo machine noise; the
+//!   N = 1 cell pins the solo-tenant fast path, which dispatches
+//!   immediately at quorum 1 and must be a wash).
+//! * `table_dedup` — N tenants × one support lattice over the
+//!   interner's resident bytes: O(1) residency in tenant count means
+//!   this ratio equals N exactly.
+//!
+//! Every tenant runs the *same seed*, deliberately: the batch lane
+//! groups only bit-identical requests (exact-match grouping is what
+//! keeps trajectories bit-exact), so identical replicas are the
+//! workload where cross-tenant coalescing actually forms groups —
+//! the replicated-study shape (same experiment fanned out for
+//! telemetry/fault comparisons) rather than independent studies.
+
+use a2dwb::coordinator::ExperimentConfig;
+use a2dwb::exec::SampleCadence;
+use a2dwb::prelude::*;
+use a2dwb::serve::table::AdmissionPolicy;
+use a2dwb::serve::{self, BarycenterDaemon, DaemonOpts};
+
+const NODES: usize = 4;
+const SUPPORT: usize = 48;
+const SWEEPS: usize = 30;
+
+fn tenant_cfg() -> ExperimentConfig {
+    ExperimentBuilder::gaussian()
+        .nodes(NODES)
+        .seed(7)
+        .algorithm(AlgorithmKind::A2dwb)
+        .measure(a2dwb::measures::MeasureSpec::Gaussian { n: SUPPORT })
+        .samples_per_activation(16)
+        .eval_samples(16)
+        .duration(SWEEPS as f64 * 0.2)
+        .activation_interval(0.2)
+        .metric_interval(0.2)
+        // One checkpoint window for the whole run: this bench times the
+        // oracle path, not journal I/O.
+        .sample_cadence(SampleCadence::Activations((NODES * SWEEPS) as u64))
+        .config()
+        .expect("valid bench config")
+}
+
+fn tmp_journal(tag: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("a2dwb_bench_serve_{tag}_{}.jnl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+struct Fleet {
+    wall_s: f64,
+    activations: u64,
+    interner_hits: u64,
+    interner_misses: u64,
+    resident_bytes: usize,
+}
+
+/// Run `tenants` concurrent same-config submissions against a fresh
+/// daemon with the given batch window and return the fleet wall time,
+/// total activations, and the interner's dedup evidence.
+fn run_fleet(cfg: &ExperimentConfig, tenants: usize, batch_window_us: u64, tag: &str) -> Fleet {
+    let journal = tmp_journal(tag);
+    let daemon = BarycenterDaemon::start(DaemonOpts {
+        listen: "127.0.0.1:0".into(),
+        journal: journal.clone(),
+        policy: AdmissionPolicy { max_cells: 1 << 20, max_sessions: tenants.max(8) },
+        batch_window_us,
+        ..DaemonOpts::default()
+    })
+    .expect("daemon start");
+    let addr = daemon.local_addr().to_string();
+
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..tenants)
+        .map(|_| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                serve::submit(&addr, &cfg, &mut |_| {}).expect("submit").activations
+            })
+        })
+        .collect();
+    let activations: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let (interner_hits, interner_misses, resident_bytes) = daemon.interner_stats();
+    daemon.shutdown().expect("daemon shutdown");
+    let _ = std::fs::remove_file(&journal);
+    Fleet { wall_s, activations, interner_hits, interner_misses, resident_bytes }
+}
+
+struct Cell {
+    tenants: usize,
+    solo_wall: f64,
+    batched_wall: f64,
+    throughput_ratio: f64,
+    table_dedup: f64,
+    interner_hits: u64,
+    interner_misses: u64,
+    resident_bytes: usize,
+}
+
+fn main() {
+    let cfg = tenant_cfg();
+    let per_table_bytes = SUPPORT * std::mem::size_of::<f64>();
+    println!(
+        "== serve: cross-tenant batching, {NODES} nodes x {SUPPORT} support x {SWEEPS} sweeps =="
+    );
+
+    let mut cells = Vec::new();
+    for tenants in [1usize, 4, 8] {
+        let solo = run_fleet(&cfg, tenants, 0, &format!("solo{tenants}"));
+        let batched = run_fleet(&cfg, tenants, 200, &format!("batch{tenants}"));
+        assert_eq!(solo.activations, batched.activations, "equal work per arm");
+        let solo_tp = solo.activations as f64 / solo.wall_s.max(1e-9);
+        let batched_tp = batched.activations as f64 / batched.wall_s.max(1e-9);
+        let cell = Cell {
+            tenants,
+            solo_wall: solo.wall_s,
+            batched_wall: batched.wall_s,
+            throughput_ratio: batched_tp / solo_tp.max(1e-9),
+            table_dedup: (tenants * per_table_bytes) as f64
+                / batched.resident_bytes.max(1) as f64,
+            interner_hits: batched.interner_hits,
+            interner_misses: batched.interner_misses,
+            resident_bytes: batched.resident_bytes,
+        };
+        println!(
+            "BENCH serve tenants={tenants} solo={:.3}s batched={:.3}s \
+             throughput_ratio={:.2}x table_dedup={:.1}x resident={}B",
+            cell.solo_wall,
+            cell.batched_wall,
+            cell.throughput_ratio,
+            cell.table_dedup,
+            cell.resident_bytes
+        );
+        cells.push(cell);
+    }
+
+    // hand-rolled JSON (the crate is dependency-free by design)
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"serve\",\n");
+    json.push_str(&format!("  \"nodes\": {NODES},\n"));
+    json.push_str(&format!("  \"support\": {SUPPORT},\n"));
+    json.push_str(&format!("  \"sweeps\": {SWEEPS},\n"));
+    json.push_str(&format!("  \"per_table_bytes\": {per_table_bytes},\n"));
+    json.push_str("  \"cells\": [\n");
+    for (idx, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"tenants\": {}, \"solo_wall_s\": {:.6}, \"batched_wall_s\": {:.6}, \
+             \"throughput_ratio\": {:.4}, \"table_dedup\": {:.4}, \
+             \"interner_hits\": {}, \"interner_misses\": {}, \
+             \"resident_table_bytes\": {}}}{}\n",
+            c.tenants,
+            c.solo_wall,
+            c.batched_wall,
+            c.throughput_ratio,
+            c.table_dedup,
+            c.interner_hits,
+            c.interner_misses,
+            c.resident_bytes,
+            if idx + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n");
+    json.push_str("}\n");
+    a2dwb::bench_util::write_root_json("BENCH_serve.json", &json);
+}

@@ -250,6 +250,10 @@ pub fn config_fingerprint(cfg: &super::ExperimentConfig) -> u64 {
     mix(&mut acc, cfg.algorithm.code() as u64);
     mix(&mut acc, cfg.heartbeat_ms.map(|ms| ms + 1).unwrap_or(0));
     mix(&mut acc, cfg.progress_every.map(|k| k + 1).unwrap_or(0));
+    // session_workers > 1 runs a different (non-windowed, multi-worker)
+    // activation schedule, so a resume across a drifted value must be
+    // refused like any other dynamics knob.
+    mix(&mut acc, cfg.session_workers as u64);
     acc
 }
 
@@ -396,5 +400,8 @@ mod tests {
         let mut f = a.clone();
         f.progress_every = Some(64);
         assert_ne!(config_fingerprint(&a), config_fingerprint(&f));
+        let mut g = a.clone();
+        g.session_workers = 2;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&g));
     }
 }

@@ -12,6 +12,7 @@ use crate::graph::Graph;
 use crate::kernel::{self, KernelImpl};
 use crate::linalg::CsrMatrix;
 use crate::measures::{NodeMeasure, Samples};
+use crate::obs::{Counter, HistKind, Telemetry};
 use crate::ot::OracleScratch;
 use crate::rng::Rng64;
 
@@ -33,6 +34,11 @@ pub struct MetricsEvaluator {
     batch_grads: Vec<f64>,
     batch_vals: Vec<f64>,
     batch_primal: Vec<f64>,
+    /// Batch-dispatch telemetry sink ([`Self::attach_obs`]). Kept off
+    /// the scratch on purpose: the metric path's `OraclePasses` tally
+    /// is pinned by goldens, and this registry only ever receives the
+    /// dispatch-shape counters (`BatchDispatches`, `BatchOccupancy`).
+    obs: Option<std::sync::Arc<Telemetry>>,
 }
 
 impl MetricsEvaluator {
@@ -62,6 +68,7 @@ impl MetricsEvaluator {
             batch_grads: Vec::new(),
             batch_vals: Vec::new(),
             batch_primal: Vec::new(),
+            obs: None,
         }
     }
 
@@ -69,6 +76,14 @@ impl MetricsEvaluator {
     /// [`KernelImpl::Scalar`] — the golden-stable metric path).
     pub fn set_kernel(&mut self, kernel: KernelImpl) {
         self.scratch.set_kernel(kernel);
+    }
+
+    /// Record batch-dispatch shape (one [`Counter::BatchDispatches`]
+    /// per per-node batched pass, the snapshot count as
+    /// [`HistKind::BatchOccupancy`]) into `obs`. Relaxed counters only
+    /// — results are bit-identical with or without.
+    pub fn attach_obs(&mut self, obs: std::sync::Arc<Telemetry>) {
+        self.obs = Some(obs);
     }
 
     /// Entry-wise mean of the m primal blocks — the one definition of
@@ -132,6 +147,10 @@ impl MetricsEvaluator {
         self.batch_grads.resize(b * n, 0.0);
         self.batch_vals.resize(b, 0.0);
         self.batch_primal.resize(b * m * n, 0.0);
+        if let Some(obs) = &self.obs {
+            obs.add(Counter::BatchDispatches, m as u64);
+            obs.record(HistKind::BatchOccupancy, b as u64);
+        }
         let mut duals = vec![0.0; b];
         for i in 0..m {
             for (bi, snap) in snaps.iter().enumerate() {

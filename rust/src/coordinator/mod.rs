@@ -131,6 +131,14 @@ pub struct ExperimentConfig {
     /// disables both sides. Excluded from the handshake digest — it
     /// never affects the algorithm's dynamics.
     pub heartbeat_ms: Option<u64>,
+    /// Worker threads for this session when run under the daemon's
+    /// session runner (CLI `--session-workers`). The default 1 keeps
+    /// the windowed, bit-exact-resumable semantics; `> 1` runs the
+    /// session as one non-windowed window with intra-session
+    /// parallelism (see `crate::serve::runner::SessionRun::workers`).
+    /// In the fingerprint: the worker count changes the trajectory
+    /// whenever it is > 1, so resume must refuse a drifted value.
+    pub session_workers: usize,
 }
 
 /// Block-quantized gradient compression for the socket mesh
@@ -262,6 +270,7 @@ impl ExperimentConfig {
             trace_capacity: None,
             compression: Compression::off(),
             heartbeat_ms: None,
+            session_workers: 1,
         }
     }
 
@@ -331,6 +340,7 @@ impl ExperimentConfig {
         "compress-bits",
         "quant-naive",
         "heartbeat-ms",
+        "session-workers",
         "mnist",
     ];
 
@@ -411,6 +421,7 @@ impl ExperimentConfig {
             let ms: u64 = ms.parse().map_err(|e| format!("--heartbeat-ms: {e}"))?;
             cfg.heartbeat_ms = Some(ms);
         }
+        cfg.session_workers = args.get("session-workers", cfg.session_workers)?;
         Ok(cfg)
     }
 
@@ -450,6 +461,9 @@ impl ExperimentConfig {
                  heartbeats)"
                     .into(),
             );
+        }
+        if self.session_workers == 0 {
+            return Err("session_workers must be >= 1".into());
         }
         Ok(())
     }

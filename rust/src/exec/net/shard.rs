@@ -1627,6 +1627,7 @@ pub fn run_shard(cfg: &ExperimentConfig, opts: ShardRunOpts) -> Result<ShardRepo
         lane: None,
         fault_injection,
         obs: Some(obs.clone()),
+        oracle_factory: None,
     });
     let hooks = ShardSweepHooks {
         mesh: &mesh,
@@ -2415,6 +2416,9 @@ pub fn experiment_args(cfg: &ExperimentConfig) -> Result<Vec<String>, String> {
     if let crate::exec::SampleCadence::Activations(k) = cfg.sample_cadence {
         push(&mut a, "sample-every-acts", k.to_string());
     }
+    if cfg.session_workers != 1 {
+        push(&mut a, "session-workers", cfg.session_workers.to_string());
+    }
     Ok(a)
 }
 
@@ -2841,6 +2845,7 @@ mod tests {
         cfg.trace_capacity = Some(4096);
         cfg.compression = Compression { bits: 8, error_feedback: false };
         cfg.heartbeat_ms = Some(250);
+        cfg.session_workers = 3;
         let flags = experiment_args(&cfg).unwrap();
         let parsed = crate::cli::Args::parse(flags).unwrap();
         let back = ExperimentConfig::from_cli_args(&parsed, parsed.has_flag("mnist")).unwrap();

@@ -60,6 +60,7 @@ use crate::coordinator::{CancelToken, ExperimentConfig};
 use crate::graph::Graph;
 use crate::measures::{NodeMeasure, Samples};
 use crate::obs::{Counter, HistKind, Telemetry};
+use crate::ot::DualOracle;
 use crate::rng::Rng64;
 
 /// Memory-safety valve for the activation-paced snapshot queue: when
@@ -603,6 +604,15 @@ pub struct SchedulerSpec<'a> {
     /// Recording only ever touches relaxed atomics — no RNG stream,
     /// claim order, or message content depends on it.
     pub obs: Option<Arc<Telemetry>>,
+    /// Override for how each worker builds its [`DualOracle`]
+    /// (`None` = `cfg.backend.build(..)`, the single-tenant executors).
+    /// The closure runs **on the worker thread** and receives the
+    /// worker index, so the oracle itself never needs `Send` — only
+    /// the factory must be `Sync`. The daemon uses this to wrap the
+    /// backend in its cross-session batch lane
+    /// (`crate::serve::batch::BatchedOracle`).
+    pub oracle_factory:
+        Option<&'a (dyn Fn(usize) -> Result<Box<dyn DualOracle>, String> + Sync)>,
 }
 
 /// One queued activation-paced snapshot:
@@ -962,10 +972,11 @@ impl<'a> NodeScheduler<'a> {
         let m = cfg.nodes;
         let start = spec.range.start;
         let range_len = spec.range.len();
-        let mut oracle = cfg
-            .backend
-            .build(cfg.samples_per_activation, n)
-            .map_err(|e| format!("worker {w}: oracle build failed: {e}"))?;
+        let mut oracle = match spec.oracle_factory {
+            Some(factory) => factory(w),
+            None => cfg.backend.build(cfg.samples_per_activation, n),
+        }
+        .map_err(|e| format!("worker {w}: oracle build failed: {e}"))?;
         if let Some(o) = &spec.obs {
             oracle.attach_obs(Arc::clone(o));
         }

@@ -199,6 +199,7 @@ pub(crate) fn run(
         lane: None,
         fault_injection: None,
         obs: Some(obs.clone()),
+        oracle_factory: None,
     });
     // DCWB pays two in-process fence phases per round; the barrier-free
     // pair runs against the (phase-less) FreeGate.

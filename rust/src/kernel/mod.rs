@@ -97,7 +97,7 @@ pub const ORACLE_BLOCK_ROWS: usize = 8;
 /// sim trajectories, and lockstep mesh replays are defined against it.
 /// `Wide` reassociates the exp-sum reductions and is gated by ≤1e-12
 /// scalar-equivalence tests instead (see the module docs).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum KernelImpl {
     /// Scalar reference kernels — bit-stable across all backends.
     #[default]
@@ -242,6 +242,93 @@ impl OracleScratch {
     /// The currently selected lane width.
     pub fn kernel(&self) -> KernelImpl {
         self.kernel
+    }
+}
+
+/// A shared pool of [`OracleScratch`] buffers keyed by
+/// `(n, KernelImpl)`, so short-lived batched dispatches (the daemon's
+/// cross-session lane) reuse warmed logits allocations instead of
+/// growing a fresh `Vec<f64>` per dispatch.
+///
+/// Checked-out scratches come back via the [`ScratchLease`] guard's
+/// `Drop`. Leases carry no telemetry handle — a pooled scratch is an
+/// *execution* buffer shared across tenants, and per-session counters
+/// must be recorded by the requesting session, not by whichever
+/// dispatch happened to run its pass.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    free: std::sync::Mutex<
+        std::collections::HashMap<(usize, KernelImpl), Vec<OracleScratch>>,
+    >,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out a scratch warmed for support size `n` at lane width
+    /// `kernel` (fresh if the pool has none free for that key).
+    pub fn check_out(
+        self: &Arc<Self>,
+        n: usize,
+        kernel: KernelImpl,
+    ) -> ScratchLease {
+        let key = (n, kernel);
+        let mut scratch = self
+            .free
+            .lock()
+            .unwrap()
+            .get_mut(&key)
+            .and_then(Vec::pop)
+            .unwrap_or_default();
+        scratch.logits.clear();
+        scratch.logits.resize(n, 0.0);
+        scratch.obs = None;
+        scratch.kernel = kernel;
+        ScratchLease { scratch: Some(scratch), key, pool: Arc::clone(self) }
+    }
+
+    /// Number of idle scratches currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+/// RAII lease over a pooled [`OracleScratch`]; derefs to the scratch
+/// and returns it to its [`ScratchPool`] bucket on drop.
+#[derive(Debug)]
+pub struct ScratchLease {
+    scratch: Option<OracleScratch>,
+    key: (usize, KernelImpl),
+    pool: Arc<ScratchPool>,
+}
+
+impl std::ops::Deref for ScratchLease {
+    type Target = OracleScratch;
+
+    fn deref(&self) -> &OracleScratch {
+        self.scratch.as_ref().expect("lease holds scratch until drop")
+    }
+}
+
+impl std::ops::DerefMut for ScratchLease {
+    fn deref_mut(&mut self) -> &mut OracleScratch {
+        self.scratch.as_mut().expect("lease holds scratch until drop")
+    }
+}
+
+impl Drop for ScratchLease {
+    fn drop(&mut self) {
+        if let Some(scratch) = self.scratch.take() {
+            self.pool
+                .free
+                .lock()
+                .unwrap()
+                .entry(self.key)
+                .or_default()
+                .push(scratch);
+        }
     }
 }
 

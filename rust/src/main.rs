@@ -556,7 +556,14 @@ fn cmd_daemon(args: &Args) -> i32 {
     use a2dwb::serve::table::AdmissionPolicy;
     use a2dwb::serve::{BarycenterDaemon, DaemonOpts};
     let run = || -> Result<(), String> {
-        args.reject_unknown(&["listen", "journal", "max-cells", "max-sessions"])?;
+        args.reject_unknown(&[
+            "listen",
+            "journal",
+            "max-cells",
+            "max-sessions",
+            "session-workers",
+            "batch-window-us",
+        ])?;
         let listen = args.get_str("listen", "127.0.0.1:7800");
         let journal = args.get_str("journal", "a2dwb-journal.bin");
         let defaults = AdmissionPolicy::default();
@@ -564,10 +571,15 @@ fn cmd_daemon(args: &Args) -> i32 {
             max_cells: args.get("max-cells", defaults.max_cells)?,
             max_sessions: args.get("max-sessions", defaults.max_sessions)?,
         };
+        let opt_defaults = DaemonOpts::default();
         let daemon = BarycenterDaemon::start(DaemonOpts {
             listen,
             journal: journal.clone().into(),
             policy,
+            session_workers: args
+                .get("session-workers", opt_defaults.session_workers)?,
+            batch_window_us: args
+                .get("batch-window-us", opt_defaults.batch_window_us)?,
         })?;
         println!("daemon listening on {} (journal {journal})", daemon.local_addr());
         // Ctrl-C drains and shuts down cleanly: residents are cancelled

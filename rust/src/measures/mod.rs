@@ -250,11 +250,34 @@ impl MeasureSpec {
         m: usize,
         seed: u64,
     ) -> Vec<Box<dyn NodeMeasure>> {
+        self.build_network_with(m, seed, None).0
+    }
+
+    /// [`Self::build_network`] with optional cost-table interning: when
+    /// an interner is supplied, the measure geometry (grid-distance
+    /// table / support lattice) is fetched from — or built into — the
+    /// shared registry instead of constructed privately, so N networks
+    /// over the same geometry alias one allocation. The per-node
+    /// sampling state and the RNG draw sequence are identical either
+    /// way; only *where the table lives* changes, which is why interned
+    /// and private builds produce bit-identical trajectories.
+    pub fn build_network_with(
+        &self,
+        m: usize,
+        seed: u64,
+        interner: Option<&TableInterner>,
+    ) -> (Vec<Box<dyn NodeMeasure>>, NetworkTables) {
         let mut rng = Rng64::new(seed ^ 0x4D45_4153);
         match self {
             MeasureSpec::Gaussian { n } => {
-                let support = std::sync::Arc::new(gaussian::linspace(-5.0, 5.0, *n));
-                (0..m)
+                let (support, hit) = match interner {
+                    Some(i) => i.support1d(*n),
+                    None => (
+                        std::sync::Arc::new(gaussian::linspace(-5.0, 5.0, *n)),
+                        false,
+                    ),
+                };
+                let measures = (0..m)
                     .map(|_| {
                         // θ_i ~ U[-4, 4], σ_i ~ U[0.1, 0.6]  (paper §4.1)
                         let theta = rng.uniform_in(-4.0, 4.0);
@@ -262,7 +285,14 @@ impl MeasureSpec {
                         Box::new(gaussian::Gaussian1d::new(theta, sigma, support.clone()))
                             as Box<dyn NodeMeasure>
                     })
-                    .collect()
+                    .collect();
+                let tables = NetworkTables {
+                    grid: None,
+                    support: Some(support),
+                    hits: u64::from(hit),
+                    misses: u64::from(!hit),
+                };
+                (measures, tables)
             }
             MeasureSpec::Digits { digit, side, idx_path } => {
                 let images = match idx_path {
@@ -275,16 +305,148 @@ impl MeasureSpec {
                         }),
                     None => digits::synthetic_images(*digit, m, *side, &mut rng),
                 };
-                let geom = std::sync::Arc::new(digits::GridGeometry::new(*side));
-                images
+                let (geom, hit) = match interner {
+                    Some(i) => i.grid(*side),
+                    None => (
+                        std::sync::Arc::new(digits::GridGeometry::new(*side)),
+                        false,
+                    ),
+                };
+                let measures = images
                     .into_iter()
                     .map(|img| {
                         Box::new(digits::DigitMeasure::new(img, geom.clone()))
                             as Box<dyn NodeMeasure>
                     })
-                    .collect()
+                    .collect();
+                let tables = NetworkTables {
+                    grid: Some(geom),
+                    support: None,
+                    hits: u64::from(hit),
+                    misses: u64::from(!hit),
+                };
+                (measures, tables)
             }
         }
+    }
+}
+
+/// The geometry tables a built network aliases, plus whether this
+/// build hit or missed the interner — handed back to the caller so a
+/// batching layer can recover row identity by pointer and telemetry
+/// can count dedup ([`crate::obs::Counter::TableCacheHits`]).
+#[derive(Clone, Debug, Default)]
+pub struct NetworkTables {
+    /// Shared grid geometry (digits experiment), if any.
+    pub grid: Option<std::sync::Arc<digits::GridGeometry>>,
+    /// Shared 1-D support lattice (Gaussian experiment), if any.
+    pub support: Option<std::sync::Arc<Vec<f64>>>,
+    /// Interner hits this build observed (0 or 1 per build).
+    pub hits: u64,
+    /// Interner misses this build observed (0 or 1 per build).
+    pub misses: u64,
+}
+
+/// Process-wide cost-table registry: interns the O(n²) grid-distance
+/// table and the O(n) support lattice by their *complete* geometry
+/// fingerprints, so N concurrent sessions over the same support share
+/// one allocation instead of paying it per tenant.
+///
+/// The fingerprints really are complete: [`digits::GridGeometry::new`]
+/// is a pure function of `side` (coords, normalization, and distance
+/// table all derive from it), and the Gaussian support is always
+/// `linspace(-5, 5, n)` — so the map keys `side` / `n` pin every byte
+/// of the interned value. Tables are built *inside* the lock: when K
+/// sessions race on a cold key, exactly one pays the miss and the
+/// other K−1 count hits, which keeps the telemetry assertions in tests
+/// and CI deterministic (the build is milliseconds, once per geometry,
+/// off the hot path).
+#[derive(Debug, Default)]
+pub struct TableInterner {
+    grids: std::sync::Mutex<
+        std::collections::HashMap<usize, std::sync::Arc<digits::GridGeometry>>,
+    >,
+    supports: std::sync::Mutex<
+        std::collections::HashMap<usize, std::sync::Arc<Vec<f64>>>,
+    >,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl TableInterner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch-or-build the shared grid geometry for a `side × side`
+    /// digit grid. Returns `(table, was_hit)`.
+    pub fn grid(&self, side: usize) -> (std::sync::Arc<digits::GridGeometry>, bool) {
+        use std::sync::atomic::Ordering;
+        let mut map = self.grids.lock().unwrap();
+        match map.get(&side) {
+            Some(g) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                (g.clone(), true)
+            }
+            None => {
+                let g = std::sync::Arc::new(digits::GridGeometry::new(side));
+                map.insert(side, g.clone());
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                (g, false)
+            }
+        }
+    }
+
+    /// Fetch-or-build the shared Gaussian support `linspace(-5, 5, n)`.
+    /// Returns `(support, was_hit)`.
+    pub fn support1d(&self, n: usize) -> (std::sync::Arc<Vec<f64>>, bool) {
+        use std::sync::atomic::Ordering;
+        let mut map = self.supports.lock().unwrap();
+        match map.get(&n) {
+            Some(s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                (s.clone(), true)
+            }
+            None => {
+                let s = std::sync::Arc::new(gaussian::linspace(-5.0, 5.0, n));
+                map.insert(n, s.clone());
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                (s, false)
+            }
+        }
+    }
+
+    /// Lifetime hit count across all lookups.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Lifetime miss count across all lookups.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Bytes resident in interned tables right now — the denominator of
+    /// the dedup ratio `BENCH_serve.json` reports. Counts the f64
+    /// payloads (dist + coords per grid, the lattice per support);
+    /// O(1) in tenant count by construction.
+    pub fn resident_bytes(&self) -> usize {
+        let f64s = std::mem::size_of::<f64>();
+        let grids: usize = self
+            .grids
+            .lock()
+            .unwrap()
+            .values()
+            .map(|g| (g.dist.len() + 2 * g.coords.len()) * f64s)
+            .sum();
+        let supports: usize = self
+            .supports
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.len() * f64s)
+            .sum();
+        grids + supports
     }
 }
 

@@ -72,10 +72,10 @@ pub const WIRE_KIND_NAMES: [&str; WIRE_KINDS] = [
 ];
 
 /// Number of registry counters ([`Counter::ALL`]).
-pub const NUM_COUNTERS: usize = 15;
+pub const NUM_COUNTERS: usize = 18;
 
 /// Number of registry histograms ([`HistKind::ALL`]).
-pub const NUM_HISTS: usize = 4;
+pub const NUM_HISTS: usize = 5;
 
 /// Registry counters. The enum order is the snapshot wire order — only
 /// append, never reorder.
@@ -127,6 +127,18 @@ pub enum Counter {
     /// past the heartbeat deadline and the peer was treated as dead
     /// (degrading to freshest-wins staleness) instead of aborting.
     PeerStaleDeadlines,
+    /// Cost-table interner lookups served from an already-resident
+    /// table (the daemon's shared-geometry dedup; see
+    /// `measures::TableInterner`).
+    TableCacheHits,
+    /// Cost-table interner lookups that had to build a fresh table
+    /// (first tenant on a geometry pays the O(n²) construction once).
+    TableCacheMisses,
+    /// Batched oracle dispatches issued by a batching layer (the
+    /// daemon's cross-session batch lane and the metric evaluator's
+    /// per-node snapshot batches) — each dispatch covers
+    /// `batch_occupancy` requests in one kernel pass.
+    BatchDispatches,
 }
 
 impl Counter {
@@ -147,6 +159,9 @@ impl Counter {
         Counter::KernelWideRows,
         Counter::LinkReconnects,
         Counter::PeerStaleDeadlines,
+        Counter::TableCacheHits,
+        Counter::TableCacheMisses,
+        Counter::BatchDispatches,
     ];
 
     fn idx(self) -> usize {
@@ -171,6 +186,9 @@ impl Counter {
             Counter::KernelWideRows => "kernel_wide_rows",
             Counter::LinkReconnects => "link_reconnects",
             Counter::PeerStaleDeadlines => "peer_stale_deadlines",
+            Counter::TableCacheHits => "table_cache_hits",
+            Counter::TableCacheMisses => "table_cache_misses",
+            Counter::BatchDispatches => "batch_dispatches",
         }
     }
 }
@@ -191,6 +209,10 @@ pub enum HistKind {
     /// feedback send, in micro-units (`⌊‖r‖₂ · 10⁶⌋`) — how much
     /// precision each `GradQ` frame deferred to the next send.
     QuantResidual,
+    /// Number of η̄ requests served by one batched oracle dispatch
+    /// (1 = a degenerate solo dispatch; higher = real cross-request
+    /// amortization of the shared cost table).
+    BatchOccupancy,
 }
 
 impl HistKind {
@@ -200,6 +222,7 @@ impl HistKind {
         HistKind::StampLag,
         HistKind::ActivateNs,
         HistKind::QuantResidual,
+        HistKind::BatchOccupancy,
     ];
 
     fn idx(self) -> usize {
@@ -213,6 +236,7 @@ impl HistKind {
             HistKind::StampLag => "stamp_lag",
             HistKind::ActivateNs => "activate_ns",
             HistKind::QuantResidual => "quant_residual_u",
+            HistKind::BatchOccupancy => "batch_occupancy",
         }
     }
 }

@@ -1,0 +1,496 @@
+//! Cross-tenant batch lane: the dispatch layer between session runner
+//! threads and the kernel.
+//!
+//! PR 9's daemon multiplexes N tenant sessions onto one process, but
+//! each session still runs a private oracle — N scalar
+//! [`kernel::dual_oracle`] passes stream the *same* interned cost table
+//! N times. This module collects pending η̄-oracle requests from
+//! concurrent session runners inside a bounded window and issues
+//! compatible ones through [`kernel::dual_oracle_batch`] in a single
+//! cache-blocked pass, so the shared table is streamed once per block
+//! instead of once per tenant.
+//!
+//! **Why bit-exactness survives batching.** Requests are grouped only
+//! on *exact* equality — β bits, [`KernelImpl`], and cost-row identity
+//! (same interned table pointer + same sample rows, compared bitwise,
+//! never by hash alone) — and `dual_oracle_batch`'s contract makes each
+//! member of a batched pass bitwise identical to its own sequential
+//! `dual_oracle` call. Grouping therefore changes *when* and *next to
+//! whom* a request runs, never what it computes, and each tenant's
+//! trajectory matches its solo run bit for bit (pinned by
+//! `tests/daemon.rs`).
+//!
+//! **Dispatch-window state machine.** There is no dedicated dispatcher
+//! thread; the lane is a combiner. A submitting runner parks its
+//! request and then either (a) finds its result already posted, (b)
+//! becomes the combiner — when every registered session has a request
+//! pending, or its own window deadline expires — taking *all* pending
+//! requests, executing them group by group against pooled scratch
+//! ([`ScratchPool`]), posting results, and waking the other waiters, or
+//! (c) sleeps on the condvar until woken or its deadline passes.
+//! A solo session always satisfies (b) immediately (1 pending ≥ 1
+//! registered), so the lane adds zero latency when there is nobody to
+//! batch with; under contention the wait is bounded by the window
+//! (default 200µs). Sessions parked in non-oracle phases (checkpoint,
+//! exchange) inflate the registered count and simply make peers pay the
+//! window — bounded, and tiny next to an oracle pass.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::kernel::{self, CostRow, CostRowSource, KernelImpl, ScratchPool};
+use crate::measures::{MeasureRows, NetworkTables, TableInterner};
+use crate::obs::{Counter, HistKind, Telemetry};
+use crate::ot::DualOracle;
+
+/// Daemon-wide shared execution state handed to every session runner:
+/// the cost-table interner (always on), the batch dispatcher (`None`
+/// when the batch window is 0), and the scratch pool.
+#[derive(Debug)]
+pub struct SharedPool {
+    /// Geometry-keyed cost-table registry (see [`TableInterner`]).
+    pub tables: TableInterner,
+    /// The cross-session batch lane; `None` disables batching while
+    /// keeping interning + scratch pooling.
+    pub dispatch: Option<Arc<BatchDispatcher>>,
+    /// Pooled per-dispatch [`crate::kernel::OracleScratch`] buffers.
+    pub scratch: Arc<ScratchPool>,
+}
+
+impl SharedPool {
+    /// Build the pool; `batch_window_us == 0` turns the batch lane off.
+    pub fn new(batch_window_us: u64) -> Self {
+        let scratch = Arc::new(ScratchPool::new());
+        let dispatch = (batch_window_us > 0).then(|| {
+            Arc::new(BatchDispatcher::new(
+                Duration::from_micros(batch_window_us),
+                Arc::clone(&scratch),
+            ))
+        });
+        Self { tables: TableInterner::new(), dispatch, scratch }
+    }
+}
+
+/// An owned, pointer-identified description of one request's cost rows
+/// — what survives the hop from a runner thread's borrowed
+/// [`MeasureRows`] into the dispatcher's queue. The O(n²) table is
+/// never copied; only the per-activation sample indices/locations are
+/// (M ≈ tens of elements).
+#[derive(Debug)]
+enum OwnedRows {
+    /// Digits: rows are views into the interned grid-distance table,
+    /// identified by pixel index.
+    Grid { geom: Arc<crate::measures::digits::GridGeometry>, pixels: Vec<usize> },
+    /// Gaussian: rows are generated from the interned support lattice.
+    Quad1d { support: Arc<Vec<f64>>, ys: Vec<f64>, inv_scale: f64 },
+}
+
+impl OwnedRows {
+    fn m(&self) -> usize {
+        match self {
+            OwnedRows::Grid { pixels, .. } => pixels.len(),
+            OwnedRows::Quad1d { ys, .. } => ys.len(),
+        }
+    }
+
+    fn n(&self) -> usize {
+        match self {
+            OwnedRows::Grid { geom, .. } => geom.n(),
+            OwnedRows::Quad1d { support, .. } => support.len(),
+        }
+    }
+
+    /// Exact row-identity match — the grouping predicate. Pointer
+    /// equality pins the shared table; the per-sample payload is
+    /// compared bitwise. Never a hash: a collision here would hand a
+    /// tenant another tenant's costs.
+    fn same_rows(&self, other: &OwnedRows) -> bool {
+        match (self, other) {
+            (
+                OwnedRows::Grid { geom: ga, pixels: pa },
+                OwnedRows::Grid { geom: gb, pixels: pb },
+            ) => Arc::ptr_eq(ga, gb) && pa == pb,
+            (
+                OwnedRows::Quad1d { support: sa, ys: ya, inv_scale: ia },
+                OwnedRows::Quad1d { support: sb, ys: yb, inv_scale: ib },
+            ) => {
+                Arc::ptr_eq(sa, sb)
+                    && ia.to_bits() == ib.to_bits()
+                    && ya.len() == yb.len()
+                    && ya
+                        .iter()
+                        .zip(yb)
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+            }
+            _ => false,
+        }
+    }
+}
+
+/// One parked η̄-oracle request.
+#[derive(Debug)]
+struct OracleRequest {
+    eta: Vec<f64>,
+    rows: OwnedRows,
+    beta: f64,
+    kernel: KernelImpl,
+    obs: Option<Arc<Telemetry>>,
+}
+
+impl OracleRequest {
+    /// Can `self` and `other` share one [`kernel::dual_oracle_batch`]
+    /// pass without changing either result's bits?
+    fn compatible(&self, other: &OracleRequest) -> bool {
+        self.beta.to_bits() == other.beta.to_bits()
+            && self.kernel == other.kernel
+            && self.rows.same_rows(&other.rows)
+    }
+}
+
+#[derive(Debug)]
+struct DispatchResult {
+    grad: Vec<f64>,
+    val: f64,
+}
+
+#[derive(Debug)]
+struct Pending {
+    ticket: u64,
+    req: OracleRequest,
+}
+
+#[derive(Debug, Default)]
+struct DispatchState {
+    /// Registered sessions (live [`DispatchHandle`]s) — the fast-path
+    /// quorum: once `pending.len()` reaches this, dispatch immediately.
+    active: usize,
+    next_ticket: u64,
+    pending: Vec<Pending>,
+    results: HashMap<u64, DispatchResult>,
+    /// True while some submitter is executing a drained batch outside
+    /// the lock (at most one combiner at a time).
+    combining: bool,
+}
+
+/// The combiner at the heart of the batch lane (module docs for the
+/// state machine).
+#[derive(Debug)]
+pub struct BatchDispatcher {
+    state: Mutex<DispatchState>,
+    cv: Condvar,
+    window: Duration,
+    scratch: Arc<ScratchPool>,
+}
+
+impl BatchDispatcher {
+    fn new(window: Duration, scratch: Arc<ScratchPool>) -> Self {
+        Self {
+            state: Mutex::new(DispatchState::default()),
+            cv: Condvar::new(),
+            window,
+            scratch,
+        }
+    }
+
+    /// Register a session with the lane for its lifetime; the returned
+    /// guard deregisters on drop. The registered count is the dispatch
+    /// quorum, so registration must bracket the whole run — not each
+    /// call — or peers would never see a full quorum.
+    pub fn register(self: &Arc<Self>) -> DispatchHandle {
+        self.state.lock().unwrap().active += 1;
+        DispatchHandle { dispatch: Arc::clone(self) }
+    }
+
+    /// Park one request and drive the state machine until its result
+    /// is posted (possibly by becoming the combiner).
+    fn submit(&self, req: OracleRequest) -> DispatchResult {
+        let ticket;
+        {
+            let mut st = self.state.lock().unwrap();
+            ticket = st.next_ticket;
+            st.next_ticket += 1;
+            st.pending.push(Pending { ticket, req });
+        }
+        let deadline = Instant::now() + self.window;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(res) = st.results.remove(&ticket) {
+                return res;
+            }
+            let quorum = st.pending.len() >= st.active;
+            if !st.combining
+                && !st.pending.is_empty()
+                && (quorum || Instant::now() >= deadline)
+            {
+                st.combining = true;
+                let batch = std::mem::take(&mut st.pending);
+                drop(st);
+                let results = self.execute(batch);
+                st = self.state.lock().unwrap();
+                st.results.extend(results);
+                st.combining = false;
+                self.cv.notify_all();
+                continue;
+            }
+            let wait = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_micros(50));
+            let (guard, _timeout) = self.cv.wait_timeout(st, wait).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Run a drained batch: partition into exactly-compatible groups,
+    /// one [`kernel::dual_oracle_batch`] pass per group.
+    fn execute(&self, batch: Vec<Pending>) -> Vec<(u64, DispatchResult)> {
+        let mut out = Vec::with_capacity(batch.len());
+        let mut remaining = batch;
+        while let Some(head) = remaining.pop() {
+            let mut group = vec![head];
+            let mut i = 0;
+            while i < remaining.len() {
+                if group[0].req.compatible(&remaining[i].req) {
+                    group.push(remaining.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            self.run_group(group, &mut out);
+        }
+        out
+    }
+
+    fn run_group(
+        &self,
+        group: Vec<Pending>,
+        out: &mut Vec<(u64, DispatchResult)>,
+    ) {
+        let b = group.len();
+        let n = group[0].req.rows.n();
+        let m = group[0].req.rows.m();
+        let kernel = group[0].req.kernel;
+        let beta = group[0].req.beta;
+        let mut etas = Vec::with_capacity(b * n);
+        for p in &group {
+            etas.extend_from_slice(&p.req.eta);
+        }
+        let mut grads = vec![0.0; b * n];
+        let mut vals = vec![0.0; b];
+        {
+            let mut scratch = self.scratch.check_out(n, kernel);
+            match &group[0].req.rows {
+                OwnedRows::Grid { geom, pixels } => {
+                    let rows =
+                        MeasureRows::Table { table: &geom.dist, n, pixels };
+                    kernel::dual_oracle_batch(
+                        &etas, &rows, beta, &mut grads, &mut vals, &mut scratch,
+                    );
+                }
+                OwnedRows::Quad1d { support, ys, inv_scale } => {
+                    let rows = MeasureRows::Quad1d {
+                        support: &support[..],
+                        ys: &ys[..],
+                        inv_scale: *inv_scale,
+                    };
+                    kernel::dual_oracle_batch(
+                        &etas, &rows, beta, &mut grads, &mut vals, &mut scratch,
+                    );
+                }
+            }
+        }
+        // Pooled scratch carries no telemetry handle (it is shared
+        // across tenants); each member mirrors exactly what its solo
+        // `dual_oracle` call would have recorded, so per-session
+        // counters stay comparable batched vs. solo. The dispatch
+        // itself is attributed once (to the combining group's first
+        // member) and the occupancy to every member.
+        if let Some(obs) = &group[0].req.obs {
+            obs.bump(Counter::BatchDispatches);
+        }
+        for (bi, p) in group.into_iter().enumerate() {
+            if let Some(obs) = &p.req.obs {
+                obs.record(HistKind::BatchOccupancy, b as u64);
+                obs.bump(Counter::OraclePasses);
+                match &p.req.rows {
+                    OwnedRows::Grid { .. } => {
+                        obs.add(Counter::CostRowsBorrowed, m as u64)
+                    }
+                    OwnedRows::Quad1d { .. } => {
+                        obs.add(Counter::CostRowsGenerated, m as u64)
+                    }
+                }
+                match kernel {
+                    KernelImpl::Scalar => {
+                        obs.add(Counter::KernelScalarRows, m as u64)
+                    }
+                    KernelImpl::Wide => {
+                        obs.add(Counter::KernelWideRows, m as u64)
+                    }
+                }
+            }
+            out.push((
+                p.ticket,
+                DispatchResult {
+                    grad: grads[bi * n..(bi + 1) * n].to_vec(),
+                    val: vals[bi],
+                },
+            ));
+        }
+    }
+}
+
+/// Session-lifetime registration with the batch lane (see
+/// [`BatchDispatcher::register`]).
+#[derive(Debug)]
+pub struct DispatchHandle {
+    dispatch: Arc<BatchDispatcher>,
+}
+
+impl Drop for DispatchHandle {
+    fn drop(&mut self) {
+        let mut st = self.dispatch.state.lock().unwrap();
+        st.active = st.active.saturating_sub(1);
+        drop(st);
+        // Waiters' quorum condition may newly hold.
+        self.dispatch.cv.notify_all();
+    }
+}
+
+/// A [`DualOracle`] that routes recognizable requests through the
+/// cross-session batch lane and everything else through the wrapped
+/// per-session backend.
+///
+/// "Recognizable" means the cost rows provably alias this session's
+/// interned geometry ([`NetworkTables`]) — recovered by pointer
+/// identity, never by value — so the owned request the dispatcher
+/// queues denotes exactly the rows the runner bound. Anything else
+/// (foreign tables, mixed row variants, PJRT staging buffers) falls
+/// back to `inner.eval`, which carries the session's telemetry and is
+/// bit-identical by definition.
+pub struct BatchedOracle {
+    inner: Box<dyn DualOracle>,
+    dispatch: Arc<BatchDispatcher>,
+    tables: NetworkTables,
+    obs: Option<Arc<Telemetry>>,
+    kernel: KernelImpl,
+}
+
+impl BatchedOracle {
+    pub fn new(
+        inner: Box<dyn DualOracle>,
+        dispatch: Arc<BatchDispatcher>,
+        tables: NetworkTables,
+        obs: Option<Arc<Telemetry>>,
+        kernel: KernelImpl,
+    ) -> Self {
+        Self { inner, dispatch, tables, obs, kernel }
+    }
+
+    /// Recover the interned identity of `cost`'s rows, or `None` when
+    /// any row is not provably a view of this session's shared tables.
+    fn to_owned_rows(&self, cost: &dyn CostRowSource) -> Option<OwnedRows> {
+        let m = cost.m();
+        if m == 0 {
+            return None;
+        }
+        match cost.cost_row(0) {
+            CostRow::Borrowed(_) => {
+                let geom = self.tables.grid.as_ref()?;
+                let n = geom.n();
+                if cost.n() != n {
+                    return None;
+                }
+                let f64s = std::mem::size_of::<f64>();
+                let base = geom.dist.as_ptr() as usize;
+                let row_bytes = n * f64s;
+                let mut pixels = Vec::with_capacity(m);
+                for r in 0..m {
+                    let CostRow::Borrowed(s) = cost.cost_row(r) else {
+                        return None;
+                    };
+                    if s.len() != n {
+                        return None;
+                    }
+                    let p = s.as_ptr() as usize;
+                    if p < base || (p - base) % row_bytes != 0 {
+                        return None;
+                    }
+                    let pixel = (p - base) / row_bytes;
+                    if pixel >= n {
+                        return None;
+                    }
+                    pixels.push(pixel);
+                }
+                Some(OwnedRows::Grid { geom: Arc::clone(geom), pixels })
+            }
+            CostRow::Quad1d { .. } => {
+                let interned = self.tables.support.as_ref()?;
+                let mut ys = Vec::with_capacity(m);
+                let mut scale = None;
+                for r in 0..m {
+                    let CostRow::Quad1d { support, y, inv_scale } =
+                        cost.cost_row(r)
+                    else {
+                        return None;
+                    };
+                    if support.as_ptr() != interned.as_ptr()
+                        || support.len() != interned.len()
+                    {
+                        return None;
+                    }
+                    match scale {
+                        None => scale = Some(inv_scale),
+                        Some(s) if s.to_bits() == inv_scale.to_bits() => {}
+                        Some(_) => return None,
+                    }
+                    ys.push(y);
+                }
+                Some(OwnedRows::Quad1d {
+                    support: Arc::clone(interned),
+                    ys,
+                    inv_scale: scale?,
+                })
+            }
+        }
+    }
+}
+
+impl DualOracle for BatchedOracle {
+    fn eval(
+        &mut self,
+        eta: &[f64],
+        cost: &dyn CostRowSource,
+        beta: f64,
+        grad: &mut [f64],
+    ) -> f64 {
+        match self.to_owned_rows(cost) {
+            Some(rows) => {
+                let res = self.dispatch.submit(OracleRequest {
+                    eta: eta.to_vec(),
+                    rows,
+                    beta,
+                    kernel: self.kernel,
+                    obs: self.obs.clone(),
+                });
+                grad.copy_from_slice(&res.grad);
+                res.val
+            }
+            None => self.inner.eval(eta, cost, beta, grad),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    fn attach_obs(&mut self, obs: Arc<Telemetry>) {
+        self.inner.attach_obs(obs.clone());
+        self.obs = Some(obs);
+    }
+
+    fn set_kernel(&mut self, kernel: KernelImpl) {
+        self.inner.set_kernel(kernel);
+        self.kernel = kernel;
+    }
+}

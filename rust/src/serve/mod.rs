@@ -36,6 +36,7 @@
 //! later `Submit{id, []}` (attach form — nonzero id, empty args)
 //! replays the retained history from the start.
 
+pub mod batch;
 pub mod journal;
 pub mod runner;
 pub mod table;
@@ -58,6 +59,7 @@ use crate::exec::net::codec::{
 use crate::exec::net::shard::experiment_args;
 use crate::exec::sched::ClaimArbiter;
 use crate::obs::{Telemetry, TelemetrySnapshot};
+use batch::SharedPool;
 use journal::Journal;
 use runner::{run_session, SessionRun};
 use table::{AdmissionPolicy, SessionEntry, SessionTable};
@@ -69,6 +71,28 @@ pub struct DaemonOpts {
     /// Write-ahead journal path (created if absent, replayed if not).
     pub journal: PathBuf,
     pub policy: AdmissionPolicy,
+    /// Pool-side floor for each session's worker count (sessions may
+    /// raise it per-submission via `--session-workers`; the effective
+    /// count is the max of both). 1 — the default — keeps the windowed,
+    /// bit-exact-resumable runner semantics; see
+    /// [`runner::SessionRun::workers`].
+    pub session_workers: usize,
+    /// Cross-session batch-lane collection window in microseconds; 0
+    /// disables the lane (cost-table interning and scratch pooling stay
+    /// on regardless). See [`batch`].
+    pub batch_window_us: u64,
+}
+
+impl Default for DaemonOpts {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".into(),
+            journal: "a2dwb-journal.bin".into(),
+            policy: AdmissionPolicy::default(),
+            session_workers: 1,
+            batch_window_us: 200,
+        }
+    }
 }
 
 struct DaemonShared {
@@ -82,6 +106,11 @@ struct DaemonShared {
     /// pool; merged on demand for the pool-wide table).
     session_obs: Mutex<Vec<(u64, Arc<Telemetry>)>>,
     workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Daemon-wide execution sharing: cost-table interner, the
+    /// cross-session batch lane, pooled oracle scratch.
+    pool: SharedPool,
+    /// Pool-side per-session worker floor ([`DaemonOpts::session_workers`]).
+    session_workers: usize,
 }
 
 /// A running daemon (owned handle; [`BarycenterDaemon::shutdown`]
@@ -115,6 +144,8 @@ impl BarycenterDaemon {
             next_session: AtomicU64::new(replayed.next_session),
             session_obs: Mutex::new(Vec::new()),
             workers: Mutex::new(Vec::new()),
+            pool: SharedPool::new(opts.batch_window_us),
+            session_workers: opts.session_workers.max(1),
         });
 
         let mut resumed = Vec::new();
@@ -173,6 +204,13 @@ impl BarycenterDaemon {
     /// Cancel one tenant (true if the id resolves).
     pub fn cancel_session(&self, id: u64) -> bool {
         self.shared.table.cancel(id)
+    }
+
+    /// Cost-table interner stats `(hits, misses, resident_bytes)` —
+    /// the dedup evidence `benches/serve.rs` reports.
+    pub fn interner_stats(&self) -> (u64, u64, usize) {
+        let t = &self.shared.pool.tables;
+        (t.hits(), t.misses(), t.resident_bytes())
     }
 
     /// Per-session telemetry snapshots plus the pool-wide merge —
@@ -418,6 +456,8 @@ fn spawn_runner(
                 lane: Some(&lane),
                 obs,
                 resume: resume.as_ref(),
+                pool: Some(&shared.pool),
+                workers: cfg.session_workers.max(shared.session_workers),
             };
             let feed = &entry.feed;
             let result = run_session(

@@ -46,7 +46,9 @@ use crate::exec::{initial_exchange, SampleCadence};
 use crate::graph::Graph;
 use crate::measures::Samples;
 use crate::obs::{Counter, Telemetry};
+use crate::ot::DualOracle;
 use crate::rng::Rng64;
+use crate::serve::batch::{BatchedOracle, SharedPool};
 
 /// Everything one daemon session needs to run: the parsed config plus
 /// the multi-tenancy seams (lane, cancel, telemetry) and the resume
@@ -62,6 +64,17 @@ pub struct SessionRun<'a> {
     pub obs: Arc<Telemetry>,
     /// Journal image to resume from (fingerprint must match `cfg`).
     pub resume: Option<&'a Checkpoint>,
+    /// Daemon-wide shared execution state (cost-table interner, batch
+    /// lane, scratch pool); `None` — the solo/test path — builds
+    /// everything privately and skips the batch lane.
+    pub pool: Option<&'a SharedPool>,
+    /// Worker threads for this session's scheduler. 1 (the default
+    /// everywhere) is the windowed, checkpoint-resumable PR 9 path;
+    /// `> 1` trades those properties for intra-session parallelism:
+    /// the run becomes a single non-windowed window (one terminal
+    /// checkpoint, no mid-run resume points), matching the threaded
+    /// executor's multi-worker semantics.
+    pub workers: usize,
 }
 
 /// Sweeps per checkpoint window for this config: the
@@ -106,7 +119,21 @@ pub fn run_session(
     let n = cfg.support_size();
     let graph = Graph::build(m, cfg.topology);
     let obs = run.obs;
-    let measures = cfg.measure.build_network(m, cfg.seed);
+    // Build measures against the daemon-wide interner when pooled, so
+    // same-geometry tenants alias one cost table (identical RNG draws
+    // and bits either way; see `MeasureSpec::build_network_with`).
+    let (measures, tables) = cfg.measure.build_network_with(
+        m,
+        cfg.seed,
+        run.pool.map(|p| &p.tables),
+    );
+    if run.pool.is_some() {
+        obs.add(Counter::TableCacheHits, tables.hits);
+        obs.add(Counter::TableCacheMisses, tables.misses);
+    }
+    // The one-time t=0 exchange below keeps a direct per-session
+    // oracle: it runs before the window loop, batching it would add a
+    // window of latency for one pass, and bit-exactness needs no help.
     let mut init_oracle = cfg.backend.build(cfg.samples_per_activation, n)?;
     init_oracle.attach_obs(obs.clone());
     init_oracle.set_kernel(cfg.kernel);
@@ -149,6 +176,7 @@ pub fn run_session(
     let mut evaluator =
         MetricsEvaluator::new(&graph, &measures, cfg.beta, cfg.eval_samples, cfg.seed);
     evaluator.set_kernel(cfg.kernel);
+    evaluator.attach_obs(obs.clone());
     let mut etas = vec![0.0; m * n];
 
     if let Some(ck) = run.resume {
@@ -198,7 +226,37 @@ pub fn run_session(
         emit(RunEvent::MetricSample { t: 0.0, wall: 0.0, dual, consensus, spread });
     }
 
-    let window = window_sweeps(cfg, m);
+    let workers = run.workers.clamp(1, m);
+    // Multi-worker sessions run one non-windowed window (see
+    // `SessionRun::workers`): mid-run checkpoints assume the strictly
+    // serial workers=1 activation order.
+    let window = if workers > 1 { total_sweeps } else { window_sweeps(cfg, m) };
+
+    // Cross-session batch lane: register for the whole run (the
+    // registered count is the dispatch quorum), and hand the scheduler
+    // a factory that wraps each worker's backend in a `BatchedOracle`.
+    // Telemetry and kernel selection are applied by the worker itself
+    // through the normal `DualOracle` seam.
+    let dispatch = run.pool.and_then(|p| p.dispatch.clone());
+    let _registration = dispatch.as_ref().map(|d| d.register());
+    type OracleFactory = Box<dyn Fn(usize) -> Result<Box<dyn DualOracle>, String> + Sync>;
+    let factory: Option<OracleFactory> = dispatch.map(|d| {
+        let tables = tables.clone();
+        let backend = cfg.backend.clone();
+        let kernel = cfg.kernel;
+        let samples_per = cfg.samples_per_activation;
+        Box::new(move |_w: usize| -> Result<Box<dyn DualOracle>, String> {
+            let inner = backend.build(samples_per, n)?;
+            Ok(Box::new(BatchedOracle::new(
+                inner,
+                d.clone(),
+                tables.clone(),
+                None,
+                kernel,
+            )) as Box<dyn DualOracle>)
+        }) as OracleFactory
+    });
+
     let wall_every_ms = match cfg.sample_cadence {
         SampleCadence::WallClockMillis(ms) => Some(ms),
         SampleCadence::Activations(_) => None,
@@ -235,13 +293,13 @@ pub fn run_session(
             .enumerate()
             .map(|(i, (node, rng))| (i, node, rng))
             .collect();
-        let per_worker = NodeScheduler::deal_round_robin(dealt, 1);
+        let per_worker = NodeScheduler::deal_round_robin(dealt, workers);
         let sched = NodeScheduler::new(SchedulerSpec {
             cfg,
             graph: &graph,
             measures: &measures,
             range: 0..m,
-            workers: 1,
+            workers,
             sweeps: this_window,
             gamma,
             m_theta,
@@ -256,11 +314,12 @@ pub fn run_session(
             lane: run.lane,
             fault_injection: None,
             obs: Some(obs.clone()),
+            oracle_factory: factory.as_deref(),
         });
         let local_gate;
         let free_gate;
         let gate: &dyn RoundGate = if sync {
-            local_gate = LocalGate::new(1, 2 * this_window);
+            local_gate = LocalGate::new(workers, 2 * this_window);
             &local_gate
         } else {
             free_gate = FreeGate;

@@ -25,7 +25,7 @@ use a2dwb::coordinator::session::{CancelToken, RunEvent, RunTotals};
 use a2dwb::coordinator::ExperimentConfig;
 use a2dwb::exec::net::experiment_args;
 use a2dwb::exec::SampleCadence;
-use a2dwb::obs::Telemetry;
+use a2dwb::obs::{Counter, Telemetry};
 use a2dwb::prelude::{AlgorithmKind, ExperimentBuilder};
 use a2dwb::serve::journal::{self, Journal};
 use a2dwb::serve::runner::{run_session, SessionRun};
@@ -89,6 +89,8 @@ fn solo(cfg: &ExperimentConfig) -> (Vec<RunEvent>, RunTotals) {
             lane: None,
             obs: Arc::new(Telemetry::new(cfg.nodes)),
             resume: None,
+            pool: None,
+            workers: 1,
         },
         &mut |_ck| Ok(()),
         &mut |ev| events.push(ev),
@@ -121,6 +123,7 @@ fn concurrent_tenants_reproduce_their_solo_runs_bit_for_bit() {
         listen: "127.0.0.1:0".into(),
         journal: journal.clone(),
         policy: AdmissionPolicy::default(),
+        ..DaemonOpts::default()
     })
     .unwrap();
     let addr = daemon.local_addr().to_string();
@@ -194,6 +197,8 @@ fn restarted_daemon_resumes_from_the_journal_bit_for_bit() {
                 lane: None,
                 obs: Arc::new(Telemetry::new(cfg.nodes)),
                 resume: None,
+                pool: None,
+                workers: 1,
             },
             &mut |ck| {
                 j.borrow_mut().checkpoint(1, ck)?;
@@ -221,6 +226,7 @@ fn restarted_daemon_resumes_from_the_journal_bit_for_bit() {
         listen: "127.0.0.1:0".into(),
         journal: journal_path.clone(),
         policy: AdmissionPolicy::default(),
+        ..DaemonOpts::default()
     })
     .unwrap();
     assert_eq!(daemon.resumed_sessions(), &[1]);
@@ -264,6 +270,7 @@ fn admission_rejects_past_the_cell_cap_and_frees_on_completion() {
         // room for a second 48 after one 64-cell tenant — but the
         // decisive case is a request bigger than the whole cap.
         policy: AdmissionPolicy { max_cells: 100, max_sessions: 8 },
+        ..DaemonOpts::default()
     })
     .unwrap();
     let addr = daemon.local_addr().to_string();
@@ -299,6 +306,7 @@ fn cancelling_one_tenant_leaves_the_other_bit_exact() {
         listen: "127.0.0.1:0".into(),
         journal: journal.clone(),
         policy: AdmissionPolicy::default(),
+        ..DaemonOpts::default()
     })
     .unwrap();
     let addr = daemon.local_addr().to_string();
@@ -352,6 +360,7 @@ fn draining_daemon_rejects_new_submissions() {
         listen: "127.0.0.1:0".into(),
         journal: journal.clone(),
         policy: AdmissionPolicy::default(),
+        ..DaemonOpts::default()
     })
     .unwrap();
     let addr = daemon.local_addr().to_string();
@@ -371,4 +380,120 @@ fn draining_daemon_rejects_new_submissions() {
     }
     daemon.shutdown().unwrap();
     let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn four_concurrent_same_geometry_tenants_batch_bit_exactly() {
+    let journal = tmp_journal("batch4");
+    let daemon = BarycenterDaemon::start(DaemonOpts {
+        listen: "127.0.0.1:0".into(),
+        journal: journal.clone(),
+        policy: AdmissionPolicy::default(),
+        ..DaemonOpts::default()
+    })
+    .unwrap();
+    let addr = daemon.local_addr().to_string();
+
+    // Two seed pairs: the (11, 11) and (23, 23) replicas issue
+    // bit-identical oracle requests and can group in the batch lane;
+    // across pairs exact-match grouping degrades to occupancy-1
+    // dispatches. All four tenants share one 12-point support lattice
+    // through the interner.
+    let cfg_a = cfg(11, AlgorithmKind::A2dwb, 6);
+    let cfg_b = cfg(23, AlgorithmKind::A2dwb, 6);
+    let solo_a = solo(&cfg_a);
+    let solo_b = solo(&cfg_b);
+
+    let run = |cfg: ExperimentConfig, addr: String| {
+        std::thread::spawn(move || {
+            let events = Arc::new(Mutex::new(Vec::new()));
+            let sink = events.clone();
+            let totals = serve::submit(&addr, &cfg, &mut |ev| {
+                sink.lock().unwrap().push(ev.clone())
+            })
+            .expect("submit");
+            let events = events.lock().unwrap().clone();
+            (events, totals)
+        })
+    };
+    let handles = [
+        ("tenant A1", &solo_a, run(cfg_a.clone(), addr.clone())),
+        ("tenant A2", &solo_a, run(cfg_a.clone(), addr.clone())),
+        ("tenant B1", &solo_b, run(cfg_b.clone(), addr.clone())),
+        ("tenant B2", &solo_b, run(cfg_b.clone(), addr.clone())),
+    ];
+    for (label, solo_run, handle) in handles {
+        let (events, totals) = handle.join().unwrap();
+        assert_same_run(label, solo_run, &events, &totals);
+    }
+
+    // Interning telemetry, mirrored per session: four same-geometry
+    // builds = one cold miss (built inside the lock) + three hits,
+    // deterministically, however the submits race.
+    let (per_session, _pool) = daemon.telemetry();
+    assert_eq!(per_session.len(), 4, "one telemetry registry per tenant");
+    let hits: u64 = per_session
+        .iter()
+        .map(|(_, s)| s.counter(Counter::TableCacheHits))
+        .sum();
+    let misses: u64 = per_session
+        .iter()
+        .map(|(_, s)| s.counter(Counter::TableCacheMisses))
+        .sum();
+    assert_eq!(hits, 3, "three warm builds must hit the interner");
+    assert_eq!(misses, 1, "exactly the cold build pays the miss");
+    let dispatches: u64 = per_session
+        .iter()
+        .map(|(_, s)| s.counter(Counter::BatchDispatches))
+        .sum();
+    assert!(dispatches > 0, "batched dispatch surface must be exercised");
+
+    // Pool-level view agrees, and residency is O(1) in tenants: one
+    // 12-point lattice regardless of the four sessions.
+    let (i_hits, i_misses, resident) = daemon.interner_stats();
+    assert_eq!((i_hits, i_misses), (3, 1));
+    assert_eq!(resident, 12 * std::mem::size_of::<f64>());
+
+    daemon.shutdown().unwrap();
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn table_interner_dedupes_same_geometry_builds() {
+    use a2dwb::measures::{MeasureSpec, TableInterner};
+    let interner = TableInterner::new();
+
+    let spec = MeasureSpec::Gaussian { n: 12 };
+    let (_m1, t1) = spec.build_network_with(4, 1, Some(&interner));
+    assert_eq!((t1.hits, t1.misses), (0, 1), "cold build pays the miss");
+    let (_m2, t2) = spec.build_network_with(4, 2, Some(&interner));
+    assert_eq!((t2.hits, t2.misses), (1, 0), "warm build hits");
+    assert!(
+        Arc::ptr_eq(t1.support.as_ref().unwrap(), t2.support.as_ref().unwrap()),
+        "same-geometry supports must alias one allocation"
+    );
+
+    let grid_spec = MeasureSpec::Digits { digit: 3, side: 5, idx_path: None };
+    let (_g1, gt1) = grid_spec.build_network_with(3, 7, Some(&interner));
+    let (_g2, gt2) = grid_spec.build_network_with(3, 8, Some(&interner));
+    assert_eq!((gt1.misses, gt2.hits), (1, 1));
+    assert!(
+        Arc::ptr_eq(gt1.grid.as_ref().unwrap(), gt2.grid.as_ref().unwrap()),
+        "same-side grids must alias one distance table"
+    );
+
+    // A different geometry is a different key: fresh miss, no aliasing.
+    let (_m3, t3) =
+        MeasureSpec::Gaussian { n: 16 }.build_network_with(4, 1, Some(&interner));
+    assert_eq!((t3.hits, t3.misses), (0, 1));
+    assert!(!Arc::ptr_eq(
+        t1.support.as_ref().unwrap(),
+        t3.support.as_ref().unwrap()
+    ));
+
+    assert_eq!((interner.hits(), interner.misses()), (2, 3));
+    // Residency counts deduped payloads only: the 12- and 16-point
+    // lattices plus the 5×5 grid (625 dist + 2·25 coord doubles).
+    let f = std::mem::size_of::<f64>();
+    assert_eq!(interner.resident_bytes(), (12 + 16 + 625 + 50) * f);
 }
